@@ -1,0 +1,117 @@
+//! Ablation A3 — native Rust vs AOT-compiled XLA/PJRT for the two dense
+//! phases:
+//!
+//! * WCC preprocessing (union-find vs compiled relax fixpoint),
+//! * the driver-side ancestor closure inside CSProv (reverse BFS vs the
+//!   compiled reachability fixpoint).
+//!
+//! ```bash
+//! cargo bench --bench bench_backends -- --divisor 20
+//! ```
+
+use provspark::benchkit::{cell, run_bench, BenchCfg, Table};
+use provspark::cli::Args;
+use provspark::harness::{select_queries, EngineSet, ExperimentConfig, QueryClass};
+use provspark::minispark::MiniSpark;
+use provspark::provenance::query::driver_rq::AncestorClosure;
+use provspark::provenance::wcc::wcc_driver;
+use provspark::runtime::{xla_wcc, XlaClosure, XlaRuntime};
+use provspark::util::timer::time_it;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["bench"])?;
+    let divisor: usize = args.get_parsed_or("divisor", 40)?;
+    let mut cfg = ExperimentConfig::for_divisor(divisor);
+    cfg.engine.apply_args(&args)?;
+
+    let Ok(rt) = XlaRuntime::new(std::path::Path::new(&cfg.engine.prov.artifact_dir)) else {
+        println!("bench_backends: no artifacts (run `make artifacts`); skipping");
+        return Ok(());
+    };
+    let rt = Arc::new(rt);
+    let (trace, pre) = cfg.build_scale(1);
+
+    // --- WCC backends -------------------------------------------------------
+    let bcfg = BenchCfg { warmup_iters: 0, iters: 2, ..Default::default() };
+    let native = run_bench(&bcfg, |_| {
+        let _ = wcc_driver(&trace);
+    });
+    let (xla_ok, _) = time_it(|| xla_wcc(&rt, &trace));
+    let mut t = Table::new("A3 — WCC backend (full trace)", &["backend", "mean", "p95"]);
+    t.row(vec![
+        "native union-find".into(),
+        cell(&native),
+        provspark::util::fmt::human_duration(native.p95),
+    ]);
+    match xla_ok {
+        Ok(_) => {
+            let xla = run_bench(&bcfg, |_| {
+                let _ = xla_wcc(&rt, &trace).unwrap();
+            });
+            t.row(vec![
+                "xla relax-fixpoint".into(),
+                cell(&xla),
+                provspark::util::fmt::human_duration(xla.p95),
+            ]);
+            println!(
+                "RAW wcc native={:.4}s xla={:.4}s",
+                native.mean.as_secs_f64(),
+                xla.mean.as_secs_f64()
+            );
+        }
+        Err(e) => t.row(vec!["xla relax-fixpoint".into(), format!("skipped: {e}"), "-".into()]),
+    }
+    t.print();
+
+    // --- Closure backends inside CSProv --------------------------------------
+    let sel = select_queries(&trace, &pre, QueryClass::LcLl, 5, divisor, cfg.seed)?;
+    let mut t = Table::new(
+        "A3 — driver-side closure backend (CSProv, LC-LL queries)",
+        &["backend", "mean / query"],
+    );
+    for backend in ["native", "xla"] {
+        let mut ecfg = cfg.engine.clone();
+        ecfg.prov.closure_backend = backend.parse()?;
+        ecfg.prov.tau = usize::MAX; // force the driver-side branch
+        let sc = MiniSpark::new(ecfg.cluster.clone());
+        let engines = EngineSet::build(&sc, &trace, &pre, &ecfg)?;
+        let stats = run_bench(&bcfg, |_| {
+            for &q in &sel.items {
+                let _ = engines.csprov.query(q);
+            }
+        });
+        let per_query = stats.mean / sel.items.len() as u32;
+        t.row(vec![
+            backend.into(),
+            provspark::util::fmt::human_duration(per_query),
+        ]);
+        println!("RAW closure backend={backend} per_query={:.5}s", per_query.as_secs_f64());
+    }
+    t.print();
+
+    // --- Raw closure on the collected volume (isolates the fixpoint) --------
+    let q = sel.items[0];
+    let cc = pre.cc_of[&q];
+    let comp: Vec<_> = trace
+        .triples
+        .iter()
+        .filter(|t| pre.cc_of[&t.src.raw()] == cc)
+        .copied()
+        .collect();
+    let native_c = provspark::provenance::query::driver_rq::NativeClosure;
+    let xla_c = XlaClosure::new(Arc::clone(&rt));
+    let a = run_bench(&bcfg, |_| {
+        let _ = native_c.closure(&comp, q);
+    });
+    let b = run_bench(&bcfg, |_| {
+        let _ = xla_c.closure(&comp, q);
+    });
+    println!(
+        "RAW raw-closure triples={} native={:.5}s xla={:.5}s",
+        comp.len(),
+        a.mean.as_secs_f64(),
+        b.mean.as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Substrate microbench: the minispark primitives whose costs the paper's
+//! analysis is built on — full-scan filter vs single-partition lookup,
+//! hash-partition shuffle, co-partitioned join, reduce_by_key — plus the
+//! effect of the simulated per-job overhead. This is the engine roofline
+//! the query benches sit on.
+//!
+//! ```bash
+//! cargo bench --bench bench_minispark -- --rows 1000000 --partitions 64
+//! ```
+
+use provspark::benchkit::{cell, run_bench, BenchCfg, Table};
+use provspark::cli::Args;
+use provspark::config::ClusterConfig;
+use provspark::minispark::{join_u64, Dataset, MiniSpark};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["bench"])?;
+    let rows: usize = args.get_parsed_or("rows", 500_000)?;
+    let np: usize = args.get_parsed_or("partitions", 64)?;
+
+    let sc = MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() });
+    // ~2 rows per key: keeps the self-join output linear in `rows`.
+    let keys = (rows as u64 / 2).max(1);
+    let data: Vec<(u64, u64)> = (0..rows as u64).map(|i| (i % keys, i)).collect();
+    let base = Dataset::from_vec(&sc, data.clone(), np);
+    let hashed = base.hash_partition_by(np, |r| r.0);
+
+    let bcfg = BenchCfg { warmup_iters: 1, iters: 5, ..Default::default() };
+    let mut t = Table::new(
+        &format!("minispark primitives ({rows} rows, {np} partitions)"),
+        &["op", "mean", "p95"],
+    );
+    let mut bench = |name: &str, f: &mut dyn FnMut()| {
+        let s = run_bench(&bcfg, |_| f());
+        println!("RAW minispark op={name} mean={:.5}s", s.mean.as_secs_f64());
+        t.row(vec![
+            name.into(),
+            cell(&s),
+            provspark::util::fmt::human_duration(s.p95),
+        ]);
+    };
+
+    bench("hash_partition_by (shuffle)", &mut || {
+        let _ = base.hash_partition_by(np, |r| r.0);
+    });
+    bench("filter (full scan)", &mut || {
+        let _ = hashed.filter(|r| r.0 == 42);
+    });
+    bench("lookup (1 partition)", &mut || {
+        let _ = hashed.lookup(42);
+    });
+    bench("multi_lookup (100 keys)", &mut || {
+        let keys: Vec<u64> = (0..100).collect();
+        let _ = hashed.multi_lookup(&keys);
+    });
+    bench("prune_lookup (100 keys)", &mut || {
+        let keys: Vec<u64> = (0..100).collect();
+        let _ = hashed.prune_lookup(&keys);
+    });
+    bench("reduce_by_key (min)", &mut || {
+        let _ = base.reduce_by_key(np, |&(k, v)| (k, v), u64::min);
+    });
+    bench("join (co-partitioned)", &mut || {
+        let _ = join_u64(&hashed, &hashed, np);
+    });
+    bench("collect", &mut || {
+        let _ = hashed.collect();
+    });
+    t.print();
+
+    // Job-overhead sensitivity: the driver-collect (τ) effect in isolation.
+    let mut t2 = Table::new("per-job overhead sensitivity (lookup)", &["overhead µs", "mean"]);
+    for overhead in [0u64, 500, 2_000, 10_000] {
+        let sc = MiniSpark::new(ClusterConfig { job_overhead_us: overhead, ..Default::default() });
+        let ds = Dataset::from_vec(&sc, data.clone(), np).hash_partition_by(np, |r| r.0);
+        let s = run_bench(&bcfg, |_| {
+            let _ = ds.lookup(7);
+        });
+        println!("RAW overhead={overhead} lookup_mean={:.5}s", s.mean.as_secs_f64());
+        t2.row(vec![overhead.to_string(), cell(&s)]);
+    }
+    t2.print();
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Regenerates Table 9 (weakly connected set statistics per large
+//! component and split) plus the component census, and times Algorithm 3
+//! in isolation.
+//!
+//! ```bash
+//! cargo bench --bench bench_partition_stats -- --divisor 10 [--theta 2500]
+//! ```
+
+use provspark::cli::Args;
+use provspark::harness::{component_census, table9};
+use provspark::provenance::partition::Partitioner;
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::util::fmt::human_duration;
+use provspark::util::timer::time_it;
+use provspark::workflow::generator::{generate, GeneratorConfig, TraceStats};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["bench"])?;
+    let divisor: usize = args.get_parsed_or("divisor", 10)?;
+    let theta: usize = args.get_parsed_or("theta", (25_000 / divisor).max(50))?;
+    let big: usize = args.get_parsed_or("big-threshold", (1000 / divisor).max(20))?;
+
+    let (trace, graph, splits) =
+        generate(&GeneratorConfig { scale_divisor: divisor, ..Default::default() });
+    let stats = TraceStats::compute(&trace, 20, theta);
+    println!("trace: {}", stats.summary());
+
+    let (pre, d) = time_it(|| preprocess(&trace, &graph, &splits, theta, big, WccImpl::Driver));
+    println!("full preprocess: {}", human_duration(d));
+    for (name, dur) in &pre.timings {
+        println!("  {name:10} {}", human_duration(*dur));
+    }
+    table9(&pre).print();
+    component_census(&pre).print();
+
+    // Algorithm 3 in isolation on LC1 (the paper's dominant cost).
+    let lc1 = pre.large_components[0].0;
+    let lc1_triples: Vec<_> = trace
+        .triples
+        .iter()
+        .filter(|t| pre.cc_of[&t.src.raw()] == lc1)
+        .copied()
+        .collect();
+    let p = Partitioner { graph: &graph, splits: &splits, theta, big_threshold: big };
+    let ((sets, _), d) = time_it(|| p.partition_component(&lc1_triples, "LC1"));
+    println!(
+        "\nAlgorithm 3 on LC1 alone: {} triples → {} sets in {}",
+        lc1_triples.len(),
+        sets.len(),
+        human_duration(d)
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Preprocessing-cost bench (the paper's §4 narrative: WCC took 6 min at
+//! 10M and 16/28/50 min at 100/250/500M — roughly linear in edges;
+//! connected-set computation included). Regenerates that series, per WCC
+//! backend:
+//!
+//! * `driver`    — union-find on the driver (our default),
+//! * `minispark` — distributed label propagation (the paper-faithful path),
+//! * `xla`       — the AOT-compiled PJRT fixpoint (skipped when the graph
+//!   exceeds the largest compiled bucket).
+//!
+//! ```bash
+//! cargo bench --bench bench_preprocess -- --divisor 10 --replications 1,4,9
+//! ```
+
+use provspark::benchkit::Table;
+use provspark::cli::Args;
+use provspark::minispark::MiniSpark;
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::wcc::{wcc_driver, wcc_minispark};
+use provspark::runtime::{xla_wcc, XlaRuntime};
+use provspark::util::fmt::{human_count, human_duration};
+use provspark::util::timer::time_it;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["bench"])?;
+    let divisor: usize = args.get_parsed_or("divisor", 10)?;
+    let reps: Vec<usize> = args
+        .get_or("replications", "1,4,9")
+        .split(',')
+        .map(|s| s.parse::<usize>())
+        .collect::<Result<_, _>>()?;
+    let run_minispark = args.get_or("minispark", "auto");
+    // The iterative label propagation shuffles the adjacency every round;
+    // above ~1.5M triples it dominates the whole bench on one box, so
+    // "auto" skips it there (force with --minispark true).
+    const MINISPARK_CAP: usize = 1_500_000;
+
+    let rt = XlaRuntime::new(std::path::Path::new("artifacts")).ok();
+    let mut t = Table::new(
+        "Preprocessing cost (WCC backends + full pipeline)",
+        &["Scale", "edges", "wcc driver", "wcc minispark", "wcc xla", "full preprocess"],
+    );
+    for rep in reps {
+        let (trace, graph, splits) = generate(&GeneratorConfig {
+            scale_divisor: divisor,
+            replication: rep,
+            ..Default::default()
+        });
+        let (_, d_driver) = time_it(|| wcc_driver(&trace));
+        let do_ms = run_minispark == "true"
+            || (run_minispark == "auto" && trace.len() <= MINISPARK_CAP);
+        let d_ms = if do_ms {
+            let sc = MiniSpark::local();
+            let (labels, d) = time_it(|| wcc_minispark(&sc, &trace, 64));
+            drop(labels);
+            Some(d)
+        } else {
+            None
+        };
+        let d_xla = rt.as_ref().and_then(|rt| {
+            let (res, d) = time_it(|| xla_wcc(rt, &trace));
+            res.ok().map(|_| d)
+        });
+        let theta = (25_000 / divisor).max(50);
+        let (_, d_full) = time_it(|| {
+            preprocess(&trace, &graph, &splits, theta, (1000 / divisor).max(20), WccImpl::Driver)
+        });
+        let cell = |d: Option<Duration>| d.map(human_duration).unwrap_or_else(|| "-".into());
+        t.row(vec![
+            format!("×{rep}"),
+            human_count(trace.len() as u64),
+            human_duration(d_driver),
+            cell(d_ms),
+            cell(d_xla),
+            human_duration(d_full),
+        ]);
+        println!(
+            "RAW preprocess ×{rep} edges={} driver={:.3}s minispark={:?} xla={:?} full={:.3}s",
+            trace.len(),
+            d_driver.as_secs_f64(),
+            d_ms.map(|d| d.as_secs_f64()),
+            d_xla.map(|d| d.as_secs_f64()),
+            d_full.as_secs_f64(),
+        );
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Regenerates Tables 10, 11 and 12: average query latency per engine
+//! (RQ / CCProv / CSProv) per query class, across scaled datasets.
+//!
+//! ```bash
+//! cargo bench --bench bench_queries                  # default: divisor 10, ×1,4,9
+//! cargo bench --bench bench_queries -- --divisor 10 --replications 1,9,24,48
+//! cargo bench --bench bench_queries -- --classes lc-ll --count 10
+//! ```
+//!
+//! The paper's columns are 10M/100M/250M/500M elements (replication 1, 9,
+//! 24, 48 over its base trace); defaults here are smaller so the bench
+//! finishes on one box — pass the full list to reproduce the whole sweep.
+
+use provspark::cli::Args;
+use provspark::harness::{query_table, ExperimentConfig, QueryClass};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["bench"])?;
+    let divisor: usize = args.get_parsed_or("divisor", 10)?;
+    let mut cfg = ExperimentConfig::for_divisor(divisor);
+    cfg.replications = args
+        .get_or("replications", "1,4")
+        .split(',')
+        .map(|s| s.parse::<usize>())
+        .collect::<Result<_, _>>()?;
+    cfg.queries_per_class = args.get_parsed_or("count", 10)?;
+    cfg.engine.apply_args(&args)?;
+
+    let classes: Vec<QueryClass> = args
+        .get_or("classes", "sc-sl,lc-sl,lc-ll")
+        .split(',')
+        .map(|s| s.parse::<QueryClass>())
+        .collect::<Result<_, _>>()?;
+
+    println!(
+        "bench_queries: divisor={divisor} replications={:?} queries/class={} tau={} job_overhead={}µs",
+        cfg.replications, cfg.queries_per_class, cfg.engine.prov.tau,
+        cfg.engine.cluster.job_overhead_us,
+    );
+    for class in classes {
+        let (table, raw) = query_table(class, &cfg)?;
+        table.print();
+        // Machine-readable line per scale for EXPERIMENTS.md.
+        for (label, rq, cc, cs) in raw {
+            println!("RAW {class} {label} rq={rq:.4}s ccprov={cc:.4}s csprov={cs:.4}s");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Ablation A2 — Algorithm 3's θ threshold, the C1/C2/C3 tension (§3):
+//! small θ → small sets (C3) but more sets, more set-dependencies (C1) and
+//! longer set-lineages (C2); large θ → CSProv degenerates toward CCProv.
+//! Sweeps θ and reports set counts, set-dep counts, the average CSProv
+//! minimal volume, and LC-LL query latency.
+//!
+//! ```bash
+//! cargo bench --bench bench_theta_sweep -- --divisor 10 [--thetas 500,2500,10000]
+//! ```
+
+use provspark::benchkit::Table;
+use provspark::cli::Args;
+use provspark::harness::{select_queries, EngineSet, ExperimentConfig, QueryClass};
+use provspark::minispark::MiniSpark;
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::util::fmt::{human_count, human_duration};
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["bench"])?;
+    let divisor: usize = args.get_parsed_or("divisor", 10)?;
+    let thetas: Vec<usize> = args
+        .get_or("thetas", "300,1000,2500,10000")
+        .split(',')
+        .map(|s| s.parse::<usize>())
+        .collect::<Result<_, _>>()?;
+    let count: usize = args.get_parsed_or("count", 5)?;
+
+    let (trace, graph, splits) =
+        generate(&GeneratorConfig { scale_divisor: divisor, ..Default::default() });
+    let mut cfg = ExperimentConfig::for_divisor(divisor);
+    cfg.engine.apply_args(&args)?;
+
+    let mut t = Table::new(
+        "θ sweep — set structure vs CSProv cost",
+        &["θ", "sets", "set-deps", "avg CSProv volume (LC-LL)", "avg LC-LL latency"],
+    );
+    for theta in thetas {
+        let pre = preprocess(&trace, &graph, &splits, theta, (1000 / divisor).max(20), WccImpl::Driver);
+        if pre.large_components.is_empty() {
+            println!("theta={theta}: no component reaches θ — CSProv ≡ CCProv; skipping row");
+            continue;
+        }
+        let sc = MiniSpark::new(cfg.engine.cluster.clone());
+        let engines = EngineSet::build(&sc, &trace, &pre, &cfg.engine)?;
+        let sel = select_queries(&trace, &pre, QueryClass::LcLl, count, divisor, cfg.seed)?;
+        let avg_vol: usize = sel
+            .items
+            .iter()
+            .map(|&q| engines.csprov.lineage_volume(q))
+            .sum::<usize>()
+            / sel.items.len();
+        let t0 = Instant::now();
+        for &q in &sel.items {
+            let _ = engines.csprov.query(q);
+        }
+        let lat = t0.elapsed() / sel.items.len() as u32;
+        t.row(vec![
+            theta.to_string(),
+            human_count(pre.set_count as u64),
+            human_count(pre.set_deps.len() as u64),
+            human_count(avg_vol as u64),
+            human_duration(lat),
+        ]);
+        println!(
+            "RAW theta={theta} sets={} setdeps={} avg_volume={avg_vol} latency={:.4}s",
+            pre.set_count,
+            pre.set_deps.len(),
+            lat.as_secs_f64()
+        );
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! Compliance / data-quality audit scenario (the paper's §1 motivation:
+//! "if the value of a data-item is erroneous, we can examine its lineage
+//! to investigate which transformation has introduced the error").
+//!
+//! A curator flags a knowledge-base value as wrong. This example:
+//!
+//! 1. traces its full lineage with CSProv (real-time even inside a large
+//!    component),
+//! 2. ranks the transformations on the lineage paths and reports the one
+//!    closest to the flagged value (the repair candidate),
+//! 3. computes the *blast radius*: every downstream value derived from the
+//!    suspect transformation's outputs (forward closure — the GDPR
+//!    "right to erasure" propagation set).
+//!
+//! ```bash
+//! cargo run --release --example gdpr_audit
+//! ```
+
+use provspark::config::EngineConfig;
+use provspark::harness::{select_queries, EngineSet, QueryClass};
+use provspark::minispark::MiniSpark;
+use provspark::provenance::model::ProvTriple;
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::query::driver_rq::{AncestorClosure, NativeClosure};
+use provspark::util::fmt::human_duration;
+use provspark::util::ids::AttrValueId;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use rustc_hash::FxHashMap;
+
+fn main() -> anyhow::Result<()> {
+    let divisor = 50;
+    let (trace, graph, splits) =
+        generate(&GeneratorConfig { scale_divisor: divisor, ..Default::default() });
+    let theta = (25_000 / divisor).max(50);
+    let pre = preprocess(&trace, &graph, &splits, theta, 100, WccImpl::Driver);
+    let cfg = EngineConfig::default();
+    let sc = MiniSpark::new(cfg.cluster.clone());
+    let engines = EngineSet::build(&sc, &trace, &pre, &cfg)?;
+
+    // The "flagged" value: a deep-lineage item in the largest component.
+    let flagged = select_queries(&trace, &pre, QueryClass::LcLl, 1, divisor, 7)?.items[0];
+    println!("audit: flagged value {} ({})", flagged, AttrValueId(flagged));
+
+    // 1. Lineage (CSProv): who contributed to this value?
+    let (lineage, dur) = provspark::util::timer::time_it(|| engines.csprov.query(flagged));
+    println!(
+        "lineage: {} ancestors across {} transformations ({})",
+        lineage.ancestors.len(),
+        lineage.transformation_count(),
+        human_duration(dur)
+    );
+
+    // 2. Suspect transformation: the op on the edges *into* the flagged
+    //    value (the last derivation step), plus a contribution ranking.
+    let mut op_edges: FxHashMap<u32, usize> = FxHashMap::default();
+    for t in &lineage.triples {
+        *op_edges.entry(t.op.0).or_default() += 1;
+    }
+    let mut last_ops: Vec<u32> = lineage
+        .triples
+        .iter()
+        .filter(|t| t.dst.raw() == flagged)
+        .map(|t| t.op.0)
+        .collect();
+    last_ops.sort_unstable();
+    last_ops.dedup();
+    let op_name = |op: u32| {
+        let e = graph.edges()[op as usize];
+        format!("{} → {}", graph.name_of(e.parent), graph.name_of(e.child))
+    };
+    println!("suspect transformation(s) feeding the flagged value:");
+    for op in &last_ops {
+        println!("  op{} [{}] — primary repair candidate", op, op_name(*op));
+    }
+    let mut ranked: Vec<(u32, usize)> = op_edges.into_iter().collect();
+    ranked.sort_by_key(|&(_, n)| std::cmp::Reverse(n));
+    println!("transformations by lineage contribution:");
+    for (op, n) in ranked.iter().take(5) {
+        println!("  op{op} [{}]: {n} derivation edges", op_name(*op));
+    }
+
+    // 3. Blast radius: forward closure — reuse the ancestor closure on the
+    //    *reversed* component graph. The flagged KB value is usually a
+    //    sink, so the erasure set is computed for the deepest *input*
+    //    ancestor (the GDPR case: a personal datum in a source document
+    //    must be erased along with everything derived from it).
+    let cc = pre.cc_of[&flagged];
+    let comp: Vec<ProvTriple> = trace
+        .triples
+        .iter()
+        .filter(|t| pre.cc_of[&t.src.raw()] == cc)
+        .copied()
+        .collect();
+    let derived: rustc_hash::FxHashSet<u64> = comp.iter().map(|t| t.dst.raw()).collect();
+    let erase = lineage
+        .ancestors
+        .iter()
+        .copied()
+        .find(|a| !derived.contains(a)) // a source value in the lineage
+        .unwrap_or(flagged);
+    println!(
+        "erasure request: source value {} ({})",
+        erase,
+        AttrValueId(erase)
+    );
+    let reversed: Vec<ProvTriple> =
+        comp.iter().map(|t| ProvTriple::new(t.dst, t.src, t.op)).collect();
+    let (blast, dur2) =
+        provspark::util::timer::time_it(|| NativeClosure.closure(&reversed, erase));
+    println!(
+        "blast radius: {} downstream values would need re-derivation ({})",
+        blast.ancestors.len(),
+        human_duration(dur2)
+    );
+    // Per-entity breakdown tells the curator which tables to re-run.
+    let mut by_entity: FxHashMap<u16, usize> = FxHashMap::default();
+    for &v in &blast.ancestors {
+        *by_entity.entry(AttrValueId(v).entity().0).or_default() += 1;
+    }
+    let mut by_entity: Vec<(u16, usize)> = by_entity.into_iter().collect();
+    by_entity.sort_by_key(|&(_, n)| std::cmp::Reverse(n));
+    println!("affected tables:");
+    for (e, n) in by_entity.iter().take(6) {
+        println!(
+            "  {}: {n} values",
+            graph.name_of(provspark::util::ids::EntityId(*e))
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! End-to-end driver (DESIGN.md §5, EXPERIMENTS.md §E2E): exercises every
+//! layer of the stack on a real small workload —
+//!
+//! 1. generate the curation-workflow provenance trace (the paper's §4
+//!    dataset, scaled),
+//! 2. preprocess with all available WCC backends (driver union-find,
+//!    distributed minispark label propagation, and the AOT-compiled
+//!    XLA/PJRT fixpoint — L1 Pallas kernel inside an L2 while-loop),
+//!    cross-checking their outputs,
+//! 3. partition large components (Algorithm 3) and print Table 9,
+//! 4. answer all three query classes with RQ / CCProv / CSProv and print
+//!    the Tables 10–12-shaped rows plus the headline speedups.
+//!
+//! ```bash
+//! cargo run --release --example text_curation_e2e [-- --divisor 10 --replications 1,4]
+//! ```
+
+use provspark::cli::Args;
+use provspark::harness::{
+    component_census, drilldown_report, query_table, select_queries, table9, EngineSet,
+    ExperimentConfig, QueryClass,
+};
+use provspark::minispark::MiniSpark;
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::wcc::{wcc_driver, wcc_minispark};
+use provspark::runtime::{xla_wcc, XlaRuntime};
+use provspark::util::fmt::{human_count, human_duration};
+use provspark::util::timer::time_it;
+use provspark::workflow::generator::{generate, GeneratorConfig, TraceStats};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&[])?;
+    let divisor: usize = args.get_parsed_or("divisor", 10)?;
+    let reps: Vec<usize> = args
+        .get_or("replications", "1,4")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    println!("=== provspark end-to-end: text-curation workflow (divisor {divisor}) ===\n");
+
+    // ---- 1. workload ------------------------------------------------------
+    let gen = GeneratorConfig { scale_divisor: divisor, ..Default::default() };
+    let ((trace, graph, splits), t_gen) = time_it(|| generate(&gen));
+    let stats = TraceStats::compute(&trace, 20, (25_000 / divisor).max(50));
+    println!("[1] generated in {}: {}", human_duration(t_gen), stats.summary());
+
+    // ---- 2. WCC: all three backends must agree ---------------------------
+    let (labels_driver, t_uf) = time_it(|| wcc_driver(&trace));
+    println!("\n[2] WCC driver union-find     : {}", human_duration(t_uf));
+
+    let sc = MiniSpark::local();
+    let (labels_ms, t_ms) = time_it(|| wcc_minispark(&sc, &trace, 32));
+    println!("    WCC minispark label-prop  : {}", human_duration(t_ms));
+    assert_eq!(labels_driver, labels_ms, "minispark WCC disagrees with union-find");
+
+    match XlaRuntime::new(std::path::Path::new("artifacts")) {
+        Ok(rt) => {
+            let (labels_xla, t_xla) = time_it(|| xla_wcc(&rt, &trace));
+            match labels_xla {
+                Ok(l) => {
+                    println!("    WCC XLA/PJRT fixpoint     : {}", human_duration(t_xla));
+                    assert_eq!(labels_driver, l, "XLA WCC disagrees with union-find");
+                }
+                Err(e) => println!("    WCC XLA skipped: {e}"),
+            }
+        }
+        Err(e) => println!("    WCC XLA skipped (no artifacts): {e}"),
+    }
+    println!("    all available WCC backends agree ✓");
+
+    // ---- 3. Algorithm 3 + Table 9 ----------------------------------------
+    let theta = (25_000 / divisor).max(50);
+    let big = (1000 / divisor).max(20);
+    let (pre, t_pre) =
+        time_it(|| preprocess(&trace, &graph, &splits, theta, big, WccImpl::Driver));
+    println!(
+        "\n[3] preprocess in {}: {} sets, {} set-deps",
+        human_duration(t_pre),
+        human_count(pre.set_count as u64),
+        human_count(pre.set_deps.len() as u64)
+    );
+    table9(&pre).print();
+    component_census(&pre).print();
+
+    // ---- 4. Tables 10–12 ---------------------------------------------------
+    let mut xcfg = ExperimentConfig::for_divisor(divisor);
+    xcfg.replications = reps;
+    xcfg.queries_per_class = 5;
+    println!("\n[4] query tables (engines: RQ / CCProv / CSProv)");
+    let mut headline: Vec<(QueryClass, f64, f64)> = Vec::new();
+    for class in [QueryClass::ScSl, QueryClass::LcSl, QueryClass::LcLl] {
+        let (table, raw) = query_table(class, &xcfg)?;
+        table.print();
+        if let Some(&(_, rq, cc, cs)) = raw.last() {
+            let cs = cs.max(1e-9);
+            headline.push((class, rq / cs, cc / cs));
+        }
+    }
+
+    // ---- 5. drill-down + headline -----------------------------------------
+    let ecfg = xcfg.engine.clone();
+    let sc2 = MiniSpark::new(ecfg.cluster.clone());
+    let engines = EngineSet::build(&sc2, &trace, &pre, &ecfg)?;
+    let sel = select_queries(&trace, &pre, QueryClass::LcLl, 1, divisor, 42)?;
+    println!("\n[5] point-query drill-down (LC-LL):");
+    print!("{}", drilldown_report(&trace, &pre, &engines, sel.items[0]));
+
+    println!("\n=== headline (largest scale) ===");
+    for (class, rq_x, cc_x) in headline {
+        println!("{class}: CSProv is {rq_x:.1}× faster than RQ, {cc_x:.1}× faster than CCProv");
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+"""AOT lowering: JAX → HLO *text* artifacts for the Rust/PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the published ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Artifacts (one per size bucket, N × K static):
+
+* ``relax_fixpoint_n{N}_k{K}.hlo.txt`` — inputs ``labels0 i32[N]``,
+  ``parents i32[N,K]``; output ``(labels i32[N],)``. Used for both WCC
+  (labels0 = iota) and ancestor closures (labels0 = indicator), see
+  model.py.
+* ``manifest.txt`` — one ``N K filename`` line per bucket; the Rust
+  runtime picks the smallest bucket that fits and pads.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--buckets 4096,65536]``
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import relax_fixpoint
+
+DEFAULT_BUCKETS = [1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20]
+K = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int, k: int) -> str:
+    labels_spec = jax.ShapeDtypeStruct((n,), jnp.int32)
+    parents_spec = jax.ShapeDtypeStruct((n, k), jnp.int32)
+    lowered = jax.jit(relax_fixpoint).lower(labels_spec, parents_spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in DEFAULT_BUCKETS),
+        help="comma-separated N sizes (K is fixed at %d)" % K,
+    )
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    buckets = [int(b) for b in args.buckets.split(",") if b]
+    manifest_lines = []
+    for n in buckets:
+        text = lower_bucket(n, K)
+        name = f"relax_fixpoint_n{n}_k{K}.hlo.txt"
+        (out / name).write_text(text)
+        manifest_lines.append(f"{n} {K} {name}")
+        print(f"wrote {name} ({len(text)} chars)")
+    (out / "manifest.txt").write_text("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest.txt ({len(buckets)} buckets)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""L1 — Pallas kernel: blocked min-label relaxation over a padded
+pull-neighbor matrix.
+
+This is the dense hot-spot of the paper's preprocessing (weakly connected
+components, §2.2) *and* of the driver-side ancestor closure: both are
+fixpoints of the same relaxation
+
+    new_label[i] = min(label[i], min_k label[parents[i, k]])
+
+* For WCC, ``parents`` holds the (undirected) neighbor lists and labels
+  start as ``iota(N)``; the fixpoint labels every node with the minimum
+  node index in its component.
+* For the ancestor closure, ``parents`` holds each node's *children* in the
+  provenance DAG and labels start as ``1`` everywhere except ``0`` at the
+  queried node; the fixpoint assigns ``0`` exactly to the query's ancestors.
+
+Rows are padded with self-indices; nodes with more than K neighbors are
+split into virtual-node chains by the caller (see
+``rust/src/runtime/remap.rs``), which preserves the fixpoint.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the grid walks row
+blocks, so each grid step *owns* a disjoint output tile — no scatter races,
+the TPU-legal analogue of GPU threadblock privatization. The parents block
+(``BLOCK_ROWS × K`` int32) and the output tile live in VMEM; the labels
+vector is the only shared operand (VMEM-resident up to the ~16 MiB budget,
+i.e. N ≤ ~4M int32). ``interpret=True`` everywhere: the CPU PJRT client
+cannot run Mosaic custom-calls, so the kernel lowers to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 1024 rows × K=8 parents × 4 B = 32 KiB of indices per
+# step plus the gathered tile — comfortably inside VMEM with double
+# buffering headroom.
+BLOCK_ROWS = 1024
+
+
+def _relax_block_kernel(labels_ref, parents_ref, out_ref, *, block_rows: int):
+    """One grid step: relax ``block_rows`` rows.
+
+    labels_ref:  (N,)   full label vector (shared, read-only)
+    parents_ref: (B, K) this block's padded parent indices
+    out_ref:     (B,)   this block's new labels
+    """
+    labels = labels_ref[...]
+    parents = parents_ref[...]
+    gathered = labels[parents]  # (B, K) gather
+    row_min = jnp.min(gathered, axis=1)
+    i = pl.program_id(0)
+    own = jax.lax.dynamic_slice(labels, (i * block_rows,), (block_rows,))
+    out_ref[...] = jnp.minimum(own, row_min)
+
+
+def relax_step(labels: jax.Array, parents: jax.Array) -> jax.Array:
+    """One relaxation sweep: ``min(labels, min_k labels[parents[:, k]])``.
+
+    labels: int32[N]; parents: int32[N, K]; N must be a multiple of
+    BLOCK_ROWS (or smaller than it).
+    """
+    n, k = parents.shape
+    assert labels.shape == (n,), (labels.shape, parents.shape)
+    block = min(BLOCK_ROWS, n)
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    kernel = functools.partial(_relax_block_kernel, block_rows=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),        # full labels
+            pl.BlockSpec((block, k), lambda i: (i, 0)),  # row block
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(labels, parents)

@@ -1,0 +1,88 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels — the build-time
+correctness signal (pytest compares kernel vs. these)."""
+
+import numpy as np
+
+
+def ref_relax_step(labels: np.ndarray, parents: np.ndarray) -> np.ndarray:
+    """new[i] = min(labels[i], min_k labels[parents[i, k]])."""
+    gathered = labels[parents]  # (N, K)
+    return np.minimum(labels, gathered.min(axis=1)).astype(np.int32)
+
+
+def ref_relax_fixpoint(labels0: np.ndarray, parents: np.ndarray) -> np.ndarray:
+    """Iterate ref_relax_step until no label changes."""
+    labels = labels0.astype(np.int32)
+    while True:
+        new = ref_relax_step(labels, parents)
+        if (new == labels).all():
+            return new
+        labels = new
+
+
+def ref_wcc_labels(n: int, edges: list[tuple[int, int]]) -> np.ndarray:
+    """Union-find oracle: label = min node index in the component."""
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b in edges:
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+    mins: dict[int, int] = {}
+    for v in range(n):
+        r = find(v)
+        mins[r] = min(mins.get(r, v), v)
+    return np.array([mins[find(v)] for v in range(n)], dtype=np.int32)
+
+
+def parents_matrix_from_edges(
+    n: int, edges: list[tuple[int, int]], k: int, directed: bool = False
+) -> tuple[np.ndarray, int]:
+    """Build the padded pull-neighbor matrix, chaining virtual nodes for
+    rows that overflow K slots (mirrors rust/src/runtime/remap.rs).
+
+    Undirected (WCC): each edge lands in both endpoint rows.
+    Directed (closure): edge (src, dst) lands in src's row only — src pulls
+    its *children*, so reached-ness flows child → parent.
+
+    Returns (matrix[int32, (n_total, k)], n_total) where rows are padded
+    with self-indices and n_total >= n includes virtual nodes.
+    """
+    assert k >= 2, "need K >= 2 to chain overflow rows"
+    neigh: list[list[int]] = [[] for _ in range(n)]
+    for a, b in edges:
+        neigh[a].append(b)
+        if not directed:
+            neigh[b].append(a)
+
+    # Pull semantics: row(v) lists the nodes whose labels v takes a min
+    # over. Chaining only needs the *pulling* direction — for undirected
+    # graphs the reverse flow exists because each edge is in both rows.
+    rows: list[list[int]] = []
+    for v in range(n):
+        ns = neigh[v]
+        rows.append(ns[: k - 1] if len(ns) > k else list(ns))
+    for v in range(n):
+        rest = neigh[v][k - 1 :] if len(neigh[v]) > k else []
+        prev = v
+        while rest:
+            virt = len(rows)
+            rows[prev].append(virt)  # prev pulls the virtual conduit
+            take = min(k - 1, len(rest))
+            rows.append(rest[:take])
+            rest = rest[take:]
+            prev = virt
+
+    n_total = len(rows)
+    mat = np.empty((n_total, k), dtype=np.int32)
+    for i, row in enumerate(rows):
+        assert len(row) <= k, (i, len(row))
+        padded = row + [i] * (k - len(row))
+        mat[i] = padded
+    return mat, n_total

@@ -1,0 +1,61 @@
+"""L2 — the JAX compute graph: relaxation fixpoints built on the L1 Pallas
+kernel.
+
+One artifact family serves both dense phases of the system (see
+kernels/label_prop.py): ``relax_fixpoint(labels0, parents)`` iterates the
+Pallas relaxation step inside a ``lax.while_loop`` until no label changes,
+entirely inside one compiled HLO module — the Rust runtime calls it once
+per WCC preprocessing pass / per driver-side ancestor closure, with no
+host round-trips in the loop.
+
+Carried state is just ``(labels, changed)``; ``parents`` is a loop
+invariant, so XLA keeps it resident and the loop body is the kernel plus a
+reduction — no recomputation of static data (the L2 optimization target
+from DESIGN.md §7).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.label_prop import relax_step
+
+
+def relax_fixpoint(labels0: jax.Array, parents: jax.Array) -> tuple[jax.Array]:
+    """Iterate ``relax_step`` to fixpoint.
+
+    labels0: int32[N] initial labels; parents: int32[N, K] padded pull
+    matrix. Returns a 1-tuple (lowered with ``return_tuple=True``; the Rust
+    side unwraps with ``to_tuple1``).
+    """
+
+    def cond(state):
+        _, changed = state
+        return changed > 0
+
+    def body(state):
+        labels, _ = state
+        new = relax_step(labels, parents)
+        changed = jnp.sum((new != labels).astype(jnp.int32))
+        return new, changed
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.int32(1)))
+    return (labels,)
+
+
+def wcc_labels_from_parents(parents: jax.Array) -> tuple[jax.Array]:
+    """WCC entry point: labels start as iota, fixpoint = component minima."""
+    n = parents.shape[0]
+    return relax_fixpoint(jnp.arange(n, dtype=jnp.int32), parents)
+
+
+def reach_labels(parents: jax.Array, query: jax.Array) -> tuple[jax.Array]:
+    """Ancestor-closure entry point.
+
+    ``parents`` is the *children* pull matrix of the provenance DAG;
+    ``query`` is the dense index of the queried node. Labels start at 1
+    everywhere except 0 at the query; the fixpoint is 0 exactly on
+    ``{query} ∪ ancestors(query)``.
+    """
+    n = parents.shape[0]
+    labels0 = jnp.ones((n,), dtype=jnp.int32).at[query].set(0)
+    return relax_fixpoint(labels0, parents)

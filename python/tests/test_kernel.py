@@ -1,0 +1,82 @@
+"""L1 correctness: the Pallas relaxation kernel vs. the pure-numpy oracle.
+
+Hypothesis sweeps shapes and adversarial index patterns; the kernel runs in
+interpret mode (the same lowering the AOT artifacts embed)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.label_prop import BLOCK_ROWS, relax_step
+from compile.kernels.ref import ref_relax_step
+
+
+def random_case(rng: np.random.Generator, n: int, k: int):
+    labels = rng.integers(0, n, size=n, dtype=np.int32)
+    parents = rng.integers(0, n, size=(n, k), dtype=np.int32)
+    return labels, parents
+
+
+@pytest.mark.parametrize("n,k", [(8, 2), (64, 4), (256, 8), (1024, 8), (2048, 3)])
+def test_relax_step_matches_ref(n, k):
+    rng = np.random.default_rng(n * 31 + k)
+    labels, parents = random_case(rng, n, k)
+    got = np.asarray(relax_step(labels, parents))
+    want = ref_relax_step(labels, parents)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_relax_step_multiblock():
+    # N spanning several grid steps exercises the block ownership logic.
+    n, k = 4 * BLOCK_ROWS, 8
+    rng = np.random.default_rng(7)
+    labels, parents = random_case(rng, n, k)
+    got = np.asarray(relax_step(labels, parents))
+    np.testing.assert_array_equal(got, ref_relax_step(labels, parents))
+
+
+def test_relax_step_identity_on_self_parents():
+    # Rows padded entirely with self-indices must be a no-op.
+    n, k = 128, 4
+    labels = np.arange(n, dtype=np.int32)[::-1].copy()
+    parents = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, k))
+    got = np.asarray(relax_step(labels, parents))
+    np.testing.assert_array_equal(got, labels)
+
+
+def test_relax_step_monotone_non_increasing():
+    n, k = 512, 8
+    rng = np.random.default_rng(11)
+    labels, parents = random_case(rng, n, k)
+    got = np.asarray(relax_step(labels, parents))
+    assert (got <= labels).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    log_n=st.integers(min_value=1, max_value=9),
+    k=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_relax_step_hypothesis(log_n, k, seed):
+    n = 1 << log_n  # powers of two, matching the bucket contract
+    rng = np.random.default_rng(seed)
+    labels, parents = random_case(rng, n, k)
+    got = np.asarray(relax_step(labels, parents))
+    want = ref_relax_step(labels, parents)
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.int32
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_relax_step_extreme_labels(seed):
+    # int32 extremes must survive the min-reduction unharmed.
+    n, k = 64, 4
+    rng = np.random.default_rng(seed)
+    labels = rng.choice(
+        np.array([0, 1, 2**31 - 1, 12345], dtype=np.int32), size=n
+    ).astype(np.int32)
+    parents = rng.integers(0, n, size=(n, k), dtype=np.int32)
+    got = np.asarray(relax_step(labels, parents))
+    np.testing.assert_array_equal(got, ref_relax_step(labels, parents))

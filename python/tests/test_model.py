@@ -1,0 +1,127 @@
+"""L2 correctness: the while-loop fixpoint vs. union-find, and the
+ancestor-closure encoding vs. a reachability oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    parents_matrix_from_edges,
+    ref_relax_fixpoint,
+    ref_wcc_labels,
+)
+from compile.model import reach_labels, relax_fixpoint, wcc_labels_from_parents
+
+
+def random_edges(rng: np.random.Generator, n: int, m: int):
+    return [tuple(rng.integers(0, n, size=2)) for _ in range(m)]
+
+
+def pad_parents(mat: np.ndarray, n_pad: int) -> np.ndarray:
+    """Pad the matrix to n_pad rows with self-parent rows."""
+    n, k = mat.shape
+    assert n_pad >= n
+    out = np.tile(np.arange(n_pad, dtype=np.int32)[:, None], (1, k))
+    out[:n] = mat
+    return out
+
+
+@pytest.mark.parametrize("n,m,k", [(16, 10, 4), (64, 80, 8), (128, 40, 3)])
+def test_wcc_fixpoint_matches_union_find(n, m, k):
+    rng = np.random.default_rng(n + m)
+    edges = random_edges(rng, n, m)
+    mat, n_total = parents_matrix_from_edges(n, edges, k)
+    (labels,) = wcc_labels_from_parents(mat.astype(np.int32))
+    labels = np.asarray(labels)[:n]
+    np.testing.assert_array_equal(labels, ref_wcc_labels(n, edges))
+
+
+def test_wcc_with_padding_rows():
+    # Padded rows (self-parents) must stay isolated singletons.
+    n = 8
+    edges = [(0, 1), (2, 3)]
+    mat, n_total = parents_matrix_from_edges(n, edges, 4)
+    padded = pad_parents(mat, 32)
+    (labels,) = wcc_labels_from_parents(padded)
+    labels = np.asarray(labels)
+    np.testing.assert_array_equal(labels[:n], ref_wcc_labels(n, edges))
+    np.testing.assert_array_equal(labels[n_total:], np.arange(n_total, 32))
+
+
+def test_high_degree_virtual_chaining():
+    # A star with 50 leaves and K=4 forces virtual-node chains.
+    n = 51
+    edges = [(0, i) for i in range(1, n)]
+    mat, n_total = parents_matrix_from_edges(n, edges, 4)
+    assert n_total > n, "chaining must add virtual rows"
+    (labels,) = wcc_labels_from_parents(mat)
+    np.testing.assert_array_equal(np.asarray(labels)[:n], np.zeros(n, dtype=np.int32))
+
+
+def test_reach_labels_simple_dag():
+    # 0 → 2, 1 → 2, 2 → 3, 4 → 1; ancestors(3) = {0, 1, 2, 4}.
+    # Pull matrix is over *children*: directed edge (src, dst) in src's row.
+    n = 5
+    edges = [(0, 2), (1, 2), (2, 3), (4, 1)]
+    mat, _ = parents_matrix_from_edges(n, edges, 4, directed=True)
+    (labels,) = reach_labels(mat, np.int32(3))
+    reached = np.asarray(labels)[:n] == 0
+    np.testing.assert_array_equal(reached, np.array([True] * 5))
+    (labels2,) = reach_labels(mat, np.int32(2))
+    reached2 = np.asarray(labels2)[:n] == 0
+    np.testing.assert_array_equal(
+        reached2, np.array([True, True, True, False, True])
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=48),
+    m=st.integers(min_value=0, max_value=96),
+    k=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_fixpoint_hypothesis(n, m, k, seed):
+    rng = np.random.default_rng(seed)
+    edges = random_edges(rng, n, m)
+    mat, _ = parents_matrix_from_edges(n, edges, k)
+    (labels,) = relax_fixpoint(np.arange(mat.shape[0], dtype=np.int32), mat)
+    np.testing.assert_array_equal(np.asarray(labels)[:n], ref_wcc_labels(n, edges))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=32),
+    m=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_reach_matches_bfs_oracle(n, m, seed):
+    rng = np.random.default_rng(seed)
+    edges = [tuple(sorted(rng.integers(0, n, size=2))) for _ in range(m)]
+    edges = [(a, b) for a, b in edges if a != b]  # DAG: low → high
+    q = int(rng.integers(0, n))
+    mat, _ = parents_matrix_from_edges(n, edges, 4, directed=True)
+    (labels,) = reach_labels(mat, np.int32(q))
+    got = set(np.nonzero(np.asarray(labels)[:n] == 0)[0])
+    # BFS oracle backwards from q.
+    want = {q}
+    frontier = [q]
+    while frontier:
+        nxt = []
+        for a, b in edges:
+            if b in frontier and a not in want:
+                want.add(a)
+                nxt.append(a)
+        frontier = nxt
+    assert got == want
+
+
+def test_ref_fixpoint_consistency():
+    # The L2 fixpoint equals iterating the reference step.
+    n, k = 32, 4
+    rng = np.random.default_rng(3)
+    edges = random_edges(rng, n, 40)
+    mat, n_total = parents_matrix_from_edges(n, edges, k)
+    labels0 = np.arange(n_total, dtype=np.int32)
+    (got,) = relax_fixpoint(labels0, mat)
+    np.testing.assert_array_equal(np.asarray(got), ref_relax_fixpoint(labels0, mat))

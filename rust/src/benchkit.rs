@@ -1,0 +1,190 @@
+//! Benchmark harness (the offline build has no `criterion`).
+//!
+//! Used by every `benches/*.rs` target (`harness = false`). Provides
+//! warmup + timed iterations, robust summary statistics, and markdown
+//! table rendering so each bench binary prints exactly the rows the
+//! paper's tables report.
+
+use crate::util::fmt::{human_duration, pad};
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of timed runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty(), "no samples");
+        samples.sort_unstable();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+        Stats {
+            iters: n,
+            mean: sum / n as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct BenchCfg {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Hard cap on measurement wall-time; stops early once exceeded
+    /// (at least one iteration always runs).
+    pub max_time: Duration,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        Self { warmup_iters: 1, iters: 5, max_time: Duration::from_secs(60) }
+    }
+}
+
+/// Run `f` under `cfg`, returning stats. `f` receives the iteration index.
+pub fn run_bench(cfg: &BenchCfg, mut f: impl FnMut(usize)) -> Stats {
+    for i in 0..cfg.warmup_iters {
+        f(i);
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    let started = Instant::now();
+    for i in 0..cfg.iters {
+        let t0 = Instant::now();
+        f(i);
+        samples.push(t0.elapsed());
+        if started.elapsed() > cfg.max_time && !samples.is_empty() {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// A plain-text/markdown table builder for bench reports.
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as a markdown table with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n### {}\n\n", self.title));
+        let render_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {} |", pad(&cells[i], widths[i])));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&render_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&render_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a `Stats` mean as the canonical cell used in tables.
+pub fn cell(stats: &Stats) -> String {
+    human_duration(stats.mean)
+}
+
+/// Parse common bench CLI knobs (`--iters`, `--warmup`) from an `Args`.
+pub fn cfg_from_args(args: &crate::cli::Args) -> BenchCfg {
+    let mut cfg = BenchCfg::default();
+    if let Ok(i) = args.get_parsed_or("iters", cfg.iters) {
+        cfg.iters = i.max(1);
+    }
+    if let Ok(w) = args.get_parsed_or("warmup", cfg.warmup_iters) {
+        cfg.warmup_iters = w;
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        let s = Stats::from_samples(samples);
+        assert_eq!(s.iters, 100);
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(100));
+        assert!(s.p50 >= Duration::from_millis(50) && s.p50 <= Duration::from_millis(52));
+        assert!(s.p95 >= Duration::from_millis(95));
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let cfg = BenchCfg { warmup_iters: 2, iters: 3, max_time: Duration::from_secs(10) };
+        let s = run_bench(&cfg, |_| count += 1);
+        assert_eq!(count, 5);
+        assert_eq!(s.iters, 3);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("### Demo"));
+        assert!(r.contains("| a "));
+        assert!(r.contains("| 1 "));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

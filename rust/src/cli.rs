@@ -1,0 +1,175 @@
+//! A minimal command-line parser (the offline build has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands. Typed accessors parse on demand and report readable
+//! errors. Every binary in the repo (main CLI, benches, examples) uses this.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand (optional), options, flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    program: String,
+    subcommand: Option<String>,
+    opts: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    known_flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`. `flag_names` lists boolean flags (options
+    /// that take no value); everything else starting with `--` is a
+    /// key/value option.
+    pub fn parse_env(flag_names: &[&str]) -> Result<Self> {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse(&argv, flag_names)
+    }
+
+    /// Parse an explicit argv (first element = program name).
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Self> {
+        let mut a = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            known_flags: flag_names.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        // The first non-option token is the subcommand.
+        if i < argv.len() && !argv[i].starts_with('-') {
+            a.subcommand = Some(argv[i].clone());
+            i += 1;
+        }
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else if a.known_flags.iter().any(|f| f == body) {
+                    a.flags.push(body.to_string());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("option --{body} expects a value"))?;
+                    if v.starts_with("--") {
+                        bail!("option --{body} expects a value, got {v}");
+                    }
+                    a.opts.entry(body.to_string()).or_default().push(v.clone());
+                    i += 1;
+                }
+            } else if tok == "-h" {
+                a.flags.push("help".to_string());
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Last occurrence of `--key` as a raw string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences of `--key`.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.opts.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Typed option with default.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: Into<anyhow::Error>,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| e.into().context(format!("invalid --{key}: {s:?}"))),
+        }
+    }
+
+    /// Required typed option.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: Into<anyhow::Error>,
+    {
+        let s = self.get(key).ok_or_else(|| anyhow!("missing required option --{key}"))?;
+        s.parse::<T>().map_err(|e| e.into().context(format!("invalid --{key}: {s:?}")))
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(&argv("prog run --scale 9 --verbose --out=x.bin pos1"), &["verbose"])
+            .unwrap();
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get("scale"), Some("9"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("out"), Some("x.bin"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = Args::parse(&argv("prog --n 42"), &[]).unwrap();
+        assert_eq!(a.get_parsed_or("n", 0u64).unwrap(), 42);
+        assert_eq!(a.get_parsed_or("missing", 7u64).unwrap(), 7);
+        assert!(a.get_parsed::<u64>("absent").is_err());
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let a = Args::parse(&argv("prog --n abc"), &[]).unwrap();
+        assert!(a.get_parsed_or("n", 0u64).is_err());
+    }
+
+    #[test]
+    fn option_missing_value_errors() {
+        assert!(Args::parse(&argv("prog --key"), &[]).is_err());
+        assert!(Args::parse(&argv("prog --key --other v"), &[]).is_err());
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = Args::parse(&argv("prog --x 1 --x 2"), &[]).unwrap();
+        assert_eq!(a.get_all("x"), &["1".to_string(), "2".to_string()]);
+        assert_eq!(a.get("x"), Some("2"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(&argv("prog --k v"), &[]).unwrap();
+        assert_eq!(a.subcommand(), None);
+    }
+}

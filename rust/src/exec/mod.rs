@@ -1,0 +1,11 @@
+//! A small work-stealing-free thread pool and scoped parallel-map helpers.
+//!
+//! The offline build has no `tokio`/`rayon`; the engine is CPU-bound, so a
+//! fixed pool of OS threads with an injector queue is the right substrate
+//! anyway. [`ThreadPool`] executes boxed jobs; [`par_map_indexed`] runs a
+//! closure over a slice of inputs with bounded parallelism and preserves
+//! input order in the output.
+
+mod pool;
+
+pub use pool::{par_map_indexed, ThreadPool};

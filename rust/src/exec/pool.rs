@@ -1,0 +1,210 @@
+//! Fixed-size thread pool with a shared FIFO injector queue.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+    outstanding: AtomicUsize,
+    idle_cv: Condvar,
+    idle_mx: Mutex<()>,
+}
+
+/// A fixed pool of worker threads executing FIFO jobs.
+///
+/// `minispark`'s executors submit one job per task; the pool size models
+/// the cluster's total core count (configurable — the paper uses
+/// 8 nodes × 12 cores; this box has fewer, so parallelism is logical).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size >= 1` worker threads.
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+            outstanding: AtomicUsize::new(0),
+            idle_cv: Condvar::new(),
+            idle_mx: Mutex::new(()),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("provspark-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job for asynchronous execution.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.shared.outstanding.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(job));
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.idle_mx.lock().unwrap();
+        while self.shared.outstanding.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle_cv.wait(guard).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if *shared.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => {
+                job();
+                if shared.outstanding.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = shared.idle_mx.lock().unwrap();
+                    shared.idle_cv.notify_all();
+                }
+            }
+            None => return,
+        }
+    }
+}
+
+/// Run `f(i, &items[i])` for every element with at most `parallelism`
+/// threads, returning outputs in input order. Panics in `f` propagate.
+///
+/// Uses scoped threads (no `'static` bound on inputs or closure).
+pub fn par_map_indexed<T, U, F>(items: &[T], parallelism: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let parallelism = parallelism.clamp(1, n);
+    if parallelism == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    crossbeam_utils::thread::scope(|scope| {
+        for _ in 0..parallelism {
+            scope.spawn(|_| {
+                let out_ptr = &out_ptr;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i, &items[i]);
+                    // SAFETY: each index i is claimed exactly once via the
+                    // atomic counter, so no two threads write the same slot,
+                    // and the Vec outlives the scope.
+                    unsafe { *out_ptr.0.add(i) = Some(v) };
+                }
+            });
+        }
+    })
+    .expect("par_map worker panicked");
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+/// Wrapper making a raw pointer Sync for the disjoint-write pattern above.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map_indexed(&items, 8, |i, &x| x * 2 + i as u64);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, items[i] * 2 + i as u64);
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map_indexed(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(par_map_indexed(&[7u32], 4, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_map_parallelism_one_sequential() {
+        let items: Vec<u32> = (0..10).collect();
+        let out = par_map_indexed(&items, 1, |_, &x| x + 1);
+        assert_eq!(out, (1..11).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,81 @@
+//! Engine assembly: build the three query engines from one preprocessed
+//! trace, with the configured τ and closure backend.
+
+use crate::config::{Backend, EngineConfig};
+use crate::minispark::MiniSpark;
+use crate::provenance::model::Trace;
+use crate::provenance::pipeline::Preprocessed;
+use crate::provenance::query::driver_rq::{AncestorClosure, NativeClosure};
+use crate::provenance::query::{CcProvEngine, CsProvEngine, RqEngine};
+use crate::runtime::{XlaClosure, XlaRuntime};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// All three engines over one dataset.
+pub struct EngineSet {
+    pub rq: RqEngine,
+    pub ccprov: CcProvEngine,
+    pub csprov: CsProvEngine,
+}
+
+/// Resolve the configured closure backend (XLA requires artifacts; errors
+/// surface at build time, not query time).
+pub fn make_closure(cfg: &EngineConfig) -> Result<Arc<dyn AncestorClosure>> {
+    Ok(match cfg.prov.closure_backend {
+        Backend::Native => Arc::new(NativeClosure),
+        Backend::Xla => {
+            let rt = XlaRuntime::new(std::path::Path::new(&cfg.prov.artifact_dir))?;
+            Arc::new(XlaClosure::new(Arc::new(rt)))
+        }
+    })
+}
+
+impl EngineSet {
+    /// Build RQ + CCProv + CSProv from a preprocessed trace.
+    pub fn build(
+        sc: &MiniSpark,
+        trace: &Trace,
+        pre: &Preprocessed,
+        cfg: &EngineConfig,
+    ) -> Result<Self> {
+        let np = cfg.cluster.default_partitions;
+        let tau = cfg.prov.tau;
+        let closure = make_closure(cfg)?;
+        let rq = RqEngine::new(sc, trace, np);
+        let ccprov = CcProvEngine::new(sc, pre.cc_triples.clone(), np, tau)
+            .with_closure(Arc::clone(&closure));
+        let csprov = CsProvEngine::new(
+            sc,
+            pre.cs_triples.clone(),
+            pre.cs_of.iter().map(|(&n, &c)| (n, c)).collect(),
+            pre.set_deps.clone(),
+            np,
+            tau,
+        )
+        .with_closure(closure);
+        Ok(Self { rq, ccprov, csprov })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provenance::pipeline::{preprocess, WccImpl};
+    use crate::workflow::generator::{generate, GeneratorConfig};
+
+    #[test]
+    fn engine_set_builds_and_agrees() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let mut cfg = EngineConfig::default();
+        cfg.cluster.job_overhead_us = 0;
+        cfg.prov.tau = 50;
+        let sc = MiniSpark::new(cfg.cluster.clone());
+        let set = EngineSet::build(&sc, &trace, &pre, &cfg).unwrap();
+        let q = trace.triples[trace.len() / 3].dst.raw();
+        let a = set.rq.query(q);
+        assert_eq!(set.ccprov.query(q), a);
+        assert_eq!(set.csprov.query(q), a);
+    }
+}

@@ -1,0 +1,265 @@
+//! Experiment drivers that regenerate the paper's evaluation artifacts:
+//! Table 9 (connected-set statistics), Tables 10–12 (query latencies per
+//! class and scale) and the §4-Discussion point-query drill-down.
+
+use super::classes::{select_queries, QueryClass};
+use super::engines::EngineSet;
+use crate::benchkit::Table;
+use crate::config::EngineConfig;
+use crate::minispark::MiniSpark;
+use crate::provenance::model::Trace;
+use crate::provenance::pipeline::{preprocess, Preprocessed, WccImpl};
+use crate::util::fmt::{human_count, human_duration};
+use crate::workflow::generator::{generate, GeneratorConfig};
+use anyhow::Result;
+use rustc_hash::FxHashMap;
+use std::time::Instant;
+
+/// Knobs for the table drivers.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Generator scale divisor (1 = the paper's full 10M-element base).
+    pub divisor: usize,
+    /// Replication factors, one table column each (paper: 1, 9, 24, 48 →
+    /// 10M/100M/250M/500M).
+    pub replications: Vec<usize>,
+    /// Queries per class (paper: 10).
+    pub queries_per_class: usize,
+    /// Algorithm 3 θ (paper: 25 000 at divisor 1 — pass a scaled value).
+    pub theta: usize,
+    /// Table 9 "big set" bound (paper: 1000 at divisor 1).
+    pub big_threshold: usize,
+    pub seed: u64,
+    pub engine: EngineConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        let divisor = 10;
+        Self {
+            divisor,
+            replications: vec![1, 9, 24, 48],
+            queries_per_class: 10,
+            theta: (25_000 / divisor).max(50),
+            big_threshold: (1000 / divisor).max(20),
+            seed: 0x5EC_F1D1C,
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Scale-dependent defaults for a given divisor.
+    pub fn for_divisor(divisor: usize) -> Self {
+        Self {
+            divisor,
+            theta: (25_000 / divisor).max(50),
+            big_threshold: (1000 / divisor).max(20),
+            ..Default::default()
+        }
+    }
+
+    /// Generate + preprocess one scale point.
+    pub fn build_scale(&self, replication: usize) -> (Trace, Preprocessed) {
+        let (trace, g, splits) = generate(&GeneratorConfig {
+            seed: self.seed,
+            scale_divisor: self.divisor,
+            replication,
+            ..Default::default()
+        });
+        let pre = preprocess(&trace, &g, &splits, self.theta, self.big_threshold, WccImpl::Driver);
+        (trace, pre)
+    }
+}
+
+/// Table 9: weakly connected set statistics per (large component, split),
+/// plus the set / set-dependency totals.
+pub fn table9(pre: &Preprocessed) -> Table {
+    let mut t = Table::new(
+        "Table 9 — Weakly Connected Sets Statistics (sets, ≥big, largest)",
+        &["Component", "Split", "# sets", "# big sets", "largest (nodes)"],
+    );
+    for p in &pre.pass_stats {
+        t.row(vec![
+            p.component.clone(),
+            p.split.clone(),
+            p.sets.to_string(),
+            p.big_sets.to_string(),
+            p.largest.to_string(),
+        ]);
+    }
+    t.row(vec![
+        "TOTAL".into(),
+        "-".into(),
+        pre.set_count.to_string(),
+        "-".into(),
+        format!("set-deps = {}", pre.set_deps.len()),
+    ]);
+    t
+}
+
+/// Tables 10–12: average query latency per engine across scales, for one
+/// query class. Returns the table plus the raw seconds for EXPERIMENTS.md.
+pub fn query_table(
+    class: QueryClass,
+    cfg: &ExperimentConfig,
+) -> Result<(Table, Vec<(String, f64, f64, f64)>)> {
+    let title = match class {
+        QueryClass::ScSl => "Table 10 — Class SC-SL (avg query latency)",
+        QueryClass::LcSl => "Table 11 — Class LC-SL (avg query latency)",
+        QueryClass::LcLl => "Table 12 — Class LC-LL (avg query latency)",
+    };
+    let mut t = Table::new(title, &["Scale", "elements", "RQ", "CCProv", "CSProv"]);
+    let mut raw = Vec::new();
+
+    for &rep in &cfg.replications {
+        let (trace, pre) = cfg.build_scale(rep);
+        let elements = trace.len() + pre.cc_of.len();
+        let sc = MiniSpark::new(cfg.engine.cluster.clone());
+        let engines = EngineSet::build(&sc, &trace, &pre, &cfg.engine)?;
+        let sel =
+            select_queries(&trace, &pre, class, cfg.queries_per_class, cfg.divisor, cfg.seed)?;
+
+        let avg = |f: &dyn Fn(u64) -> crate::provenance::query::Lineage| -> f64 {
+            let t0 = Instant::now();
+            for &q in &sel.items {
+                let _ = f(q);
+            }
+            t0.elapsed().as_secs_f64() / sel.items.len() as f64
+        };
+        let rq_s = avg(&|q| engines.rq.query(q));
+        let cc_s = avg(&|q| engines.ccprov.query(q));
+        let cs_s = avg(&|q| engines.csprov.query(q));
+
+        let label = format!("×{rep}");
+        t.row(vec![
+            label.clone(),
+            human_count(elements as u64),
+            human_duration(std::time::Duration::from_secs_f64(rq_s)),
+            human_duration(std::time::Duration::from_secs_f64(cc_s)),
+            human_duration(std::time::Duration::from_secs_f64(cs_s)),
+        ]);
+        raw.push((label, rq_s, cc_s, cs_s));
+    }
+    Ok((t, raw))
+}
+
+/// §4-Discussion drill-down for one query: set, set-lineage size, and the
+/// minimal volume CSProv recurses over vs. what CCProv / RQ would process.
+pub fn drilldown_report(
+    trace: &Trace,
+    pre: &Preprocessed,
+    engines: &EngineSet,
+    q: u64,
+) -> String {
+    let cc = pre.cc_of.get(&q).copied();
+    let cs = pre.cs_of.get(&q).copied();
+    let mut out = String::new();
+    out.push_str(&format!("query item      : {q} ({})\n", crate::util::ids::AttrValueId(q)));
+    let (Some(cc), Some(cs)) = (cc, cs) else {
+        out.push_str("item unknown to the trace\n");
+        return out;
+    };
+    let comp_edges = trace.triples.iter().filter(|t| pre.cc_of[&t.src.raw()] == cc).count();
+    let set_lineage = engines.csprov.set_lineage(cs);
+    let volume = engines.csprov.lineage_volume(q);
+    let lineage = engines.csprov.query(q);
+    out.push_str(&format!("component       : {cc} ({} triples)\n", human_count(comp_edges as u64)));
+    out.push_str(&format!("connected set   : {cs}\n"));
+    out.push_str(&format!("set-lineage     : {} sets\n", set_lineage.len()));
+    out.push_str(&format!(
+        "CSProv recurses : {} triples (CCProv: {}, RQ: {})\n",
+        human_count(volume as u64),
+        human_count(comp_edges as u64),
+        human_count(trace.len() as u64),
+    ));
+    out.push_str(&format!(
+        "lineage         : {} ancestors, {} triples, {} transformations\n",
+        lineage.ancestors.len(),
+        lineage.triples.len(),
+        lineage.transformation_count(),
+    ));
+    out
+}
+
+/// Component-size census used by `provspark stats` and the EXPERIMENTS.md
+/// trace-statistics section.
+pub fn component_census(pre: &Preprocessed) -> Table {
+    let mut sizes: FxHashMap<u64, usize> = FxHashMap::default();
+    for &cc in pre.cc_of.values() {
+        *sizes.entry(cc).or_default() += 1;
+    }
+    let mut buckets = [0usize; 4]; // ≤20, 21..big, big..θ, large
+    let large: rustc_hash::FxHashSet<u64> =
+        pre.large_components.iter().map(|&(cc, _, _)| cc).collect();
+    for (&cc, &n) in &sizes {
+        if large.contains(&cc) {
+            buckets[3] += 1;
+        } else if n <= 20 {
+            buckets[0] += 1;
+        } else if n <= 900 {
+            buckets[1] += 1;
+        } else {
+            buckets[2] += 1;
+        }
+    }
+    let mut t = Table::new("Component census", &["bucket", "count"]);
+    t.row(vec!["small (≤20 nodes)".into(), buckets[0].to_string()]);
+    t.row(vec!["21–900 nodes".into(), buckets[1].to_string()]);
+    t.row(vec!["mid (>900, below θ)".into(), buckets[2].to_string()]);
+    t.row(vec!["large (≥θ, partitioned)".into(), buckets[3].to_string()]);
+    t.row(vec!["TOTAL components".into(), pre.component_count.to_string()]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::for_divisor(1000);
+        cfg.replications = vec![1, 2];
+        cfg.queries_per_class = 3;
+        cfg.theta = 300;
+        cfg.big_threshold = 100;
+        cfg.engine.cluster.job_overhead_us = 0;
+        cfg
+    }
+
+    #[test]
+    fn table9_renders() {
+        let cfg = tiny_cfg();
+        let (_, pre) = cfg.build_scale(1);
+        let t = table9(&pre);
+        let r = t.render();
+        assert!(r.contains("LC1"));
+        assert!(r.contains("set-deps"));
+    }
+
+    #[test]
+    fn query_table_has_row_per_scale() {
+        let cfg = tiny_cfg();
+        let (t, raw) = query_table(QueryClass::ScSl, &cfg).unwrap();
+        assert_eq!(raw.len(), 2);
+        assert!(t.render().contains("×2"));
+    }
+
+    #[test]
+    fn drilldown_mentions_volumes() {
+        let cfg = tiny_cfg();
+        let (trace, pre) = cfg.build_scale(1);
+        let sc = MiniSpark::new(cfg.engine.cluster.clone());
+        let engines = EngineSet::build(&sc, &trace, &pre, &cfg.engine).unwrap();
+        let sel = select_queries(&trace, &pre, QueryClass::LcSl, 1, 1000, 1).unwrap();
+        let report = drilldown_report(&trace, &pre, &engines, sel.items[0]);
+        assert!(report.contains("CSProv recurses"), "{report}");
+    }
+
+    #[test]
+    fn census_counts_everything() {
+        let cfg = tiny_cfg();
+        let (_, pre) = cfg.build_scale(1);
+        let t = component_census(&pre);
+        assert!(t.render().contains("TOTAL components"));
+    }
+}

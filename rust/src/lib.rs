@@ -1,0 +1,40 @@
+//! # provspark
+//!
+//! A reproduction of *"Efficiently Processing Workflow Provenance Queries on
+//! SPARK"* (Rajmohan et al., 2018) as a self-contained Rust + JAX/Pallas
+//! (AOT via XLA/PJRT) stack.
+//!
+//! The crate contains:
+//!
+//! * [`minispark`] — an embedded, partitioned, Spark-shaped dataflow engine
+//!   (hash-partitioned datasets, `filter`/`lookup`/`collect`, a job
+//!   scheduler with configurable job-launch overhead, shuffle, caching and
+//!   metrics). This is the substrate the paper's algorithms run on.
+//! * [`provenance`] — the paper's contribution: the provenance data model,
+//!   weakly-connected-component computation, Algorithm 3 component
+//!   partitioning, set dependencies, and the three query engines
+//!   (`RQ`, `CCProv`, `CSProv`).
+//! * [`workflow`] — the workflow dependency graph, a synthetic text-curation
+//!   workload shaped like the paper's Figure 1, and the provenance trace
+//!   generator + replication-based scaling.
+//! * [`runtime`] — the PJRT bridge that loads AOT-compiled HLO artifacts
+//!   (produced by `python/compile/aot.py`) and exposes the XLA-backed
+//!   label-propagation / reachability fixpoints.
+//! * [`harness`] — experiment drivers that regenerate every table in the
+//!   paper's evaluation section.
+//!
+//! Support substrates built in-tree (the build environment is offline):
+//! [`exec`] (thread pool), [`cli`] (argument parser), [`benchkit`]
+//! (benchmark harness), [`proptest_lite`] (property testing), [`config`].
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod exec;
+pub mod harness;
+pub mod minispark;
+pub mod proptest_lite;
+pub mod provenance;
+pub mod runtime;
+pub mod util;
+pub mod workflow;

@@ -1,0 +1,265 @@
+//! provspark — CLI for the workflow-provenance query framework.
+//!
+//! ```text
+//! provspark generate    --scale-divisor 10 --replication 1 --out data/trace.bin
+//! provspark stats       --trace data/trace.bin
+//! provspark preprocess  --trace data/trace.bin --out data/pre.bin [--wcc-impl driver|minispark|xla]
+//! provspark query       --trace data/trace.bin --pre data/pre.bin --engine csprov --item 3:42
+//! provspark classes     --trace data/trace.bin --pre data/pre.bin --class lc-ll
+//! provspark table       --which 9|10|11|12 [--divisor 10] [--replications 1,9]
+//! provspark drilldown   --trace data/trace.bin --pre data/pre.bin --item 3:42
+//! provspark workflow    --dot
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use provspark::cli::Args;
+use provspark::config::{Backend, EngineConfig};
+use provspark::harness::{
+    component_census, drilldown_report, query_table, select_queries, table9, EngineSet,
+    ExperimentConfig, QueryClass,
+};
+use provspark::minispark::MiniSpark;
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::store;
+use provspark::util::fmt::{human_count, human_duration};
+use provspark::util::ids::AttrValueId;
+use provspark::workflow::curation::text_curation_workflow;
+use provspark::workflow::generator::{generate, GeneratorConfig, TraceStats};
+use std::path::Path;
+
+const FLAGS: &[&str] = &["dot", "csv", "help", "verbose"];
+
+fn main() {
+    let args = match Args::parse_env(FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") || args.subcommand().is_none() {
+        print_help();
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "provspark — workflow provenance queries via weakly connected components/sets\n\
+         subcommands: generate | stats | preprocess | query | classes | table | drilldown | workflow\n\
+         common opts: --executors N --partitions N --job-overhead-us N --tau N --theta N\n\
+                      --wcc-backend native|xla --closure-backend native|xla --config FILE"
+    );
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    EngineConfig::from_sources(args.get("config"), args)
+}
+
+fn parse_item(s: &str) -> Result<u64> {
+    if let Some((e, ser)) = s.split_once(':') {
+        let e: u16 = e.parse().context("entity part")?;
+        let ser: u64 = ser.parse().context("serial part")?;
+        Ok(AttrValueId::new(provspark::util::ids::EntityId(e), ser).raw())
+    } else {
+        s.parse::<u64>().context("raw id")
+    }
+}
+
+fn gen_config(args: &Args) -> Result<GeneratorConfig> {
+    Ok(GeneratorConfig {
+        seed: args.get_parsed_or("seed", GeneratorConfig::default().seed)?,
+        scale_divisor: args.get_parsed_or("scale-divisor", 10)?,
+        replication: args.get_parsed_or("replication", 1)?,
+        extra_parent_prob: args.get_parsed_or("extra-parent-prob", 0.25)?,
+    })
+}
+
+fn scaled_defaults(args: &Args, divisor: usize) -> Result<(usize, usize)> {
+    let theta = args.get_parsed_or("theta", (25_000 / divisor).max(50))?;
+    let big = args.get_parsed_or("big-threshold", (1000 / divisor).max(20))?;
+    Ok((theta, big))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand().unwrap() {
+        "generate" => {
+            let cfg = gen_config(args)?;
+            let out = args.get_or("out", "data/trace.bin");
+            std::fs::create_dir_all(Path::new(&out).parent().unwrap_or(Path::new(".")))?;
+            let ((trace, _, _), dur) = provspark::util::timer::time_it(|| generate(&cfg));
+            store::save_trace(Path::new(&out), &trace)?;
+            println!(
+                "generated {} triples ({} nodes) in {} → {out}",
+                human_count(trace.len() as u64),
+                human_count(trace.node_count() as u64),
+                human_duration(dur),
+            );
+            if args.has_flag("csv") {
+                let csv = format!("{out}.csv");
+                store::export_csv(Path::new(&csv), &trace)?;
+                println!("csv export → {csv}");
+            }
+            Ok(())
+        }
+        "stats" => {
+            let trace = store::load_trace(Path::new(&args.get_or("trace", "data/trace.bin")))?;
+            let divisor: usize = args.get_parsed_or("scale-divisor", 10)?;
+            let (theta, _) = scaled_defaults(args, divisor)?;
+            let (s, dur) =
+                provspark::util::timer::time_it(|| TraceStats::compute(&trace, 20, theta));
+            println!("{}", s.summary());
+            println!("(computed in {})", human_duration(dur));
+            Ok(())
+        }
+        "preprocess" => {
+            let trace = store::load_trace(Path::new(&args.get_or("trace", "data/trace.bin")))?;
+            let out = args.get_or("out", "data/pre.bin");
+            let divisor: usize = args.get_parsed_or("scale-divisor", 10)?;
+            let (theta, big) = scaled_defaults(args, divisor)?;
+            let ecfg = engine_config(args)?;
+            let (g, splits) = text_curation_workflow();
+            let default_impl = match ecfg.prov.wcc_backend {
+                Backend::Native => "driver",
+                Backend::Xla => "xla",
+            };
+            let wcc_impl_name = args.get_or("wcc-impl", default_impl);
+            let sc = MiniSpark::new(ecfg.cluster.clone());
+            let rt;
+            let xla_fn;
+            let wcc = match wcc_impl_name.as_str() {
+                "driver" => WccImpl::Driver,
+                "minispark" => {
+                    WccImpl::MiniSpark { sc: &sc, partitions: ecfg.cluster.default_partitions }
+                }
+                "xla" => {
+                    rt = provspark::runtime::XlaRuntime::new(Path::new(&ecfg.prov.artifact_dir))?;
+                    xla_fn = move |t: &provspark::provenance::model::Trace| {
+                        provspark::runtime::xla_wcc(&rt, t).expect("xla wcc")
+                    };
+                    WccImpl::Custom(&xla_fn)
+                }
+                other => bail!("unknown --wcc-impl {other:?} (driver|minispark|xla)"),
+            };
+            let pre = preprocess(&trace, &g, &splits, theta, big, wcc);
+            store::save_preprocessed(Path::new(&out), &pre)?;
+            println!(
+                "preprocessed: {} components ({} large), {} sets, {} set-deps",
+                human_count(pre.component_count as u64),
+                pre.large_components.len(),
+                human_count(pre.set_count as u64),
+                human_count(pre.set_deps.len() as u64),
+            );
+            for (name, d) in &pre.timings {
+                println!("  {name:10} {}", human_duration(*d));
+            }
+            table9(&pre).print();
+            component_census(&pre).print();
+            println!("→ {out}");
+            Ok(())
+        }
+        "query" => {
+            let trace = store::load_trace(Path::new(&args.get_or("trace", "data/trace.bin")))?;
+            let pre = store::load_preprocessed(Path::new(&args.get_or("pre", "data/pre.bin")))?;
+            let ecfg = engine_config(args)?;
+            let q = parse_item(
+                args.get("item").ok_or_else(|| anyhow!("--item required (raw id or e:serial)"))?,
+            )?;
+            let sc = MiniSpark::new(ecfg.cluster.clone());
+            let engines = EngineSet::build(&sc, &trace, &pre, &ecfg)?;
+            let engine = args.get_or("engine", "csprov");
+            let before = sc.metrics().snapshot();
+            let (lineage, dur) = provspark::util::timer::time_it(|| match engine.as_str() {
+                "rq" => engines.rq.query(q),
+                "ccprov" => engines.ccprov.query(q),
+                _ => engines.csprov.query(q),
+            });
+            let delta = sc.metrics().snapshot().since(&before);
+            println!(
+                "{engine}: {} ancestors, {} triples, {} transformations in {}",
+                lineage.ancestors.len(),
+                lineage.triples.len(),
+                lineage.transformation_count(),
+                human_duration(dur),
+            );
+            println!("engine metrics: {}", delta.summary());
+            if args.has_flag("verbose") {
+                for t in &lineage.triples {
+                    println!("  {} -> {} via op{}", t.src, t.dst, t.op.0);
+                }
+            }
+            Ok(())
+        }
+        "classes" => {
+            let trace = store::load_trace(Path::new(&args.get_or("trace", "data/trace.bin")))?;
+            let pre = store::load_preprocessed(Path::new(&args.get_or("pre", "data/pre.bin")))?;
+            let divisor: usize = args.get_parsed_or("scale-divisor", 10)?;
+            let class: QueryClass = args.get_or("class", "lc-sl").parse()?;
+            let count: usize = args.get_parsed_or("count", 10)?;
+            let seed: u64 = args.get_parsed_or("seed", 42)?;
+            let sel = select_queries(&trace, &pre, class, count, divisor, seed)?;
+            println!(
+                "{} items in component {} with ancestors in [{}, {}]:",
+                sel.class, sel.component, sel.band.0, sel.band.1
+            );
+            for q in &sel.items {
+                println!("  {q} ({})", AttrValueId(*q));
+            }
+            Ok(())
+        }
+        "table" => {
+            let which: u32 = args.get_parsed_or("which", 9)?;
+            let divisor: usize = args.get_parsed_or("divisor", 10)?;
+            let mut xcfg = ExperimentConfig::for_divisor(divisor);
+            xcfg.engine = engine_config(args)?;
+            if let Some(reps) = args.get("replications") {
+                xcfg.replications = reps
+                    .split(',')
+                    .map(|r| r.parse::<usize>().context("replication"))
+                    .collect::<Result<_>>()?;
+            }
+            xcfg.queries_per_class = args.get_parsed_or("count", 10)?;
+            match which {
+                9 => {
+                    let (_, pre) = xcfg.build_scale(1);
+                    table9(&pre).print();
+                    component_census(&pre).print();
+                }
+                10 => query_table(QueryClass::ScSl, &xcfg)?.0.print(),
+                11 => query_table(QueryClass::LcSl, &xcfg)?.0.print(),
+                12 => query_table(QueryClass::LcLl, &xcfg)?.0.print(),
+                other => bail!("unknown table {other} (9|10|11|12)"),
+            }
+            Ok(())
+        }
+        "drilldown" => {
+            let trace = store::load_trace(Path::new(&args.get_or("trace", "data/trace.bin")))?;
+            let pre = store::load_preprocessed(Path::new(&args.get_or("pre", "data/pre.bin")))?;
+            let ecfg = engine_config(args)?;
+            let q = parse_item(args.get("item").ok_or_else(|| anyhow!("--item required"))?)?;
+            let sc = MiniSpark::new(ecfg.cluster.clone());
+            let engines = EngineSet::build(&sc, &trace, &pre, &ecfg)?;
+            print!("{}", drilldown_report(&trace, &pre, &engines, q));
+            Ok(())
+        }
+        "workflow" => {
+            let (g, splits) = text_curation_workflow();
+            if args.has_flag("dot") {
+                print!("{}", g.to_dot(|e| splits.split_of(e).map(|s| s.to_string())));
+            } else {
+                println!("{} entities, {} derivations", g.entity_count(), g.edges().len());
+                for sp in splits.top_level() {
+                    let names: Vec<&str> =
+                        sp.entities().iter().map(|&e| g.name_of(e)).collect();
+                    println!("  {}: {}", sp.name(), names.join(", "));
+                }
+            }
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try --help)"),
+    }
+}

@@ -1,0 +1,692 @@
+//! Partitioned datasets and their operations.
+
+use super::context::MiniSpark;
+use super::partitioner::HashPartitioner;
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+
+/// How a dataset's rows are distributed across partitions.
+struct Partitioning<T> {
+    partitioner: HashPartitioner,
+    key_fn: Arc<dyn Fn(&T) -> u64 + Send + Sync>,
+}
+
+impl<T> Clone for Partitioning<T> {
+    fn clone(&self) -> Self {
+        Self { partitioner: self.partitioner, key_fn: Arc::clone(&self.key_fn) }
+    }
+}
+
+/// An immutable, partitioned, materialized collection — the engine's RDD.
+///
+/// Partitions are `Arc`-shared, so narrow transformations (filter) copy row
+/// data only for surviving rows and datasets clone cheaply.
+pub struct Dataset<T> {
+    sc: MiniSpark,
+    partitions: Vec<Arc<Vec<T>>>,
+    partitioning: Option<Partitioning<T>>,
+}
+
+impl<T> Clone for Dataset<T> {
+    fn clone(&self) -> Self {
+        Self {
+            sc: self.sc.clone(),
+            partitions: self.partitions.clone(),
+            partitioning: self.partitioning.clone(),
+        }
+    }
+}
+
+impl<T: Send + Sync + Clone + 'static> Dataset<T> {
+    /// Create a dataset by chunking `data` into `num_partitions` contiguous
+    /// slices (no partitioner — like `sc.parallelize`).
+    pub fn from_vec(sc: &MiniSpark, data: Vec<T>, num_partitions: usize) -> Self {
+        let num_partitions = num_partitions.max(1);
+        let n = data.len();
+        let chunk = n.div_ceil(num_partitions).max(1);
+        let mut partitions = Vec::with_capacity(num_partitions);
+        let mut it = data.into_iter();
+        for _ in 0..num_partitions {
+            let part: Vec<T> = it.by_ref().take(chunk).collect();
+            partitions.push(Arc::new(part));
+        }
+        Self { sc: sc.clone(), partitions, partitioning: None }
+    }
+
+    /// Engine handle.
+    pub fn context(&self) -> &MiniSpark {
+        &self.sc
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Total row count (metadata — datasets are materialized).
+    pub fn len(&self) -> usize {
+        self.partitions.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partitions.iter().all(|p| p.is_empty())
+    }
+
+    /// Rows of one partition (used by tests and the driver-collect path).
+    pub fn partition(&self, i: usize) -> &Arc<Vec<T>> {
+        &self.partitions[i]
+    }
+
+    /// True if hash-partitioned (a subsequent [`lookup`](Self::lookup) scans
+    /// one partition).
+    pub fn is_hash_partitioned(&self) -> bool {
+        self.partitioning.is_some()
+    }
+
+    /// Spark's `cache()` — a no-op here because datasets are materialized;
+    /// kept for API fidelity with the paper's pseudocode.
+    pub fn cache(&self) -> Self {
+        self.clone()
+    }
+
+    /// Shuffle rows so that all rows with equal `key_fn(row)` land in the
+    /// same partition (Spark `partitionBy(HashPartitioner(n))`).
+    pub fn hash_partition_by(
+        &self,
+        num_partitions: usize,
+        key_fn: impl Fn(&T) -> u64 + Send + Sync + 'static,
+    ) -> Self {
+        let key_fn: Arc<dyn Fn(&T) -> u64 + Send + Sync> = Arc::new(key_fn);
+        let partitioner = HashPartitioner::new(num_partitions.max(1));
+        let np = partitioner.num_partitions();
+
+        // Map side: bucket each input partition's rows by target.
+        let kf = Arc::clone(&key_fn);
+        let buckets: Vec<Vec<Vec<T>>> = self.sc.run_job(&self.partitions, |_, part| {
+            let mut out: Vec<Vec<T>> = (0..np).map(|_| Vec::new()).collect();
+            for row in part.iter() {
+                out[partitioner.partition_of(kf(row))].push(row.clone());
+            }
+            out
+        });
+        let total: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_shuffled(total);
+
+        // Reduce side: concatenate buckets per target partition.
+        let targets: Vec<usize> = (0..np).collect();
+        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&targets, |_, &t| {
+            let mut part = Vec::new();
+            for b in &buckets {
+                part.extend_from_slice(&b[t]);
+            }
+            Arc::new(part)
+        });
+
+        Self {
+            sc: self.sc.clone(),
+            partitions,
+            partitioning: Some(Partitioning { partitioner, key_fn }),
+        }
+    }
+
+    /// Scan every partition, keeping rows satisfying `pred`. Preserves hash
+    /// partitioning (filter never moves rows) — the property Algorithm 1
+    /// relies on ("this preserves the hash-partitioning logic").
+    pub fn filter(&self, pred: impl Fn(&T) -> bool + Send + Sync) -> Self {
+        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
+        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&self.partitions, |_, part| {
+            Arc::new(part.iter().filter(|r| pred(r)).cloned().collect::<Vec<T>>())
+        });
+        Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+    }
+
+    /// Transform rows (drops partitioning — keys may change).
+    pub fn map<U: Send + Sync + Clone + 'static>(
+        &self,
+        f: impl Fn(&T) -> U + Send + Sync,
+    ) -> Dataset<U> {
+        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
+        let partitions: Vec<Arc<Vec<U>>> = self.sc.run_job(&self.partitions, |_, part| {
+            Arc::new(part.iter().map(&f).collect::<Vec<U>>())
+        });
+        Dataset { sc: self.sc.clone(), partitions, partitioning: None }
+    }
+
+    /// Transform each row into zero or more rows (drops partitioning).
+    pub fn flat_map<U: Send + Sync + Clone + 'static>(
+        &self,
+        f: impl Fn(&T) -> Vec<U> + Send + Sync,
+    ) -> Dataset<U> {
+        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
+        let partitions: Vec<Arc<Vec<U>>> = self.sc.run_job(&self.partitions, |_, part| {
+            Arc::new(part.iter().flat_map(&f).collect::<Vec<U>>())
+        });
+        Dataset { sc: self.sc.clone(), partitions, partitioning: None }
+    }
+
+    /// Per-partition transformation (drops partitioning).
+    pub fn map_partitions<U: Send + Sync + Clone + 'static>(
+        &self,
+        f: impl Fn(&[T]) -> Vec<U> + Send + Sync,
+    ) -> Dataset<U> {
+        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
+        let partitions: Vec<Arc<Vec<U>>> =
+            self.sc.run_job(&self.partitions, |_, part| Arc::new(f(part)));
+        Dataset { sc: self.sc.clone(), partitions, partitioning: None }
+    }
+
+    /// All rows whose key equals `key`.
+    ///
+    /// Hash-partitioned: scans exactly **one** partition (the paper's core
+    /// cost primitive). Otherwise falls back to a full filter scan, which
+    /// the metrics expose — this is what "Spark does not support indexing,
+    /// each such query needs to scan the data" costs.
+    pub fn lookup(&self, key: u64) -> Vec<T> {
+        match &self.partitioning {
+            Some(p) => {
+                let idx = p.partitioner.partition_of(key);
+                let part = Arc::clone(&self.partitions[idx]);
+                self.sc.metrics().add_scan(1, part.len() as u64);
+                let kf = Arc::clone(&p.key_fn);
+                let mut out = self.sc.run_job(&[part], |_, part| {
+                    part.iter().filter(|r| kf(r) == key).cloned().collect::<Vec<T>>()
+                });
+                out.pop().unwrap()
+            }
+            None => {
+                // No partitioner: full scan.
+                let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+                self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
+                // Without a key function we cannot match; this overload only
+                // exists for hash-partitioned data. Callers on raw datasets
+                // use `filter` directly.
+                panic!("lookup() requires a hash-partitioned dataset; use filter()");
+            }
+        }
+    }
+
+    /// Look up many keys in one job, scanning each *distinct* target
+    /// partition once — the paper's "|I| partitions at most" argument (§2.1).
+    /// Returns all matching rows, unordered.
+    pub fn multi_lookup(&self, keys: &[u64]) -> Vec<T> {
+        let p = self
+            .partitioning
+            .as_ref()
+            .expect("multi_lookup() requires a hash-partitioned dataset");
+        // Group wanted keys by target partition.
+        let mut by_part: FxHashMap<usize, Vec<u64>> = FxHashMap::default();
+        for &k in keys {
+            by_part.entry(p.partitioner.partition_of(k)).or_default().push(k);
+        }
+        let work: Vec<(Arc<Vec<T>>, Vec<u64>)> = by_part
+            .into_iter()
+            .map(|(idx, ks)| (Arc::clone(&self.partitions[idx]), ks))
+            .collect();
+        let scanned_rows: u64 = work.iter().map(|(p, _)| p.len() as u64).sum();
+        self.sc.metrics().add_scan(work.len() as u64, scanned_rows);
+        let kf = Arc::clone(&p.key_fn);
+        let found: Vec<Vec<T>> = self.sc.run_job(&work, |_, (part, ks)| {
+            let keyset: rustc_hash::FxHashSet<u64> = ks.iter().copied().collect();
+            part.iter().filter(|r| keyset.contains(&kf(r))).cloned().collect()
+        });
+        found.into_concat()
+    }
+
+    /// Partition-pruned lookup: a *dataset* containing exactly the rows
+    /// whose key is in `keys`, produced by scanning only the target
+    /// partitions (Spark's `PartitionPruningRDD`; non-target partitions
+    /// come back empty). Preserves hash partitioning, so the result can be
+    /// unioned/filtered/queried further without a shuffle — this is how
+    /// CSProv assembles `cs_provRDD` from the set-lineage without touching
+    /// the rest of the data.
+    pub fn prune_lookup(&self, keys: &[u64]) -> Self {
+        let p = self
+            .partitioning
+            .as_ref()
+            .expect("prune_lookup() requires a hash-partitioned dataset");
+        let mut by_part: FxHashMap<usize, rustc_hash::FxHashSet<u64>> = FxHashMap::default();
+        for &k in keys {
+            by_part.entry(p.partitioner.partition_of(k)).or_default().insert(k);
+        }
+        let work: Vec<(usize, Arc<Vec<T>>, Option<rustc_hash::FxHashSet<u64>>)> = self
+            .partitions
+            .iter()
+            .enumerate()
+            .map(|(i, part)| (i, Arc::clone(part), by_part.remove(&i)))
+            .collect();
+        let scanned: u64 = work
+            .iter()
+            .filter(|(_, _, ks)| ks.is_some())
+            .map(|(_, p, _)| p.len() as u64)
+            .sum();
+        let n_scanned = work.iter().filter(|(_, _, ks)| ks.is_some()).count() as u64;
+        self.sc.metrics().add_scan(n_scanned, scanned);
+        let kf = Arc::clone(&p.key_fn);
+        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&work, |_, (_, part, ks)| {
+            match ks {
+                None => Arc::new(Vec::new()),
+                Some(keyset) => Arc::new(
+                    part.iter().filter(|r| keyset.contains(&kf(r))).cloned().collect::<Vec<T>>(),
+                ),
+            }
+        });
+        Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+    }
+
+    /// Move every row to the driver (Spark `collect`).
+    pub fn collect(&self) -> Vec<T> {
+        self.sc.metrics().add_job();
+        let mut out = Vec::with_capacity(self.len());
+        for p in &self.partitions {
+            out.extend_from_slice(p);
+        }
+        self.sc.metrics().add_collected(out.len() as u64);
+        out
+    }
+
+    /// Row count as a job (Spark `count` is an action).
+    pub fn count(&self) -> usize {
+        self.sc.metrics().add_job();
+        self.len()
+    }
+
+    /// Concatenate two datasets.
+    ///
+    /// If both sides are hash-partitioned with the same partitioner *and*
+    /// the same key function, partitions are unioned pairwise and the
+    /// partitioning is preserved (Spark's `PartitionerAwareUnionRDD`);
+    /// otherwise partition lists concatenate and partitioning is dropped.
+    pub fn union(&self, other: &Dataset<T>) -> Self {
+        match (&self.partitioning, &other.partitioning) {
+            (Some(a), Some(b))
+                if a.partitioner == b.partitioner && Arc::ptr_eq(&a.key_fn, &b.key_fn) =>
+            {
+                let partitions: Vec<Arc<Vec<T>>> = self
+                    .partitions
+                    .iter()
+                    .zip(&other.partitions)
+                    .map(|(x, y)| {
+                        if y.is_empty() {
+                            Arc::clone(x)
+                        } else if x.is_empty() {
+                            Arc::clone(y)
+                        } else {
+                            let mut v = Vec::with_capacity(x.len() + y.len());
+                            v.extend_from_slice(x);
+                            v.extend_from_slice(y);
+                            Arc::new(v)
+                        }
+                    })
+                    .collect();
+                Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+            }
+            _ => {
+                let mut partitions = self.partitions.clone();
+                partitions.extend(other.partitions.iter().cloned());
+                Self { sc: self.sc.clone(), partitions, partitioning: None }
+            }
+        }
+    }
+
+    /// Shuffle-reduce: map each row to `(key, value)`, co-locate by key,
+    /// reduce values per key. The result is hash-partitioned by its `.0`.
+    /// This is the primitive behind distributed label propagation.
+    pub fn reduce_by_key<V: Send + Sync + Clone + 'static>(
+        &self,
+        num_partitions: usize,
+        kv: impl Fn(&T) -> (u64, V) + Send + Sync,
+        red: impl Fn(V, V) -> V + Send + Sync,
+    ) -> Dataset<(u64, V)> {
+        let partitioner = HashPartitioner::new(num_partitions.max(1));
+        let np = partitioner.num_partitions();
+
+        // Map side with local (map-side combine) reduction.
+        let buckets: Vec<Vec<FxHashMap<u64, V>>> = self.sc.run_job(&self.partitions, |_, part| {
+            let mut out: Vec<FxHashMap<u64, V>> = (0..np).map(|_| FxHashMap::default()).collect();
+            for row in part.iter() {
+                let (k, v) = kv(row);
+                let slot = &mut out[partitioner.partition_of(k)];
+                match slot.remove(&k) {
+                    Some(prev) => {
+                        slot.insert(k, red(prev, v));
+                    }
+                    None => {
+                        slot.insert(k, v);
+                    }
+                }
+            }
+            out
+        });
+        let shuffled: u64 = buckets.iter().flatten().map(|m| m.len() as u64).sum();
+        self.sc.metrics().add_shuffled(shuffled);
+
+        // Reduce side.
+        let targets: Vec<usize> = (0..np).collect();
+        let partitions: Vec<Arc<Vec<(u64, V)>>> = self.sc.run_job(&targets, |_, &t| {
+            let mut acc: FxHashMap<u64, V> = FxHashMap::default();
+            for b in &buckets {
+                for (k, v) in &b[t] {
+                    match acc.remove(k) {
+                        Some(prev) => {
+                            acc.insert(*k, red(prev, v.clone()));
+                        }
+                        None => {
+                            acc.insert(*k, v.clone());
+                        }
+                    }
+                }
+            }
+            Arc::new(acc.into_iter().collect::<Vec<_>>())
+        });
+
+        Dataset {
+            sc: self.sc.clone(),
+            partitions,
+            partitioning: Some(Partitioning {
+                partitioner,
+                key_fn: Arc::new(|row: &(u64, V)| row.0),
+            }),
+        }
+    }
+}
+
+/// Inner hash-join of two key-value datasets on their `u64` key.
+///
+/// Both sides are (re)hash-partitioned to `num_partitions` with the same
+/// partitioner, then joined partition-wise (Spark's co-partitioned join) —
+/// the build side is the right dataset's partition.
+pub fn join_u64<V1, V2>(
+    left: &Dataset<(u64, V1)>,
+    right: &Dataset<(u64, V2)>,
+    num_partitions: usize,
+) -> Dataset<(u64, (V1, V2))>
+where
+    V1: Send + Sync + Clone + 'static,
+    V2: Send + Sync + Clone + 'static,
+{
+    let np = num_partitions.max(1);
+    // Re-shuffle only when the side is not already partitioned to np
+    // buckets by its key (same stateless HashPartitioner ⇒ co-partitioned).
+    let need = |d: &Dataset<(u64, V1)>| !(d.is_hash_partitioned() && d.num_partitions() == np);
+    let l = if need(left) { left.hash_partition_by(np, |r| r.0) } else { left.clone() };
+    let r = if !(right.is_hash_partitioned() && right.num_partitions() == np) {
+        right.hash_partition_by(np, |r| r.0)
+    } else {
+        right.clone()
+    };
+    let sc = l.context().clone();
+    let pairs: Vec<(Arc<Vec<(u64, V1)>>, Arc<Vec<(u64, V2)>>)> = (0..np)
+        .map(|i| (Arc::clone(l.partition(i)), Arc::clone(r.partition(i))))
+        .collect();
+    let rows: u64 = pairs.iter().map(|(a, b)| (a.len() + b.len()) as u64).sum();
+    sc.metrics().add_scan((2 * np) as u64, rows);
+    let partitions: Vec<Arc<Vec<(u64, (V1, V2))>>> = sc.run_job(&pairs, |_, (lp, rp)| {
+        let mut build: FxHashMap<u64, Vec<&V2>> = FxHashMap::default();
+        for (k, v) in rp.iter() {
+            build.entry(*k).or_default().push(v);
+        }
+        let mut out = Vec::new();
+        for (k, v1) in lp.iter() {
+            if let Some(vs) = build.get(k) {
+                for v2 in vs {
+                    out.push((*k, (v1.clone(), (*v2).clone())));
+                }
+            }
+        }
+        Arc::new(out)
+    });
+    Dataset {
+        sc,
+        partitions,
+        partitioning: Some(Partitioning {
+            partitioner: HashPartitioner::new(np),
+            key_fn: Arc::new(|row: &(u64, (V1, V2))| row.0),
+        }),
+    }
+}
+
+/// Helper: flatten a Vec<Vec<T>> (avoids an extra trait import at call sites).
+trait IntoConcat<T> {
+    fn into_concat(self) -> Vec<T>;
+}
+
+impl<T> IntoConcat<T> for Vec<Vec<T>> {
+    fn into_concat(self) -> Vec<T> {
+        let n = self.iter().map(|v| v.len()).sum();
+        let mut out = Vec::with_capacity(n);
+        for v in self {
+            out.extend(v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn sc() -> MiniSpark {
+        MiniSpark::new(ClusterConfig {
+            executors: 4,
+            default_partitions: 8,
+            job_overhead_us: 0,
+        })
+    }
+
+    #[test]
+    fn from_vec_partitions_everything() {
+        let s = sc();
+        let d = Dataset::from_vec(&s, (0..100u64).collect(), 8);
+        assert_eq!(d.num_partitions(), 8);
+        assert_eq!(d.len(), 100);
+        let mut all = d.collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn from_vec_more_partitions_than_rows() {
+        let s = sc();
+        let d = Dataset::from_vec(&s, vec![1u64, 2], 8);
+        assert_eq!(d.num_partitions(), 8);
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn hash_partition_colocates_keys() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..1000).map(|i| (i % 37, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 8).hash_partition_by(8, |r| r.0);
+        assert!(d.is_hash_partitioned());
+        // Each key's rows should live in exactly one partition.
+        for key in 0..37u64 {
+            let holders: Vec<usize> = (0..d.num_partitions())
+                .filter(|&i| d.partition(i).iter().any(|r| r.0 == key))
+                .collect();
+            assert_eq!(holders.len(), 1, "key {key} in {holders:?}");
+        }
+    }
+
+    #[test]
+    fn lookup_scans_one_partition() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..1000).map(|i| (i % 37, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 8).hash_partition_by(8, |r| r.0);
+        let before = s.metrics().snapshot();
+        let hits = d.lookup(5);
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(delta.partitions_scanned, 1);
+        assert_eq!(hits.len(), 1000 / 37 + usize::from(5 < 1000 % 37));
+        assert!(hits.iter().all(|r| r.0 == 5));
+    }
+
+    #[test]
+    fn lookup_equals_filter() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..500).map(|i| (i % 11, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 8).hash_partition_by(8, |r| r.0);
+        let mut a = d.lookup(3);
+        let mut b = d.filter(|r| r.0 == 3).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn multi_lookup_dedups_partitions() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..1000).map(|i| (i, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 4).hash_partition_by(4, |r| r.0);
+        let before = s.metrics().snapshot();
+        let hits = d.multi_lookup(&(0..100u64).collect::<Vec<_>>());
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(hits.len(), 100);
+        // 100 keys over 4 partitions: at most 4 partitions scanned, 1 job.
+        assert!(delta.partitions_scanned <= 4);
+        assert_eq!(delta.jobs, 1);
+    }
+
+    #[test]
+    fn filter_preserves_partitioning() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..100).map(|i| (i, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 4).hash_partition_by(4, |r| r.0);
+        let f = d.filter(|r| r.1 % 2 == 0);
+        assert!(f.is_hash_partitioned());
+        assert_eq!(f.len(), 50);
+        // lookup still works post-filter
+        assert_eq!(f.lookup(4).len(), 1);
+        assert_eq!(f.lookup(5).len(), 0);
+    }
+
+    #[test]
+    fn union_partition_aware() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..100).map(|i| (i, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 4).hash_partition_by(4, |r| r.0);
+        let evens = d.filter(|r| r.1 % 2 == 0);
+        let odds = d.filter(|r| r.1 % 2 == 1);
+        let u = evens.union(&odds);
+        assert!(u.is_hash_partitioned(), "co-partitioned union keeps partitioning");
+        assert_eq!(u.len(), 100);
+        assert_eq!(u.num_partitions(), 4);
+        assert_eq!(u.lookup(7).len(), 1);
+
+        // Different partitioners: partitioning dropped.
+        let other = Dataset::from_vec(&s, vec![(1u64, 1u64)], 2).hash_partition_by(2, |r| r.0);
+        let v = d.union(&other);
+        assert!(!v.is_hash_partitioned());
+        assert_eq!(v.len(), 101);
+    }
+
+    #[test]
+    fn map_drops_partitioning() {
+        let s = sc();
+        let d = Dataset::from_vec(&s, (0..10u64).collect(), 2).hash_partition_by(2, |&x| x);
+        let m = d.map(|&x| x * 2);
+        assert!(!m.is_hash_partitioned());
+        let mut v = m.collect();
+        v.sort_unstable();
+        assert_eq!(v, (0..10).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reduce_by_key_reduces() {
+        let s = sc();
+        let rows: Vec<u64> = (0..1000).collect();
+        let d = Dataset::from_vec(&s, rows, 8);
+        let r = d.reduce_by_key(4, |&x| (x % 10, x), |a, b| a.min(b));
+        assert_eq!(r.len(), 10);
+        let mut got = r.collect();
+        got.sort_unstable();
+        // min of {k, k+10, ...} is k
+        assert_eq!(got, (0..10).map(|k| (k, k)).collect::<Vec<_>>());
+        // Result is lookup-able by key.
+        assert_eq!(r.lookup(3), vec![(3, 3)]);
+    }
+
+    #[test]
+    fn count_is_a_job() {
+        let s = sc();
+        let d = Dataset::from_vec(&s, vec![1u64, 2, 3], 2);
+        let before = s.metrics().snapshot();
+        assert_eq!(d.count(), 3);
+        assert_eq!(s.metrics().snapshot().since(&before).jobs, 1);
+    }
+
+    #[test]
+    fn prune_lookup_scans_only_targets() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..1000).map(|i| (i % 50, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 10).hash_partition_by(10, |r| r.0);
+        let before = s.metrics().snapshot();
+        let pruned = d.prune_lookup(&[3, 7]);
+        let delta = s.metrics().snapshot().since(&before);
+        assert!(delta.partitions_scanned <= 2);
+        assert!(pruned.is_hash_partitioned());
+        assert_eq!(pruned.num_partitions(), 10);
+        let mut got = pruned.collect();
+        got.sort_unstable();
+        let mut want: Vec<(u64, u64)> =
+            (0..1000).map(|i| (i % 50, i)).filter(|r| r.0 == 3 || r.0 == 7).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        // Result still supports lookup.
+        assert_eq!(pruned.lookup(3).len(), 20);
+        assert_eq!(pruned.lookup(11).len(), 0);
+    }
+
+    #[test]
+    fn flat_map_expands() {
+        let s = sc();
+        let d = Dataset::from_vec(&s, vec![1u64, 2, 3], 2);
+        let f = d.flat_map(|&x| vec![x, x * 10]);
+        let mut v = f.collect();
+        v.sort_unstable();
+        assert_eq!(v, vec![1, 2, 3, 10, 20, 30]);
+    }
+
+    #[test]
+    fn join_matches_pairs() {
+        let s = sc();
+        let a = Dataset::from_vec(&s, vec![(1u64, "a"), (2, "b"), (2, "b2"), (3, "c")], 2);
+        let b = Dataset::from_vec(&s, vec![(2u64, 20u64), (3, 30), (4, 40)], 3);
+        let j = join_u64(&a, &b, 4);
+        let mut v = j.collect();
+        v.sort_by_key(|r| (r.0, r.1 .0));
+        assert_eq!(
+            v,
+            vec![(2, ("b", 20)), (2, ("b2", 20)), (3, ("c", 30))]
+        );
+        assert!(j.is_hash_partitioned());
+    }
+
+    #[test]
+    fn join_copartitioned_skips_shuffle() {
+        let s = sc();
+        let a = Dataset::from_vec(&s, (0..100u64).map(|i| (i, i)).collect::<Vec<_>>(), 4)
+            .hash_partition_by(4, |r| r.0);
+        let b = Dataset::from_vec(&s, (0..100u64).map(|i| (i, i * 2)).collect::<Vec<_>>(), 4)
+            .hash_partition_by(4, |r| r.0);
+        let before = s.metrics().snapshot();
+        let j = join_u64(&a, &b, 4);
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(delta.rows_shuffled, 0, "co-partitioned join must not shuffle");
+        assert_eq!(j.len(), 100);
+    }
+
+    #[test]
+    fn empty_dataset_ops() {
+        let s = sc();
+        let d: Dataset<(u64, u64)> = Dataset::from_vec(&s, vec![], 4);
+        assert!(d.is_empty());
+        let h = d.hash_partition_by(4, |r| r.0);
+        assert_eq!(h.lookup(1).len(), 0);
+        assert_eq!(h.filter(|_| true).len(), 0);
+        assert!(h.collect().is_empty());
+    }
+}

@@ -1,0 +1,114 @@
+//! Engine metrics: cheap atomic counters capturing the data-volume costs
+//! the paper reasons about (partitions scanned per lookup, triples recursed,
+//! rows collected to the driver, jobs launched).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomic counters; shared by all datasets of one [`super::MiniSpark`].
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    pub jobs: AtomicU64,
+    pub tasks: AtomicU64,
+    pub partitions_scanned: AtomicU64,
+    pub rows_scanned: AtomicU64,
+    pub rows_shuffled: AtomicU64,
+    pub rows_collected: AtomicU64,
+}
+
+/// A point-in-time copy of the counters, with subtraction for deltas.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub jobs: u64,
+    pub tasks: u64,
+    pub partitions_scanned: u64,
+    pub rows_scanned: u64,
+    pub rows_shuffled: u64,
+    pub rows_collected: u64,
+}
+
+impl EngineMetrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            tasks: self.tasks.load(Ordering::Relaxed),
+            partitions_scanned: self.partitions_scanned.load(Ordering::Relaxed),
+            rows_scanned: self.rows_scanned.load(Ordering::Relaxed),
+            rows_shuffled: self.rows_shuffled.load(Ordering::Relaxed),
+            rows_collected: self.rows_collected.load(Ordering::Relaxed),
+        }
+    }
+
+    #[inline]
+    pub fn add_job(&self) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_tasks(&self, n: u64) {
+        self.tasks.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_scan(&self, partitions: u64, rows: u64) {
+        self.partitions_scanned.fetch_add(partitions, Ordering::Relaxed);
+        self.rows_scanned.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_shuffled(&self, rows: u64) {
+        self.rows_shuffled.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_collected(&self, rows: u64) {
+        self.rows_collected.fetch_add(rows, Ordering::Relaxed);
+    }
+}
+
+impl MetricsSnapshot {
+    /// Counter deltas since `earlier`.
+    pub fn since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs: self.jobs - earlier.jobs,
+            tasks: self.tasks - earlier.tasks,
+            partitions_scanned: self.partitions_scanned - earlier.partitions_scanned,
+            rows_scanned: self.rows_scanned - earlier.rows_scanned,
+            rows_shuffled: self.rows_shuffled - earlier.rows_shuffled,
+            rows_collected: self.rows_collected - earlier.rows_collected,
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs={} tasks={} parts_scanned={} rows_scanned={} shuffled={} collected={}",
+            self.jobs,
+            self.tasks,
+            self.partitions_scanned,
+            crate::util::fmt::human_count(self.rows_scanned),
+            crate::util::fmt::human_count(self.rows_shuffled),
+            crate::util::fmt::human_count(self.rows_collected),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_and_delta() {
+        let m = EngineMetrics::default();
+        m.add_job();
+        m.add_scan(2, 100);
+        let s1 = m.snapshot();
+        m.add_job();
+        m.add_scan(1, 50);
+        m.add_collected(7);
+        let d = m.snapshot().since(&s1);
+        assert_eq!(d.jobs, 1);
+        assert_eq!(d.partitions_scanned, 1);
+        assert_eq!(d.rows_scanned, 50);
+        assert_eq!(d.rows_collected, 7);
+        assert!(d.summary().contains("jobs=1"));
+    }
+}

@@ -1,0 +1,40 @@
+//! # minispark — an embedded, Spark-shaped dataflow engine
+//!
+//! The paper runs on Apache Spark 1.6.1 over an 8-node cluster. This module
+//! is the substitute substrate: a partitioned, multi-threaded, in-process
+//! dataflow engine whose cost structure matches the pieces of Spark the
+//! paper's algorithms are sensitive to (§1 "Apache Spark"):
+//!
+//! * **Partitioned datasets** — a [`Dataset<T>`] is a list of immutable
+//!   partitions executed in parallel by a worker pool.
+//! * **Hash partitioning** — [`Dataset::hash_partition_by`] shuffles rows so
+//!   all rows with the same key land in one partition; a subsequent
+//!   [`Dataset::lookup`] scans exactly one partition (the paper's central
+//!   cost argument for RQ/CCProv/CSProv).
+//! * **filter / lookup / collect** — the three operations the paper names.
+//!   `filter` scans every partition (preserving partitioning), `collect`
+//!   moves all rows to the driver.
+//! * **Job overhead** — every operation runs as a *job* with a configurable
+//!   simulated scheduling overhead ([`ClusterConfig::job_overhead_us`]),
+//!   modelling Spark's job/stage launch cost. This is the effect that makes
+//!   the paper's τ driver-collect optimization profitable; with overhead 0
+//!   the engine degrades to a plain parallel collection library.
+//! * **Metrics** — [`EngineMetrics`] counts jobs, tasks, partitions scanned,
+//!   rows scanned/shuffled/collected, so experiments can report *data-volume*
+//!   effects independently of wall-clock noise.
+//!
+//! Datasets are eager (materialized) — Spark's lazy DAG only matters for
+//! fault tolerance and multi-pass optimization, neither of which the
+//! paper's single-pass query algorithms exercise; caching is therefore
+//! implicit (a materialized dataset *is* its cache), and `cache()` exists
+//! as a documented no-op for API fidelity.
+
+mod context;
+mod dataset;
+mod metrics;
+mod partitioner;
+
+pub use context::MiniSpark;
+pub use dataset::{join_u64, Dataset};
+pub use metrics::{EngineMetrics, MetricsSnapshot};
+pub use partitioner::HashPartitioner;

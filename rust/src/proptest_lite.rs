@@ -1,0 +1,115 @@
+//! A small property-based testing harness (the offline build has no
+//! `proptest`).
+//!
+//! [`run_prop`] generates `cases` random inputs from a user generator,
+//! checks a property, and on failure retries with progressively "smaller"
+//! regenerated inputs (shrink-by-regeneration: the generator receives a
+//! shrink level that should reduce input size). Failures print the seed so
+//! a case can be replayed deterministically:
+//!
+//! ```text
+//! PROVSPARK_PROP_SEED=12345 cargo test
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropCfg {
+    /// Number of random cases to check.
+    pub cases: usize,
+    /// Base seed; each case uses `seed + case_index`. Overridden by the
+    /// `PROVSPARK_PROP_SEED` environment variable (single-case replay).
+    pub seed: u64,
+    /// Maximum shrink levels attempted after a failure (each level calls
+    /// the generator with a larger `shrink` argument).
+    pub max_shrink_levels: u32,
+}
+
+impl Default for PropCfg {
+    fn default() -> Self {
+        Self { cases: 32, seed: 0xC0FFEE, max_shrink_levels: 6 }
+    }
+}
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Run a property over random inputs.
+///
+/// * `gen(rng, shrink)` — produce an input; `shrink = 0` for normal cases,
+///   increasing values should produce smaller/simpler inputs.
+/// * `prop(input)` — return `Err(reason)` to fail.
+///
+/// Panics with a replayable report on failure.
+pub fn run_prop<T: std::fmt::Debug>(
+    name: &str,
+    cfg: &PropCfg,
+    gen: impl Fn(&mut Pcg64, u32) -> T,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let (seeds, replay): (Vec<u64>, bool) = match std::env::var("PROVSPARK_PROP_SEED") {
+        Ok(s) => (vec![s.parse().expect("PROVSPARK_PROP_SEED must be u64")], true),
+        Err(_) => ((0..cfg.cases as u64).map(|i| cfg.seed.wrapping_add(i)).collect(), false),
+    };
+    for seed in seeds {
+        let mut rng = Pcg64::new(seed);
+        let input = gen(&mut rng, 0);
+        if let Err(reason) = prop(&input) {
+            // Try to find a smaller failing input at higher shrink levels.
+            let mut smallest: (u32, String, String) =
+                (0, reason.clone(), format!("{input:?}"));
+            for level in 1..=cfg.max_shrink_levels {
+                let mut srng = Pcg64::new(seed ^ (level as u64) << 32);
+                let small = gen(&mut srng, level);
+                if let Err(r) = prop(&small) {
+                    smallest = (level, r, format!("{small:?}"));
+                }
+            }
+            let (level, r, repr) = smallest;
+            let repr = if repr.len() > 2000 { format!("{}…", &repr[..2000]) } else { repr };
+            panic!(
+                "property {name} failed (seed={seed}, shrink_level={level}{}):\n  \
+                 reason: {r}\n  input: {repr}\n  replay: PROVSPARK_PROP_SEED={seed}",
+                if replay { ", replayed" } else { "" }
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run_prop(
+            "sum_commutes",
+            &PropCfg::default(),
+            |rng, shrink| {
+                let n = if shrink > 0 { 2 } else { rng.range(0, 50) };
+                (0..n).map(|_| rng.next_below(100) as i64).collect::<Vec<_>>()
+            },
+            |xs| {
+                let mut ys = xs.clone();
+                ys.reverse();
+                if xs.iter().sum::<i64>() == ys.iter().sum::<i64>() {
+                    Ok(())
+                } else {
+                    Err("sum changed under reversal".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property always_fails failed")]
+    fn failing_property_reports_seed() {
+        run_prop(
+            "always_fails",
+            &PropCfg { cases: 1, ..Default::default() },
+            |rng, _| rng.next_below(10),
+            |_| Err("nope".into()),
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! The paper's core: provenance data model, preprocessing (weakly
+//! connected components, component partitioning, set dependencies) and the
+//! three query engines (RQ, CCProv, CSProv).
+
+pub mod model;
+pub mod partition;
+pub mod pipeline;
+pub mod query;
+pub mod setdeps;
+pub mod store;
+pub mod wcc;
+
+pub use model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
+pub use pipeline::{preprocess, Preprocessed};

@@ -1,0 +1,123 @@
+//! Provenance data model (paper §1).
+//!
+//! Provenance is a set of triples `⟨src, dst, op⟩`: attribute-value `dst`
+//! was derived from attribute-value `src` by transformation `op`.
+//! Preprocessing annotates triples either with their weakly connected
+//! component id ([`CcTriple`], CCProv) or with the connected-set ids of
+//! both endpoints ([`CsTriple`], CSProv — the paper drops `ccid` and adds
+//! `src_csid`/`dst_csid`, Table 7).
+
+use crate::util::ids::{AttrValueId, ComponentId, OpId, SetId};
+use rustc_hash::FxHashSet;
+
+/// `⟨src, dst, op⟩` — `dst` derived from `src` via transformation `op`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProvTriple {
+    pub src: AttrValueId,
+    pub dst: AttrValueId,
+    pub op: OpId,
+}
+
+impl ProvTriple {
+    pub fn new(src: AttrValueId, dst: AttrValueId, op: OpId) -> Self {
+        Self { src, dst, op }
+    }
+}
+
+/// A triple annotated with its component id (Table 4, CCProv schema).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CcTriple {
+    pub triple: ProvTriple,
+    pub ccid: ComponentId,
+}
+
+/// A triple annotated with the connected-set ids of both endpoints
+/// (Table 7, CSProv schema).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CsTriple {
+    pub triple: ProvTriple,
+    pub src_csid: SetId,
+    pub dst_csid: SetId,
+}
+
+/// A set dependency (Table 8): set `dst_csid` (child) is derived from set
+/// `src_csid` (parent) — i.e. some triple has `src` in the parent set and
+/// `dst` in the child set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SetDep {
+    /// Parent set (contributes to the derivation).
+    pub src_csid: SetId,
+    /// Child set (is derived).
+    pub dst_csid: SetId,
+}
+
+/// An in-memory provenance trace: the raw triples.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub triples: Vec<ProvTriple>,
+}
+
+impl Trace {
+    pub fn new(triples: Vec<ProvTriple>) -> Self {
+        Self { triples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.triples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.triples.is_empty()
+    }
+
+    /// Number of distinct attribute-values (graph nodes).
+    pub fn node_count(&self) -> usize {
+        let mut nodes: FxHashSet<AttrValueId> =
+            FxHashSet::with_capacity_and_hasher(self.triples.len(), Default::default());
+        for t in &self.triples {
+            nodes.insert(t.src);
+            nodes.insert(t.dst);
+        }
+        nodes.len()
+    }
+
+    /// All distinct nodes.
+    pub fn nodes(&self) -> Vec<AttrValueId> {
+        let mut nodes: FxHashSet<AttrValueId> =
+            FxHashSet::with_capacity_and_hasher(self.triples.len(), Default::default());
+        for t in &self.triples {
+            nodes.insert(t.src);
+            nodes.insert(t.dst);
+        }
+        nodes.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::EntityId;
+
+    fn av(e: u16, s: u64) -> AttrValueId {
+        AttrValueId::new(EntityId(e), s)
+    }
+
+    #[test]
+    fn node_count_dedups() {
+        let t = Trace::new(vec![
+            ProvTriple::new(av(0, 1), av(1, 1), OpId(0)),
+            ProvTriple::new(av(0, 1), av(1, 2), OpId(0)),
+            ProvTriple::new(av(1, 1), av(2, 1), OpId(1)),
+        ]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.node_count(), 4);
+        assert_eq!(t.nodes().len(), 4);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = Trace::default();
+        assert!(t.is_empty());
+        assert_eq!(t.node_count(), 0);
+    }
+}

@@ -1,0 +1,434 @@
+//! Algorithm 3: partitioning large components into weakly connected sets,
+//! guided by the workflow dependency graph's splits (paper §3).
+//!
+//! For each split `sp`, the subgraph `G[V(sp, c)]` induced inside component
+//! `c` by the split's entities is decomposed into weakly connected
+//! components; any piece with ≥ θ nodes recurses with sub-splits. The
+//! resulting sets satisfy the paper's criteria:
+//!
+//! * **C1** (few set-dependencies): two sets produced by the same
+//!   `(split, component)` pass are disconnected within that split by
+//!   construction, so they never contribute a dependency to each other.
+//! * **C2** (small set-lineage): splits are weakly connected table sets, so
+//!   a value's immediate ancestors tend to fall in its own set.
+//! * **C3** (small sets): the θ recursion bounds set sizes wherever the
+//!   dependency graph can still be subdivided.
+
+use crate::provenance::model::ProvTriple;
+use crate::util::ids::EntityId;
+use crate::workflow::graph::DependencyGraph;
+use crate::workflow::splits::{Split, SplitSet};
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// Statistics for one `(component, split)` pass — the rows of Table 9.
+#[derive(Debug, Clone)]
+pub struct PassStats {
+    /// Caller-assigned component label (e.g. "LC1", "LC2_lc1").
+    pub component: String,
+    pub split: String,
+    /// |W(sp, c)| — number of weakly connected sets produced.
+    pub sets: usize,
+    /// Sets with ≥ `big_threshold` nodes (paper uses 1000).
+    pub big_sets: usize,
+    /// Node count of the largest set.
+    pub largest: usize,
+}
+
+/// Algorithm 3 driver.
+pub struct Partitioner<'a> {
+    pub graph: &'a DependencyGraph,
+    pub splits: &'a SplitSet,
+    /// θ — recurse on split-components with at least this many nodes.
+    pub theta: usize,
+    /// Threshold for the `big_sets` statistic (paper: 1000; scale with the
+    /// generator's divisor).
+    pub big_threshold: usize,
+}
+
+impl<'a> Partitioner<'a> {
+    /// Partition one large component.
+    ///
+    /// * `triples` — the component's provenance triples.
+    /// * `label` — component label for statistics (e.g. "LC1").
+    ///
+    /// Returns the weakly connected sets (as node lists) plus per-pass
+    /// statistics. Every node of the component lands in exactly one set.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf, L3-2): the component is remapped to
+    /// dense indices once; all union-finds and membership checks then run
+    /// over flat `Vec`s instead of `u64` hash maps.
+    pub fn partition_component(
+        &self,
+        triples: &[ProvTriple],
+        label: &str,
+    ) -> (Vec<Vec<u64>>, Vec<PassStats>) {
+        // Dense remap of the component's nodes.
+        let mut raw_of: Vec<u64> = Vec::with_capacity(triples.len() * 2);
+        for t in triples {
+            raw_of.push(t.src.raw());
+            raw_of.push(t.dst.raw());
+        }
+        raw_of.sort_unstable();
+        raw_of.dedup();
+        let dense_of: FxHashMap<u64, u32> =
+            raw_of.iter().enumerate().map(|(i, &r)| (r, i as u32)).collect();
+        let ents: Vec<u16> = raw_of
+            .iter()
+            .map(|&r| crate::util::ids::AttrValueId(r).entity().0)
+            .collect();
+        let edges: Vec<(u32, u32)> = triples
+            .iter()
+            .map(|t| (dense_of[&t.src.raw()], dense_of[&t.dst.raw()]))
+            .collect();
+        let all_nodes: Vec<u32> = (0..raw_of.len() as u32).collect();
+
+        let mut sets = Vec::new();
+        let mut stats = Vec::new();
+        let mut scratch = Scratch::new(raw_of.len());
+        self.recurse(
+            &edges,
+            &all_nodes,
+            &ents,
+            self.splits.top_level(),
+            label,
+            &mut scratch,
+            &mut sets,
+            &mut stats,
+        );
+        let sets = sets
+            .into_iter()
+            .map(|s: Vec<u32>| s.into_iter().map(|i| raw_of[i as usize]).collect())
+            .collect();
+        (sets, stats)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn recurse(
+        &self,
+        edges: &[(u32, u32)],
+        nodes: &[u32],
+        ents: &[u16],
+        splits: &[Split],
+        label: &str,
+        scratch: &mut Scratch,
+        out_sets: &mut Vec<Vec<u32>>,
+        out_stats: &mut Vec<PassStats>,
+    ) {
+        for sp in splits {
+            // Entity membership mask for this split.
+            let mut in_split = vec![false; self.graph.entity_count()];
+            for &e in sp.entities() {
+                in_split[e.0 as usize] = true;
+            }
+
+            // V(sp, c) and G[V(sp, c)]: union-find over intra-split edges.
+            let split_nodes: Vec<u32> = nodes
+                .iter()
+                .copied()
+                .filter(|&i| in_split[ents[i as usize] as usize])
+                .collect();
+            if split_nodes.is_empty() {
+                continue; // split has no vertices inside this component
+            }
+            for &i in &split_nodes {
+                scratch.parent[i as usize] = i;
+            }
+            for &(s, d) in edges {
+                if in_split[ents[s as usize] as usize] && in_split[ents[d as usize] as usize] {
+                    scratch.union(s, d);
+                }
+            }
+
+            // W(sp, c): group nodes by root.
+            let mut comps: FxHashMap<u32, Vec<u32>> = FxHashMap::default();
+            for &i in &split_nodes {
+                comps.entry(scratch.find(i)).or_default().push(i);
+            }
+            // Reset scratch for the next pass (only the touched slots).
+            for &i in &split_nodes {
+                scratch.parent[i as usize] = u32::MAX;
+                scratch.rank[i as usize] = 0;
+            }
+
+            let mut pass = PassStats {
+                component: label.to_string(),
+                split: sp.name().to_string(),
+                sets: 0,
+                big_sets: 0,
+                largest: 0,
+            };
+            let mut oversized: Vec<Vec<u32>> = Vec::new();
+            for (_, cn) in comps {
+                pass.sets += 1;
+                pass.largest = pass.largest.max(cn.len());
+                if cn.len() >= self.big_threshold {
+                    pass.big_sets += 1;
+                }
+                if cn.len() >= self.theta {
+                    oversized.push(cn);
+                } else {
+                    out_sets.push(cn);
+                }
+            }
+            out_stats.push(pass);
+
+            // Recurse on oversized split-components with sub-splits.
+            if oversized.is_empty() {
+                continue;
+            }
+            match self.splits.get_sub_splits(self.graph, sp) {
+                Some(sub) => {
+                    for (i, cn) in oversized.into_iter().enumerate() {
+                        for &n in &cn {
+                            scratch.member[n as usize] = true;
+                        }
+                        let cn_edges: Vec<(u32, u32)> = edges
+                            .iter()
+                            .copied()
+                            .filter(|&(s, d)| {
+                                scratch.member[s as usize] && scratch.member[d as usize]
+                            })
+                            .collect();
+                        for &n in &cn {
+                            scratch.member[n as usize] = false;
+                        }
+                        let sub_label = format!("{label}_{}lc{}", sp.name(), i + 1);
+                        self.recurse(
+                            &cn_edges, &cn, ents, &sub, &sub_label, scratch, out_sets, out_stats,
+                        );
+                    }
+                }
+                None => {
+                    // Single-entity split: cannot subdivide further; keep
+                    // the oversized sets (paper's irreducible case).
+                    out_sets.extend(oversized);
+                }
+            }
+        }
+    }
+}
+
+/// Reusable dense union-find scratch space. `parent[i] == u32::MAX` marks
+/// "not in the current pass".
+struct Scratch {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    member: Vec<bool>,
+}
+
+impl Scratch {
+    fn new(n: usize) -> Self {
+        Self { parent: vec![u32::MAX; n], rank: vec![0; n], member: vec![false; n] }
+    }
+
+    #[inline]
+    fn find(&mut self, mut x: u32) -> u32 {
+        loop {
+            let p = self.parent[x as usize];
+            if p == x {
+                return x;
+            }
+            let gp = self.parent[p as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+    }
+
+    #[inline]
+    fn union(&mut self, a: u32, b: u32) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return;
+        }
+        let (ka, kb) = (self.rank[ra as usize], self.rank[rb as usize]);
+        if ka < kb {
+            self.parent[ra as usize] = rb;
+        } else if ka > kb {
+            self.parent[rb as usize] = ra;
+        } else {
+            self.parent[rb as usize] = ra;
+            self.rank[ra as usize] = ka + 1;
+        }
+    }
+}
+
+/// True when `set` is weakly connected within the subgraph induced by the
+/// split's entities (test helper for the Algorithm 3 invariant).
+pub fn is_weakly_connected_within(
+    triples: &[ProvTriple],
+    set: &[u64],
+    split_entities: &[EntityId],
+) -> bool {
+    if set.len() <= 1 {
+        return true;
+    }
+    let members: FxHashSet<u64> = set.iter().copied().collect();
+    let ents: FxHashSet<u16> = split_entities.iter().map(|e| e.0).collect();
+    let in_sub = |raw: u64| {
+        members.contains(&raw) && ents.contains(&crate::util::ids::AttrValueId(raw).entity().0)
+    };
+    let mut adj: FxHashMap<u64, Vec<u64>> = FxHashMap::default();
+    for t in triples {
+        let (s, d) = (t.src.raw(), t.dst.raw());
+        if in_sub(s) && in_sub(d) {
+            adj.entry(s).or_default().push(d);
+            adj.entry(d).or_default().push(s);
+        }
+    }
+    let mut seen: FxHashSet<u64> = FxHashSet::default();
+    let mut stack = vec![set[0]];
+    seen.insert(set[0]);
+    while let Some(u) = stack.pop() {
+        for &v in adj.get(&u).into_iter().flatten() {
+            if seen.insert(v) {
+                stack.push(v);
+            }
+        }
+    }
+    seen.len() == set.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::AttrValueId;
+    use crate::workflow::curation::text_curation_workflow;
+
+    fn av(g: &DependencyGraph, name: &str, s: u64) -> AttrValueId {
+        AttrValueId::new(g.entity_by_name(name).unwrap(), s)
+    }
+
+    fn t(g: &DependencyGraph, pe: &str, ps: u64, ce: &str, cs: u64) -> ProvTriple {
+        let src = av(g, pe, ps);
+        let dst = av(g, ce, cs);
+        let op = g.op_between(src.entity(), dst.entity()).unwrap();
+        ProvTriple::new(src, dst, op)
+    }
+
+    /// Small cross-split component:
+    ///   TOKS:1 → ANNOTS:1 → METSPANS:1 → F10WMTR:1 → CANDS:1 → RESOLVED:1
+    ///   TOKS:2 → ANNOTS:1 (same sp1 chain via SENTS:1 → TOKS:1/2)
+    fn small_component(g: &DependencyGraph) -> Vec<ProvTriple> {
+        vec![
+            t(g, "SENTS", 1, "TOKS", 1),
+            t(g, "SENTS", 1, "TOKS", 2),
+            t(g, "TOKS", 1, "ANNOTS", 1),
+            t(g, "TOKS", 2, "ANNOTS", 1),
+            t(g, "ANNOTS", 1, "METSPANS", 1),
+            t(g, "METSPANS", 1, "F10WMTR", 1),
+            t(g, "F10WMTR", 1, "CANDS", 1),
+            t(g, "CANDS", 1, "RESOLVED", 1),
+        ]
+    }
+
+    #[test]
+    fn partitions_cover_nodes_disjointly() {
+        let (g, splits) = text_curation_workflow();
+        let triples = small_component(&g);
+        let p = Partitioner { graph: &g, splits: &splits, theta: 1000, big_threshold: 1000 };
+        let (sets, stats) = p.partition_component(&triples, "c0");
+        let mut seen = FxHashSet::default();
+        let mut total = 0;
+        for s in &sets {
+            for &n in s {
+                assert!(seen.insert(n), "node {n} in two sets");
+                total += 1;
+            }
+        }
+        // Nodes: SENTS:1, TOKS:1, TOKS:2 (sp1) + ANNOTS:1, METSPANS:1,
+        // F10WMTR:1, CANDS:1 (sp2) + RESOLVED:1 (sp3) = 8.
+        assert_eq!(total, 8);
+        // One pass per split touched.
+        assert_eq!(stats.len(), 3);
+    }
+
+    #[test]
+    fn sets_respect_split_boundaries() {
+        let (g, splits) = text_curation_workflow();
+        let triples = small_component(&g);
+        let p = Partitioner { graph: &g, splits: &splits, theta: 1000, big_threshold: 1000 };
+        let (sets, _) = p.partition_component(&triples, "c0");
+        for s in &sets {
+            let names: FxHashSet<&str> = s
+                .iter()
+                .map(|&n| splits.split_of(AttrValueId(n).entity()).unwrap())
+                .collect();
+            assert_eq!(names.len(), 1, "set crosses splits: {s:?}");
+        }
+    }
+
+    #[test]
+    fn theta_forces_recursion() {
+        let (g, splits) = text_curation_workflow();
+        // Build a chain inside sp3 crossing sp4/sp5:
+        // RESOLVED → MTRCS → MTRVALS → KBROWS → KBATTRS → RPTROWS
+        let triples = vec![
+            t(&g, "RESOLVED", 1, "MTRCS", 1),
+            t(&g, "MTRCS", 1, "MTRVALS", 1),
+            t(&g, "MTRVALS", 1, "KBROWS", 1),
+            t(&g, "KBROWS", 1, "KBATTRS", 1),
+            t(&g, "KBATTRS", 1, "RPTROWS", 1),
+        ];
+        // θ=2: the 6-node sp3 component must recurse into sp4/sp5 pieces.
+        let p = Partitioner { graph: &g, splits: &splits, theta: 2, big_threshold: 1000 };
+        let (sets, stats) = p.partition_component(&triples, "c0");
+        // Recursion produced passes labelled with the sub-component.
+        assert!(stats.iter().any(|s| s.split == "sp4"), "{stats:?}");
+        assert!(stats.iter().any(|s| s.split == "sp5"), "{stats:?}");
+        // Sets now respect sp4/sp5 boundaries.
+        for s in &sets {
+            let in_sp4 = s.iter().any(|&n| {
+                matches!(splits.split_of(AttrValueId(n).entity()), Some("sp3"))
+                    && ["RESOLVED", "MTRCS", "MTRVALS", "KBROWS"]
+                        .contains(&g.name_of(AttrValueId(n).entity()))
+            });
+            let in_sp5 = s.iter().any(|&n| {
+                ["KBATTRS", "RPTROWS", "PUBSNAP", "IDXMAP"]
+                    .contains(&g.name_of(AttrValueId(n).entity()))
+            });
+            assert!(!(in_sp4 && in_sp5), "set crosses sp4/sp5: {s:?}");
+        }
+    }
+
+    #[test]
+    fn no_intra_pass_set_dependencies() {
+        // Criterion C1: sets from the same (split, component) pass are
+        // disconnected within that split, so no triple joins them.
+        let (g, splits) = text_curation_workflow();
+        let triples = small_component(&g);
+        let p = Partitioner { graph: &g, splits: &splits, theta: 1000, big_threshold: 1000 };
+        let (sets, _) = p.partition_component(&triples, "c0");
+        let set_of: FxHashMap<u64, usize> = sets
+            .iter()
+            .enumerate()
+            .flat_map(|(i, s)| s.iter().map(move |&n| (n, i)))
+            .collect();
+        for t in &triples {
+            let (a, b) = (set_of[&t.src.raw()], set_of[&t.dst.raw()]);
+            if a != b {
+                // Cross-set triples must cross splits too (same-pass sets
+                // can't be joined by an intra-split edge).
+                let sa = splits.split_of(AttrValueId(t.src.raw()).entity()).unwrap();
+                let sb = splits.split_of(AttrValueId(t.dst.raw()).entity()).unwrap();
+                assert_ne!(sa, sb, "intra-split edge joins two sets");
+            }
+        }
+    }
+
+    #[test]
+    fn connectivity_invariant_holds() {
+        let (g, splits) = text_curation_workflow();
+        let triples = small_component(&g);
+        let p = Partitioner { graph: &g, splits: &splits, theta: 1000, big_threshold: 1000 };
+        let (sets, _) = p.partition_component(&triples, "c0");
+        for s in &sets {
+            let sp_name = splits.split_of(AttrValueId(s[0]).entity()).unwrap();
+            let sp = splits.top_level().iter().find(|x| x.name() == sp_name).unwrap();
+            assert!(
+                is_weakly_connected_within(&triples, s, sp.entities()),
+                "set not weakly connected in its split: {s:?}"
+            );
+        }
+    }
+}

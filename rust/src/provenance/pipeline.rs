@@ -1,0 +1,243 @@
+//! End-to-end preprocessing pipeline: WCC → component tagging →
+//! Algorithm 3 partitioning of large components → set-dependency
+//! extraction. Produces everything the three query engines consume.
+
+use crate::minispark::MiniSpark;
+use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
+use crate::provenance::partition::{Partitioner, PassStats};
+use crate::provenance::setdeps::set_deps_driver;
+use crate::provenance::wcc::{components_from_labels, wcc_driver, wcc_minispark};
+use crate::util::ids::{ComponentId, SetId};
+use crate::util::timer::Timer;
+use crate::workflow::graph::DependencyGraph;
+use crate::workflow::splits::SplitSet;
+use rustc_hash::FxHashMap;
+
+/// Which implementation computes the WCC labels.
+pub enum WccImpl<'a> {
+    /// Driver-side union-find (default, fastest on one box).
+    Driver,
+    /// Distributed label propagation on minispark (paper-faithful phase).
+    MiniSpark { sc: &'a MiniSpark, partitions: usize },
+    /// Custom labeller (the XLA/PJRT fixpoint from `runtime` plugs in here,
+    /// keeping this module independent of artifact availability).
+    Custom(&'a dyn Fn(&Trace) -> FxHashMap<u64, u64>),
+}
+
+/// A fully preprocessed trace: the inputs of RQ, CCProv and CSProv.
+#[derive(Debug, Clone, Default)]
+pub struct Preprocessed {
+    /// node → component id (min node id in component).
+    pub cc_of: FxHashMap<u64, u64>,
+    /// node → connected-set id (min node id in set).
+    pub cs_of: FxHashMap<u64, u64>,
+    /// CCProv schema: triples tagged with their component.
+    pub cc_triples: Vec<CcTriple>,
+    /// CSProv schema: triples tagged with both endpoint set ids.
+    pub cs_triples: Vec<CsTriple>,
+    /// Distinct cross-set dependencies.
+    pub set_deps: Vec<SetDep>,
+    /// Table 9 rows: per large-component, per split pass statistics.
+    pub pass_stats: Vec<PassStats>,
+    /// Large components, descending by node count: (ccid, nodes, edges).
+    pub large_components: Vec<(u64, usize, usize)>,
+    /// Total number of weakly connected components.
+    pub component_count: usize,
+    /// Total number of weakly connected sets.
+    pub set_count: usize,
+    /// Phase timings (wcc / partition / tag / setdeps).
+    pub timings: Vec<(String, std::time::Duration)>,
+}
+
+/// Run the full preprocessing pipeline.
+///
+/// * `theta` — Algorithm 3's θ **and** the large-component cutoff: any
+///   component with ≥ θ nodes gets partitioned (smaller ones are managed
+///   as single sets, per §2.3).
+/// * `big_threshold` — the "≥ 1000 nodes" statistic bound of Table 9
+///   (pass a scaled value when the trace is scaled down).
+pub fn preprocess(
+    trace: &Trace,
+    graph: &DependencyGraph,
+    splits: &SplitSet,
+    theta: usize,
+    big_threshold: usize,
+    wcc: WccImpl<'_>,
+) -> Preprocessed {
+    let mut timer = Timer::new();
+    let mut out = Preprocessed::default();
+
+    // ---- Phase 1: weakly connected components ---------------------------
+    let labels = match wcc {
+        WccImpl::Driver => wcc_driver(trace),
+        WccImpl::MiniSpark { sc, partitions } => wcc_minispark(sc, trace, partitions),
+        WccImpl::Custom(f) => f(trace),
+    };
+    timer.lap("wcc");
+
+    // Component inventory.
+    let comps = components_from_labels(&labels);
+    out.component_count = comps.len();
+    let mut edge_count: FxHashMap<u64, usize> = FxHashMap::default();
+    for t in &trace.triples {
+        *edge_count.entry(labels[&t.src.raw()]).or_default() += 1;
+    }
+    let mut large: Vec<(u64, usize, usize)> = comps
+        .iter()
+        .filter(|(_, nodes)| nodes.len() >= theta)
+        .map(|(&cc, nodes)| (cc, nodes.len(), edge_count.get(&cc).copied().unwrap_or(0)))
+        .collect();
+    large.sort_unstable_by(|a, b| b.1.cmp(&a.1));
+    out.large_components = large;
+
+    // ---- Phase 2: partition large components (Algorithm 3) --------------
+    let partitioner = Partitioner { graph, splits, theta, big_threshold };
+    // Group triples by component for the large ones.
+    let large_ids: FxHashMap<u64, usize> = out
+        .large_components
+        .iter()
+        .enumerate()
+        .map(|(i, &(cc, _, _))| (cc, i))
+        .collect();
+    let mut large_triples: Vec<Vec<ProvTriple>> =
+        vec![Vec::new(); out.large_components.len()];
+    for t in &trace.triples {
+        if let Some(&i) = large_ids.get(&labels[&t.src.raw()]) {
+            large_triples[i].push(*t);
+        }
+    }
+    let mut cs_of: FxHashMap<u64, u64> =
+        FxHashMap::with_capacity_and_hasher(labels.len(), Default::default());
+    for (i, triples) in large_triples.iter().enumerate() {
+        let label = format!("LC{}", i + 1);
+        let (sets, stats) = partitioner.partition_component(triples, &label);
+        out.pass_stats.extend(stats);
+        for set in sets {
+            let sid = *set.iter().min().expect("non-empty set");
+            for n in set {
+                cs_of.insert(n, sid);
+            }
+            out.set_count += 1;
+        }
+    }
+    // Small components: one set each (its component id).
+    for (&node, &cc) in &labels {
+        cs_of.entry(node).or_insert(cc);
+    }
+    out.set_count += comps.len() - out.large_components.len();
+    timer.lap("partition");
+
+    // ---- Phase 3: tag triples --------------------------------------------
+    out.cc_triples = trace
+        .triples
+        .iter()
+        .map(|&t| CcTriple { triple: t, ccid: ComponentId(labels[&t.dst.raw()]) })
+        .collect();
+    out.cs_triples = trace
+        .triples
+        .iter()
+        .map(|&t| CsTriple {
+            triple: t,
+            src_csid: SetId(cs_of[&t.src.raw()]),
+            dst_csid: SetId(cs_of[&t.dst.raw()]),
+        })
+        .collect();
+    timer.lap("tag");
+
+    // ---- Phase 4: set dependencies ----------------------------------------
+    out.set_deps = set_deps_driver(&out.cs_triples);
+    timer.lap("setdeps");
+
+    out.cc_of = labels;
+    out.cs_of = cs_of;
+    out.timings = timer.laps().to_vec();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::generator::{generate, GeneratorConfig};
+
+    fn tiny() -> (Trace, DependencyGraph, SplitSet) {
+        generate(&GeneratorConfig { scale_divisor: 1000, ..Default::default() })
+    }
+
+    #[test]
+    fn preprocess_covers_every_node_and_triple() {
+        let (trace, g, splits) = tiny();
+        let pre = preprocess(&trace, &g, &splits, 500, 100, WccImpl::Driver);
+        assert_eq!(pre.cc_triples.len(), trace.len());
+        assert_eq!(pre.cs_triples.len(), trace.len());
+        for t in &trace.triples {
+            assert!(pre.cc_of.contains_key(&t.src.raw()));
+            assert!(pre.cs_of.contains_key(&t.dst.raw()));
+        }
+    }
+
+    #[test]
+    fn components_share_ccid_across_edges() {
+        let (trace, g, splits) = tiny();
+        let pre = preprocess(&trace, &g, &splits, 500, 100, WccImpl::Driver);
+        for t in &trace.triples {
+            assert_eq!(pre.cc_of[&t.src.raw()], pre.cc_of[&t.dst.raw()]);
+        }
+    }
+
+    #[test]
+    fn sets_nest_inside_components() {
+        let (trace, g, splits) = tiny();
+        let pre = preprocess(&trace, &g, &splits, 500, 100, WccImpl::Driver);
+        // All nodes of one set belong to one component.
+        let mut set_cc: FxHashMap<u64, u64> = FxHashMap::default();
+        for (&node, &sid) in &pre.cs_of {
+            let cc = pre.cc_of[&node];
+            if let Some(&prev) = set_cc.get(&sid) {
+                assert_eq!(prev, cc, "set {sid} spans components");
+            } else {
+                set_cc.insert(sid, cc);
+            }
+        }
+        assert!(pre.set_count >= pre.component_count);
+    }
+
+    #[test]
+    fn small_components_are_single_sets() {
+        let (trace, g, splits) = tiny();
+        let pre = preprocess(&trace, &g, &splits, 500, 100, WccImpl::Driver);
+        let large: std::collections::HashSet<u64> =
+            pre.large_components.iter().map(|&(cc, _, _)| cc).collect();
+        for (&node, &sid) in &pre.cs_of {
+            let cc = pre.cc_of[&node];
+            if !large.contains(&cc) {
+                assert_eq!(sid, cc, "small component not kept as one set");
+            }
+        }
+    }
+
+    #[test]
+    fn set_deps_reference_real_sets() {
+        let (trace, g, splits) = tiny();
+        let pre = preprocess(&trace, &g, &splits, 300, 100, WccImpl::Driver);
+        let sets: std::collections::HashSet<u64> = pre.cs_of.values().copied().collect();
+        assert!(!pre.set_deps.is_empty(), "scaled trace should have cross-set deps");
+        for d in &pre.set_deps {
+            assert!(sets.contains(&d.src_csid.0));
+            assert!(sets.contains(&d.dst_csid.0));
+            assert_ne!(d.src_csid, d.dst_csid);
+        }
+    }
+
+    #[test]
+    fn finds_three_large_components() {
+        let (trace, g, splits) = tiny();
+        // θ scaled: divisor 1000 → LCs have ≥ ~300 nodes.
+        let pre = preprocess(&trace, &g, &splits, 300, 100, WccImpl::Driver);
+        assert!(
+            pre.large_components.len() >= 3,
+            "large components: {:?}",
+            pre.large_components
+        );
+        assert!(pre.pass_stats.iter().any(|p| p.component == "LC1"));
+    }
+}

@@ -1,0 +1,147 @@
+//! CCProv — Algorithm 1.
+//!
+//! Preprocessing tags every triple with its weakly connected component id.
+//! A query (1) resolves the queried item's component by a single-partition
+//! lookup, (2) filters the component's triples (one full scan that
+//! preserves the dst hash-partitioning), and (3) recursively queries only
+//! that component — on the cluster when it holds ≥ τ triples, otherwise
+//! collected to the driver (Spark job launch overhead dominates tiny jobs;
+//! see §2.2 "Further Optimization").
+
+use super::driver_rq::{AncestorClosure, NativeClosure};
+use super::result::Lineage;
+use super::rq::rq_on_spark_generic;
+use crate::minispark::{Dataset, MiniSpark};
+use crate::provenance::model::{CcTriple, ProvTriple};
+use std::sync::Arc;
+
+/// Algorithm 1 engine.
+pub struct CcProvEngine {
+    prov: Dataset<CcTriple>,
+    tau: usize,
+    closure: Arc<dyn AncestorClosure>,
+}
+
+impl CcProvEngine {
+    /// Build from preprocessed component-tagged triples.
+    pub fn new(
+        sc: &MiniSpark,
+        cc_triples: Vec<CcTriple>,
+        num_partitions: usize,
+        tau: usize,
+    ) -> Self {
+        let prov = Dataset::from_vec(sc, cc_triples, num_partitions)
+            .hash_partition_by(num_partitions, |t: &CcTriple| t.triple.dst.raw())
+            .cache();
+        Self { prov, tau, closure: Arc::new(NativeClosure) }
+    }
+
+    /// Swap the driver-side closure implementation (native / XLA).
+    pub fn with_closure(mut self, closure: Arc<dyn AncestorClosure>) -> Self {
+        self.closure = closure;
+        self
+    }
+
+    pub fn tau(&self) -> usize {
+        self.tau
+    }
+
+    /// Algorithm 1: lineage of `q`.
+    pub fn query(&self, q: u64) -> Lineage {
+        // Find-Connected-Component: one partition scan.
+        let rows = self.prov.lookup(q);
+        let Some(first) = rows.first() else {
+            return Lineage::empty(q); // input value or unknown: no lineage
+        };
+        let ccid = first.ccid;
+
+        // Find-Prov-Triples-In-Component: filter, partitioning preserved.
+        let c_prov = self.prov.filter(move |t| t.ccid == ccid);
+
+        if c_prov.count() >= self.tau {
+            // RQ on the cluster over the component's triples.
+            rq_on_spark_generic(&c_prov, |t| t.triple, q)
+        } else {
+            // Collect to the driver and recurse locally.
+            let triples: Vec<ProvTriple> =
+                c_prov.collect().into_iter().map(|t| t.triple).collect();
+            self.closure.closure(&triples, q)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::provenance::model::Trace;
+    use crate::provenance::pipeline::{preprocess, WccImpl};
+    use crate::provenance::query::rq::RqEngine;
+    use crate::util::ids::{AttrValueId, EntityId, OpId};
+    use crate::workflow::generator::{generate, GeneratorConfig};
+
+    fn sc() -> MiniSpark {
+        MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() })
+    }
+
+    #[test]
+    fn ccprov_matches_rq_both_tau_branches() {
+        let (trace, g, splits) = generate(&GeneratorConfig {
+            scale_divisor: 2000,
+            ..Default::default()
+        });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let s = sc();
+        let rq = RqEngine::new(&s, &trace, 16);
+        // Pick a handful of derived items.
+        let queries: Vec<u64> = trace
+            .triples
+            .iter()
+            .step_by(trace.len() / 8 + 1)
+            .map(|t| t.dst.raw())
+            .collect();
+        for tau in [0usize, usize::MAX] {
+            let cc = CcProvEngine::new(&s, pre.cc_triples.clone(), 16, tau);
+            for &q in &queries {
+                assert_eq!(cc.query(q), rq.query(q), "q={q} tau={tau}");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_item_is_empty() {
+        let trace = Trace::new(vec![ProvTriple::new(
+            AttrValueId::new(EntityId(0), 1),
+            AttrValueId::new(EntityId(1), 1),
+            OpId(0),
+        )]);
+        let (g, splits) = crate::workflow::curation::text_curation_workflow();
+        let pre = preprocess(&trace, &g, &splits, 100, 100, WccImpl::Driver);
+        let cc = CcProvEngine::new(&sc(), pre.cc_triples, 4, 10);
+        assert!(cc.query(AttrValueId::new(EntityId(9), 99).raw()).is_empty());
+    }
+
+    #[test]
+    fn driver_branch_scans_less_than_spark_branch() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let s = sc();
+        let q = trace.triples[trace.len() / 2].dst.raw();
+
+        let spark = CcProvEngine::new(&s, pre.cc_triples.clone(), 16, 0);
+        let before = s.metrics().snapshot();
+        let _ = spark.query(q);
+        let spark_rows = s.metrics().snapshot().since(&before).rows_scanned;
+
+        let driver = CcProvEngine::new(&s, pre.cc_triples.clone(), 16, usize::MAX);
+        let before = s.metrics().snapshot();
+        let _ = driver.query(q);
+        let driver_rows = s.metrics().snapshot().since(&before).rows_scanned;
+
+        assert!(
+            driver_rows <= spark_rows,
+            "driver branch should scan no more rows: {driver_rows} vs {spark_rows}"
+        );
+    }
+}

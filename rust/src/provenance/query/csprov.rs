@@ -1,0 +1,257 @@
+//! CSProv — Algorithm 2.
+//!
+//! Preprocessing partitions large components into weakly connected sets
+//! (Algorithm 3) and materializes the set-dependency relation. A query:
+//!
+//! 1. resolves the queried item's connected set (`Find-Connected-Set`) by a
+//!    single-partition lookup on a `(node → csid)` index,
+//! 2. computes the **set-lineage** `S` — all sets contributing to the
+//!    derivation of the item's set — by recursive querying over the
+//!    (tiny) set-dependency dataset, hash-partitioned on `dst_csid`,
+//! 3. assembles `cs_provRDD`: triples whose *derived* item lies in a set of
+//!    `S`, via a partition-pruned lookup on the `dst_csid`-partitioned
+//!    triple dataset — at most `|S|` partitions scanned,
+//! 4. recurses over that minimal volume exactly like CCProv (driver-side
+//!    when < τ).
+//!
+//! When the queried item lies in a small component, its component *is* its
+//! set, the set-lineage is empty, and CSProv reduces to CCProv (§2.3).
+
+use super::driver_rq::{AncestorClosure, NativeClosure};
+use super::result::Lineage;
+use super::rq::rq_on_spark_generic;
+use crate::minispark::{Dataset, MiniSpark};
+use crate::provenance::model::{CsTriple, ProvTriple, SetDep};
+use rustc_hash::FxHashSet;
+use std::sync::Arc;
+
+/// Algorithm 2 engine.
+pub struct CsProvEngine {
+    /// Triples, hash-partitioned on `dst_csid` (the paper's layout).
+    prov_by_set: Dataset<CsTriple>,
+    /// `(node, csid)` index, hash-partitioned on node — how
+    /// `Find-Connected-Set` resolves a queried item in one partition scan.
+    node_set: Dataset<(u64, u64)>,
+    /// Set dependencies, hash-partitioned on `dst_csid` (child set).
+    set_deps: Dataset<SetDep>,
+    num_partitions: usize,
+    tau: usize,
+    closure: Arc<dyn AncestorClosure>,
+}
+
+impl CsProvEngine {
+    pub fn new(
+        sc: &MiniSpark,
+        cs_triples: Vec<CsTriple>,
+        node_set: Vec<(u64, u64)>,
+        set_deps: Vec<SetDep>,
+        num_partitions: usize,
+        tau: usize,
+    ) -> Self {
+        let np = num_partitions;
+        let prov_by_set = Dataset::from_vec(sc, cs_triples, np)
+            .hash_partition_by(np, |t: &CsTriple| t.dst_csid.0)
+            .cache();
+        let node_set = Dataset::from_vec(sc, node_set, np)
+            .hash_partition_by(np, |r: &(u64, u64)| r.0)
+            .cache();
+        let set_deps = Dataset::from_vec(sc, set_deps, np)
+            .hash_partition_by(np, |d: &SetDep| d.dst_csid.0)
+            .cache();
+        Self { prov_by_set, node_set, set_deps, num_partitions: np, tau, closure: Arc::new(NativeClosure) }
+    }
+
+    /// Swap the driver-side closure implementation (native / XLA).
+    pub fn with_closure(mut self, closure: Arc<dyn AncestorClosure>) -> Self {
+        self.closure = closure;
+        self
+    }
+
+    /// The set-lineage of set `cs`: every set contributing to its
+    /// derivation, directly or indirectly (RQ over the set-dependency
+    /// dataset — lightweight because both the dataset and the lineage are
+    /// small; §2.3).
+    pub fn set_lineage(&self, cs: u64) -> Vec<u64> {
+        let mut seen: FxHashSet<u64> = FxHashSet::default();
+        seen.insert(cs);
+        let mut frontier = vec![cs];
+        let mut out = Vec::new();
+        while !frontier.is_empty() {
+            let deps = self.set_deps.multi_lookup(&frontier);
+            let mut next = Vec::new();
+            for d in deps {
+                if seen.insert(d.src_csid.0) {
+                    next.push(d.src_csid.0);
+                    out.push(d.src_csid.0);
+                }
+            }
+            frontier = next;
+        }
+        out
+    }
+
+    /// Algorithm 2: lineage of `q`.
+    pub fn query(&self, q: u64) -> Lineage {
+        // Find-Connected-Set: one partition scan on the node index.
+        let rows = self.node_set.lookup(q);
+        let Some(&(_, cs)) = rows.first() else {
+            return Lineage::empty(q);
+        };
+
+        // S ← cs ∪ Find-Set-Lineage(setDepRDD, cs).
+        let mut s = self.set_lineage(cs);
+        s.push(cs);
+
+        // cs_provRDD: triples whose derived item is in a set of S.
+        // Partition-pruned: scans at most |S| distinct partitions.
+        let cs_prov = self.prov_by_set.prune_lookup(&s);
+
+        if cs_prov.count() >= self.tau {
+            // RQ on the cluster. The pruned dataset is partitioned by
+            // dst_csid; recursive lookups key on dst, so repartition first
+            // (a shuffle of only the minimal volume).
+            let by_dst = cs_prov
+                .hash_partition_by(self.num_partitions, |t: &CsTriple| t.triple.dst.raw());
+            rq_on_spark_generic(&by_dst, |t| t.triple, q)
+        } else {
+            let triples: Vec<ProvTriple> =
+                cs_prov.collect().into_iter().map(|t| t.triple).collect();
+            self.closure.closure(&triples, q)
+        }
+    }
+
+    /// Size of the minimal volume CSProv would recurse over for `q`
+    /// (triples in the set-lineage) — the paper's Discussion metric
+    /// ("CSProv needs to recursively query only 4177 provenance triples
+    /// while CCProv needs to query 2.7M").
+    pub fn lineage_volume(&self, q: u64) -> usize {
+        let rows = self.node_set.lookup(q);
+        let Some(&(_, cs)) = rows.first() else { return 0 };
+        let mut s = self.set_lineage(cs);
+        s.push(cs);
+        self.prov_by_set.prune_lookup(&s).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::provenance::pipeline::{preprocess, Preprocessed, WccImpl};
+    use crate::provenance::query::ccprov::CcProvEngine;
+    use crate::provenance::query::rq::RqEngine;
+    use crate::workflow::generator::{generate, GeneratorConfig};
+
+    fn sc() -> MiniSpark {
+        MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() })
+    }
+
+    fn build(pre: &Preprocessed, s: &MiniSpark, tau: usize) -> CsProvEngine {
+        CsProvEngine::new(
+            s,
+            pre.cs_triples.clone(),
+            pre.cs_of.iter().map(|(&n, &c)| (n, c)).collect(),
+            pre.set_deps.clone(),
+            16,
+            tau,
+        )
+    }
+
+    #[test]
+    fn csprov_matches_rq_and_ccprov() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        // Small θ so the large components really get partitioned.
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let s = sc();
+        let rq = RqEngine::new(&s, &trace, 16);
+        let cc = CcProvEngine::new(&s, pre.cc_triples.clone(), 16, 1000);
+        let queries: Vec<u64> = trace
+            .triples
+            .iter()
+            .step_by(trace.len() / 10 + 1)
+            .map(|t| t.dst.raw())
+            .collect();
+        for tau in [0usize, usize::MAX] {
+            let cs = build(&pre, &s, tau);
+            for &q in &queries {
+                let want = rq.query(q);
+                assert_eq!(cs.query(q), want, "q={q} tau={tau}");
+                assert_eq!(cc.query(q), want, "ccprov q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn set_lineage_soundness() {
+        // The union of triples with dst in the set-lineage must contain the
+        // entire lineage of any item in the queried set.
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let s = sc();
+        let cs_engine = build(&pre, &s, usize::MAX);
+        let rq = RqEngine::new(&s, &trace, 16);
+        for t in trace.triples.iter().step_by(trace.len() / 6 + 1) {
+            let q = t.dst.raw();
+            let full = rq.query(q);
+            let vol = cs_engine.lineage_volume(q);
+            assert!(
+                vol >= full.triples.len(),
+                "set-lineage volume {vol} < lineage {}",
+                full.triples.len()
+            );
+        }
+    }
+
+    #[test]
+    fn small_component_reduces_to_ccprov() {
+        // For an item in a small component the set-lineage must be empty
+        // (its component is one set).
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let large: FxHashSet<u64> =
+            pre.large_components.iter().map(|&(cc, _, _)| cc).collect();
+        // Find an item in a small component.
+        let q = trace
+            .triples
+            .iter()
+            .map(|t| t.dst.raw())
+            .find(|n| !large.contains(&pre.cc_of[n]))
+            .expect("small-component item");
+        let s = sc();
+        let engine = build(&pre, &s, usize::MAX);
+        let cs = pre.cs_of[&q];
+        assert_eq!(cs, pre.cc_of[&q], "small component is a single set");
+        assert!(engine.set_lineage(cs).is_empty());
+    }
+
+    #[test]
+    fn lineage_volume_much_smaller_in_large_component() {
+        // The CSProv minimal volume for a large-component item must be far
+        // below the component size (the paper's 60K vs 2.7M argument).
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 1000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 300, 100, WccImpl::Driver);
+        let (lc1, _, lc1_edges) = pre.large_components[0];
+        let s = sc();
+        let engine = build(&pre, &s, usize::MAX);
+        // Average volume over a few large-component items.
+        let items: Vec<u64> = trace
+            .triples
+            .iter()
+            .map(|t| t.dst.raw())
+            .filter(|n| pre.cc_of[n] == lc1)
+            .step_by(97)
+            .take(8)
+            .collect();
+        assert!(!items.is_empty());
+        let avg: usize =
+            items.iter().map(|&q| engine.lineage_volume(q)).sum::<usize>() / items.len();
+        assert!(
+            avg * 2 < lc1_edges,
+            "avg volume {avg} not ≪ component edges {lc1_edges}"
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! The three provenance query engines:
+//!
+//! * [`RqEngine`] — the recursive-querying baseline (§2.1): BFS over the
+//!   *whole* dst-partitioned triple dataset, one multi-lookup job per
+//!   frontier round.
+//! * [`CcProvEngine`] — Algorithm 1: resolve the component, filter it out,
+//!   then recurse over the component only (driver-side if < τ).
+//! * [`CsProvEngine`] — Algorithm 2: resolve the connected set, walk the
+//!   set-dependency graph for the set-lineage, assemble the minimal triple
+//!   volume by partition-pruned lookups, then recurse (driver-side if < τ).
+//!
+//! All three return identical [`Lineage`]s — a cross-engine property test
+//! enforces it.
+
+pub mod ccprov;
+pub mod csprov;
+pub mod driver_rq;
+pub mod result;
+pub mod rq;
+
+pub use ccprov::CcProvEngine;
+pub use csprov::CsProvEngine;
+pub use driver_rq::{AncestorClosure, NativeClosure};
+pub use result::Lineage;
+pub use rq::RqEngine;

@@ -1,0 +1,85 @@
+//! Query results: the lineage of an attribute-value.
+
+use crate::provenance::model::ProvTriple;
+use rustc_hash::FxHashSet;
+
+/// The full lineage of a queried attribute-value: every ancestor and every
+/// derivation step (triple) on a path into the queried value.
+///
+/// Canonical form — `triples` and `ancestors` are sorted and deduplicated —
+/// so lineages from different engines compare with `==`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Lineage {
+    /// The queried attribute-value (raw id).
+    pub query: u64,
+    /// All triples `⟨src, dst, op⟩` with `dst ∈ {query} ∪ ancestors`.
+    pub triples: Vec<ProvTriple>,
+    /// Distinct ancestors (excludes the queried value itself).
+    pub ancestors: Vec<u64>,
+}
+
+impl Lineage {
+    /// Empty lineage (the queried value is an input / unknown).
+    pub fn empty(query: u64) -> Self {
+        Self { query, triples: Vec::new(), ancestors: Vec::new() }
+    }
+
+    /// Build the canonical lineage from an (unordered, possibly duplicated)
+    /// pile of lineage triples.
+    pub fn from_triples(query: u64, mut triples: Vec<ProvTriple>) -> Self {
+        triples.sort_unstable();
+        triples.dedup();
+        let mut ancestors: FxHashSet<u64> = FxHashSet::default();
+        for t in &triples {
+            ancestors.insert(t.src.raw());
+            if t.dst.raw() != query {
+                ancestors.insert(t.dst.raw());
+            }
+        }
+        ancestors.remove(&query);
+        let mut ancestors: Vec<u64> = ancestors.into_iter().collect();
+        ancestors.sort_unstable();
+        Self { query, triples, ancestors }
+    }
+
+    /// Number of distinct transformations involved.
+    pub fn transformation_count(&self) -> usize {
+        let ops: FxHashSet<u32> = self.triples.iter().map(|t| t.op.0).collect();
+        ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.triples.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::{AttrValueId, EntityId, OpId};
+
+    fn t(s: u64, d: u64, op: u32) -> ProvTriple {
+        ProvTriple::new(
+            AttrValueId::new(EntityId(0), s),
+            AttrValueId::new(EntityId(0), d),
+            OpId(op),
+        )
+    }
+
+    #[test]
+    fn canonicalizes() {
+        let q = AttrValueId::new(EntityId(0), 9).raw();
+        let a = Lineage::from_triples(q, vec![t(2, 9, 1), t(1, 2, 0), t(2, 9, 1)]);
+        let b = Lineage::from_triples(q, vec![t(1, 2, 0), t(2, 9, 1)]);
+        assert_eq!(a, b);
+        assert_eq!(a.ancestors.len(), 2);
+        assert_eq!(a.transformation_count(), 2);
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        let l = Lineage::empty(5);
+        assert!(l.is_empty());
+        assert_eq!(l.transformation_count(), 0);
+    }
+}

@@ -1,0 +1,259 @@
+//! On-disk persistence for traces and preprocessed provenance.
+//!
+//! The paper stores provenance on HDFS and pre-computes components/sets
+//! once; we persist the same artifacts locally in a simple length-prefixed
+//! little-endian binary format (with a CSV export for inspection).
+
+use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
+use crate::provenance::pipeline::Preprocessed;
+use crate::util::ids::{AttrValueId, ComponentId, OpId, SetId};
+use anyhow::{bail, Context, Result};
+use rustc_hash::FxHashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC_TRACE: &[u8; 8] = b"PSPKTRC1";
+const MAGIC_PRE: &[u8; 8] = b"PSPKPRE1";
+
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn w_triple(w: &mut impl Write, t: &ProvTriple) -> Result<()> {
+    w_u64(w, t.src.raw())?;
+    w_u64(w, t.dst.raw())?;
+    w_u32(w, t.op.0)
+}
+
+fn r_triple(r: &mut impl Read) -> Result<ProvTriple> {
+    Ok(ProvTriple::new(
+        AttrValueId(r_u64(r)?),
+        AttrValueId(r_u64(r)?),
+        OpId(r_u32(r)?),
+    ))
+}
+
+/// Save a raw trace.
+pub fn save_trace(path: &Path, trace: &Trace) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC_TRACE)?;
+    w_u64(&mut w, trace.triples.len() as u64)?;
+    for t in &trace.triples {
+        w_triple(&mut w, t)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a raw trace.
+pub fn load_trace(path: &Path) -> Result<Trace> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC_TRACE {
+        bail!("{path:?}: not a provspark trace file");
+    }
+    let n = r_u64(&mut r)? as usize;
+    let mut triples = Vec::with_capacity(n);
+    for _ in 0..n {
+        triples.push(r_triple(&mut r)?);
+    }
+    Ok(Trace::new(triples))
+}
+
+/// Save preprocessed provenance (everything the query engines need).
+pub fn save_preprocessed(path: &Path, pre: &Preprocessed) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC_PRE)?;
+
+    w_u64(&mut w, pre.cc_triples.len() as u64)?;
+    for t in &pre.cc_triples {
+        w_triple(&mut w, &t.triple)?;
+        w_u64(&mut w, t.ccid.0)?;
+    }
+    w_u64(&mut w, pre.cs_triples.len() as u64)?;
+    for t in &pre.cs_triples {
+        w_triple(&mut w, &t.triple)?;
+        w_u64(&mut w, t.src_csid.0)?;
+        w_u64(&mut w, t.dst_csid.0)?;
+    }
+    w_u64(&mut w, pre.set_deps.len() as u64)?;
+    for d in &pre.set_deps {
+        w_u64(&mut w, d.src_csid.0)?;
+        w_u64(&mut w, d.dst_csid.0)?;
+    }
+    w_u64(&mut w, pre.cc_of.len() as u64)?;
+    for (&n, &c) in &pre.cc_of {
+        w_u64(&mut w, n)?;
+        w_u64(&mut w, c)?;
+    }
+    w_u64(&mut w, pre.cs_of.len() as u64)?;
+    for (&n, &c) in &pre.cs_of {
+        w_u64(&mut w, n)?;
+        w_u64(&mut w, c)?;
+    }
+    w_u64(&mut w, pre.large_components.len() as u64)?;
+    for &(cc, nodes, edges) in &pre.large_components {
+        w_u64(&mut w, cc)?;
+        w_u64(&mut w, nodes as u64)?;
+        w_u64(&mut w, edges as u64)?;
+    }
+    w_u64(&mut w, pre.component_count as u64)?;
+    w_u64(&mut w, pre.set_count as u64)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load preprocessed provenance. Pass-stats and timings are not persisted
+/// (they are preprocessing-run artifacts, reported at preprocessing time).
+pub fn load_preprocessed(path: &Path) -> Result<Preprocessed> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC_PRE {
+        bail!("{path:?}: not a provspark preprocessed file");
+    }
+    let mut pre = Preprocessed::default();
+
+    let n = r_u64(&mut r)? as usize;
+    pre.cc_triples.reserve(n);
+    for _ in 0..n {
+        let triple = r_triple(&mut r)?;
+        pre.cc_triples.push(CcTriple { triple, ccid: ComponentId(r_u64(&mut r)?) });
+    }
+    let n = r_u64(&mut r)? as usize;
+    pre.cs_triples.reserve(n);
+    for _ in 0..n {
+        let triple = r_triple(&mut r)?;
+        pre.cs_triples.push(CsTriple {
+            triple,
+            src_csid: SetId(r_u64(&mut r)?),
+            dst_csid: SetId(r_u64(&mut r)?),
+        });
+    }
+    let n = r_u64(&mut r)? as usize;
+    for _ in 0..n {
+        pre.set_deps.push(SetDep {
+            src_csid: SetId(r_u64(&mut r)?),
+            dst_csid: SetId(r_u64(&mut r)?),
+        });
+    }
+    let n = r_u64(&mut r)? as usize;
+    pre.cc_of = FxHashMap::with_capacity_and_hasher(n, Default::default());
+    for _ in 0..n {
+        let k = r_u64(&mut r)?;
+        let v = r_u64(&mut r)?;
+        pre.cc_of.insert(k, v);
+    }
+    let n = r_u64(&mut r)? as usize;
+    pre.cs_of = FxHashMap::with_capacity_and_hasher(n, Default::default());
+    for _ in 0..n {
+        let k = r_u64(&mut r)?;
+        let v = r_u64(&mut r)?;
+        pre.cs_of.insert(k, v);
+    }
+    let n = r_u64(&mut r)? as usize;
+    for _ in 0..n {
+        let cc = r_u64(&mut r)?;
+        let nodes = r_u64(&mut r)? as usize;
+        let edges = r_u64(&mut r)? as usize;
+        pre.large_components.push((cc, nodes, edges));
+    }
+    pre.component_count = r_u64(&mut r)? as usize;
+    pre.set_count = r_u64(&mut r)? as usize;
+    Ok(pre)
+}
+
+/// CSV export of a trace (`src,dst,op`) for external inspection.
+pub fn export_csv(path: &Path, trace: &Trace) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "src,dst,op")?;
+    for t in &trace.triples {
+        writeln!(w, "{},{},{}", t.src.raw(), t.dst.raw(), t.op.0)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provenance::pipeline::{preprocess, WccImpl};
+    use crate::workflow::generator::{generate, GeneratorConfig};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("provspark_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let (trace, _, _) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let p = tmp("trace.bin");
+        save_trace(&p, &trace).unwrap();
+        let loaded = load_trace(&p).unwrap();
+        assert_eq!(trace.triples, loaded.triples);
+    }
+
+    #[test]
+    fn preprocessed_roundtrip() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let p = tmp("pre.bin");
+        save_preprocessed(&p, &pre).unwrap();
+        let loaded = load_preprocessed(&p).unwrap();
+        assert_eq!(pre.cc_triples, loaded.cc_triples);
+        assert_eq!(pre.cs_triples, loaded.cs_triples);
+        assert_eq!(pre.set_deps, loaded.set_deps);
+        assert_eq!(pre.cc_of, loaded.cc_of);
+        assert_eq!(pre.cs_of, loaded.cs_of);
+        assert_eq!(pre.large_components, loaded.large_components);
+        assert_eq!(pre.component_count, loaded.component_count);
+        assert_eq!(pre.set_count, loaded.set_count);
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let p = tmp("bogus.bin");
+        std::fs::write(&p, b"NOTMAGIC123").unwrap();
+        assert!(load_trace(&p).is_err());
+        assert!(load_preprocessed(&p).is_err());
+    }
+
+    #[test]
+    fn csv_export_has_header_and_rows() {
+        let (trace, _, _) =
+            generate(&GeneratorConfig { scale_divisor: 5000, ..Default::default() });
+        let p = tmp("trace.csv");
+        export_csv(&p, &trace).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("src,dst,op\n"));
+        assert_eq!(text.lines().count(), trace.len() + 1);
+    }
+}

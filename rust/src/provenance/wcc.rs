@@ -1,0 +1,308 @@
+//! Weakly connected components of the provenance graph (paper §2.2).
+//!
+//! Three interchangeable implementations; all label every node with the
+//! **minimum raw attribute-value id** in its component (the canonical
+//! [`ComponentId`](crate::util::ids::ComponentId)):
+//!
+//! * [`wcc_driver`] — union-find on the driver. Fastest on one box; used
+//!   as the correctness oracle and the default preprocessing path.
+//! * [`wcc_minispark`] — distributed min-label propagation on the
+//!   `minispark` engine (the paper computes WCC with a Spark
+//!   implementation [1]; this is the faithful reproduction of that phase
+//!   and what `bench_preprocess` times).
+//! * the XLA fixpoint in [`crate::runtime`] — the same label propagation
+//!   compiled to an HLO `while`-loop from JAX/Pallas, executed via PJRT.
+//!
+//! Equivalence of all three is a property test (`rust/tests/wcc_props.rs`).
+
+use crate::minispark::{join_u64, Dataset, MiniSpark};
+use crate::provenance::model::Trace;
+use rustc_hash::FxHashMap;
+
+/// Union-find (disjoint-set forest) over arbitrary `u64` keys, with path
+/// halving and union by rank.
+#[derive(Debug, Default, Clone)]
+pub struct UnionFind {
+    parent: FxHashMap<u64, u64>,
+    rank: FxHashMap<u64, u8>,
+}
+
+impl UnionFind {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure `x` exists as a singleton.
+    pub fn insert(&mut self, x: u64) {
+        self.parent.entry(x).or_insert(x);
+    }
+
+    /// Root of `x`'s set (inserting `x` if new). Applies path halving.
+    pub fn find(&mut self, x: u64) -> u64 {
+        self.insert(x);
+        let mut cur = x;
+        loop {
+            let p = self.parent[&cur];
+            if p == cur {
+                return cur;
+            }
+            let gp = self.parent[&p];
+            self.parent.insert(cur, gp);
+            cur = gp;
+        }
+    }
+
+    /// Merge the sets of `a` and `b`.
+    pub fn union(&mut self, a: u64, b: u64) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return;
+        }
+        let ka = *self.rank.entry(ra).or_insert(0);
+        let kb = *self.rank.entry(rb).or_insert(0);
+        if ka < kb {
+            self.parent.insert(ra, rb);
+        } else if ka > kb {
+            self.parent.insert(rb, ra);
+        } else {
+            self.parent.insert(rb, ra);
+            self.rank.insert(ra, ka + 1);
+        }
+    }
+
+    /// All keys ever inserted.
+    pub fn keys(&self) -> impl Iterator<Item = u64> + '_ {
+        self.parent.keys().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Normalize to `node → min-id-in-component` labels.
+    pub fn min_labels(&mut self) -> FxHashMap<u64, u64> {
+        let keys: Vec<u64> = self.keys().collect();
+        let mut min_of_root: FxHashMap<u64, u64> = FxHashMap::default();
+        for &k in &keys {
+            let r = self.find(k);
+            min_of_root.entry(r).and_modify(|m| *m = (*m).min(k)).or_insert(k);
+        }
+        keys.into_iter().map(|k| (k, min_of_root[&self.find(k)])).collect()
+    }
+}
+
+/// Driver-side WCC: union-find over all triples. Returns
+/// `node → min-id-in-component`.
+///
+/// Perf note (EXPERIMENTS.md §Perf, L3-1): ids are first remapped to dense
+/// indices in ascending raw order, so the union-find runs over flat `Vec`s
+/// (path halving + union by rank) instead of hash maps — ~4× faster than
+/// the generic [`UnionFind`] on the default trace. Ascending order also
+/// makes "min raw id per component" a first-seen scan.
+pub fn wcc_driver(trace: &Trace) -> FxHashMap<u64, u64> {
+    // Dense remap, ascending by raw id.
+    let mut raw_of: Vec<u64> = Vec::with_capacity(trace.triples.len() * 2);
+    for t in &trace.triples {
+        raw_of.push(t.src.raw());
+        raw_of.push(t.dst.raw());
+    }
+    raw_of.sort_unstable();
+    raw_of.dedup();
+    let dense_of: FxHashMap<u64, u32> =
+        raw_of.iter().enumerate().map(|(i, &r)| (r, i as u32)).collect();
+
+    let n = raw_of.len();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    let mut rank: Vec<u8> = vec![0; n];
+
+    #[inline]
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        loop {
+            let p = parent[x as usize];
+            if p == x {
+                return x;
+            }
+            let gp = parent[p as usize];
+            parent[x as usize] = gp; // path halving
+            x = gp;
+        }
+    }
+
+    for t in &trace.triples {
+        let a = find(&mut parent, dense_of[&t.src.raw()]);
+        let b = find(&mut parent, dense_of[&t.dst.raw()]);
+        if a == b {
+            continue;
+        }
+        let (ra, rb) = (rank[a as usize], rank[b as usize]);
+        if ra < rb {
+            parent[a as usize] = b;
+        } else if ra > rb {
+            parent[b as usize] = a;
+        } else {
+            parent[b as usize] = a;
+            rank[a as usize] = ra + 1;
+        }
+    }
+
+    // Min raw id per root: dense indices ascend with raw ids, so the first
+    // index seen for a root is the component minimum.
+    let mut min_of_root: Vec<u32> = vec![u32::MAX; n];
+    let mut labels: FxHashMap<u64, u64> =
+        FxHashMap::with_capacity_and_hasher(n, Default::default());
+    for i in 0..n as u32 {
+        let r = find(&mut parent, i) as usize;
+        if min_of_root[r] == u32::MAX {
+            min_of_root[r] = i;
+        }
+        labels.insert(raw_of[i as usize], raw_of[min_of_root[r] as usize]);
+    }
+    labels
+}
+
+/// Distributed WCC by iterated min-label propagation on minispark.
+///
+/// State: `labels: (node, label)`; each round joins labels with the
+/// undirected adjacency list and takes the min label seen by each node.
+/// Labels only decrease, so the total label sum is a strictly decreasing
+/// fixpoint witness — iteration stops when it stops changing.
+pub fn wcc_minispark(sc: &MiniSpark, trace: &Trace, num_partitions: usize) -> FxHashMap<u64, u64> {
+    let np = num_partitions.max(1);
+    if trace.is_empty() {
+        return FxHashMap::default();
+    }
+    let rows: Vec<(u64, u64)> =
+        trace.triples.iter().map(|t| (t.src.raw(), t.dst.raw())).collect();
+    let edges = Dataset::from_vec(sc, rows, np);
+    // Undirected adjacency (both directions), co-partitioned by node.
+    let adj = edges
+        .flat_map(|&(s, d)| vec![(s, d), (d, s)])
+        .hash_partition_by(np, |r| r.0)
+        .cache();
+
+    // Initial labels: every node labels itself.
+    let mut labels = edges
+        .flat_map(|&(s, d)| vec![(s, s), (d, d)])
+        .reduce_by_key(np, |&(n, l)| (n, l), u64::min);
+
+    let label_sum = |ls: &Dataset<(u64, u64)>| -> u128 {
+        ls.map_partitions(|p| vec![p.iter().map(|&(_, l)| l as u128).sum::<u128>()])
+            .collect()
+            .into_iter()
+            .sum()
+    };
+
+    let mut prev_sum = label_sum(&labels);
+    loop {
+        // (node, (nbr, label)) → messages (nbr, label); min-reduce with
+        // the current labels so labels never increase.
+        let msgs = join_u64(&adj, &labels, np).map(|&(_, (nbr, l))| (nbr, l));
+        labels = labels
+            .union(&msgs.hash_partition_by(np, |r| r.0))
+            .reduce_by_key(np, |&(n, l)| (n, l), u64::min);
+        let sum = label_sum(&labels);
+        if sum == prev_sum {
+            break;
+        }
+        prev_sum = sum;
+    }
+    labels.collect().into_iter().collect()
+}
+
+/// Group nodes by label: `component min-id → nodes`.
+pub fn components_from_labels(labels: &FxHashMap<u64, u64>) -> FxHashMap<u64, Vec<u64>> {
+    let mut out: FxHashMap<u64, Vec<u64>> = FxHashMap::default();
+    for (&n, &l) in labels {
+        out.entry(l).or_default().push(n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::provenance::model::ProvTriple;
+    use crate::util::ids::{AttrValueId, EntityId, OpId};
+
+    fn av(e: u16, s: u64) -> AttrValueId {
+        AttrValueId::new(EntityId(e), s)
+    }
+
+    fn trace(edges: &[(u64, u64)]) -> Trace {
+        Trace::new(
+            edges
+                .iter()
+                .map(|&(s, d)| ProvTriple::new(av(0, s), av(1, d), OpId(0)))
+                .collect(),
+        )
+    }
+
+    fn sc() -> MiniSpark {
+        MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() })
+    }
+
+    #[test]
+    fn union_find_basic() {
+        let mut uf = UnionFind::new();
+        uf.union(1, 2);
+        uf.union(3, 4);
+        assert_ne!(uf.find(1), uf.find(3));
+        uf.union(2, 3);
+        assert_eq!(uf.find(1), uf.find(4));
+        assert_eq!(uf.len(), 4);
+    }
+
+    #[test]
+    fn min_labels_are_component_minima() {
+        let mut uf = UnionFind::new();
+        uf.union(10, 5);
+        uf.union(5, 7);
+        uf.union(100, 200);
+        uf.insert(42);
+        let labels = uf.min_labels();
+        assert_eq!(labels[&10], 5);
+        assert_eq!(labels[&7], 5);
+        assert_eq!(labels[&200], 100);
+        assert_eq!(labels[&42], 42);
+    }
+
+    #[test]
+    fn driver_wcc_two_components() {
+        // Note av(0,s) and av(1,d) are distinct id spaces; edges (1,1)
+        // still produce two distinct nodes.
+        let t = trace(&[(1, 1), (1, 2), (3, 4)]);
+        let labels = wcc_driver(&t);
+        assert_eq!(labels.len(), 5); // nodes: 0:1, 0:3, 1:1, 1:2, 1:4
+        let c = components_from_labels(&labels);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn minispark_matches_driver() {
+        // A few structured graphs.
+        for edges in [
+            vec![(1u64, 1u64), (2, 1), (3, 2), (9, 9)],
+            vec![(1, 1), (2, 2), (3, 3)],
+            (0..50).map(|i| (i, i)).collect::<Vec<_>>(), // star-ish per id
+            (0..40).map(|i| (i, i + 1)).collect::<Vec<_>>(), // overlapping chain
+        ] {
+            let t = trace(&edges);
+            let a = wcc_driver(&t);
+            let b = wcc_minispark(&sc(), &t, 4);
+            assert_eq!(a, b, "edges={edges:?}");
+        }
+    }
+
+    #[test]
+    fn empty_trace_empty_labels() {
+        let t = Trace::default();
+        assert!(wcc_driver(&t).is_empty());
+        assert!(wcc_minispark(&sc(), &t, 4).is_empty());
+    }
+}

@@ -1,0 +1,211 @@
+//! Artifact registry: manifest parsing, bucket selection and PJRT
+//! executable caching.
+
+use anyhow::{anyhow, bail, Context, Result};
+use rustc_hash::FxHashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One AOT-compiled size bucket: a `relax_fixpoint` module with static
+/// shapes `labels i32[n]`, `parents i32[n, k]`.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub n: usize,
+    pub k: usize,
+    pub file: PathBuf,
+}
+
+/// The non-thread-safe PJRT state (the `xla` crate wraps FFI handles in
+/// `Rc`). Everything lives behind `XlaRuntime`'s mutex.
+struct PjrtHandle {
+    client: xla::PjRtClient,
+    cache: FxHashMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+/// The PJRT client plus the artifact inventory. Executables compile on
+/// first use and stay cached (one compiled executable per bucket).
+///
+/// Thread safety: the `xla` crate's handles are `Rc`-based and `!Send`.
+/// All PJRT access (compile, execute, literal transfer) happens strictly
+/// under `inner`'s mutex and no handle ever escapes it, so cross-thread
+/// use is serialized with a full happens-before edge — which is what the
+/// `unsafe impl`s below assert.
+pub struct XlaRuntime {
+    inner: Mutex<PjrtHandle>,
+    buckets: Vec<Bucket>,
+}
+
+// SAFETY: see the struct docs — every Rc-backed handle is confined inside
+// `inner`; the mutex serializes all access and synchronizes refcount edits.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Load the manifest from `dir` (written by `python -m compile.aot`)
+    /// and create a CPU PJRT client.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
+        let mut buckets = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (n, k, file) = (
+                it.next().ok_or_else(|| anyhow!("manifest line {}: missing n", i + 1))?,
+                it.next().ok_or_else(|| anyhow!("manifest line {}: missing k", i + 1))?,
+                it.next().ok_or_else(|| anyhow!("manifest line {}: missing file", i + 1))?,
+            );
+            buckets.push(Bucket {
+                n: n.parse().context("bucket n")?,
+                k: k.parse().context("bucket k")?,
+                file: dir.join(file),
+            });
+        }
+        if buckets.is_empty() {
+            bail!("empty artifact manifest {manifest:?}");
+        }
+        buckets.sort_by_key(|b| b.n);
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Self {
+            inner: Mutex::new(PjrtHandle { client, cache: FxHashMap::default() }),
+            buckets,
+        })
+    }
+
+    /// The K (padded parents per row) all buckets were lowered with.
+    pub fn k(&self) -> usize {
+        self.buckets[0].k
+    }
+
+    /// Largest node capacity available.
+    pub fn max_n(&self) -> usize {
+        self.buckets.last().unwrap().n
+    }
+
+    /// Smallest bucket with `n >= needed`, or an error if the graph exceeds
+    /// every artifact (callers fall back to the native implementation).
+    pub fn bucket_for(&self, needed: usize) -> Result<&Bucket> {
+        self.buckets
+            .iter()
+            .find(|b| b.n >= needed)
+            .ok_or_else(|| anyhow!("graph needs {needed} slots > largest bucket {}", self.max_n()))
+    }
+
+    /// Run the relax fixpoint on pre-padded dense inputs.
+    ///
+    /// `labels0.len()` must equal the bucket's `n` and
+    /// `parents.len() == n * k` (row-major). Compiles (and caches) the
+    /// bucket's executable on first use.
+    pub fn relax_fixpoint_padded(
+        &self,
+        bucket: &Bucket,
+        labels0: &[i32],
+        parents: &[i32],
+    ) -> Result<Vec<i32>> {
+        assert_eq!(labels0.len(), bucket.n);
+        assert_eq!(parents.len(), bucket.n * bucket.k);
+        let mut h = self.inner.lock().unwrap();
+        if !h.cache.contains_key(&bucket.n) {
+            let path = bucket
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", bucket.file))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = h
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+            h.cache.insert(bucket.n, exe);
+        }
+        let exe = h.cache.get(&bucket.n).expect("just inserted");
+        let labels_lit = xla::Literal::vec1(labels0);
+        let parents_lit = xla::Literal::vec1(parents)
+            .reshape(&[bucket.n as i64, bucket.k as i64])
+            .map_err(|e| anyhow!("reshape parents: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[labels_lit, parents_lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("buckets", &self.buckets.iter().map(|b| b.n).collect::<Vec<_>>())
+            .field("k", &self.k())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from("artifacts")
+    }
+
+    fn runtime() -> Option<XlaRuntime> {
+        // Skip (not fail) when artifacts are absent: `make artifacts` is a
+        // separate build step; CI runs it first.
+        XlaRuntime::new(&artifact_dir()).ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_buckets_sorted() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        assert!(rt.max_n() >= 4096);
+        assert_eq!(rt.k(), 8);
+        let b = rt.bucket_for(100).unwrap();
+        assert!(b.n >= 100);
+        assert!(rt.bucket_for(usize::MAX / 2).is_err());
+    }
+
+    #[test]
+    fn fixpoint_executes_identity() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let b = rt.bucket_for(1).unwrap().clone();
+        // Self-parents everywhere: labels unchanged.
+        let labels: Vec<i32> = (0..b.n as i32).collect();
+        let parents: Vec<i32> = (0..b.n as i32).flat_map(|i| vec![i; b.k]).collect();
+        let out = rt.relax_fixpoint_padded(&b, &labels, &parents).unwrap();
+        assert_eq!(out, labels);
+    }
+
+    #[test]
+    fn fixpoint_propagates_chain() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let b = rt.bucket_for(1).unwrap().clone();
+        // Chain: node i pulls node i-1 → everything converges to 0 within
+        // the first 100 nodes; the rest are self-parented singletons.
+        let labels: Vec<i32> = (0..b.n as i32).collect();
+        let mut parents: Vec<i32> = (0..b.n as i32).flat_map(|i| vec![i; b.k]).collect();
+        for i in 1..100usize {
+            parents[i * b.k] = (i - 1) as i32;
+        }
+        let out = rt.relax_fixpoint_padded(&b, &labels, &parents).unwrap();
+        assert!(out[..100].iter().all(|&l| l == 0), "{:?}", &out[..8]);
+        assert_eq!(out[100], 100);
+    }
+}

@@ -1,0 +1,205 @@
+//! XLA-backed entry points: WCC preprocessing and the driver-side ancestor
+//! closure, both running the AOT-compiled `relax_fixpoint` artifact.
+
+use super::artifacts::XlaRuntime;
+use super::remap::{build_pull_matrix, required_rows, DenseRemap};
+use crate::provenance::model::{ProvTriple, Trace};
+use crate::provenance::query::driver_rq::AncestorClosure;
+use crate::provenance::query::result::Lineage;
+use anyhow::Result;
+use rustc_hash::FxHashMap;
+
+/// WCC labels via the XLA fixpoint: `node raw id → min raw id in component`.
+///
+/// Remaps the graph to dense indices (ascending raw order, so min dense ↔
+/// min raw), builds the undirected pull matrix, pads to the smallest
+/// fitting bucket and runs the compiled fixpoint once.
+pub fn xla_wcc(rt: &XlaRuntime, trace: &Trace) -> Result<FxHashMap<u64, u64>> {
+    if trace.is_empty() {
+        return Ok(FxHashMap::default());
+    }
+    let remap = DenseRemap::build(
+        trace.triples.iter().flat_map(|t| [t.src.raw(), t.dst.raw()]),
+    );
+    let edges: Vec<(u32, u32)> = trace
+        .triples
+        .iter()
+        .map(|t| (remap.dense_of[&t.src.raw()], remap.dense_of[&t.dst.raw()]))
+        .collect();
+    let k = rt.k();
+    let needed = required_rows(remap.len(), &edges, k, false);
+    let bucket = rt.bucket_for(needed)?;
+    let m = build_pull_matrix(remap.len(), &edges, k, false, bucket.n);
+    let labels0: Vec<i32> = (0..bucket.n as i32).collect();
+    let labels = rt.relax_fixpoint_padded(bucket, &labels0, &m.parents)?;
+    // Translate dense labels back to raw ids (virtual/padding rows have
+    // indices ≥ n_real and can never be a real row's minimum).
+    Ok(remap
+        .raw_of
+        .iter()
+        .enumerate()
+        .map(|(i, &raw)| (raw, remap.raw_of[labels[i] as usize]))
+        .collect())
+}
+
+/// Ancestor closure on the XLA runtime — a drop-in
+/// [`AncestorClosure`] for CCProv/CSProv's driver-side recursion branch.
+///
+/// Encodes reachability as the same relaxation: labels start at 1 with 0 at
+/// the query; rows pull their *children*, so 0 spreads to exactly
+/// `{q} ∪ ancestors(q)` (see `python/compile/model.py::reach_labels`).
+/// Falls back to the native BFS when the graph exceeds the largest bucket.
+pub struct XlaClosure {
+    rt: std::sync::Arc<XlaRuntime>,
+    fallback: crate::provenance::query::driver_rq::NativeClosure,
+}
+
+impl XlaClosure {
+    pub fn new(rt: std::sync::Arc<XlaRuntime>) -> Self {
+        Self { rt, fallback: crate::provenance::query::driver_rq::NativeClosure }
+    }
+
+    fn try_closure(&self, triples: &[ProvTriple], q: u64) -> Result<Lineage> {
+        let remap = DenseRemap::build(
+            triples
+                .iter()
+                .flat_map(|t| [t.src.raw(), t.dst.raw()])
+                .chain(std::iter::once(q)),
+        );
+        // Directed pull: a node pulls its children (dst of its out-edges is
+        // the *derived* value, i.e. src pulls dst? No — reached-ness flows
+        // from q *up* the derivation: u is an ancestor iff some triple has
+        // src = u and dst reached. So u's row pulls dst for every triple
+        // with src = u.
+        let edges: Vec<(u32, u32)> = triples
+            .iter()
+            .map(|t| (remap.dense_of[&t.src.raw()], remap.dense_of[&t.dst.raw()]))
+            .collect();
+        let k = self.rt.k();
+        let needed = required_rows(remap.len(), &edges, k, true);
+        let bucket = self.rt.bucket_for(needed)?;
+        let m = build_pull_matrix(remap.len(), &edges, k, true, bucket.n);
+        let mut labels0 = vec![1i32; bucket.n];
+        labels0[remap.dense_of[&q] as usize] = 0;
+        let labels = self.rt.relax_fixpoint_padded(bucket, &labels0, &m.parents)?;
+        // Reached set: real nodes with label 0.
+        let reached: rustc_hash::FxHashSet<u64> = remap
+            .raw_of
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| labels[i] == 0)
+            .map(|(_, &raw)| raw)
+            .collect();
+        let lineage_triples: Vec<ProvTriple> = triples
+            .iter()
+            .filter(|t| reached.contains(&t.dst.raw()))
+            .copied()
+            .collect();
+        Ok(Lineage::from_triples(q, lineage_triples))
+    }
+}
+
+impl AncestorClosure for XlaClosure {
+    fn closure(&self, triples: &[ProvTriple], q: u64) -> Lineage {
+        match self.try_closure(triples, q) {
+            Ok(l) => l,
+            Err(e) => {
+                log::warn!("XlaClosure fell back to native: {e}");
+                self.fallback.closure(triples, q)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provenance::query::driver_rq::NativeClosure;
+    use crate::provenance::wcc::wcc_driver;
+    use crate::util::ids::{AttrValueId, EntityId, OpId};
+    use crate::util::rng::Pcg64;
+    use std::sync::Arc;
+
+    fn runtime() -> Option<Arc<XlaRuntime>> {
+        XlaRuntime::new(std::path::Path::new("artifacts")).ok().map(Arc::new)
+    }
+
+    fn av(s: u64) -> AttrValueId {
+        AttrValueId::new(EntityId(0), s)
+    }
+
+    fn random_trace(seed: u64, n: u64, m: usize) -> Trace {
+        let mut rng = Pcg64::new(seed);
+        let triples = (0..m)
+            .map(|_| {
+                let a = rng.next_below(n);
+                let b = rng.next_below(n);
+                ProvTriple::new(av(a), av(a + b + 1), OpId(0))
+            })
+            .collect();
+        Trace::new(triples)
+    }
+
+    #[test]
+    fn xla_wcc_matches_union_find() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        for seed in [1, 2, 3] {
+            let trace = random_trace(seed, 200, 300);
+            let got = xla_wcc(&rt, &trace).unwrap();
+            let want = wcc_driver(&trace);
+            assert_eq!(got, want, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn xla_wcc_handles_hubs_beyond_k() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        // Hub with 100 in-edges (fan-in ≫ K = 8) plus a separate chain.
+        let mut triples: Vec<ProvTriple> =
+            (1..=100).map(|i| ProvTriple::new(av(i), av(0), OpId(0))).collect();
+        triples.extend((200..210).map(|i| ProvTriple::new(av(i), av(i + 1), OpId(0))));
+        let trace = Trace::new(triples);
+        let got = xla_wcc(&rt, &trace).unwrap();
+        assert_eq!(got, wcc_driver(&trace));
+    }
+
+    #[test]
+    fn xla_closure_matches_native() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let xc = XlaClosure::new(rt);
+        for seed in [4, 5] {
+            let trace = random_trace(seed, 150, 250);
+            // Query a few derived values.
+            for t in trace.triples.iter().step_by(37) {
+                let q = t.dst.raw();
+                let got = xc.closure(&trace.triples, q);
+                let want = NativeClosure.closure(&trace.triples, q);
+                assert_eq!(got, want, "seed={seed} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn xla_closure_source_is_empty() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let xc = XlaClosure::new(rt);
+        let triples = vec![ProvTriple::new(av(1), av(2), OpId(0))];
+        assert!(xc.closure(&triples, av(1).raw()).is_empty());
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime bridge — executes the AOT-compiled HLO artifacts produced
+//! by `python/compile/aot.py` (the L1 Pallas kernel inside the L2
+//! `while`-loop fixpoint) from the Rust hot path. Python never runs at
+//! query/preprocess time; the `.hlo.txt` files are the entire interface.
+//!
+//! * [`artifacts`] — manifest parsing, size-bucket selection, lazy
+//!   compile-and-cache of PJRT executables.
+//! * [`remap`] — dense-index remapping and padded pull-matrix construction
+//!   (with virtual-node chaining for rows above K parents; mirrors
+//!   `python/compile/kernels/ref.py::parents_matrix_from_edges`).
+//! * [`fixpoint`] — the user-facing entry points: [`XlaRuntime`],
+//!   [`xla_wcc`] (WCC preprocessing backend) and [`XlaClosure`] (the
+//!   driver-side ancestor closure backend for Algorithms 1–2).
+//!
+//! Every entry point has a native-Rust twin; tests assert equivalence, and
+//! `bench_backends` compares their performance (ablation A3).
+
+pub mod artifacts;
+pub mod fixpoint;
+pub mod remap;
+
+pub use artifacts::XlaRuntime;
+pub use fixpoint::{xla_wcc, XlaClosure};

@@ -1,0 +1,214 @@
+//! Dense-index remapping and padded pull-matrix construction — the glue
+//! between the provenance graph's sparse `u64` attribute-value ids and the
+//! static-shaped `relax_fixpoint` artifacts.
+//!
+//! Mirrors `python/compile/kernels/ref.py::parents_matrix_from_edges`
+//! (which the pytest suite validates against union-find / BFS oracles):
+//!
+//! * Real nodes get dense indices `0..n` **in ascending raw-id order**, so
+//!   the fixpoint's min-index labels translate back to min-raw-id component
+//!   ids (the crate-wide `ComponentId` convention).
+//! * Rows with more than K pull-neighbors spill into virtual-node chains
+//!   (indices ≥ n), which preserves the fixpoint and keeps K static.
+//! * The final matrix is padded to the bucket size with self-parent rows.
+
+use rustc_hash::FxHashMap;
+
+/// A dense remap of a node universe.
+#[derive(Debug, Clone, Default)]
+pub struct DenseRemap {
+    /// Sorted raw ids; index in this vec == dense index.
+    pub raw_of: Vec<u64>,
+    /// raw id → dense index.
+    pub dense_of: FxHashMap<u64, u32>,
+}
+
+impl DenseRemap {
+    /// Build from an iterator of raw ids (duplicates fine).
+    pub fn build(ids: impl IntoIterator<Item = u64>) -> Self {
+        let mut raw_of: Vec<u64> = ids.into_iter().collect();
+        raw_of.sort_unstable();
+        raw_of.dedup();
+        let dense_of = raw_of.iter().enumerate().map(|(i, &r)| (r, i as u32)).collect();
+        Self { raw_of, dense_of }
+    }
+
+    pub fn len(&self) -> usize {
+        self.raw_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.raw_of.is_empty()
+    }
+}
+
+/// The padded pull matrix plus its bookkeeping.
+#[derive(Debug, Clone)]
+pub struct PullMatrix {
+    /// Row-major `(n_padded, k)` parent indices.
+    pub parents: Vec<i32>,
+    /// Real node count (dense indices `0..n_real` are real).
+    pub n_real: usize,
+    /// Real + virtual rows (before padding).
+    pub n_total: usize,
+    /// Padded row count (the bucket's N).
+    pub n_padded: usize,
+    pub k: usize,
+}
+
+/// Build the padded pull matrix for dense edges.
+///
+/// * `edges` — dense `(a, b)` pairs; for WCC semantics (undirected) each
+///   edge lands in both rows, for closure semantics (directed, "row pulls
+///   its children") only in `a`'s row — pass `directed = true` with
+///   `a = parent-in-DAG` pulling `b = child`… i.e. pre-orient the pairs.
+/// * `n_padded` — the bucket size; must be ≥ the total row count, which
+///   callers obtain via [`required_rows`].
+pub fn build_pull_matrix(
+    n_real: usize,
+    edges: &[(u32, u32)],
+    k: usize,
+    directed: bool,
+    n_padded: usize,
+) -> PullMatrix {
+    assert!(k >= 2, "need K >= 2 to chain overflow rows");
+    let mut rows: Vec<Vec<i32>> = vec![Vec::new(); n_real];
+    // Degree-count first pass to avoid reallocation storms on hubs.
+    for &(a, b) in edges {
+        rows[a as usize].push(b as i32);
+        if !directed {
+            rows[b as usize].push(a as i32);
+        }
+    }
+    // Chain overflow rows through virtual nodes.
+    let mut i = 0;
+    while i < rows.len() {
+        if rows[i].len() > k {
+            let rest = rows[i].split_off(k - 1);
+            let virt = rows.len() as i32;
+            rows[i].push(virt);
+            // The virtual row takes up to k entries; if still more remain,
+            // the loop will reach it and chain again.
+            rows.push(rest);
+        }
+        i += 1;
+    }
+    let n_total = rows.len();
+    assert!(
+        n_total <= n_padded,
+        "graph needs {n_total} rows > padded size {n_padded}"
+    );
+    let mut parents = Vec::with_capacity(n_padded * k);
+    for (idx, row) in rows.iter().enumerate() {
+        debug_assert!(row.len() <= k);
+        parents.extend_from_slice(row);
+        parents.extend(std::iter::repeat(idx as i32).take(k - row.len()));
+    }
+    for idx in n_total..n_padded {
+        parents.extend(std::iter::repeat(idx as i32).take(k));
+    }
+    PullMatrix { parents, n_real, n_total, n_padded, k }
+}
+
+/// Number of matrix rows (real + virtual) a graph will need — used to pick
+/// a bucket before building.
+pub fn required_rows(n_real: usize, edges: &[(u32, u32)], k: usize, directed: bool) -> usize {
+    let mut deg = vec![0usize; n_real];
+    for &(a, b) in edges {
+        deg[a as usize] += 1;
+        if !directed {
+            deg[b as usize] += 1;
+        }
+    }
+    let mut total = n_real;
+    for d in deg {
+        if d > k {
+            // First row holds k-1 + link; each virtual holds up to k-1 +
+            // link, last holds up to k.
+            let mut rest = d - (k - 1);
+            while rest > 0 {
+                total += 1;
+                rest = rest.saturating_sub(if rest > k { k - 1 } else { k });
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference fixpoint on a pull matrix (mirrors ref.py).
+    fn ref_fixpoint(labels0: &[i32], m: &PullMatrix) -> Vec<i32> {
+        let mut labels = labels0.to_vec();
+        loop {
+            let mut changed = false;
+            let mut new = labels.clone();
+            for i in 0..m.n_padded {
+                let mut v = labels[i];
+                for j in 0..m.k {
+                    v = v.min(labels[m.parents[i * m.k + j] as usize]);
+                }
+                if v != new[i] {
+                    new[i] = v;
+                    changed = true;
+                }
+            }
+            labels = new;
+            if !changed {
+                return labels;
+            }
+        }
+    }
+
+    #[test]
+    fn dense_remap_orders_by_raw() {
+        let r = DenseRemap::build([50u64, 3, 99, 3, 7]);
+        assert_eq!(r.raw_of, vec![3, 7, 50, 99]);
+        assert_eq!(r.dense_of[&3], 0);
+        assert_eq!(r.dense_of[&99], 3);
+    }
+
+    #[test]
+    fn star_graph_chains_virtuals_and_converges() {
+        // Star: node 0 — {1..=40}, K = 4.
+        let edges: Vec<(u32, u32)> = (1..=40).map(|i| (0u32, i)).collect();
+        let need = required_rows(41, &edges, 4, false);
+        assert!(need > 41, "star must need virtual rows (need={need})");
+        let m = build_pull_matrix(41, &edges, 4, false, need.next_power_of_two());
+        assert_eq!(m.n_total, need);
+        let labels0: Vec<i32> = (0..m.n_padded as i32).collect();
+        let out = ref_fixpoint(&labels0, &m);
+        assert!(out[..41].iter().all(|&l| l == 0), "{:?}", &out[..8]);
+        // Padding rows stay singletons.
+        assert_eq!(out[m.n_padded - 1], (m.n_padded - 1) as i32);
+    }
+
+    #[test]
+    fn required_rows_matches_build() {
+        for (n, edges, k, directed) in [
+            (5usize, vec![(0u32, 1u32), (1, 2), (3, 4)], 2usize, false),
+            (10, (0..9).map(|i| (0u32, i + 1)).collect::<Vec<_>>(), 3, true),
+            (3, vec![], 4, false),
+        ] {
+            let need = required_rows(n, &edges, k, directed);
+            let m = build_pull_matrix(n, &edges, k, directed, need.max(1));
+            assert_eq!(m.n_total, need, "n={n} k={k} directed={directed}");
+        }
+    }
+
+    #[test]
+    fn directed_matrix_only_pulls_children() {
+        // 0 → 1 directed: row 0 pulls 1, row 1 pulls nobody.
+        let m = build_pull_matrix(2, &[(0, 1)], 2, true, 2);
+        assert_eq!(&m.parents[0..2], &[1, 0]);
+        assert_eq!(&m.parents[2..4], &[1, 1]);
+        // Fixpoint from [1, 0]: node 0 reaches 0 through its child.
+        let out = ref_fixpoint(&[1, 0], &m);
+        assert_eq!(out, vec![0, 0]);
+        // Reverse query: [0, 1] → node 1 must NOT become 0.
+        let out = ref_fixpoint(&[0, 1], &m);
+        assert_eq!(out, vec![0, 1]);
+    }
+}

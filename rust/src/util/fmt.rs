@@ -1,0 +1,93 @@
+//! Human-readable formatting for counts, byte sizes and durations —
+//! used by the CLI, the bench harness and the experiment reports.
+
+use std::time::Duration;
+
+/// `1234567` → `"1.23M"`.
+pub fn human_count(n: u64) -> String {
+    let nf = n as f64;
+    if n >= 1_000_000_000 {
+        format!("{:.2}B", nf / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.2}M", nf / 1e6)
+    } else if n >= 10_000 {
+        format!("{:.1}K", nf / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+/// `1536` → `"1.50 KiB"`.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Pretty duration: picks ns/µs/ms/s to keep 3 significant-ish digits.
+pub fn human_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns < 60 * 1_000_000_000u128 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else {
+        let secs = d.as_secs();
+        format!("{}m{:02}s", secs / 60, secs % 60)
+    }
+}
+
+/// Right-pad a string to `w` chars (for plain-text tables).
+pub fn pad(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{s}{}", " ".repeat(w - s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(10_000), "10.0K");
+        assert_eq!(human_count(6_400_000), "6.40M");
+        assert_eq!(human_count(2_500_000_000), "2.50B");
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(human_duration(Duration::from_nanos(12)), "12ns");
+        assert_eq!(human_duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(human_duration(Duration::from_secs(90)), "1m30s");
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad("ab", 4), "ab  ");
+        assert_eq!(pad("abcde", 3), "abcde");
+    }
+}

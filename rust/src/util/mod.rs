@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNGs, id codecs, timers and
+//! human-readable formatting.
+
+pub mod fmt;
+pub mod ids;
+pub mod rng;
+pub mod timer;
+
+pub use fmt::{human_bytes, human_count, human_duration};
+pub use ids::{AttrValueId, EntityId, OpId};
+pub use rng::{Pcg64, SplitMix64};
+pub use timer::Timer;

@@ -1,0 +1,240 @@
+//! Deterministic, dependency-free random number generators.
+//!
+//! The offline build environment has no `rand` crate, so we implement the
+//! two generators the project needs:
+//!
+//! * [`SplitMix64`] — fast, tiny-state; used for seeding and hashing-like
+//!   scrambling.
+//! * [`Pcg64`] — PCG-XSL-RR 128/64; the workhorse generator used by the
+//!   workload generator and the property-test harness. Deterministic across
+//!   platforms for a given seed, which keeps every experiment reproducible.
+
+/// SplitMix64 (Steele et al.). Mainly used to expand a single `u64` seed
+/// into the larger state of [`Pcg64`], and as a cheap stateless scrambler.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Stateless SplitMix64 finalizer — good avalanche, used for deterministic
+/// per-key scrambling (e.g. hash partitioning of synthetic ids).
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSL-RR 128/64 — O'Neill's PCG family member with 128-bit state and
+/// 64-bit output. Plenty for workload synthesis; not cryptographic.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed the generator. Two different seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let i0 = sm.next_u64() as u128;
+        let i1 = sm.next_u64() as u128;
+        let mut rng = Self {
+            state: (s0 << 64) | s1,
+            inc: ((i0 << 64) | i1) | 1,
+        };
+        // Warm up to decorrelate from the seed expansion.
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, bound)`. Uses Lemire's multiply-shift with rejection.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range {lo}..{hi}");
+        lo + self.next_below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Pick a uniformly random element of a non-empty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample from a discrete distribution given cumulative weights.
+    /// `cum` must be non-empty, non-decreasing, with `cum.last() > 0`.
+    pub fn pick_weighted(&mut self, cum: &[f64]) -> usize {
+        let total = *cum.last().expect("empty weights");
+        let x = self.next_f64() * total;
+        match cum.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(cum.len() - 1),
+            Err(i) => i.min(cum.len() - 1),
+        }
+    }
+
+    /// A power-law-ish integer in `[lo, hi]` biased toward `lo`
+    /// (Pareto-shaped with exponent `alpha > 0`); used to synthesize the
+    /// paper's heavy-tailed fan-in distribution.
+    pub fn pareto_int(&mut self, lo: u64, hi: u64, alpha: f64) -> u64 {
+        assert!(lo >= 1 && hi >= lo && alpha > 0.0);
+        let u = self.next_f64().max(1e-12);
+        let lo_f = lo as f64;
+        let hi_f = hi as f64 + 1.0;
+        // Inverse-CDF of a bounded Pareto.
+        let la = lo_f.powf(-alpha);
+        let ha = hi_f.powf(-alpha);
+        let x = (la - u * (la - ha)).powf(-1.0 / alpha);
+        (x as u64).clamp(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_deterministic_and_distinct_streams() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(1);
+        let mut c = Pcg64::new(2);
+        let xs: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..64).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut r = Pcg64::new(7);
+        for bound in [1u64, 2, 3, 10, 1000, u64::MAX / 2] {
+            for _ in 0..200 {
+                assert!(r.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn next_below_covers_small_range() {
+        let mut r = Pcg64::new(11);
+        let mut seen = [false; 5];
+        for _ in 0..500 {
+            seen[r.next_below(5) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Pcg64::new(3);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pareto_bounds_and_bias() {
+        let mut r = Pcg64::new(9);
+        let mut lo_count = 0;
+        for _ in 0..2000 {
+            let x = r.pareto_int(1, 450, 1.2);
+            assert!((1..=450).contains(&x));
+            if x <= 9 {
+                lo_count += 1;
+            }
+        }
+        // Heavy bias toward the low end, as the paper's fan-in stats show.
+        assert!(lo_count > 1500, "lo_count={lo_count}");
+    }
+
+    #[test]
+    fn pick_weighted_respects_zero_weight() {
+        let mut r = Pcg64::new(13);
+        // weights [0.0, 1.0] as cumulative [0.0, 1.0]: index 0 never picked
+        for _ in 0..200 {
+            assert_eq!(r.pick_weighted(&[0.0, 1.0]), 1);
+        }
+    }
+}

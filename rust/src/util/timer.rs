@@ -1,0 +1,84 @@
+//! A tiny scoped timer used throughout the pipeline and the experiment
+//! harness to report phase timings.
+
+use std::time::{Duration, Instant};
+
+/// Wall-clock timer with named laps.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now, laps: Vec::new() }
+    }
+
+    /// Record the time since the previous lap (or construction) under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    /// Total elapsed time since construction.
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Recorded laps, in order.
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    /// Render laps as `name=dur` pairs, for log lines.
+    pub fn summary(&self) -> String {
+        self.laps
+            .iter()
+            .map(|(n, d)| format!("{n}={}", super::fmt::human_duration(*d)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Time a closure, returning `(result, elapsed)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut t = Timer::new();
+        std::thread::sleep(Duration::from_millis(2));
+        t.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        t.lap("b");
+        assert_eq!(t.laps().len(), 2);
+        assert!(t.total() >= Duration::from_millis(4));
+        assert!(t.summary().contains("a="));
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, d) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,207 @@
+//! The 29-entity text-curation workflow standing in for the paper's
+//! Figure 1.
+//!
+//! The paper's workflow parses SEC/FDIC filings and extracts financial
+//! metrics; its entity names are confidential acronyms, so ours are
+//! synthetic but the *topology* follows the paper's description:
+//!
+//! * 3 input entities (`FINDOCS`, `IRP`, `P10FMD` — the paper names these),
+//! * a parsing stage, an annotation/extraction stage, and a
+//!   resolution/metrics stage,
+//! * 29 entities total, organized so the three stage-aligned splits
+//!   `sp1`, `sp2`, `sp3` are each weakly connected, and `sp3` further
+//!   bisects into weakly connected `sp4`, `sp5` (the paper partitions
+//!   `sp3` exactly this way when component LC2_lc1 resists splitting).
+
+use super::graph::DependencyGraph;
+use super::splits::{Split, SplitSet};
+use crate::util::ids::EntityId;
+
+/// Entity names per stage. `F10WMTR` and `MTRCS` appear in the paper's
+/// prose ("tuples in table MTRCS are generated from tuples in table
+/// F10WMTR"), so we keep those names and their relationship.
+const SP1: [&str; 8] = ["FINDOCS", "IRP", "P10FMD", "DOCMETA", "SECTS", "PARAS", "SENTS", "TOKS"];
+const SP2: [&str; 9] =
+    ["ANNOTS", "NERS", "ORGS", "DATES", "AMTS", "METSPANS", "F10WMTR", "CANDS", "EVID"];
+const SP4: [&str; 5] = ["RESOLVED", "LINKS", "MTRCS", "MTRVALS", "KBROWS"];
+const SP5: [&str; 7] = ["KBATTRS", "AGGRS", "RPTROWS", "XREFS", "QCFLAGS", "PUBSNAP", "IDXMAP"];
+
+/// Build the curation workflow and its canonical split decomposition.
+///
+/// Returns `(graph, splits)` where `splits` holds the top-level
+/// `[sp1, sp2, sp3]` and knows how to bisect `sp3 → [sp4, sp5]`.
+pub fn text_curation_workflow() -> (DependencyGraph, SplitSet) {
+    let mut g = DependencyGraph::new();
+
+    let e = |g: &mut DependencyGraph, name: &str, input: bool| g.add_entity(name, input);
+
+    // ---- sp1: ingestion / parsing --------------------------------------
+    let findocs = e(&mut g, "FINDOCS", true);
+    let irp = e(&mut g, "IRP", true);
+    let p10fmd = e(&mut g, "P10FMD", true);
+    let docmeta = e(&mut g, "DOCMETA", false);
+    let sects = e(&mut g, "SECTS", false);
+    let paras = e(&mut g, "PARAS", false);
+    let sents = e(&mut g, "SENTS", false);
+    let toks = e(&mut g, "TOKS", false);
+
+    g.add_derivation(findocs, docmeta);
+    g.add_derivation(irp, docmeta); // registry info joins doc metadata
+    g.add_derivation(findocs, sects);
+    g.add_derivation(p10fmd, sects); // prior-filing map guides sectioning
+    g.add_derivation(sects, paras);
+    g.add_derivation(paras, sents);
+    g.add_derivation(sents, toks);
+
+    // ---- sp2: annotation / extraction -----------------------------------
+    let annots = e(&mut g, "ANNOTS", false);
+    let ners = e(&mut g, "NERS", false);
+    let orgs = e(&mut g, "ORGS", false);
+    let dates = e(&mut g, "DATES", false);
+    let amts = e(&mut g, "AMTS", false);
+    let metspans = e(&mut g, "METSPANS", false);
+    let f10wmtr = e(&mut g, "F10WMTR", false);
+    let cands = e(&mut g, "CANDS", false);
+    let evid = e(&mut g, "EVID", false);
+
+    g.add_derivation(toks, annots);
+    g.add_derivation(sents, annots);
+    g.add_derivation(annots, ners);
+    g.add_derivation(ners, orgs);
+    g.add_derivation(ners, dates);
+    g.add_derivation(ners, amts);
+    g.add_derivation(annots, metspans);
+    g.add_derivation(metspans, f10wmtr);
+    g.add_derivation(amts, f10wmtr);
+    g.add_derivation(orgs, cands);
+    g.add_derivation(dates, cands);
+    g.add_derivation(f10wmtr, cands);
+    g.add_derivation(metspans, evid);
+    g.add_derivation(paras, evid); // evidence spans quote paragraphs
+
+    // ---- sp3 = sp4 ∪ sp5: resolution / metrics / publication ------------
+    let resolved = e(&mut g, "RESOLVED", false);
+    let links = e(&mut g, "LINKS", false);
+    let mtrcs = e(&mut g, "MTRCS", false);
+    let mtrvals = e(&mut g, "MTRVALS", false);
+    let kbrows = e(&mut g, "KBROWS", false);
+    let kbattrs = e(&mut g, "KBATTRS", false);
+    let aggrs = e(&mut g, "AGGRS", false);
+    let rptrows = e(&mut g, "RPTROWS", false);
+    let xrefs = e(&mut g, "XREFS", false);
+    let qcflags = e(&mut g, "QCFLAGS", false);
+    let pubsnap = e(&mut g, "PUBSNAP", false);
+    let idxmap = e(&mut g, "IDXMAP", false);
+
+    g.add_derivation(cands, resolved);
+    g.add_derivation(evid, resolved);
+    g.add_derivation(irp, resolved); // entity resolution against the registry
+    g.add_derivation(resolved, links);
+    g.add_derivation(f10wmtr, mtrcs); // the paper's named relationship
+    g.add_derivation(resolved, mtrcs);
+    g.add_derivation(mtrcs, mtrvals);
+    g.add_derivation(links, kbrows);
+    g.add_derivation(mtrvals, kbrows);
+    g.add_derivation(kbrows, kbattrs);
+    g.add_derivation(mtrvals, aggrs);
+    g.add_derivation(aggrs, rptrows);
+    g.add_derivation(kbattrs, rptrows);
+    g.add_derivation(links, xrefs);
+    g.add_derivation(xrefs, qcflags); // xrefs bridge sp4→sp5
+    g.add_derivation(rptrows, qcflags);
+    g.add_derivation(rptrows, pubsnap);
+    g.add_derivation(pubsnap, idxmap);
+
+    // ---- split decomposition --------------------------------------------
+    let ids = |names: &[&str], g: &DependencyGraph| -> Vec<EntityId> {
+        names.iter().map(|n| g.entity_by_name(n).expect("entity")).collect()
+    };
+    let sp1 = Split::new("sp1", ids(&SP1, &g));
+    let sp2 = Split::new("sp2", ids(&SP2, &g));
+    let sp3_entities: Vec<EntityId> = ids(&SP4, &g).into_iter().chain(ids(&SP5, &g)).collect();
+    let sp3 = Split::new("sp3", sp3_entities);
+    let sp4 = Split::new("sp4", ids(&SP4, &g));
+    let sp5 = Split::new("sp5", ids(&SP5, &g));
+
+    let splits = SplitSet::new(vec![sp1, sp2, sp3], vec![("sp3", vec![sp4, sp5])]);
+    (g, splits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_29_entities_3_inputs() {
+        let (g, _) = text_curation_workflow();
+        assert_eq!(g.entity_count(), 29);
+        let inputs: Vec<_> = g.entities().iter().filter(|e| e.is_input).collect();
+        assert_eq!(inputs.len(), 3);
+        let names: Vec<&str> = inputs.iter().map(|e| e.name.as_str()).collect();
+        assert!(names.contains(&"FINDOCS") && names.contains(&"IRP") && names.contains(&"P10FMD"));
+    }
+
+    #[test]
+    fn is_a_dag() {
+        let (g, _) = text_curation_workflow();
+        g.topo_order().unwrap();
+    }
+
+    #[test]
+    fn every_split_weakly_connected() {
+        let (g, splits) = text_curation_workflow();
+        for sp in splits.top_level() {
+            assert!(
+                g.is_weakly_connected(sp.entities()),
+                "split {} not weakly connected",
+                sp.name()
+            );
+        }
+        for sub in splits.sub_splits_of("sp3").unwrap() {
+            assert!(
+                g.is_weakly_connected(sub.entities()),
+                "sub-split {} not weakly connected",
+                sub.name()
+            );
+        }
+    }
+
+    #[test]
+    fn splits_cover_all_entities_disjointly() {
+        let (g, splits) = text_curation_workflow();
+        let mut seen = rustc_hash::FxHashSet::default();
+        let mut total = 0;
+        for sp in splits.top_level() {
+            for &e in sp.entities() {
+                assert!(seen.insert(e), "entity in two splits");
+                total += 1;
+            }
+        }
+        assert_eq!(total, g.entity_count());
+    }
+
+    #[test]
+    fn sub_splits_partition_sp3() {
+        let (_, splits) = text_curation_workflow();
+        let sp3 = splits.top_level().iter().find(|s| s.name() == "sp3").unwrap();
+        let subs = splits.sub_splits_of("sp3").unwrap();
+        let sub_total: usize = subs.iter().map(|s| s.entities().len()).sum();
+        assert_eq!(sub_total, sp3.entities().len());
+    }
+
+    #[test]
+    fn paper_named_relationship_present() {
+        let (g, _) = text_curation_workflow();
+        let f10wmtr = g.entity_by_name("F10WMTR").unwrap();
+        let mtrcs = g.entity_by_name("MTRCS").unwrap();
+        assert!(g.op_between(f10wmtr, mtrcs).is_some(), "MTRCS derived from F10WMTR");
+    }
+
+    #[test]
+    fn mtrcs_only_after_f10wmtr_in_topo() {
+        let (g, _) = text_curation_workflow();
+        let order = g.topo_order().unwrap();
+        let pos = |n: &str| order.iter().position(|&e| e == g.entity_by_name(n).unwrap()).unwrap();
+        assert!(pos("F10WMTR") < pos("MTRCS"));
+    }
+}

@@ -1,0 +1,774 @@
+//! Synthetic provenance-trace generator.
+//!
+//! Stands in for the paper's confidential SEC/FDIC curation trace (532
+//! documents → 4.6 M attribute-values, 6.4 M triples). The generator
+//! reproduces the *structural statistics* the paper's algorithms are
+//! sensitive to (§4 and Table 9):
+//!
+//! * ~428 K weakly connected components, almost all tiny (≤ 20 nodes);
+//! * 132 mid-size components (910–7 453 nodes);
+//! * three large components LC1/LC2/LC3 (1.2 M / 0.9 M / 0.7 M nodes) whose
+//!   *split-induced* structure matches Table 9 — LC1/LC3 shatter under
+//!   splits sp1/sp2/sp3, while LC2's sp3-induced subgraph stays one 0.9 M
+//!   blob that only sub-splits sp4/sp5 break apart;
+//! * a heavy-tailed fan-in distribution (a few values derived from
+//!   100–450 parents, thousands from 10–100, the rest < 10) produced by
+//!   resolution "hub" values — the paper's all-to-all UDF lineage.
+//!
+//! Every provenance edge parallels a workflow dependency edge (the paper's
+//! transformations derive one table from its parent tables), which is what
+//! makes Algorithm 3's split-induced decomposition effective.
+//!
+//! All dimensions scale by `scale_divisor` (1 = paper-fidelity, default 10
+//! for a single-box base trace) and the whole trace replicates
+//! `replication` times (the paper's ×9/×24/×48 scaled datasets — component
+//! structure is preserved exactly, as in the paper).
+
+use crate::provenance::model::{ProvTriple, Trace};
+use crate::util::ids::{AttrValueId, EntityId, OpId};
+use crate::util::rng::Pcg64;
+use crate::workflow::curation::text_curation_workflow;
+use crate::workflow::graph::DependencyGraph;
+use crate::workflow::splits::SplitSet;
+use rustc_hash::FxHashMap;
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    pub seed: u64,
+    /// Divide the paper's trace dimensions by this. 1 reproduces the full
+    /// 4.6 M-node / 6.4 M-edge trace; the default 10 yields a ~0.5 M-node
+    /// base trace suitable for a single box.
+    pub scale_divisor: usize,
+    /// Concatenate this many id-shifted copies of the base trace
+    /// (the paper's scaled datasets use 9 / 24 / 48).
+    pub replication: usize,
+    /// Probability that a derived value picks one extra parent beyond the
+    /// connectivity-guaranteeing interval assignment (controls edge/node
+    /// density; the paper's trace has ~1.4 edges per node).
+    pub extra_parent_prob: f64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        Self { seed: 0x5EC_F1D1C, scale_divisor: 10, replication: 1, extra_parent_prob: 0.25 }
+    }
+}
+
+impl GeneratorConfig {
+    /// Scale a paper-fidelity count, flooring at `floor`.
+    fn sz(&self, paper: usize, floor: usize) -> usize {
+        (paper / self.scale_divisor).max(floor)
+    }
+}
+
+/// A materialized weakly connected set: its nodes grouped by entity.
+#[derive(Debug, Default, Clone)]
+struct MatSet {
+    nodes: FxHashMap<EntityId, Vec<AttrValueId>>,
+}
+
+impl MatSet {
+    fn of(&self, e: EntityId) -> &[AttrValueId] {
+        self.nodes.get(&e).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+}
+
+/// Request for high-fan-in "hub" values inside a set (resolution UDFs).
+#[derive(Debug, Clone, Copy)]
+struct HubSpec {
+    /// How many hub values to create.
+    count: usize,
+    /// Parent-count range for each hub value (clamped to layer size).
+    lo: usize,
+    hi: usize,
+}
+
+struct Ctx<'a> {
+    g: &'a DependencyGraph,
+    rng: Pcg64,
+    next_serial: Vec<u64>,
+    triples: Vec<ProvTriple>,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(g: &'a DependencyGraph, seed: u64) -> Self {
+        Self {
+            g,
+            rng: Pcg64::new(seed),
+            next_serial: vec![0; g.entity_count()],
+            triples: Vec::new(),
+        }
+    }
+
+    fn alloc(&mut self, e: EntityId) -> AttrValueId {
+        let s = &mut self.next_serial[e.0 as usize];
+        let id = AttrValueId::new(e, *s);
+        *s += 1;
+        id
+    }
+
+    fn alloc_n(&mut self, e: EntityId, n: usize) -> Vec<AttrValueId> {
+        (0..n).map(|_| self.alloc(e)).collect()
+    }
+
+    fn edge(&mut self, src: AttrValueId, dst: AttrValueId, op: OpId) {
+        self.triples.push(ProvTriple::new(src, dst, op));
+    }
+
+    fn op(&self, parent: EntityId, child: EntityId) -> OpId {
+        self.g
+            .op_between(parent, child)
+            .unwrap_or_else(|| panic!("no dependency edge {:?}->{:?}", parent, child))
+    }
+
+    /// Materialize one weakly connected set along an entity `chain`
+    /// (consecutive entities must be dependency-graph edges), spreading
+    /// `n >= 1` nodes over the layers.
+    ///
+    /// Connectivity is guaranteed by the *interval assignment*: child `i`
+    /// of a layer with `c` children takes parents `⌊i·p/c⌋ ..= ⌊(i+1)·p/c⌋`
+    /// (clamped) from the `p`-parent layer; consecutive children overlap at
+    /// the boundary parent, so each adjacent layer pair is weakly connected.
+    /// Random extra parents (and optional hubs) add fan-in on top.
+    fn materialize_chain_set(
+        &mut self,
+        chain: &[EntityId],
+        n: usize,
+        extra_parent_prob: f64,
+        hub: Option<HubSpec>,
+    ) -> MatSet {
+        assert!(!chain.is_empty() && n >= 1);
+        let layers = chain.len().min(n);
+        // Node counts per layer: even split, remainder to the last layers
+        // (later tables are usually wider in the paper's workflow).
+        let base = n / layers;
+        let rem = n % layers;
+        let counts: Vec<usize> =
+            (0..layers).map(|j| base + usize::from(j >= layers - rem)).collect();
+
+        let mut set = MatSet::default();
+        let mut prev: Vec<AttrValueId> = Vec::new();
+        let mut prev_entity = chain[0];
+        // Hub values go in the widest non-first layer.
+        let hub_layer = hub.map(|_| {
+            counts
+                .iter()
+                .enumerate()
+                .skip(1)
+                .max_by_key(|(_, &c)| c)
+                .map(|(j, _)| j)
+                .unwrap_or(0)
+        });
+
+        for (j, (&entity, &cnt)) in chain.iter().zip(&counts).enumerate() {
+            let nodes = self.alloc_n(entity, cnt);
+            if j > 0 {
+                let op = self.op(prev_entity, entity);
+                let p = prev.len();
+                let c = nodes.len();
+                for (i, &child) in nodes.iter().enumerate() {
+                    let lo = i * p / c;
+                    let hi = (((i + 1) * p) / c).min(p - 1).max(lo);
+                    for &parent in &prev[lo..=hi] {
+                        self.edge(parent, child, op);
+                    }
+                    if self.rng.chance(extra_parent_prob) {
+                        let extra = prev[self.rng.range(0, p)];
+                        self.edge(extra, child, op);
+                    }
+                }
+                // Hub values: high fan-in from the previous layer.
+                if hub_layer == Some(j) {
+                    let h = hub.unwrap();
+                    for _ in 0..h.count {
+                        let hub_node = self.alloc(entity);
+                        let fanin = self.rng.range(h.lo.min(p), (h.hi + 1).min(p + 1)).max(1);
+                        // Sample a contiguous window (cheap, still "many
+                        // parents"); UDF lineage is all-to-all anyway.
+                        let start = self.rng.range(0, p - fanin + 1);
+                        for &parent in &prev[start..start + fanin] {
+                            self.edge(parent, hub_node, op);
+                        }
+                        set.nodes.entry(entity).or_default().push(hub_node);
+                    }
+                }
+            }
+            set.nodes.entry(entity).or_default().extend(&nodes);
+            prev = nodes;
+            prev_entity = entity;
+        }
+        set
+    }
+
+    /// Add `k` cross-split edges from `parent_set` to `child_set` along the
+    /// dependency edge `pe → ce`. Both sets must populate those entities.
+    fn cross_link(
+        &mut self,
+        parent_set: &MatSet,
+        child_set: &MatSet,
+        pe: EntityId,
+        ce: EntityId,
+        k: usize,
+    ) {
+        let op = self.op(pe, ce);
+        let ps = parent_set.of(pe);
+        let cs = child_set.of(ce);
+        assert!(
+            !ps.is_empty() && !cs.is_empty(),
+            "cross_link: entities not populated ({} -> {})",
+            self.g.name_of(pe),
+            self.g.name_of(ce),
+        );
+        for _ in 0..k.max(1) {
+            let src = ps[self.rng.range(0, ps.len())];
+            let dst = cs[self.rng.range(0, cs.len())];
+            self.edge(src, dst, op);
+        }
+    }
+
+    /// Like [`Self::cross_link`], but tries the candidate dependency edges
+    /// in order and uses the first whose entities both sets populate
+    /// (small sets materialize only a chain prefix, so later entities may
+    /// be absent). Panics if no candidate fits.
+    fn cross_link_any(
+        &mut self,
+        parent_set: &MatSet,
+        child_set: &MatSet,
+        candidates: &[(EntityId, EntityId)],
+        k: usize,
+    ) {
+        for &(pe, ce) in candidates {
+            if !parent_set.of(pe).is_empty() && !child_set.of(ce).is_empty() {
+                self.cross_link(parent_set, child_set, pe, ce, k);
+                return;
+            }
+        }
+        panic!("cross_link_any: no candidate edge applicable");
+    }
+}
+
+/// Names of the canonical materialization chains (see `curation.rs`).
+const SP1_CHAIN: [&str; 5] = ["FINDOCS", "SECTS", "PARAS", "SENTS", "TOKS"];
+const SP1_IRP_CHAIN: [&str; 2] = ["IRP", "DOCMETA"];
+const SP2_CHAIN: [&str; 4] = ["ANNOTS", "METSPANS", "F10WMTR", "CANDS"];
+const SP4_CHAIN: [&str; 4] = ["RESOLVED", "MTRCS", "MTRVALS", "KBROWS"];
+const SP5_CHAIN: [&str; 4] = ["KBATTRS", "RPTROWS", "PUBSNAP", "IDXMAP"];
+/// Full-sp3 chain used for LC1/LC3 sets (crosses the sp4/sp5 boundary —
+/// legal because those sets are small enough to never need sub-splitting).
+const SP3_CHAIN: [&str; 6] = ["RESOLVED", "MTRCS", "MTRVALS", "KBROWS", "KBATTRS", "RPTROWS"];
+
+fn ids(g: &DependencyGraph, names: &[&str]) -> Vec<EntityId> {
+    names.iter().map(|n| g.entity_by_name(n).expect("chain entity")).collect()
+}
+
+/// Recipe for an LC1/LC3-shaped large component.
+struct StagedLcRecipe {
+    sp1_sets: usize,
+    sp1_largest: usize,
+    sp2_sets: usize,
+    /// Paper-scaled sizes of the oversized sp2 sets (hubs).
+    sp2_hubs: Vec<usize>,
+    sp3_sets: usize,
+    sp3_largest: usize,
+    sp3_big_sets: usize,
+}
+
+/// Generate the base (un-replicated) trace.
+fn generate_base(cfg: &GeneratorConfig, g: &DependencyGraph) -> Vec<ProvTriple> {
+    let mut ctx = Ctx::new(g, cfg.seed);
+
+    // ---- LC1 (paper: 1.2M nodes, 2.7M edges; Table 9 row 1) -------------
+    staged_large_component(
+        &mut ctx,
+        cfg,
+        &StagedLcRecipe {
+            sp1_sets: 20,
+            sp1_largest: cfg.sz(490, 8),
+            sp2_sets: cfg.sz(29_696, 60),
+            sp2_hubs: vec![cfg.sz(21_734, 40), cfg.sz(9_000, 25), cfg.sz(3_000, 15), cfg.sz(1_200, 12)],
+            sp3_sets: cfg.sz(219_879, 300),
+            sp3_largest: cfg.sz(3_291, 20),
+            sp3_big_sets: 11,
+        },
+    );
+
+    // ---- LC3 (0.7M nodes, 1.2M edges; Table 9 row 2) ---------------------
+    staged_large_component(
+        &mut ctx,
+        cfg,
+        &StagedLcRecipe {
+            sp1_sets: 10,
+            sp1_largest: cfg.sz(313, 8),
+            sp2_sets: cfg.sz(15_491, 40),
+            sp2_hubs: vec![cfg.sz(2_578, 30)],
+            sp3_sets: cfg.sz(128_264, 200),
+            sp3_largest: cfg.sz(643, 12),
+            sp3_big_sets: 0,
+        },
+    );
+
+    // ---- LC2 (0.9M nodes, 1.4M edges; the sp3-blob component) ------------
+    lc2_component(&mut ctx, cfg);
+
+    // ---- 132 mid-size components (910..7453 nodes) ------------------------
+    mid_components(&mut ctx, cfg);
+
+    // ---- ~428K small components (≤20 nodes) -------------------------------
+    small_components(&mut ctx, cfg);
+
+    ctx.triples
+}
+
+/// LC1/LC3 shape: 20-ish sp1 chains → thousands of sp2 sets (with hubs) →
+/// hundreds of thousands of tiny sp3 sets. Connectivity: each sp2 set
+/// derives from its cluster's sp1 set; hubs derive from *many* sp1 sets
+/// (covering all of them); each sp3 set derives from sp2 sets within one
+/// cluster (reproducing the paper's drill-down where 13 sp2 sets share a
+/// single sp1 ancestor set).
+fn staged_large_component(ctx: &mut Ctx, cfg: &GeneratorConfig, r: &StagedLcRecipe) {
+    let g = ctx.g;
+    let sp1_chain = ids(g, &SP1_CHAIN);
+    let sp2_chain = ids(g, &SP2_CHAIN);
+    let sp3_chain = ids(g, &SP3_CHAIN);
+    let toks = g.entity_by_name("TOKS").unwrap();
+    let sents = g.entity_by_name("SENTS").unwrap();
+    let annots = g.entity_by_name("ANNOTS").unwrap();
+    let cands = g.entity_by_name("CANDS").unwrap();
+    let f10wmtr = g.entity_by_name("F10WMTR").unwrap();
+    let resolved = g.entity_by_name("RESOLVED").unwrap();
+    let mtrcs = g.entity_by_name("MTRCS").unwrap();
+    let ep = cfg.extra_parent_prob;
+
+    // sp1 sets. Sizes are floored at the chain length so every set
+    // populates its exit entities (TOKS/SENTS feed sp2).
+    let mut sp1_sets: Vec<MatSet> = Vec::with_capacity(r.sp1_sets);
+    for i in 0..r.sp1_sets {
+        let n = if i == 0 {
+            r.sp1_largest
+        } else {
+            ctx.rng.range(r.sp1_largest / 4 + 5, r.sp1_largest + 1)
+        }
+        .max(sp1_chain.len());
+        sp1_sets.push(ctx.materialize_chain_set(&sp1_chain, n, ep, None));
+    }
+
+    // sp2 sets, clustered by sp1 parent.
+    let n_clusters = r.sp1_sets;
+    let mut clusters: Vec<Vec<usize>> = vec![Vec::new(); n_clusters];
+    let mut sp2_sets: Vec<MatSet> = Vec::with_capacity(r.sp2_sets);
+    for i in 0..r.sp2_sets {
+        let is_hub = i < r.sp2_hubs.len();
+        let (n, hub) = if is_hub {
+            let n = r.sp2_hubs[i];
+            // Resolution hubs: a handful of values with 100–450 parents,
+            // plus a sprinkling in the 10–100 band (paper fan-in stats).
+            let hub = HubSpec { count: (n / 600).max(2), lo: 100, hi: 450 };
+            (n, Some(hub))
+        } else {
+            // Floor at the chain length: sp2 sets act as *parents* of sp3
+            // sets, so their exit entities (F10WMTR, CANDS) must exist.
+            (ctx.rng.pareto_int(4, 12, 1.3) as usize, None)
+        };
+        let set = ctx.materialize_chain_set(&sp2_chain, n, ep, hub);
+        // Wire to sp1: hubs cover every sp1 set; normal sets take their
+        // cluster's set (and occasionally one more).
+        if is_hub {
+            for s1 in &sp1_sets {
+                let pe = if ctx.rng.chance(0.5) { toks } else { sents };
+                ctx.cross_link(s1, &set, pe, annots, 1 + (n / 64).min(16));
+            }
+            for c in &mut clusters {
+                c.push(i);
+            }
+        } else {
+            let cluster = i % n_clusters;
+            ctx.cross_link(&sp1_sets[cluster].clone(), &set, toks, annots, 1);
+            if ctx.rng.chance(0.12) {
+                let other = ctx.rng.range(0, n_clusters);
+                ctx.cross_link(&sp1_sets[other].clone(), &set, sents, annots, 1);
+            }
+            clusters[cluster].push(i);
+        }
+        sp2_sets.push(set);
+    }
+
+    // sp3 sets: mostly tiny; `sp3_big_sets` mid-size ones topped by
+    // `sp3_largest`. Some sp3 sets take 10–100 extra parents (fan-in band).
+    for i in 0..r.sp3_sets {
+        let n = if i == 0 {
+            r.sp3_largest
+        } else if i <= r.sp3_big_sets {
+            ctx.rng.range((r.sp3_largest / 3).max(3), r.sp3_largest + 1)
+        } else {
+            ctx.rng.pareto_int(2, 8, 1.4) as usize
+        };
+        let hub = if n >= 40 && ctx.rng.chance(0.3) {
+            Some(HubSpec { count: 1, lo: 10, hi: 100 })
+        } else {
+            None
+        };
+        let set = ctx.materialize_chain_set(&sp3_chain, n, ep, hub);
+        // Parent sp2 sets from one cluster (the paper's 13-sets-one-sp1
+        // drill-down): usually 1, sometimes up to 15.
+        let cluster = &clusters[ctx.rng.range(0, n_clusters)];
+        let n_parents = {
+            let x = ctx.rng.next_f64();
+            if x < 0.80 {
+                1
+            } else if x < 0.95 {
+                ctx.rng.range(2, 5)
+            } else {
+                ctx.rng.range(5, 16)
+            }
+        }
+        .min(cluster.len());
+        for p in 0..n_parents {
+            let sp2_idx = cluster[ctx.rng.range(0, cluster.len().max(1))];
+            let prefer_mtr = p != 0 && !ctx.rng.chance(0.7);
+            let cands_first = [(cands, resolved), (f10wmtr, mtrcs)];
+            let mtr_first = [(f10wmtr, mtrcs), (cands, resolved)];
+            let order: &[(_, _)] = if prefer_mtr { &mtr_first } else { &cands_first };
+            ctx.cross_link_any(&sp2_sets[sp2_idx].clone(), &set, order, 1);
+        }
+    }
+}
+
+/// LC2 shape (paper Table 9 row 3): one 4-node sp1 set (registry values),
+/// one ~211-node sp2 set, and a 0.9M-node sp3-induced *single* component
+/// that only the sp4/sp5 sub-splits break into ~197K sets (two of them
+/// ≥1000 nodes, the largest ~24733).
+fn lc2_component(ctx: &mut Ctx, cfg: &GeneratorConfig) {
+    let g = ctx.g;
+    let irp = g.entity_by_name("IRP").unwrap();
+    let resolved = g.entity_by_name("RESOLVED").unwrap();
+    let cands = g.entity_by_name("CANDS").unwrap();
+    let kbrows = g.entity_by_name("KBROWS").unwrap();
+    let kbattrs = g.entity_by_name("KBATTRS").unwrap();
+    let sp1_irp_chain = ids(g, &SP1_IRP_CHAIN);
+    let sp2_chain = ids(g, &SP2_CHAIN);
+    let sp4_chain = ids(g, &SP4_CHAIN);
+    let sp5_chain = ids(g, &SP5_CHAIN);
+    let ep = cfg.extra_parent_prob;
+
+    // sp1: exactly 4 nodes (1 IRP + 3 DOCMETA) — unscaled, as in the paper.
+    let sp1_set = ctx.materialize_chain_set(&sp1_irp_chain, 4, 0.0, None);
+    // sp2: one ~211-node set.
+    let sp2_set = ctx.materialize_chain_set(&sp2_chain, cfg.sz(211, 24), ep, None);
+
+    // sp4 side: many tiny sets (≤30 nodes).
+    let n_sp4 = cfg.sz(64_737, 120);
+    let mut sp4_sets: Vec<MatSet> = Vec::with_capacity(n_sp4);
+    for _ in 0..n_sp4 {
+        // Floor at the chain length so KBROWS (the sp4 → sp5 exit) exists.
+        let n = ctx.rng.pareto_int(sp4_chain.len() as u64, 30, 1.5) as usize;
+        sp4_sets.push(ctx.materialize_chain_set(&sp4_chain, n, ep, None));
+    }
+
+    // sp5 side: two hubs + many tiny sets.
+    let n_sp5 = cfg.sz(132_599, 200);
+    let hub0 = ctx.materialize_chain_set(
+        &sp5_chain,
+        cfg.sz(24_733, 60),
+        ep,
+        Some(HubSpec { count: 4, lo: 100, hi: 450 }),
+    );
+    let hub1 = ctx.materialize_chain_set(
+        &sp5_chain,
+        cfg.sz(3_000, 30),
+        ep,
+        Some(HubSpec { count: 2, lo: 10, hi: 100 }),
+    );
+    let mut sp5_sets: Vec<MatSet> = Vec::with_capacity(n_sp5);
+    for _ in 0..n_sp5.saturating_sub(2) {
+        let n = ctx.rng.pareto_int(2, 8, 1.5) as usize;
+        sp5_sets.push(ctx.materialize_chain_set(&sp5_chain, n, ep, None));
+    }
+
+    // Wiring.
+    // (a) Every sp4 set feeds hub0 (KBROWS → KBATTRS): this is what makes
+    //     G[V(sp3, LC2)] a single component — remove the sub-splits and the
+    //     whole sp3 projection is connected through the hub.
+    for s4 in &sp4_sets {
+        ctx.cross_link(&s4.clone(), &hub0, kbrows, kbattrs, 1);
+    }
+    // (b) Each non-hub sp5 set derives from a random sp4 set; a few also
+    //     touch hub1's cluster.
+    for i in 0..sp5_sets.len() {
+        let s4 = sp4_sets[ctx.rng.range(0, sp4_sets.len())].clone();
+        ctx.cross_link(&s4, &sp5_sets[i].clone(), kbrows, kbattrs, 1);
+    }
+    let s4 = sp4_sets[0].clone();
+    ctx.cross_link(&s4, &hub1, kbrows, kbattrs, 2);
+    // (c) The registry IRP value resolves into ~5% of sp4 sets (all-to-all
+    //     UDF → huge fan-out, and RESOLVED values with extra parents).
+    let n_linked = (n_sp4 / 20).max(2);
+    for i in 0..n_linked {
+        let idx = (i * sp4_sets.len()) / n_linked;
+        let s4 = sp4_sets[idx].clone();
+        ctx.cross_link(&sp1_set, &s4, irp, resolved, 1);
+    }
+    // (d) The sp2 set feeds a couple of sp4 sets (CANDS → RESOLVED).
+    for _ in 0..(n_sp4 / 50).max(2) {
+        let idx = ctx.rng.range(0, sp4_sets.len());
+        let s4 = sp4_sets[idx].clone();
+        ctx.cross_link(&sp2_set, &s4, cands, resolved, 1);
+    }
+}
+
+/// 132 mid-size components: single long chains across all three splits
+/// (sp1 → sp2 → sp3 via cross-links). Deep layered lineages give the
+/// SC-SL / LC-SL query classes their 100–200-ancestor items.
+fn mid_components(ctx: &mut Ctx, cfg: &GeneratorConfig) {
+    let g = ctx.g;
+    let sp1_chain = ids(g, &SP1_CHAIN);
+    let sp2_chain = ids(g, &SP2_CHAIN);
+    let sp3_chain = ids(g, &SP3_CHAIN);
+    let toks = g.entity_by_name("TOKS").unwrap();
+    let annots = g.entity_by_name("ANNOTS").unwrap();
+    let cands = g.entity_by_name("CANDS").unwrap();
+    let resolved = g.entity_by_name("RESOLVED").unwrap();
+    let ep = cfg.extra_parent_prob;
+
+    let lo = cfg.sz(910, 40);
+    let hi = cfg.sz(7_453, 120);
+    for i in 0..132 {
+        // One component pinned at the top of the band (the paper's SC-SL
+        // class queries a 7453-node component), one at the bottom.
+        let n = match i {
+            0 => hi,
+            1 => lo,
+            _ => ctx.rng.range(lo, hi + 1),
+        };
+        let n1 = (n / 5).max(sp1_chain.len());
+        let n2 = (2 * n / 5).max(sp2_chain.len());
+        let n3 = n.saturating_sub(n1 + n2);
+        let s1 = ctx.materialize_chain_set(&sp1_chain, n1, ep, None);
+        let hub2 = if n2 >= 60 {
+            Some(HubSpec { count: 2, lo: 10, hi: 100 })
+        } else {
+            None
+        };
+        let s2 = ctx.materialize_chain_set(&sp2_chain, n2, ep, hub2);
+        let s3 = ctx.materialize_chain_set(&sp3_chain, n3.max(2), ep, None);
+        ctx.cross_link(&s1, &s2, toks, annots, (n1 / 10).max(2));
+        ctx.cross_link(&s2, &s3, cands, resolved, (n2 / 10).max(2));
+    }
+}
+
+/// The long tail: hundreds of thousands of tiny components (≤ 20 nodes),
+/// 60% fully inside sp1, 40% crossing sp1 → sp2.
+fn small_components(ctx: &mut Ctx, cfg: &GeneratorConfig) {
+    let g = ctx.g;
+    let sp1_chain = ids(g, &SP1_CHAIN);
+    let sp2_chain = ids(g, &SP2_CHAIN);
+    let toks = g.entity_by_name("TOKS").unwrap();
+    let annots = g.entity_by_name("ANNOTS").unwrap();
+
+    let sents = g.entity_by_name("SENTS").unwrap();
+    let count = cfg.sz(427_865, 800); // 428K total minus the 135 big/mid
+    for _ in 0..count {
+        let n = ctx.rng.pareto_int(2, 20, 1.6) as usize;
+        // Crossing components need the sp1 side to reach SENTS/TOKS.
+        if n < 6 || ctx.rng.chance(0.6) {
+            ctx.materialize_chain_set(&sp1_chain, n, 0.1, None);
+        } else {
+            let n1 = (n / 2).max(4);
+            let s1 = ctx.materialize_chain_set(&sp1_chain, n1, 0.1, None);
+            let s2 = ctx.materialize_chain_set(&sp2_chain, n.saturating_sub(n1).max(1), 0.1, None);
+            ctx.cross_link_any(&s1, &s2, &[(toks, annots), (sents, annots)], 1);
+        }
+    }
+}
+
+/// Generate a trace with the canonical curation workflow. Returns the
+/// workflow objects alongside so callers share one construction.
+pub fn generate(cfg: &GeneratorConfig) -> (Trace, DependencyGraph, SplitSet) {
+    let (g, splits) = text_curation_workflow();
+    let trace = generate_with(cfg, &g);
+    (trace, g, splits)
+}
+
+/// Generate a trace against an explicit workflow graph.
+pub fn generate_with(cfg: &GeneratorConfig, g: &DependencyGraph) -> Trace {
+    assert!(cfg.scale_divisor >= 1, "scale_divisor must be >= 1");
+    assert!(cfg.replication >= 1, "replication must be >= 1");
+    let base = generate_base(cfg, g);
+
+    if cfg.replication == 1 {
+        return Trace::new(base);
+    }
+    // Replicate with a per-entity serial shift so copies never collide;
+    // component structure is preserved exactly (paper §4, Scaled Datasets).
+    let mut strides = vec![0u64; g.entity_count()];
+    for t in &base {
+        for id in [t.src, t.dst] {
+            let e = id.entity().0 as usize;
+            strides[e] = strides[e].max(id.serial() + 1);
+        }
+    }
+    let mut out = Vec::with_capacity(base.len() * cfg.replication);
+    out.extend_from_slice(&base);
+    for rep in 1..cfg.replication as u64 {
+        for t in &base {
+            let shift = |id: AttrValueId| {
+                AttrValueId::new(id.entity(), id.serial() + rep * strides[id.entity().0 as usize])
+            };
+            out.push(ProvTriple::new(shift(t.src), shift(t.dst), t.op));
+        }
+    }
+    Trace::new(out)
+}
+
+/// Structural statistics of a trace (computed with a union-find; used by
+/// `provspark stats`, tests, and EXPERIMENTS.md).
+#[derive(Debug, Clone, Default)]
+pub struct TraceStats {
+    pub nodes: usize,
+    pub edges: usize,
+    pub components: usize,
+    /// (nodes, edges) of the largest components, descending by nodes.
+    pub largest: Vec<(usize, usize)>,
+    /// Components with 20 < nodes < threshold_large.
+    pub mid_components: usize,
+    /// Fan-in histogram: values with <10, 10..100, 100.. parents (+max).
+    pub fanin_lt10: usize,
+    pub fanin_10_100: usize,
+    pub fanin_ge100: usize,
+    pub fanin_max: usize,
+}
+
+impl TraceStats {
+    /// Compute stats. `mid_lo`/`large_lo` bound the mid-size band in nodes
+    /// (the paper uses >20 and <~0.1M; pass scaled values).
+    pub fn compute(trace: &Trace, mid_lo: usize, large_lo: usize) -> Self {
+        use crate::provenance::wcc::UnionFind;
+        let mut uf = UnionFind::new();
+        for t in &trace.triples {
+            uf.union(t.src.raw(), t.dst.raw());
+        }
+        // Component sizes.
+        let ids: Vec<u64> = uf.keys().collect();
+        let mut comp_nodes: FxHashMap<u64, usize> = FxHashMap::default();
+        for id in ids {
+            *comp_nodes.entry(uf.find(id)).or_default() += 1;
+        }
+        let mut comp_edges: FxHashMap<u64, usize> = FxHashMap::default();
+        for t in &trace.triples {
+            *comp_edges.entry(uf.find(t.src.raw())).or_default() += 1;
+        }
+        let mut sizes: Vec<(usize, usize, u64)> = comp_nodes
+            .iter()
+            .map(|(&root, &n)| (n, comp_edges.get(&root).copied().unwrap_or(0), root))
+            .collect();
+        sizes.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+
+        // Fan-in histogram.
+        let mut fanin: FxHashMap<u64, usize> = FxHashMap::default();
+        for t in &trace.triples {
+            *fanin.entry(t.dst.raw()).or_default() += 1;
+        }
+        let mut s = TraceStats {
+            nodes: comp_nodes.values().sum(),
+            edges: trace.triples.len(),
+            components: comp_nodes.len(),
+            largest: sizes.iter().take(5).map(|&(n, e, _)| (n, e)).collect(),
+            mid_components: sizes
+                .iter()
+                .filter(|&&(n, _, _)| n > mid_lo && n < large_lo)
+                .count(),
+            ..Default::default()
+        };
+        for &f in fanin.values() {
+            if f < 10 {
+                s.fanin_lt10 += 1;
+            } else if f < 100 {
+                s.fanin_10_100 += 1;
+            } else {
+                s.fanin_ge100 += 1;
+            }
+            s.fanin_max = s.fanin_max.max(f);
+        }
+        s
+    }
+
+    pub fn summary(&self) -> String {
+        use crate::util::fmt::human_count;
+        format!(
+            "nodes={} edges={} components={} largest={:?} mid={} fanin(<10/10-100/≥100)={}/{}/{} max_fanin={}",
+            human_count(self.nodes as u64),
+            human_count(self.edges as u64),
+            human_count(self.components as u64),
+            self.largest,
+            self.mid_components,
+            self.fanin_lt10,
+            self.fanin_10_100,
+            self.fanin_ge100,
+            self.fanin_max,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> GeneratorConfig {
+        // Very small for fast unit tests; structure checks live in
+        // rust/tests/generator_stats.rs at a more realistic scale.
+        GeneratorConfig { scale_divisor: 1000, ..Default::default() }
+    }
+
+    #[test]
+    fn generates_nonempty_dag_per_op() {
+        let (trace, g, _) = generate(&tiny_cfg());
+        assert!(!trace.is_empty());
+        // Every edge parallels a dependency edge with the matching op.
+        for t in &trace.triples {
+            let op = g.op_between(t.src.entity(), t.dst.entity());
+            assert_eq!(op, Some(t.op), "edge {:?} violates workflow graph", t);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _, _) = generate(&tiny_cfg());
+        let (b, _, _) = generate(&tiny_cfg());
+        assert_eq!(a.triples, b.triples);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (a, _, _) = generate(&tiny_cfg());
+        let (b, _, _) = generate(&GeneratorConfig { seed: 99, ..tiny_cfg() });
+        assert_ne!(a.triples, b.triples);
+    }
+
+    #[test]
+    fn replication_multiplies_exactly() {
+        let (base, _, _) = generate(&tiny_cfg());
+        let (tripled, _, _) = generate(&GeneratorConfig { replication: 3, ..tiny_cfg() });
+        assert_eq!(tripled.len(), base.len() * 3);
+        assert_eq!(tripled.node_count(), base.node_count() * 3);
+        // Components triple too.
+        let sb = TraceStats::compute(&base, 20, 10_000);
+        let st = TraceStats::compute(&tripled, 20, 10_000);
+        assert_eq!(st.components, sb.components * 3);
+        assert_eq!(st.largest[0].0, sb.largest[0].0, "largest component size preserved");
+    }
+
+    #[test]
+    fn stats_have_three_large_components() {
+        let (trace, _, _) = generate(&tiny_cfg());
+        let s = TraceStats::compute(&trace, 20, 1_000);
+        assert!(s.components > 100, "components={}", s.components);
+        assert!(s.largest.len() >= 3);
+        // The top-3 are well above the rest.
+        assert!(s.largest[2].0 > 5 * 20, "{:?}", s.largest);
+        // At divisor 1000 the hub layers shrink to ~10 nodes, capping the
+        // achievable fan-in; the full 100–450 band is asserted at a more
+        // realistic scale in rust/tests/generator_stats.rs.
+        assert!(s.fanin_max >= 10, "hub fan-in missing: max={}", s.fanin_max);
+    }
+}

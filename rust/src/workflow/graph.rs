@@ -1,0 +1,269 @@
+//! The workflow dependency graph: which entity (table) is derived from
+//! which — the paper's Figure 1 object. Algorithm 3 partitions it into
+//! weakly connected *splits* to drive component partitioning.
+
+use crate::util::ids::{EntityId, OpId};
+use anyhow::{bail, Result};
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// Static description of one workflow entity (table).
+#[derive(Debug, Clone)]
+pub struct EntityInfo {
+    pub id: EntityId,
+    /// Short acronym, as in the paper's Figure 1.
+    pub name: String,
+    /// True for workflow inputs (the paper's `*`-marked entities).
+    pub is_input: bool,
+}
+
+/// A directed edge `parent → child` ("child is derived from parent") plus
+/// the transformation id that performs the derivation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DerivesEdge {
+    pub parent: EntityId,
+    pub child: EntityId,
+    pub op: OpId,
+}
+
+/// The workflow dependency graph (a DAG over entities).
+#[derive(Debug, Clone, Default)]
+pub struct DependencyGraph {
+    entities: Vec<EntityInfo>,
+    edges: Vec<DerivesEdge>,
+    by_name: FxHashMap<String, EntityId>,
+}
+
+impl DependencyGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an entity; returns its id. Names must be unique.
+    pub fn add_entity(&mut self, name: &str, is_input: bool) -> EntityId {
+        assert!(
+            !self.by_name.contains_key(name),
+            "duplicate entity name {name:?}"
+        );
+        let id = EntityId(self.entities.len() as u16);
+        self.entities.push(EntityInfo { id, name: name.to_string(), is_input });
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    /// Add a derivation edge `parent → child`; the transformation id is
+    /// the edge's index (one transformation per table-to-table derivation).
+    pub fn add_derivation(&mut self, parent: EntityId, child: EntityId) -> OpId {
+        let op = OpId(self.edges.len() as u32);
+        self.edges.push(DerivesEdge { parent, child, op });
+        op
+    }
+
+    pub fn entities(&self) -> &[EntityInfo] {
+        &self.entities
+    }
+
+    pub fn edges(&self) -> &[DerivesEdge] {
+        &self.edges
+    }
+
+    pub fn entity_count(&self) -> usize {
+        self.entities.len()
+    }
+
+    pub fn entity_by_name(&self, name: &str) -> Option<EntityId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn name_of(&self, e: EntityId) -> &str {
+        &self.entities[e.0 as usize].name
+    }
+
+    /// Transformation id on the `parent → child` edge, if present.
+    pub fn op_between(&self, parent: EntityId, child: EntityId) -> Option<OpId> {
+        self.edges
+            .iter()
+            .find(|e| e.parent == parent && e.child == child)
+            .map(|e| e.op)
+    }
+
+    /// Parent entities of `child`.
+    pub fn parents_of(&self, child: EntityId) -> Vec<EntityId> {
+        self.edges.iter().filter(|e| e.child == child).map(|e| e.parent).collect()
+    }
+
+    /// Child entities of `parent`.
+    pub fn children_of(&self, parent: EntityId) -> Vec<EntityId> {
+        self.edges.iter().filter(|e| e.parent == parent).map(|e| e.child).collect()
+    }
+
+    /// Entities in topological order (inputs first). Errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<EntityId>> {
+        let n = self.entities.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.child.0 as usize] += 1;
+        }
+        let mut queue: Vec<EntityId> = (0..n)
+            .filter(|&i| indeg[i] == 0)
+            .map(|i| EntityId(i as u16))
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(e) = queue.pop() {
+            order.push(e);
+            for c in self.children_of(e) {
+                let d = &mut indeg[c.0 as usize];
+                *d -= 1;
+                if *d == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("dependency graph has a cycle");
+        }
+        Ok(order)
+    }
+
+    /// Whether the given entity subset is weakly connected in this graph
+    /// (Algorithm 3's key precondition on splits).
+    pub fn is_weakly_connected(&self, subset: &[EntityId]) -> bool {
+        if subset.is_empty() {
+            return true;
+        }
+        let set: FxHashSet<EntityId> = subset.iter().copied().collect();
+        let mut seen: FxHashSet<EntityId> = FxHashSet::default();
+        let mut stack = vec![subset[0]];
+        seen.insert(subset[0]);
+        while let Some(e) = stack.pop() {
+            for edge in &self.edges {
+                let nbr = if edge.parent == e && set.contains(&edge.child) {
+                    Some(edge.child)
+                } else if edge.child == e && set.contains(&edge.parent) {
+                    Some(edge.parent)
+                } else {
+                    None
+                };
+                if let Some(n) = nbr {
+                    if seen.insert(n) {
+                        stack.push(n);
+                    }
+                }
+            }
+        }
+        seen.len() == set.len()
+    }
+
+    /// Undirected adjacency restricted to `subset` (entity → neighbours).
+    pub fn undirected_adjacency(
+        &self,
+        subset: &[EntityId],
+    ) -> FxHashMap<EntityId, Vec<EntityId>> {
+        let set: FxHashSet<EntityId> = subset.iter().copied().collect();
+        let mut adj: FxHashMap<EntityId, Vec<EntityId>> =
+            subset.iter().map(|&e| (e, Vec::new())).collect();
+        for e in &self.edges {
+            if set.contains(&e.parent) && set.contains(&e.child) {
+                adj.get_mut(&e.parent).unwrap().push(e.child);
+                adj.get_mut(&e.child).unwrap().push(e.parent);
+            }
+        }
+        adj
+    }
+
+    /// Graphviz DOT rendering (regenerates the paper's Figure 1 shape).
+    pub fn to_dot(&self, split_of: impl Fn(EntityId) -> Option<String>) -> String {
+        let mut out = String::from("digraph workflow {\n  rankdir=LR;\n");
+        for e in &self.entities {
+            let shape = if e.is_input { "box" } else { "ellipse" };
+            let label = if e.is_input {
+                format!("{}*", e.name)
+            } else {
+                e.name.clone()
+            };
+            let color = match split_of(e.id) {
+                Some(sp) => format!(", colorscheme=set39, style=filled, fillcolor={}",
+                    1 + (sp.bytes().map(|b| b as usize).sum::<usize>() % 9)),
+                None => String::new(),
+            };
+            out.push_str(&format!(
+                "  e{} [label=\"{}\", shape={}{}];\n",
+                e.id.0, label, shape, color
+            ));
+        }
+        for d in &self.edges {
+            out.push_str(&format!("  e{} -> e{};\n", d.parent.0, d.child.0));
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> DependencyGraph {
+        let mut g = DependencyGraph::new();
+        let a = g.add_entity("A", true);
+        let b = g.add_entity("B", false);
+        let c = g.add_entity("C", false);
+        let d = g.add_entity("D", false);
+        g.add_derivation(a, b);
+        g.add_derivation(a, c);
+        g.add_derivation(b, d);
+        g.add_derivation(c, d);
+        g
+    }
+
+    #[test]
+    fn topo_order_valid() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        let pos: FxHashMap<EntityId, usize> =
+            order.iter().enumerate().map(|(i, &e)| (e, i)).collect();
+        for e in g.edges() {
+            assert!(pos[&e.parent] < pos[&e.child]);
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = DependencyGraph::new();
+        let a = g.add_entity("A", false);
+        let b = g.add_entity("B", false);
+        g.add_derivation(a, b);
+        g.add_derivation(b, a);
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn weak_connectivity() {
+        let g = diamond();
+        let a = g.entity_by_name("A").unwrap();
+        let b = g.entity_by_name("B").unwrap();
+        let c = g.entity_by_name("C").unwrap();
+        let d = g.entity_by_name("D").unwrap();
+        assert!(g.is_weakly_connected(&[a, b, c, d]));
+        assert!(g.is_weakly_connected(&[a, b]));
+        assert!(g.is_weakly_connected(&[b, c, a])); // b-a-c semipath
+        assert!(!g.is_weakly_connected(&[b, c])); // no direct link
+        assert!(g.is_weakly_connected(&[]));
+    }
+
+    #[test]
+    fn op_between_found() {
+        let g = diamond();
+        let a = g.entity_by_name("A").unwrap();
+        let b = g.entity_by_name("B").unwrap();
+        assert!(g.op_between(a, b).is_some());
+        assert!(g.op_between(b, a).is_none());
+    }
+
+    #[test]
+    fn dot_contains_entities() {
+        let g = diamond();
+        let dot = g.to_dot(|_| None);
+        assert!(dot.contains("label=\"A*\""));
+        assert!(dot.contains("e0 -> e1") || dot.contains("e0 -> e2"));
+    }
+}

@@ -1,0 +1,15 @@
+//! The workflow side of the paper: the dependency graph among entities
+//! (tables), the split machinery Algorithm 3 consumes, and the synthetic
+//! text-curation workload that stands in for the paper's confidential
+//! SEC/FDIC provenance trace (see DESIGN.md §2 for the substitution
+//! rationale).
+
+pub mod curation;
+pub mod generator;
+pub mod graph;
+pub mod splits;
+
+pub use curation::text_curation_workflow;
+pub use generator::{GeneratorConfig, TraceStats};
+pub use graph::{DependencyGraph, EntityInfo};
+pub use splits::{Split, SplitSet};

@@ -1,0 +1,226 @@
+//! Splits: weakly connected subsets of the workflow dependency graph.
+//!
+//! Algorithm 3 partitions large provenance components by computing WCC on
+//! the subgraph each split induces, and recurses with *sub-splits* when a
+//! split-component is still too big. [`SplitSet`] carries the canonical
+//! top-level splits plus named sub-split decompositions; when no explicit
+//! decomposition exists, [`SplitSet::bisect`] derives one by removing the
+//! most balanced spanning-tree edge of the split's induced entity graph —
+//! both halves stay weakly connected by construction (the paper's key
+//! constraint on splits).
+
+use super::graph::DependencyGraph;
+use crate::util::ids::EntityId;
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// A named, weakly connected subset of workflow entities.
+#[derive(Debug, Clone)]
+pub struct Split {
+    name: String,
+    entities: Vec<EntityId>,
+}
+
+impl Split {
+    pub fn new(name: &str, entities: Vec<EntityId>) -> Self {
+        assert!(!entities.is_empty(), "empty split {name}");
+        Self { name: name.to_string(), entities }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn entities(&self) -> &[EntityId] {
+        &self.entities
+    }
+
+    pub fn contains(&self, e: EntityId) -> bool {
+        self.entities.contains(&e)
+    }
+}
+
+/// The canonical split decomposition of a workflow.
+#[derive(Debug, Clone)]
+pub struct SplitSet {
+    top: Vec<Split>,
+    subs: FxHashMap<String, Vec<Split>>,
+}
+
+impl SplitSet {
+    pub fn new(top: Vec<Split>, subs: Vec<(&str, Vec<Split>)>) -> Self {
+        Self {
+            top,
+            subs: subs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        }
+    }
+
+    pub fn top_level(&self) -> &[Split] {
+        &self.top
+    }
+
+    /// Explicit sub-splits registered for `name` (e.g. sp3 → [sp4, sp5]).
+    pub fn sub_splits_of(&self, name: &str) -> Option<&[Split]> {
+        self.subs.get(name).map(|v| v.as_slice())
+    }
+
+    /// Sub-splits for Algorithm 3's recursion: the registered decomposition
+    /// if one exists, otherwise a computed bisection. Returns `None` when
+    /// the split is a single entity (cannot be subdivided — Algorithm 3
+    /// then keeps the oversized set as-is).
+    pub fn get_sub_splits(&self, g: &DependencyGraph, sp: &Split) -> Option<Vec<Split>> {
+        if let Some(subs) = self.sub_splits_of(sp.name()) {
+            return Some(subs.to_vec());
+        }
+        bisect(g, sp)
+    }
+
+    /// Entity → top-level split name (used in reports and DOT output).
+    pub fn split_of(&self, e: EntityId) -> Option<&str> {
+        self.top.iter().find(|s| s.contains(e)).map(|s| s.name())
+    }
+}
+
+/// Bisect a weakly connected split into two weakly connected halves by
+/// removing the spanning-tree edge with the most balanced subtree sizes.
+/// Returns `None` if the split has a single entity.
+pub fn bisect(g: &DependencyGraph, sp: &Split) -> Option<Vec<Split>> {
+    let ents = sp.entities();
+    if ents.len() < 2 {
+        return None;
+    }
+    let adj = g.undirected_adjacency(ents);
+
+    // Build a DFS spanning tree rooted at the first entity.
+    let root = ents[0];
+    let mut parent: FxHashMap<EntityId, EntityId> = FxHashMap::default();
+    let mut order: Vec<EntityId> = Vec::with_capacity(ents.len());
+    let mut seen: FxHashSet<EntityId> = FxHashSet::default();
+    let mut stack = vec![root];
+    seen.insert(root);
+    while let Some(u) = stack.pop() {
+        order.push(u);
+        for &v in adj.get(&u).into_iter().flatten() {
+            if seen.insert(v) {
+                parent.insert(v, u);
+                stack.push(v);
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), ents.len(), "split must be weakly connected");
+
+    // Subtree sizes via reverse DFS order.
+    let mut size: FxHashMap<EntityId, usize> = ents.iter().map(|&e| (e, 1)).collect();
+    for &u in order.iter().rev() {
+        if let Some(&p) = parent.get(&u) {
+            *size.get_mut(&p).unwrap() += size[&u];
+        }
+    }
+
+    // Pick the non-root vertex whose subtree is closest to half.
+    let n = ents.len();
+    let best = order
+        .iter()
+        .filter(|e| parent.contains_key(e))
+        .min_by_key(|e| (2 * size[e]).abs_diff(n))?;
+
+    // Side A: best's subtree; side B: the rest.
+    let mut side_a: FxHashSet<EntityId> = FxHashSet::default();
+    let mut stack = vec![*best];
+    while let Some(u) = stack.pop() {
+        if !side_a.insert(u) {
+            continue;
+        }
+        for (&child, &p) in &parent {
+            if p == u && !side_a.contains(&child) {
+                stack.push(child);
+            }
+        }
+    }
+    let a: Vec<EntityId> = ents.iter().copied().filter(|e| side_a.contains(e)).collect();
+    let b: Vec<EntityId> = ents.iter().copied().filter(|e| !side_a.contains(e)).collect();
+    debug_assert!(!a.is_empty() && !b.is_empty());
+    Some(vec![
+        Split::new(&format!("{}a", sp.name()), a),
+        Split::new(&format!("{}b", sp.name()), b),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::curation::text_curation_workflow;
+
+    #[test]
+    fn bisect_halves_are_weakly_connected() {
+        let (g, splits) = text_curation_workflow();
+        for sp in splits.top_level() {
+            let halves = bisect(&g, sp).expect("bisectable");
+            assert_eq!(halves.len(), 2);
+            let total: usize = halves.iter().map(|h| h.entities().len()).sum();
+            assert_eq!(total, sp.entities().len());
+            for h in &halves {
+                assert!(
+                    g.is_weakly_connected(h.entities()),
+                    "half {} of {} not connected: {:?}",
+                    h.name(),
+                    sp.name(),
+                    h.entities()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bisect_single_entity_none() {
+        let (g, _) = text_curation_workflow();
+        let sp = Split::new("solo", vec![EntityId(0)]);
+        assert!(bisect(&g, &sp).is_none());
+    }
+
+    #[test]
+    fn registered_subsplits_preferred() {
+        let (g, splits) = text_curation_workflow();
+        let sp3 = splits.top_level().iter().find(|s| s.name() == "sp3").unwrap().clone();
+        let subs = splits.get_sub_splits(&g, &sp3).unwrap();
+        let names: Vec<&str> = subs.iter().map(|s| s.name()).collect();
+        assert_eq!(names, vec!["sp4", "sp5"]);
+    }
+
+    #[test]
+    fn computed_subsplits_for_unregistered() {
+        let (g, splits) = text_curation_workflow();
+        let sp2 = splits.top_level().iter().find(|s| s.name() == "sp2").unwrap().clone();
+        let subs = splits.get_sub_splits(&g, &sp2).unwrap();
+        assert_eq!(subs.len(), 2);
+        for s in &subs {
+            assert!(g.is_weakly_connected(s.entities()));
+        }
+    }
+
+    #[test]
+    fn recursive_bisection_terminates() {
+        // Repeatedly bisecting must reach single-entity splits.
+        let (g, splits) = text_curation_workflow();
+        let mut queue: Vec<Split> = splits.top_level().to_vec();
+        let mut rounds = 0;
+        while let Some(sp) = queue.pop() {
+            rounds += 1;
+            assert!(rounds < 1000, "bisection does not terminate");
+            if let Some(halves) = bisect(&g, &sp) {
+                for h in halves {
+                    assert!(h.entities().len() < sp.entities().len());
+                    queue.push(h);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_of_maps_entities() {
+        let (g, splits) = text_curation_workflow();
+        let toks = g.entity_by_name("TOKS").unwrap();
+        let mtrcs = g.entity_by_name("MTRCS").unwrap();
+        assert_eq!(splits.split_of(toks), Some("sp1"));
+        assert_eq!(splits.split_of(mtrcs), Some("sp3"));
+    }
+}

@@ -1,0 +1,135 @@
+//! The central correctness property: **RQ, CCProv and CSProv return
+//! identical lineages** for every query, across τ branches and closure
+//! backends (Invariant 1 of DESIGN.md §6). Driven by `proptest_lite` over
+//! randomized generator configurations and query items.
+
+use provspark::config::{ClusterConfig, EngineConfig};
+use provspark::harness::EngineSet;
+use provspark::minispark::MiniSpark;
+use provspark::proptest_lite as shim;
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::util::rng::Pcg64;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+
+fn no_overhead() -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    cfg.cluster = ClusterConfig { job_overhead_us: 0, ..Default::default() };
+    cfg
+}
+
+#[derive(Debug)]
+struct Case {
+    seed: u64,
+    divisor: usize,
+    theta: usize,
+    tau: usize,
+    queries: usize,
+}
+
+fn gen_case(rng: &mut Pcg64, shrink: u32) -> Case {
+    let divisor = if shrink > 0 { 4000 } else { *rng.pick(&[1200, 2000, 3000]) };
+    Case {
+        seed: rng.next_u64(),
+        divisor,
+        theta: *rng.pick(&[100, 200, 500]),
+        tau: *rng.pick(&[0, 500, usize::MAX]),
+        queries: if shrink > 0 { 2 } else { 6 },
+    }
+}
+
+#[test]
+fn all_engines_agree() {
+    shim::run_prop(
+        "rq_ccprov_csprov_equivalence",
+        &shim::PropCfg { cases: 6, ..Default::default() },
+        gen_case,
+        |case| {
+            let (trace, g, splits) = generate(&GeneratorConfig {
+                seed: case.seed,
+                scale_divisor: case.divisor,
+                ..Default::default()
+            });
+            let pre = preprocess(&trace, &g, &splits, case.theta, 100, WccImpl::Driver);
+            let mut cfg = no_overhead();
+            cfg.prov.tau = case.tau;
+            let sc = MiniSpark::new(cfg.cluster.clone());
+            let engines = EngineSet::build(&sc, &trace, &pre, &cfg)
+                .map_err(|e| format!("build: {e}"))?;
+            let mut rng = Pcg64::new(case.seed ^ 0xABCD);
+            for _ in 0..case.queries {
+                let t = &trace.triples[rng.range(0, trace.len())];
+                // Query both a derived item and (sometimes) a source item.
+                let q = if rng.chance(0.8) { t.dst.raw() } else { t.src.raw() };
+                let a = engines.rq.query(q);
+                let b = engines.ccprov.query(q);
+                let c = engines.csprov.query(q);
+                if a != b {
+                    return Err(format!("RQ != CCProv for q={q} (tau={})", case.tau));
+                }
+                if a != c {
+                    return Err(format!("RQ != CSProv for q={q} (tau={})", case.tau));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn xla_closure_engine_agrees() {
+    // CSProv with the XLA closure backend must equal the native one.
+    if provspark::runtime::XlaRuntime::new(std::path::Path::new("artifacts")).is_err() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let (trace, g, splits) = generate(&GeneratorConfig {
+        scale_divisor: 1500,
+        ..Default::default()
+    });
+    let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+    let mut native_cfg = no_overhead();
+    native_cfg.prov.tau = usize::MAX; // force driver-side closure
+    let mut xla_cfg = native_cfg.clone();
+    xla_cfg.prov.closure_backend = provspark::config::Backend::Xla;
+    let sc = MiniSpark::new(native_cfg.cluster.clone());
+    let nat = EngineSet::build(&sc, &trace, &pre, &native_cfg).unwrap();
+    let xla = EngineSet::build(&sc, &trace, &pre, &xla_cfg).unwrap();
+    for t in trace.triples.iter().step_by(trace.len() / 12 + 1) {
+        let q = t.dst.raw();
+        assert_eq!(nat.csprov.query(q), xla.csprov.query(q), "q={q}");
+        assert_eq!(nat.ccprov.query(q), xla.ccprov.query(q), "q={q}");
+    }
+}
+
+#[test]
+fn lineage_is_closed_and_consistent() {
+    // Structural sanity on the lineage object itself: every triple's dst
+    // is q or an ancestor; every ancestor appears in some triple.
+    let (trace, g, splits) = generate(&GeneratorConfig {
+        scale_divisor: 2000,
+        ..Default::default()
+    });
+    let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+    let cfg = no_overhead();
+    let sc = MiniSpark::new(cfg.cluster.clone());
+    let engines = EngineSet::build(&sc, &trace, &pre, &cfg).unwrap();
+    for t in trace.triples.iter().step_by(trace.len() / 10 + 1) {
+        let q = t.dst.raw();
+        let l = engines.csprov.query(q);
+        let anc: std::collections::HashSet<u64> = l.ancestors.iter().copied().collect();
+        for tt in &l.triples {
+            assert!(
+                tt.dst.raw() == q || anc.contains(&tt.dst.raw()),
+                "triple into non-ancestor"
+            );
+            assert!(anc.contains(&tt.src.raw()), "src not listed as ancestor");
+        }
+        let mentioned: std::collections::HashSet<u64> = l
+            .triples
+            .iter()
+            .flat_map(|tt| [tt.src.raw(), tt.dst.raw()])
+            .filter(|&n| n != q)
+            .collect();
+        assert_eq!(mentioned, anc, "ancestors != nodes on lineage edges");
+    }
+}

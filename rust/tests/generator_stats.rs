@@ -1,0 +1,90 @@
+//! Integration: the synthetic trace at the default scale (divisor 10)
+//! reproduces the paper's §4 dataset statistics, scaled (DESIGN.md §2's
+//! substitution contract).
+
+use provspark::workflow::generator::{generate, GeneratorConfig, TraceStats};
+
+fn default_trace() -> (provspark::provenance::model::Trace, TraceStats) {
+    let (trace, _, _) = generate(&GeneratorConfig::default()); // divisor 10
+    let stats = TraceStats::compute(&trace, 20, 2_500);
+    (trace, stats)
+}
+
+#[test]
+fn matches_paper_shape_at_divisor_10() {
+    let (_, s) = default_trace();
+    // Paper (÷10): 460K nodes, 640K edges, 42.8K components.
+    assert!(
+        (300_000..700_000).contains(&s.nodes),
+        "nodes={} outside the paper band",
+        s.nodes
+    );
+    assert!((450_000..900_000).contains(&s.edges), "edges={}", s.edges);
+    assert!((30_000..60_000).contains(&s.components), "components={}", s.components);
+
+    // Three dominant large components (paper: 1.2M/0.9M/0.7M ÷10).
+    assert!(s.largest.len() >= 3);
+    let (lc1, lc2, lc3) = (s.largest[0].0, s.largest[1].0, s.largest[2].0);
+    assert!((60_000..160_000).contains(&lc1), "LC1 nodes={lc1}");
+    assert!((50_000..130_000).contains(&lc2), "LC2 nodes={lc2}");
+    assert!((35_000..100_000).contains(&lc3), "LC3 nodes={lc3}");
+    // Fourth largest is tiny by comparison (the 132 mid band tops ~7453÷10).
+    assert!(s.largest[3].0 < 2_000, "4th component too large: {}", s.largest[3].0);
+
+    // Exactly 132 mid-size components (unscaled count, sizes scaled).
+    assert_eq!(s.mid_components, 132);
+
+    // Fan-in tail: a few values ≥100 parents (max ≤ ~450), a band of
+    // 10–100, the rest small (paper: 32 / 3963 / rest at full scale).
+    assert!(s.fanin_ge100 >= 3, "fanin_ge100={}", s.fanin_ge100);
+    assert!(s.fanin_max <= 460, "fanin_max={}", s.fanin_max);
+    assert!(s.fanin_10_100 >= 300, "fanin_10_100={}", s.fanin_10_100);
+    assert!(s.fanin_lt10 > 50 * s.fanin_10_100, "tail too fat");
+}
+
+#[test]
+fn edges_parallel_workflow_dependencies() {
+    let (trace, g, _) = generate(&GeneratorConfig {
+        scale_divisor: 100,
+        ..Default::default()
+    });
+    for t in &trace.triples {
+        assert_eq!(
+            g.op_between(t.src.entity(), t.dst.entity()),
+            Some(t.op),
+            "triple {t:?} does not follow a workflow dependency edge"
+        );
+    }
+}
+
+#[test]
+fn ids_are_well_formed_and_dag_like() {
+    let (trace, g, _) =
+        generate(&GeneratorConfig { scale_divisor: 100, ..Default::default() });
+    let order = g.topo_order().unwrap();
+    let pos: std::collections::HashMap<_, _> =
+        order.iter().enumerate().map(|(i, &e)| (e, i)).collect();
+    for t in &trace.triples {
+        // Derivations flow forward in the workflow topo order ⇒ the
+        // provenance graph is a DAG.
+        assert!(
+            pos[&t.src.entity()] < pos[&t.dst.entity()],
+            "edge against topo order: {t:?}"
+        );
+    }
+}
+
+#[test]
+fn scaled_replication_preserves_structure() {
+    let base = GeneratorConfig { scale_divisor: 200, ..Default::default() };
+    let (t1, _, _) = generate(&base);
+    let (t9, _, _) = generate(&GeneratorConfig { replication: 9, ..base });
+    assert_eq!(t9.len(), t1.len() * 9);
+    let s1 = TraceStats::compute(&t1, 20, 2_500);
+    let s9 = TraceStats::compute(&t9, 20, 2_500);
+    assert_eq!(s9.components, s1.components * 9);
+    // The largest-component size is invariant (paper: "statistics … are
+    // same as given in Table 9").
+    assert_eq!(s9.largest[0].0, s1.largest[0].0);
+    assert_eq!(s9.fanin_max, s1.fanin_max);
+}

@@ -1,0 +1,204 @@
+//! Property tests for the minispark substrate (Invariant 6 of DESIGN.md
+//! §6): the partitioned operators agree with naive sequential oracles, and
+//! the partitioning invariants the query engines rely on hold for
+//! arbitrary data.
+
+use provspark::config::ClusterConfig;
+use provspark::minispark::{join_u64, Dataset, MiniSpark};
+use provspark::proptest_lite::{run_prop, PropCfg};
+use provspark::util::rng::Pcg64;
+use rustc_hash::FxHashMap;
+
+fn sc() -> MiniSpark {
+    MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() })
+}
+
+fn gen_rows(rng: &mut Pcg64, shrink: u32) -> (Vec<(u64, u64)>, usize) {
+    let n = if shrink > 0 { rng.range(0, 20) } else { rng.range(0, 3000) };
+    let key_space = rng.range(1, 64) as u64;
+    let rows = (0..n).map(|i| (rng.next_below(key_space), i as u64)).collect();
+    let np = rng.range(1, 17);
+    (rows, np)
+}
+
+#[test]
+fn lookup_equals_sequential_filter() {
+    let s = sc();
+    run_prop(
+        "lookup_eq_filter",
+        &PropCfg { cases: 40, ..Default::default() },
+        gen_rows,
+        |(rows, np)| {
+            let d = Dataset::from_vec(&s, rows.clone(), *np).hash_partition_by(*np, |r| r.0);
+            for key in 0..8u64 {
+                let mut got = d.lookup(key);
+                got.sort_unstable();
+                let mut want: Vec<(u64, u64)> =
+                    rows.iter().copied().filter(|r| r.0 == key).collect();
+                want.sort_unstable();
+                if got != want {
+                    return Err(format!("lookup({key}) mismatch: {got:?} vs {want:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn multi_lookup_equals_union_of_lookups() {
+    let s = sc();
+    run_prop(
+        "multi_lookup_eq_union",
+        &PropCfg { cases: 30, ..Default::default() },
+        gen_rows,
+        |(rows, np)| {
+            let d = Dataset::from_vec(&s, rows.clone(), *np).hash_partition_by(*np, |r| r.0);
+            let keys: Vec<u64> = vec![1, 3, 3, 5, 7]; // duplicates allowed
+            let mut got = d.multi_lookup(&keys);
+            got.sort_unstable();
+            let mut want: Vec<(u64, u64)> = keys
+                .iter()
+                .collect::<std::collections::BTreeSet<_>>()
+                .into_iter()
+                .flat_map(|&k| d.lookup(k))
+                .collect();
+            want.sort_unstable();
+            if got != want {
+                return Err("multi_lookup != ∪ lookup".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prune_lookup_preserves_partitioning_and_content() {
+    let s = sc();
+    run_prop(
+        "prune_lookup_invariants",
+        &PropCfg { cases: 30, ..Default::default() },
+        gen_rows,
+        |(rows, np)| {
+            let d = Dataset::from_vec(&s, rows.clone(), *np).hash_partition_by(*np, |r| r.0);
+            let keys = [0u64, 2, 4];
+            let pruned = d.prune_lookup(&keys);
+            if !pruned.is_hash_partitioned() || pruned.num_partitions() != *np {
+                return Err("pruned dataset lost partitioning".into());
+            }
+            let mut got = pruned.collect();
+            got.sort_unstable();
+            let mut want: Vec<(u64, u64)> =
+                rows.iter().copied().filter(|r| keys.contains(&r.0)).collect();
+            want.sort_unstable();
+            if got != want {
+                return Err("pruned content mismatch".into());
+            }
+            // Still lookup-able (CSProv chains lookups after pruning).
+            if pruned.lookup(2).len() != rows.iter().filter(|r| r.0 == 2).count() {
+                return Err("lookup on pruned dataset broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn reduce_by_key_matches_hashmap_oracle() {
+    let s = sc();
+    run_prop(
+        "reduce_by_key_oracle",
+        &PropCfg { cases: 30, ..Default::default() },
+        gen_rows,
+        |(rows, np)| {
+            let d = Dataset::from_vec(&s, rows.clone(), *np);
+            let mut got = d.reduce_by_key(*np, |&(k, v)| (k, v), u64::min).collect();
+            got.sort_unstable();
+            let mut oracle: FxHashMap<u64, u64> = FxHashMap::default();
+            for &(k, v) in rows {
+                oracle.entry(k).and_modify(|m| *m = (*m).min(v)).or_insert(v);
+            }
+            let mut want: Vec<(u64, u64)> = oracle.into_iter().collect();
+            want.sort_unstable();
+            if got != want {
+                return Err("reduce_by_key != hashmap oracle".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn join_matches_nested_loop_oracle() {
+    let s = sc();
+    run_prop(
+        "join_oracle",
+        &PropCfg { cases: 20, ..Default::default() },
+        |rng, shrink| {
+            let (a, np) = gen_rows(rng, shrink.max(1)); // keep sizes modest
+            let (b, _) = gen_rows(rng, shrink.max(1));
+            (a, b, np)
+        },
+        |(a, b, np)| {
+            let da = Dataset::from_vec(&s, a.clone(), 3);
+            let db = Dataset::from_vec(&s, b.clone(), 5);
+            let mut got = join_u64(&da, &db, *np).collect();
+            got.sort_unstable();
+            let mut want: Vec<(u64, (u64, u64))> = Vec::new();
+            for &(k1, v1) in a {
+                for &(k2, v2) in b {
+                    if k1 == k2 {
+                        want.push((k1, (v1, v2)));
+                    }
+                }
+            }
+            want.sort_unstable();
+            if got != want {
+                return Err(format!("join mismatch: {} vs {} rows", got.len(), want.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn union_of_copartitioned_filters_is_identity() {
+    let s = sc();
+    run_prop(
+        "union_identity",
+        &PropCfg { cases: 30, ..Default::default() },
+        gen_rows,
+        |(rows, np)| {
+            let d = Dataset::from_vec(&s, rows.clone(), *np).hash_partition_by(*np, |r| r.0);
+            let evens = d.filter(|r| r.1 % 2 == 0);
+            let odds = d.filter(|r| r.1 % 2 == 1);
+            let u = evens.union(&odds);
+            if !u.is_hash_partitioned() {
+                return Err("co-partitioned union lost partitioning".into());
+            }
+            let mut got = u.collect();
+            got.sort_unstable();
+            let mut want = rows.clone();
+            want.sort_unstable();
+            if got != want {
+                return Err("union(filter evens, filter odds) != original".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn metrics_monotone_and_job_counted() {
+    let s = sc();
+    let rows: Vec<(u64, u64)> = (0..500).map(|i| (i % 13, i)).collect();
+    let d = Dataset::from_vec(&s, rows, 8).hash_partition_by(8, |r| r.0);
+    let before = s.metrics().snapshot();
+    let _ = d.filter(|_| true);
+    let _ = d.lookup(5);
+    let _ = d.collect();
+    let delta = s.metrics().snapshot().since(&before);
+    assert!(delta.jobs >= 3, "each op is at least one job");
+    assert!(delta.rows_scanned >= 500, "filter scans everything");
+    assert_eq!(delta.rows_collected, 500);
+}

@@ -1,0 +1,205 @@
+//! Property tests for Algorithm 3 and the set machinery (Invariants 3–5
+//! of DESIGN.md §6) on generated curation traces.
+
+use provspark::config::{ClusterConfig, EngineConfig};
+use provspark::harness::EngineSet;
+use provspark::minispark::MiniSpark;
+use provspark::proptest_lite::{run_prop, PropCfg};
+use provspark::provenance::partition::is_weakly_connected_within;
+use provspark::provenance::pipeline::{preprocess, Preprocessed, WccImpl};
+use provspark::provenance::model::Trace;
+use provspark::util::ids::AttrValueId;
+use provspark::util::rng::Pcg64;
+use provspark::workflow::curation::text_curation_workflow;
+use provspark::workflow::generator::{generate_with, GeneratorConfig};
+use provspark::workflow::splits::SplitSet;
+use provspark::workflow::graph::DependencyGraph;
+use rustc_hash::{FxHashMap, FxHashSet};
+
+struct Case {
+    trace: Trace,
+    g: DependencyGraph,
+    splits: SplitSet,
+    pre: Preprocessed,
+    theta: usize,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case(triples={}, theta={}, sets={})",
+            self.trace.len(),
+            self.theta,
+            self.pre.set_count
+        )
+    }
+}
+
+fn gen_case(rng: &mut Pcg64, shrink: u32) -> Case {
+    let divisor = if shrink > 0 { 5000 } else { *rng.pick(&[1000, 2000, 3000]) };
+    let theta = *rng.pick(&[60, 150, 400]);
+    let (g, splits) = text_curation_workflow();
+    let trace = generate_with(
+        &GeneratorConfig {
+            seed: rng.next_u64(),
+            scale_divisor: divisor,
+            ..Default::default()
+        },
+        &g,
+    );
+    let pre = preprocess(&trace, &g, &splits, theta, 100, WccImpl::Driver);
+    Case { trace, g, splits, pre, theta }
+}
+
+#[test]
+fn sets_partition_components_disjointly() {
+    run_prop(
+        "sets_disjoint_cover",
+        &PropCfg { cases: 5, ..Default::default() },
+        gen_case,
+        |c| {
+            // Every node has exactly one set; sets nest inside components.
+            let mut set_cc: FxHashMap<u64, u64> = FxHashMap::default();
+            for (&node, &sid) in &c.pre.cs_of {
+                let cc = *c.pre.cc_of.get(&node).ok_or("node missing cc")?;
+                match set_cc.get(&sid) {
+                    Some(&prev) if prev != cc => {
+                        return Err(format!("set {sid} spans components"))
+                    }
+                    _ => {
+                        set_cc.insert(sid, cc);
+                    }
+                }
+            }
+            if c.pre.cs_of.len() != c.pre.cc_of.len() {
+                return Err("cs_of and cc_of disagree on the node universe".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sets_are_weakly_connected_within_their_split() {
+    run_prop(
+        "sets_weakly_connected",
+        &PropCfg { cases: 4, ..Default::default() },
+        gen_case,
+        |c| {
+            // Group nodes by set, restricted to partitioned (large) comps.
+            let large: FxHashSet<u64> =
+                c.pre.large_components.iter().map(|&(cc, _, _)| cc).collect();
+            let mut sets: FxHashMap<u64, Vec<u64>> = FxHashMap::default();
+            for (&node, &sid) in &c.pre.cs_of {
+                if large.contains(&c.pre.cc_of[&node]) {
+                    sets.entry(sid).or_default().push(node);
+                }
+            }
+            // All splits incl. sub-splits, keyed by name.
+            let mut all_splits: Vec<_> = c.splits.top_level().to_vec();
+            if let Some(s) = c.splits.sub_splits_of("sp3") {
+                all_splits.extend(s.to_vec());
+            }
+            for (sid, nodes) in sets.iter().filter(|(_, v)| v.len() > 1) {
+                // The set's entities determine its (sub-)split: find the
+                // smallest registered split containing all of them.
+                let ents: FxHashSet<_> =
+                    nodes.iter().map(|&n| AttrValueId(n).entity()).collect();
+                let home = all_splits
+                    .iter()
+                    .filter(|sp| ents.iter().all(|e| sp.contains(*e)))
+                    .min_by_key(|sp| sp.entities().len())
+                    .ok_or_else(|| format!("set {sid} fits no split: {ents:?}"))?;
+                let comp_triples: Vec<_> = c
+                    .trace
+                    .triples
+                    .iter()
+                    .filter(|t| c.pre.cs_of[&t.src.raw()] == *sid
+                        || c.pre.cs_of[&t.dst.raw()] == *sid)
+                    .copied()
+                    .collect();
+                if !is_weakly_connected_within(&comp_triples, nodes, home.entities()) {
+                    return Err(format!(
+                        "set {sid} ({} nodes) not weakly connected within {}",
+                        nodes.len(),
+                        home.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn set_lineage_is_sound() {
+    // Soundness (Invariant 5): the triples whose dst-set is in
+    // {cs} ∪ set-lineage(cs) contain the *entire* lineage of any item in cs.
+    run_prop(
+        "set_lineage_soundness",
+        &PropCfg { cases: 4, ..Default::default() },
+        gen_case,
+        |c| {
+            let mut cfg = EngineConfig::default();
+            cfg.cluster = ClusterConfig { job_overhead_us: 0, ..Default::default() };
+            let sc = MiniSpark::new(cfg.cluster.clone());
+            let engines =
+                EngineSet::build(&sc, &c.trace, &c.pre, &cfg).map_err(|e| e.to_string())?;
+            let mut rng = Pcg64::new(42);
+            for _ in 0..5 {
+                let t = &c.trace.triples[rng.range(0, c.trace.len())];
+                let q = t.dst.raw();
+                let lineage = engines.rq.query(q);
+                // Every lineage triple's dst must lie in the set-lineage.
+                let cs = c.pre.cs_of[&q];
+                let mut allowed: FxHashSet<u64> =
+                    engines.csprov.set_lineage(cs).into_iter().collect();
+                allowed.insert(cs);
+                for lt in &lineage.triples {
+                    let s = c.pre.cs_of[&lt.dst.raw()];
+                    if !allowed.contains(&s) {
+                        return Err(format!(
+                            "lineage triple dst-set {s} outside set-lineage of {cs}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn theta_bounds_set_sizes_where_divisible() {
+    run_prop(
+        "theta_bounds",
+        &PropCfg { cases: 4, ..Default::default() },
+        gen_case,
+        |c| {
+            let large: FxHashSet<u64> =
+                c.pre.large_components.iter().map(|&(cc, _, _)| cc).collect();
+            let mut sizes: FxHashMap<u64, usize> = FxHashMap::default();
+            for (&node, &sid) in &c.pre.cs_of {
+                if large.contains(&c.pre.cc_of[&node]) {
+                    *sizes.entry(sid).or_default() += 1;
+                }
+            }
+            // Every produced set must be below θ: recursion only bottoms
+            // out at single-entity splits, whose induced subgraphs have no
+            // edges (provenance edges always cross entities), i.e.
+            // singleton sets. So any set ≥ θ means Algorithm 3 skipped a
+            // recursion it could have done.
+            for (sid, n) in sizes {
+                if n >= c.theta {
+                    return Err(format!(
+                        "set {sid} has {n} ≥ θ={} nodes — Algorithm 3 should \
+                         have recursed",
+                        c.theta
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,107 @@
+//! Property tests: the three WCC implementations (driver union-find,
+//! minispark label propagation, XLA relax-fixpoint) are pointwise equal on
+//! arbitrary graphs (Invariant 2 of DESIGN.md §6).
+
+use provspark::config::ClusterConfig;
+use provspark::minispark::MiniSpark;
+use provspark::proptest_lite::{run_prop, PropCfg};
+use provspark::provenance::model::{ProvTriple, Trace};
+use provspark::provenance::wcc::{wcc_driver, wcc_minispark};
+use provspark::util::ids::{AttrValueId, EntityId, OpId};
+use provspark::util::rng::Pcg64;
+
+fn random_trace(rng: &mut Pcg64, shrink: u32) -> Trace {
+    let n = if shrink > 0 { 12 } else { rng.range(2, 400) as u64 };
+    let m = if shrink > 0 { 8 } else { rng.range(1, 800) };
+    let triples = (0..m)
+        .map(|_| {
+            // Mix of patterns: chains, stars, random pairs, self-ish loops.
+            let a = rng.next_below(n);
+            let b = match rng.range(0, 4) {
+                0 => (a + 1) % n,               // chain
+                1 => 0,                          // star into node 0
+                2 => rng.next_below(n),          // random
+                _ => a,                          // parallel id spaces
+            };
+            ProvTriple::new(
+                AttrValueId::new(EntityId((a % 3) as u16), a),
+                AttrValueId::new(EntityId(3 + (b % 3) as u16), b),
+                OpId((a % 7) as u32),
+            )
+        })
+        .collect();
+    Trace::new(triples)
+}
+
+#[test]
+fn minispark_equals_driver() {
+    let sc = MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() });
+    run_prop(
+        "wcc_minispark_eq_driver",
+        &PropCfg { cases: 24, ..Default::default() },
+        random_trace,
+        |trace| {
+            let a = wcc_driver(trace);
+            let b = wcc_minispark(&sc, trace, 8);
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("labels differ: {} vs {} entries", a.len(), b.len()))
+            }
+        },
+    );
+}
+
+#[test]
+fn xla_equals_driver() {
+    let Ok(rt) = provspark::runtime::XlaRuntime::new(std::path::Path::new("artifacts")) else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    run_prop(
+        "wcc_xla_eq_driver",
+        &PropCfg { cases: 12, ..Default::default() },
+        random_trace,
+        |trace| {
+            let a = wcc_driver(trace);
+            let b = provspark::runtime::xla_wcc(&rt, trace).map_err(|e| e.to_string())?;
+            if a == b {
+                Ok(())
+            } else {
+                Err("xla labels differ from union-find".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn labels_are_component_minima() {
+    run_prop(
+        "labels_are_minima",
+        &PropCfg { cases: 16, ..Default::default() },
+        random_trace,
+        |trace| {
+            let labels = wcc_driver(trace);
+            // (a) every label is ≤ its node and present as a node
+            for (&n, &l) in &labels {
+                if l > n {
+                    return Err(format!("label {l} > node {n}"));
+                }
+                if !labels.contains_key(&l) {
+                    return Err(format!("label {l} is not a node"));
+                }
+                // (b) a label labels itself
+                if labels[&l] != l {
+                    return Err(format!("label {l} not a fixpoint"));
+                }
+            }
+            // (c) edges never cross labels
+            for t in &trace.triples {
+                if labels[&t.src.raw()] != labels[&t.dst.raw()] {
+                    return Err("edge crosses component labels".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
