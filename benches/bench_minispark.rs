@@ -23,7 +23,8 @@ fn main() -> anyhow::Result<()> {
     let keys = (rows as u64 / 2).max(1);
     let data: Vec<(u64, u64)> = (0..rows as u64).map(|i| (i % keys, i)).collect();
     let base = Dataset::from_vec(&sc, data.clone(), np);
-    let hashed = base.hash_partition_by(np, |r| r.0);
+    // Key-tagged partitioning, so the co-partitioned join below is narrow.
+    let hashed = base.partition_by_key(np);
 
     let bcfg = BenchCfg { warmup_iters: 1, iters: 5, ..Default::default() };
     let mut t = Table::new(
@@ -60,8 +61,14 @@ fn main() -> anyhow::Result<()> {
     bench("reduce_by_key (min)", &mut || {
         let _ = base.reduce_by_key(np, |&(k, v)| (k, v), u64::min);
     });
+    bench("reduce_values (narrow)", &mut || {
+        let _ = hashed.reduce_values(np, u64::min);
+    });
     bench("join (co-partitioned)", &mut || {
         let _ = join_u64(&hashed, &hashed, np);
+    });
+    bench("partition_by_key (elided)", &mut || {
+        let _ = hashed.partition_by_key(np);
     });
     bench("collect", &mut || {
         let _ = hashed.collect();

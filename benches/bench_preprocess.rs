@@ -32,10 +32,13 @@ fn main() -> anyhow::Result<()> {
         .map(|s| s.parse::<usize>())
         .collect::<Result<_, _>>()?;
     let run_minispark = args.get_or("minispark", "auto");
-    // The iterative label propagation shuffles the adjacency every round;
-    // above ~1.5M triples it dominates the whole bench on one box, so
-    // "auto" skips it there (force with --minispark true).
-    const MINISPARK_CAP: usize = 1_500_000;
+    // The frontier propagation shuffles only messages incident to the
+    // changed-label frontier (see wcc.rs), so minispark WCC scales much
+    // further than the old full-reshuffle loop — but driver union-find is
+    // still far cheaper on one box, so "auto" caps the distributed run to
+    // keep the bench snappy (force with --minispark true; compare naive vs
+    // frontier with bench_wcc_frontier).
+    const MINISPARK_CAP: usize = 6_000_000;
 
     let rt = XlaRuntime::new(std::path::Path::new("artifacts")).ok();
     let mut t = Table::new(

@@ -1,0 +1,155 @@
+//! Naive vs frontier WCC propagation (the tentpole perf claim).
+//!
+//! The naive loop re-broadcasts every label across every edge each round
+//! and re-reduces the full label set; the frontier loop joins the
+//! adjacency only against the nodes whose label decreased last round (see
+//! the `wcc.rs` module docs). Both are timed on generator traces, and the
+//! engine's data-volume metrics — rows shuffled, shuffles elided, rows
+//! saved by map-side combining — are reported per run, then written to
+//! `BENCH_wcc.json` for the perf trajectory.
+//!
+//! ```bash
+//! cargo bench --bench bench_wcc_frontier -- --divisor 100 --replications 1,2
+//! ```
+
+use provspark::benchkit::Table;
+use provspark::cli::Args;
+use provspark::config::ClusterConfig;
+use provspark::minispark::MiniSpark;
+use provspark::provenance::model::Trace;
+use provspark::provenance::wcc::{wcc_driver, wcc_minispark_frontier, wcc_minispark_naive};
+use provspark::util::fmt::{human_count, human_duration};
+use provspark::util::timer::time_it;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use rustc_hash::FxHashMap;
+
+type WccFn = fn(&MiniSpark, &Trace, usize) -> (FxHashMap<u64, u64>, usize);
+
+struct Run {
+    scale: String,
+    edges: usize,
+    name: &'static str,
+    rounds: usize,
+    rows_shuffled: u64,
+    shuffles_elided: u64,
+    rows_combined: u64,
+    jobs: u64,
+    wall_s: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["bench"])?;
+    let divisor: usize = args.get_parsed_or("divisor", 100)?;
+    let np: usize = args.get_parsed_or("partitions", 64)?;
+    let out_path = args.get_or("out", "BENCH_wcc.json");
+    let reps: Vec<usize> = args
+        .get_or("replications", "1,2")
+        .split(',')
+        .map(|s| s.parse::<usize>())
+        .collect::<Result<_, _>>()?;
+
+    let impls: [(&'static str, WccFn); 2] =
+        [("naive", wcc_minispark_naive), ("frontier", wcc_minispark_frontier)];
+
+    let mut runs: Vec<Run> = Vec::new();
+    let mut t = Table::new(
+        &format!("WCC label propagation: naive vs frontier (divisor {divisor}, {np} partitions)"),
+        &["Scale", "edges", "impl", "rounds", "rows shuffled", "elided", "combined", "wall"],
+    );
+    for &rep in &reps {
+        let (trace, _, _) = generate(&GeneratorConfig {
+            scale_divisor: divisor,
+            replication: rep,
+            ..Default::default()
+        });
+        let oracle = wcc_driver(&trace);
+        for (name, f) in impls {
+            // Fresh engine per run so metrics isolate cleanly; overhead 0
+            // keeps wall time about data movement, not simulated latency.
+            let sc = MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() });
+            let before = sc.metrics().snapshot();
+            let ((labels, rounds), wall) = time_it(|| f(&sc, &trace, np));
+            let d = sc.metrics().snapshot().since(&before);
+            anyhow::ensure!(labels == oracle, "{name} labels diverge from union-find oracle");
+            t.row(vec![
+                format!("×{rep}"),
+                human_count(trace.len() as u64),
+                name.into(),
+                rounds.to_string(),
+                human_count(d.rows_shuffled),
+                d.shuffles_elided.to_string(),
+                human_count(d.rows_combined),
+                human_duration(wall),
+            ]);
+            println!(
+                "RAW wcc impl={name} rep={rep} edges={} rounds={rounds} shuffled={} \
+                 elided={} combined={} jobs={} wall={:.5}s",
+                trace.len(),
+                d.rows_shuffled,
+                d.shuffles_elided,
+                d.rows_combined,
+                d.jobs,
+                wall.as_secs_f64(),
+            );
+            runs.push(Run {
+                scale: format!("x{rep}"),
+                edges: trace.len(),
+                name,
+                rounds,
+                rows_shuffled: d.rows_shuffled,
+                shuffles_elided: d.shuffles_elided,
+                rows_combined: d.rows_combined,
+                jobs: d.jobs,
+                wall_s: wall.as_secs_f64(),
+            });
+        }
+    }
+    t.print();
+
+    let total = |which: &str| -> u64 {
+        runs.iter().filter(|r| r.name == which).map(|r| r.rows_shuffled).sum()
+    };
+    let (naive_total, frontier_total) = (total("naive"), total("frontier"));
+    let reduction = naive_total as f64 / (frontier_total.max(1)) as f64;
+    println!(
+        "RAW wcc shuffle_reduction={reduction:.2}x (naive {naive_total} rows vs frontier \
+         {frontier_total} rows)"
+    );
+
+    // Hand-rolled JSON (the offline build has no serde).
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"wcc_frontier\",\n");
+    json.push_str(&format!("  \"divisor\": {divisor},\n  \"partitions\": {np},\n"));
+    json.push_str(&format!("  \"shuffle_reduction\": {reduction:.4},\n"));
+    json.push_str("  \"runs\": [\n");
+    for (i, r) in runs.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"scale\": \"{}\", \"edges\": {}, \"impl\": \"{}\", \"rounds\": {}, \
+             \"rows_shuffled\": {}, \"shuffles_elided\": {}, \"rows_combined\": {}, \
+             \"jobs\": {}, \"wall_s\": {:.6}}}{}\n",
+            r.scale,
+            r.edges,
+            r.name,
+            r.rounds,
+            r.rows_shuffled,
+            r.shuffles_elided,
+            r.rows_combined,
+            r.jobs,
+            r.wall_s,
+            if i + 1 == runs.len() { "" } else { "," },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {out_path}");
+
+    anyhow::ensure!(
+        frontier_total < naive_total,
+        "frontier must shuffle strictly fewer rows ({frontier_total} vs {naive_total})"
+    );
+    anyhow::ensure!(
+        reduction >= 2.0,
+        "frontier must cut total shuffled rows at least 2x (got {reduction:.2}x)"
+    );
+    Ok(())
+}

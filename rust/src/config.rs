@@ -59,11 +59,22 @@ pub struct ClusterConfig {
     /// scales by the same factor to preserve the compute-vs-overhead ratio
     /// the evaluation's shape depends on (see DESIGN.md §2).
     pub job_overhead_us: u64,
+    /// Skip shuffles that are provably no-ops: re-partitioning a dataset
+    /// that is already hash-partitioned on the same key tag with the same
+    /// partition count returns it unchanged (Spark's narrow-dependency
+    /// optimization). Disable to force every shuffle — property tests use
+    /// this to check elision never changes results.
+    pub shuffle_elision: bool,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        Self { executors: 4, default_partitions: 64, job_overhead_us: 20_000 }
+        Self {
+            executors: 4,
+            default_partitions: 64,
+            job_overhead_us: 20_000,
+            shuffle_elision: true,
+        }
     }
 }
 
@@ -123,6 +134,7 @@ impl EngineConfig {
                 "cluster.executors" => self.cluster.executors = v.parse()?,
                 "cluster.default_partitions" => self.cluster.default_partitions = v.parse()?,
                 "cluster.job_overhead_us" => self.cluster.job_overhead_us = v.parse()?,
+                "cluster.shuffle_elision" => self.cluster.shuffle_elision = v.parse()?,
                 "prov.tau" => self.prov.tau = v.parse()?,
                 "prov.theta" => self.prov.theta = v.parse()?,
                 "prov.wcc_backend" => self.prov.wcc_backend = v.parse()?,
@@ -141,6 +153,8 @@ impl EngineConfig {
             args.get_parsed_or("partitions", self.cluster.default_partitions)?;
         self.cluster.job_overhead_us =
             args.get_parsed_or("job-overhead-us", self.cluster.job_overhead_us)?;
+        self.cluster.shuffle_elision =
+            args.get_parsed_or("shuffle-elision", self.cluster.shuffle_elision)?;
         self.prov.tau = args.get_parsed_or("tau", self.prov.tau)?;
         self.prov.theta = args.get_parsed_or("theta", self.prov.theta)?;
         self.prov.wcc_backend = args.get_parsed_or("wcc-backend", self.prov.wcc_backend)?;

@@ -3,7 +3,7 @@
 //! ```text
 //! provspark generate    --scale-divisor 10 --replication 1 --out data/trace.bin
 //! provspark stats       --trace data/trace.bin
-//! provspark preprocess  --trace data/trace.bin --out data/pre.bin [--wcc-impl driver|minispark|xla]
+//! provspark preprocess  --trace data/trace.bin --out data/pre.bin [--wcc-impl driver|minispark|minispark-naive|xla]
 //! provspark query       --trace data/trace.bin --pre data/pre.bin --engine csprov --item 3:42
 //! provspark classes     --trace data/trace.bin --pre data/pre.bin --class lc-ll
 //! provspark table       --which 9|10|11|12 [--divisor 10] [--replications 1,9]
@@ -52,7 +52,8 @@ fn print_help() {
         "provspark — workflow provenance queries via weakly connected components/sets\n\
          subcommands: generate | stats | preprocess | query | classes | table | drilldown | workflow\n\
          common opts: --executors N --partitions N --job-overhead-us N --tau N --theta N\n\
-                      --wcc-backend native|xla --closure-backend native|xla --config FILE"
+                      --shuffle-elision true|false --wcc-backend native|xla\n\
+                      --closure-backend native|xla --config FILE"
     );
 }
 
@@ -136,6 +137,10 @@ fn run(args: &Args) -> Result<()> {
                 "minispark" => {
                     WccImpl::MiniSpark { sc: &sc, partitions: ecfg.cluster.default_partitions }
                 }
+                "minispark-naive" => WccImpl::MiniSparkNaive {
+                    sc: &sc,
+                    partitions: ecfg.cluster.default_partitions,
+                },
                 "xla" => {
                     rt = provspark::runtime::XlaRuntime::new(Path::new(&ecfg.prov.artifact_dir))?;
                     xla_fn = move |t: &provspark::provenance::model::Trace| {
@@ -143,7 +148,9 @@ fn run(args: &Args) -> Result<()> {
                     };
                     WccImpl::Custom(&xla_fn)
                 }
-                other => bail!("unknown --wcc-impl {other:?} (driver|minispark|xla)"),
+                other => {
+                    bail!("unknown --wcc-impl {other:?} (driver|minispark|minispark-naive|xla)")
+                }
             };
             let pre = preprocess(&trace, &g, &splits, theta, big, wcc);
             store::save_preprocessed(Path::new(&out), &pre)?;

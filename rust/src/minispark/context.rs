@@ -43,6 +43,12 @@ impl MiniSpark {
         self.inner.cfg.default_partitions
     }
 
+    /// Whether provably-redundant shuffles are skipped
+    /// ([`ClusterConfig::shuffle_elision`]).
+    pub fn elision_enabled(&self) -> bool {
+        self.inner.cfg.shuffle_elision
+    }
+
     /// Run one *job*: charge the simulated scheduling overhead, then execute
     /// `tasks` closures (one per involved partition) on the worker pool and
     /// return their outputs in order.

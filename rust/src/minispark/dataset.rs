@@ -1,19 +1,29 @@
 //! Partitioned datasets and their operations.
 
 use super::context::MiniSpark;
-use super::partitioner::HashPartitioner;
+use super::partitioner::{HashPartitioner, KeyTag};
 use rustc_hash::FxHashMap;
 use std::sync::Arc;
 
 /// How a dataset's rows are distributed across partitions.
+///
+/// `key_tag` is the key function's semantic identity (see [`KeyTag`]): when
+/// present, elidable operations can prove "already partitioned on this key"
+/// and skip the shuffle entirely. Untagged partitionings still support
+/// `lookup`/`prune_lookup` but are never trusted for elision.
 struct Partitioning<T> {
     partitioner: HashPartitioner,
     key_fn: Arc<dyn Fn(&T) -> u64 + Send + Sync>,
+    key_tag: Option<KeyTag>,
 }
 
 impl<T> Clone for Partitioning<T> {
     fn clone(&self) -> Self {
-        Self { partitioner: self.partitioner, key_fn: Arc::clone(&self.key_fn) }
+        Self {
+            partitioner: self.partitioner,
+            key_fn: Arc::clone(&self.key_fn),
+            key_tag: self.key_tag,
+        }
     }
 }
 
@@ -90,12 +100,59 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
 
     /// Shuffle rows so that all rows with equal `key_fn(row)` land in the
     /// same partition (Spark `partitionBy(HashPartitioner(n))`).
+    ///
+    /// The resulting partitioning is *untagged*: the engine cannot compare
+    /// closures, so a later re-partition on the "same" key cannot be
+    /// elided. Use [`hash_partition_by_tagged`](Self::hash_partition_by_tagged)
+    /// (or [`Dataset::partition_by_key`] for pair datasets) when the key has
+    /// a stable identity.
     pub fn hash_partition_by(
         &self,
         num_partitions: usize,
         key_fn: impl Fn(&T) -> u64 + Send + Sync + 'static,
     ) -> Self {
-        let key_fn: Arc<dyn Fn(&T) -> u64 + Send + Sync> = Arc::new(key_fn);
+        self.shuffle_partition(num_partitions, None, Arc::new(key_fn))
+    }
+
+    /// [`hash_partition_by`](Self::hash_partition_by) with a [`KeyTag`]
+    /// naming the key function. When the dataset is already hash-partitioned
+    /// on the same tag with the same partition count, the shuffle is a
+    /// provable no-op and is **elided** (the dataset is returned unchanged
+    /// and [`EngineMetrics::shuffles_elided`](super::EngineMetrics) counts
+    /// it) — Spark's narrow-dependency optimization for a matching
+    /// `partitioner`.
+    pub fn hash_partition_by_tagged(
+        &self,
+        num_partitions: usize,
+        tag: KeyTag,
+        key_fn: impl Fn(&T) -> u64 + Send + Sync + 'static,
+    ) -> Self {
+        if self.partitioned_on(tag, num_partitions.max(1)) {
+            self.sc.metrics().add_elided();
+            return self.clone();
+        }
+        self.shuffle_partition(num_partitions, Some(tag), Arc::new(key_fn))
+    }
+
+    /// True when elision is enabled and this dataset is hash-partitioned on
+    /// `tag` into exactly `num_partitions` buckets.
+    fn partitioned_on(&self, tag: KeyTag, num_partitions: usize) -> bool {
+        self.sc.elision_enabled()
+            && matches!(
+                &self.partitioning,
+                Some(p) if p.key_tag == Some(tag)
+                    && p.partitioner.num_partitions() == num_partitions
+            )
+    }
+
+    /// The unconditional map/reduce shuffle behind both partition entry
+    /// points.
+    fn shuffle_partition(
+        &self,
+        num_partitions: usize,
+        key_tag: Option<KeyTag>,
+        key_fn: Arc<dyn Fn(&T) -> u64 + Send + Sync>,
+    ) -> Self {
         let partitioner = HashPartitioner::new(num_partitions.max(1));
         let np = partitioner.num_partitions();
 
@@ -124,7 +181,7 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         Self {
             sc: self.sc.clone(),
             partitions,
-            partitioning: Some(Partitioning { partitioner, key_fn }),
+            partitioning: Some(Partitioning { partitioner, key_fn, key_tag }),
         }
     }
 
@@ -296,13 +353,16 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
     /// Concatenate two datasets.
     ///
     /// If both sides are hash-partitioned with the same partitioner *and*
-    /// the same key function, partitions are unioned pairwise and the
-    /// partitioning is preserved (Spark's `PartitionerAwareUnionRDD`);
-    /// otherwise partition lists concatenate and partitioning is dropped.
+    /// the same key function — the identical closure, or matching
+    /// [`KeyTag`]s — partitions are unioned pairwise and the partitioning
+    /// is preserved (Spark's `PartitionerAwareUnionRDD`); otherwise
+    /// partition lists concatenate and partitioning is dropped.
     pub fn union(&self, other: &Dataset<T>) -> Self {
         match (&self.partitioning, &other.partitioning) {
             (Some(a), Some(b))
-                if a.partitioner == b.partitioner && Arc::ptr_eq(&a.key_fn, &b.key_fn) =>
+                if a.partitioner == b.partitioner
+                    && (Arc::ptr_eq(&a.key_fn, &b.key_fn)
+                        || (a.key_tag.is_some() && a.key_tag == b.key_tag)) =>
             {
                 let partitions: Vec<Arc<Vec<T>>> = self
                     .partitions
@@ -332,8 +392,15 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
     }
 
     /// Shuffle-reduce: map each row to `(key, value)`, co-locate by key,
-    /// reduce values per key. The result is hash-partitioned by its `.0`.
-    /// This is the primitive behind distributed label propagation.
+    /// reduce values per key. The result is hash-partitioned by its `.0`
+    /// (tagged [`KeyTag::PAIR_KEY`]). This is the primitive behind
+    /// distributed label propagation.
+    ///
+    /// The map side combines locally, so the shuffle moves at most one
+    /// pre-aggregated row per `(input partition, key)` instead of one row
+    /// per input row; `EngineMetrics::rows_combined` counts the rows this
+    /// saves. For a pair dataset already partitioned by key, use
+    /// [`Dataset::reduce_values`] — it skips the shuffle entirely.
     pub fn reduce_by_key<V: Send + Sync + Clone + 'static>(
         &self,
         num_partitions: usize,
@@ -348,20 +415,14 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             let mut out: Vec<FxHashMap<u64, V>> = (0..np).map(|_| FxHashMap::default()).collect();
             for row in part.iter() {
                 let (k, v) = kv(row);
-                let slot = &mut out[partitioner.partition_of(k)];
-                match slot.remove(&k) {
-                    Some(prev) => {
-                        slot.insert(k, red(prev, v));
-                    }
-                    None => {
-                        slot.insert(k, v);
-                    }
-                }
+                combine_into(&mut out[partitioner.partition_of(k)], k, v, &red);
             }
             out
         });
+        let total: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
         let shuffled: u64 = buckets.iter().flatten().map(|m| m.len() as u64).sum();
         self.sc.metrics().add_shuffled(shuffled);
+        self.sc.metrics().add_combined(total.saturating_sub(shuffled));
 
         // Reduce side.
         let targets: Vec<usize> = (0..np).collect();
@@ -369,14 +430,7 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             let mut acc: FxHashMap<u64, V> = FxHashMap::default();
             for b in &buckets {
                 for (k, v) in &b[t] {
-                    match acc.remove(k) {
-                        Some(prev) => {
-                            acc.insert(*k, red(prev, v.clone()));
-                        }
-                        None => {
-                            acc.insert(*k, v.clone());
-                        }
-                    }
+                    combine_into(&mut acc, *k, v.clone(), &red);
                 }
             }
             Arc::new(acc.into_iter().collect::<Vec<_>>())
@@ -388,8 +442,83 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             partitioning: Some(Partitioning {
                 partitioner,
                 key_fn: Arc::new(|row: &(u64, V)| row.0),
+                key_tag: Some(KeyTag::PAIR_KEY),
             }),
         }
+    }
+}
+
+/// Operations specific to pair datasets, whose canonical key is the first
+/// tuple element ([`KeyTag::PAIR_KEY`]). These are the elidable fast paths
+/// the WCC frontier loop is built from.
+impl<V: Send + Sync + Clone + 'static> Dataset<(u64, V)> {
+    /// Hash-partition by the pair key (`.0`). Elided — returned unchanged,
+    /// with `shuffles_elided` incremented — when the dataset is already
+    /// key-partitioned into `num_partitions` buckets.
+    pub fn partition_by_key(&self, num_partitions: usize) -> Self {
+        self.hash_partition_by_tagged(num_partitions, KeyTag::PAIR_KEY, |r| r.0)
+    }
+
+    /// Transform values, keeping keys — and therefore key-partitioning —
+    /// intact (Spark `mapValues`, a narrow dependency). An opaque
+    /// partitioning (rows placed by some key other than `.0`) cannot be
+    /// re-expressed over the new row type and is dropped.
+    pub fn map_values<U: Send + Sync + Clone + 'static>(
+        &self,
+        f: impl Fn(&V) -> U + Send + Sync,
+    ) -> Dataset<(u64, U)> {
+        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
+        let partitions: Vec<Arc<Vec<(u64, U)>>> =
+            self.sc.run_job(&self.partitions, |_, part| {
+                Arc::new(part.iter().map(|(k, v)| (*k, f(v))).collect::<Vec<_>>())
+            });
+        let partitioning = match &self.partitioning {
+            Some(p) if p.key_tag == Some(KeyTag::PAIR_KEY) => Some(Partitioning {
+                partitioner: p.partitioner,
+                key_fn: Arc::new(|row: &(u64, U)| row.0),
+                key_tag: Some(KeyTag::PAIR_KEY),
+            }),
+            _ => None,
+        };
+        Dataset { sc: self.sc.clone(), partitions, partitioning }
+    }
+
+    /// [`reduce_by_key`](Self::reduce_by_key) on the pair key. When the
+    /// dataset is already key-partitioned into `num_partitions` buckets,
+    /// every key's rows are co-located, so the reduction runs entirely
+    /// within partitions — a narrow dependency that shuffles **zero** rows
+    /// (counted in `shuffles_elided`). Otherwise falls back to the
+    /// shuffling `reduce_by_key`.
+    pub fn reduce_values(
+        &self,
+        num_partitions: usize,
+        red: impl Fn(V, V) -> V + Send + Sync,
+    ) -> Dataset<(u64, V)> {
+        let np = num_partitions.max(1);
+        if self.partitioned_on(KeyTag::PAIR_KEY, np) {
+            self.sc.metrics().add_elided();
+            let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+            self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
+            let partitions: Vec<Arc<Vec<(u64, V)>>> =
+                self.sc.run_job(&self.partitions, |_, part| {
+                    let mut acc: FxHashMap<u64, V> = FxHashMap::default();
+                    for (k, v) in part.iter() {
+                        combine_into(&mut acc, *k, v.clone(), &red);
+                    }
+                    Arc::new(acc.into_iter().collect::<Vec<_>>())
+                });
+            return Dataset {
+                sc: self.sc.clone(),
+                partitions,
+                partitioning: Some(Partitioning {
+                    partitioner: HashPartitioner::new(np),
+                    key_fn: Arc::new(|row: &(u64, V)| row.0),
+                    key_tag: Some(KeyTag::PAIR_KEY),
+                }),
+            };
+        }
+        self.reduce_by_key(np, |r| (r.0, r.1.clone()), red)
     }
 }
 
@@ -397,7 +526,11 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
 ///
 /// Both sides are (re)hash-partitioned to `num_partitions` with the same
 /// partitioner, then joined partition-wise (Spark's co-partitioned join) —
-/// the build side is the right dataset's partition.
+/// the build side is the right dataset's partition. A side already
+/// key-partitioned ([`KeyTag::PAIR_KEY`]) into `num_partitions` buckets is
+/// used as-is (its shuffle is elided); a side whose partitioning is
+/// untagged is re-shuffled, because the engine cannot prove its key
+/// function matches the join key.
 pub fn join_u64<V1, V2>(
     left: &Dataset<(u64, V1)>,
     right: &Dataset<(u64, V2)>,
@@ -408,15 +541,8 @@ where
     V2: Send + Sync + Clone + 'static,
 {
     let np = num_partitions.max(1);
-    // Re-shuffle only when the side is not already partitioned to np
-    // buckets by its key (same stateless HashPartitioner ⇒ co-partitioned).
-    let need = |d: &Dataset<(u64, V1)>| !(d.is_hash_partitioned() && d.num_partitions() == np);
-    let l = if need(left) { left.hash_partition_by(np, |r| r.0) } else { left.clone() };
-    let r = if !(right.is_hash_partitioned() && right.num_partitions() == np) {
-        right.hash_partition_by(np, |r| r.0)
-    } else {
-        right.clone()
-    };
+    let l = left.partition_by_key(np);
+    let r = right.partition_by_key(np);
     let sc = l.context().clone();
     let pairs: Vec<(Arc<Vec<(u64, V1)>>, Arc<Vec<(u64, V2)>>)> = (0..np)
         .map(|i| (Arc::clone(l.partition(i)), Arc::clone(r.partition(i))))
@@ -444,7 +570,22 @@ where
         partitioning: Some(Partitioning {
             partitioner: HashPartitioner::new(np),
             key_fn: Arc::new(|row: &(u64, (V1, V2))| row.0),
+            key_tag: Some(KeyTag::PAIR_KEY),
         }),
+    }
+}
+
+/// Reduce `v` into `acc[k]` with `red` — the combine step shared by
+/// `reduce_by_key`'s map and reduce sides and `reduce_values`' narrow path.
+#[inline]
+fn combine_into<V>(acc: &mut FxHashMap<u64, V>, k: u64, v: V, red: &impl Fn(V, V) -> V) {
+    match acc.remove(&k) {
+        Some(prev) => {
+            acc.insert(k, red(prev, v));
+        }
+        None => {
+            acc.insert(k, v);
+        }
     }
 }
 
@@ -474,6 +615,7 @@ mod tests {
             executors: 4,
             default_partitions: 8,
             job_overhead_us: 0,
+            shuffle_elision: true,
         })
     }
 
@@ -669,14 +811,140 @@ mod tests {
     fn join_copartitioned_skips_shuffle() {
         let s = sc();
         let a = Dataset::from_vec(&s, (0..100u64).map(|i| (i, i)).collect::<Vec<_>>(), 4)
-            .hash_partition_by(4, |r| r.0);
+            .partition_by_key(4);
         let b = Dataset::from_vec(&s, (0..100u64).map(|i| (i, i * 2)).collect::<Vec<_>>(), 4)
-            .hash_partition_by(4, |r| r.0);
+            .partition_by_key(4);
         let before = s.metrics().snapshot();
         let j = join_u64(&a, &b, 4);
         let delta = s.metrics().snapshot().since(&before);
         assert_eq!(delta.rows_shuffled, 0, "co-partitioned join must not shuffle");
+        assert_eq!(delta.shuffles_elided, 2, "both sides elide");
         assert_eq!(j.len(), 100);
+    }
+
+    #[test]
+    fn join_reshuffles_untagged_partitioning() {
+        // An untagged partitioning could key on anything (here: the value),
+        // so the join must not trust it — eliding would mis-join.
+        let s = sc();
+        let a = Dataset::from_vec(&s, (0..100u64).map(|i| (i, i * 7)).collect::<Vec<_>>(), 4)
+            .hash_partition_by(4, |r| r.1);
+        let b = Dataset::from_vec(&s, (0..100u64).map(|i| (i, i)).collect::<Vec<_>>(), 4)
+            .partition_by_key(4);
+        let before = s.metrics().snapshot();
+        let j = join_u64(&a, &b, 4);
+        let delta = s.metrics().snapshot().since(&before);
+        assert!(delta.rows_shuffled >= 100, "untagged side must re-shuffle");
+        assert_eq!(j.len(), 100);
+        let mut v = j.collect();
+        v.sort_unstable();
+        assert_eq!(v, (0..100u64).map(|i| (i, (i * 7, i))).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn repeated_partition_by_key_elides() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..200).map(|i| (i % 17, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 4).partition_by_key(4);
+        let before = s.metrics().snapshot();
+        let d2 = d.partition_by_key(4);
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(delta.shuffles_elided, 1);
+        assert_eq!(delta.rows_shuffled, 0);
+        // Different partition count: no elision.
+        let before = s.metrics().snapshot();
+        let d3 = d2.partition_by_key(8);
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(delta.shuffles_elided, 0);
+        assert!(delta.rows_shuffled > 0);
+        assert_eq!(d3.num_partitions(), 8);
+        let mut a = d2.collect();
+        let mut b = d3.collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn elision_disabled_forces_shuffle() {
+        let s = MiniSpark::new(ClusterConfig {
+            executors: 4,
+            default_partitions: 8,
+            job_overhead_us: 0,
+            shuffle_elision: false,
+        });
+        let rows: Vec<(u64, u64)> = (0..100).map(|i| (i % 7, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 4).partition_by_key(4);
+        let before = s.metrics().snapshot();
+        let _ = d.partition_by_key(4);
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(delta.shuffles_elided, 0);
+        assert_eq!(delta.rows_shuffled, 100);
+    }
+
+    #[test]
+    fn map_values_preserves_key_partitioning() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..300).map(|i| (i % 23, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 8).partition_by_key(8);
+        let m = d.map_values(|&v| v * 2);
+        assert!(m.is_hash_partitioned());
+        assert_eq!(m.lookup(3).len(), d.lookup(3).len());
+        // Feeding the result back into partition_by_key is a no-op.
+        let before = s.metrics().snapshot();
+        let _ = m.partition_by_key(8);
+        assert_eq!(s.metrics().snapshot().since(&before).shuffles_elided, 1);
+        // An untagged partitioning is dropped, not mis-tagged.
+        let odd = Dataset::from_vec(&s, vec![(1u64, 2u64)], 2).hash_partition_by(2, |r| r.1);
+        assert!(!odd.map_values(|&v| v).is_hash_partitioned());
+    }
+
+    #[test]
+    fn reduce_values_narrow_on_copartitioned() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..1000).map(|i| (i % 10, i)).collect();
+        let d = Dataset::from_vec(&s, rows.clone(), 8).partition_by_key(8);
+        let before = s.metrics().snapshot();
+        let r = d.reduce_values(8, u64::min);
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(delta.rows_shuffled, 0, "co-partitioned reduce is narrow");
+        assert_eq!(delta.shuffles_elided, 1);
+        let mut got = r.collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..10u64).map(|k| (k, k)).collect::<Vec<_>>());
+        // Unpartitioned input falls back to the shuffling reduce_by_key.
+        let raw = Dataset::from_vec(&s, rows, 8);
+        let mut got2 = raw.reduce_values(8, u64::min).collect();
+        got2.sort_unstable();
+        assert_eq!(got, got2);
+    }
+
+    #[test]
+    fn reduce_by_key_counts_combined_rows() {
+        let s = sc();
+        let rows: Vec<u64> = (0..1000).collect();
+        let d = Dataset::from_vec(&s, rows, 8);
+        let before = s.metrics().snapshot();
+        let _ = d.reduce_by_key(4, |&x| (x % 10, x), u64::min);
+        let delta = s.metrics().snapshot().since(&before);
+        // 1000 inputs collapse to ≤ 8 partitions × 10 keys pre-shuffle rows.
+        assert!(delta.rows_shuffled <= 80);
+        assert_eq!(delta.rows_combined, 1000 - delta.rows_shuffled);
+    }
+
+    #[test]
+    fn tagged_union_keeps_partitioning_across_instances() {
+        // Two datasets partitioned by the same *tag* but distinct closure
+        // instances still union partition-aware (the WCC label merge).
+        let s = sc();
+        let a = Dataset::from_vec(&s, (0..50u64).map(|i| (i, i)).collect::<Vec<_>>(), 4)
+            .partition_by_key(4);
+        let b = Dataset::from_vec(&s, (50..100u64).map(|i| (i, i)).collect::<Vec<_>>(), 4)
+            .partition_by_key(4);
+        let u = a.union(&b);
+        assert!(u.is_hash_partitioned());
+        assert_eq!(u.num_partitions(), 4);
+        assert_eq!(u.lookup(75).len(), 1);
     }
 
     #[test]

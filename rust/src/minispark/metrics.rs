@@ -13,6 +13,12 @@ pub struct EngineMetrics {
     pub rows_scanned: AtomicU64,
     pub rows_shuffled: AtomicU64,
     pub rows_collected: AtomicU64,
+    /// Shuffles skipped because the dataset was already partitioned on the
+    /// requested key tag with the requested partition count.
+    pub shuffles_elided: AtomicU64,
+    /// Rows removed by map-side combining before the shuffle (input rows
+    /// minus pre-aggregated rows actually moved).
+    pub rows_combined: AtomicU64,
 }
 
 /// A point-in-time copy of the counters, with subtraction for deltas.
@@ -24,6 +30,8 @@ pub struct MetricsSnapshot {
     pub rows_scanned: u64,
     pub rows_shuffled: u64,
     pub rows_collected: u64,
+    pub shuffles_elided: u64,
+    pub rows_combined: u64,
 }
 
 impl EngineMetrics {
@@ -35,6 +43,8 @@ impl EngineMetrics {
             rows_scanned: self.rows_scanned.load(Ordering::Relaxed),
             rows_shuffled: self.rows_shuffled.load(Ordering::Relaxed),
             rows_collected: self.rows_collected.load(Ordering::Relaxed),
+            shuffles_elided: self.shuffles_elided.load(Ordering::Relaxed),
+            rows_combined: self.rows_combined.load(Ordering::Relaxed),
         }
     }
 
@@ -63,6 +73,16 @@ impl EngineMetrics {
     pub fn add_collected(&self, rows: u64) {
         self.rows_collected.fetch_add(rows, Ordering::Relaxed);
     }
+
+    #[inline]
+    pub fn add_elided(&self) {
+        self.shuffles_elided.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_combined(&self, rows: u64) {
+        self.rows_combined.fetch_add(rows, Ordering::Relaxed);
+    }
 }
 
 impl MetricsSnapshot {
@@ -75,18 +95,23 @@ impl MetricsSnapshot {
             rows_scanned: self.rows_scanned - earlier.rows_scanned,
             rows_shuffled: self.rows_shuffled - earlier.rows_shuffled,
             rows_collected: self.rows_collected - earlier.rows_collected,
+            shuffles_elided: self.shuffles_elided - earlier.shuffles_elided,
+            rows_combined: self.rows_combined - earlier.rows_combined,
         }
     }
 
     pub fn summary(&self) -> String {
         format!(
-            "jobs={} tasks={} parts_scanned={} rows_scanned={} shuffled={} collected={}",
+            "jobs={} tasks={} parts_scanned={} rows_scanned={} shuffled={} collected={} \
+             elided={} combined={}",
             self.jobs,
             self.tasks,
             self.partitions_scanned,
             crate::util::fmt::human_count(self.rows_scanned),
             crate::util::fmt::human_count(self.rows_shuffled),
             crate::util::fmt::human_count(self.rows_collected),
+            self.shuffles_elided,
+            crate::util::fmt::human_count(self.rows_combined),
         )
     }
 }

@@ -11,6 +11,13 @@
 //!   all rows with the same key land in one partition; a subsequent
 //!   [`Dataset::lookup`] scans exactly one partition (the paper's central
 //!   cost argument for RQ/CCProv/CSProv).
+//! * **Shuffle elision** — partitionings carry an optional [`KeyTag`]
+//!   naming their key function; re-partitioning, `reduce_values` and
+//!   `join_u64` skip the map/reduce shuffle entirely (a narrow dependency)
+//!   when a dataset is already hash-partitioned on the requested tag with
+//!   the requested partition count. [`EngineMetrics`] counts every elided
+//!   shuffle (`shuffles_elided`) and every row saved by map-side combining
+//!   (`rows_combined`), so benches can prove the savings.
 //! * **filter / lookup / collect** — the three operations the paper names.
 //!   `filter` scans every partition (preserving partitioning), `collect`
 //!   moves all rows to the driver.
@@ -37,4 +44,4 @@ mod partitioner;
 pub use context::MiniSpark;
 pub use dataset::{join_u64, Dataset};
 pub use metrics::{EngineMetrics, MetricsSnapshot};
-pub use partitioner::HashPartitioner;
+pub use partitioner::{HashPartitioner, KeyTag};

@@ -31,9 +31,50 @@ impl HashPartitioner {
     }
 }
 
+/// Semantic identity of a partitioning key function.
+///
+/// The engine cannot compare two key closures, so elidable operations
+/// (`hash_partition_by_tagged`, `reduce_values`, `join_u64`) decide
+/// "already partitioned on this key" by comparing *tags*: two datasets
+/// hash-partitioned with equal tags, equal partition counts and the
+/// (stateless) [`HashPartitioner`] are co-partitioned — every row with a
+/// given key occupies the same partition index on both, so the shuffle is
+/// a no-op (Spark's narrow dependency on a matching `partitioner`).
+///
+/// Untagged partitionings (`hash_partition_by`) are never elided —
+/// correctness over speed when the key's identity is unknown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KeyTag(pub u64);
+
+impl KeyTag {
+    /// The canonical key of a `(u64, V)` pair dataset: its first element.
+    pub const PAIR_KEY: KeyTag = KeyTag::named("minispark.pair.0");
+
+    /// Derive a tag from a stable name (FNV-1a), for domain key functions
+    /// like "provenance triple dst" that several datasets share.
+    pub const fn named(name: &str) -> KeyTag {
+        let bytes = name.as_bytes();
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut i = 0;
+        while i < bytes.len() {
+            h ^= bytes[i] as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            i += 1;
+        }
+        KeyTag(h)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn key_tags_distinguish_names() {
+        assert_eq!(KeyTag::named("a"), KeyTag::named("a"));
+        assert_ne!(KeyTag::named("a"), KeyTag::named("b"));
+        assert_ne!(KeyTag::PAIR_KEY, KeyTag::named("prov.dst"));
+    }
 
     #[test]
     fn deterministic_and_in_range() {

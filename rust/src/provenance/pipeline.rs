@@ -6,7 +6,9 @@ use crate::minispark::MiniSpark;
 use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 use crate::provenance::partition::{Partitioner, PassStats};
 use crate::provenance::setdeps::set_deps_driver;
-use crate::provenance::wcc::{components_from_labels, wcc_driver, wcc_minispark};
+use crate::provenance::wcc::{
+    components_from_labels, wcc_driver, wcc_minispark, wcc_minispark_naive,
+};
 use crate::util::ids::{ComponentId, SetId};
 use crate::util::timer::Timer;
 use crate::workflow::graph::DependencyGraph;
@@ -17,8 +19,12 @@ use rustc_hash::FxHashMap;
 pub enum WccImpl<'a> {
     /// Driver-side union-find (default, fastest on one box).
     Driver,
-    /// Distributed label propagation on minispark (paper-faithful phase).
+    /// Distributed frontier-based label propagation on minispark
+    /// (paper-faithful phase; see `wcc.rs` module docs).
     MiniSpark { sc: &'a MiniSpark, partitions: usize },
+    /// The pre-frontier full-reshuffle propagation — kept so benches and
+    /// the CLI can compare against the frontier path.
+    MiniSparkNaive { sc: &'a MiniSpark, partitions: usize },
     /// Custom labeller (the XLA/PJRT fixpoint from `runtime` plugs in here,
     /// keeping this module independent of artifact availability).
     Custom(&'a dyn Fn(&Trace) -> FxHashMap<u64, u64>),
@@ -71,6 +77,9 @@ pub fn preprocess(
     let labels = match wcc {
         WccImpl::Driver => wcc_driver(trace),
         WccImpl::MiniSpark { sc, partitions } => wcc_minispark(sc, trace, partitions),
+        WccImpl::MiniSparkNaive { sc, partitions } => {
+            wcc_minispark_naive(sc, trace, partitions).0
+        }
         WccImpl::Custom(f) => f(trace),
     };
     timer.lap("wcc");

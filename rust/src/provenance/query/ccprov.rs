@@ -31,7 +31,9 @@ impl CcProvEngine {
         tau: usize,
     ) -> Self {
         let prov = Dataset::from_vec(sc, cc_triples, num_partitions)
-            .hash_partition_by(num_partitions, |t: &CcTriple| t.triple.dst.raw())
+            .hash_partition_by_tagged(num_partitions, super::KEY_TRIPLE_DST, |t: &CcTriple| {
+                t.triple.dst.raw()
+            })
             .cache();
         Self { prov, tau, closure: Arc::new(NativeClosure) }
     }

@@ -50,13 +50,11 @@ impl CsProvEngine {
     ) -> Self {
         let np = num_partitions;
         let prov_by_set = Dataset::from_vec(sc, cs_triples, np)
-            .hash_partition_by(np, |t: &CsTriple| t.dst_csid.0)
+            .hash_partition_by_tagged(np, super::KEY_DST_CSID, |t: &CsTriple| t.dst_csid.0)
             .cache();
-        let node_set = Dataset::from_vec(sc, node_set, np)
-            .hash_partition_by(np, |r: &(u64, u64)| r.0)
-            .cache();
+        let node_set = Dataset::from_vec(sc, node_set, np).partition_by_key(np).cache();
         let set_deps = Dataset::from_vec(sc, set_deps, np)
-            .hash_partition_by(np, |d: &SetDep| d.dst_csid.0)
+            .hash_partition_by_tagged(np, super::KEY_DST_CSID, |d: &SetDep| d.dst_csid.0)
             .cache();
         Self { prov_by_set, node_set, set_deps, num_partitions: np, tau, closure: Arc::new(NativeClosure) }
     }
@@ -109,9 +107,13 @@ impl CsProvEngine {
         if cs_prov.count() >= self.tau {
             // RQ on the cluster. The pruned dataset is partitioned by
             // dst_csid; recursive lookups key on dst, so repartition first
-            // (a shuffle of only the minimal volume).
-            let by_dst = cs_prov
-                .hash_partition_by(self.num_partitions, |t: &CsTriple| t.triple.dst.raw());
+            // (a shuffle of only the minimal volume — the tags differ, so
+            // the engine correctly refuses to elide it).
+            let by_dst = cs_prov.hash_partition_by_tagged(
+                self.num_partitions,
+                super::KEY_TRIPLE_DST,
+                |t: &CsTriple| t.triple.dst.raw(),
+            );
             rq_on_spark_generic(&by_dst, |t| t.triple, q)
         } else {
             let triples: Vec<ProvTriple> =

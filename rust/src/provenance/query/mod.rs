@@ -12,6 +12,20 @@
 //! All three return identical [`Lineage`]s — a cross-engine property test
 //! enforces it.
 
+use crate::minispark::KeyTag;
+
+/// Partitioning-key identities shared by the engines (see [`KeyTag`]).
+/// Datasets hash-partitioned on the same tag with the same partition count
+/// are co-partitioned, so re-partitions and partition-aware unions across
+/// them elide the shuffle.
+///
+/// The derived item (`triple.dst`) of a provenance triple — RQ's and
+/// CCProv's layout, and CSProv's recursive phase.
+pub const KEY_TRIPLE_DST: KeyTag = KeyTag::named("prov.triple.dst");
+/// The connected-set id of the derived item (`dst_csid`) — CSProv's
+/// storage layout for triples and set dependencies.
+pub const KEY_DST_CSID: KeyTag = KeyTag::named("prov.dst_csid");
+
 pub mod ccprov;
 pub mod csprov;
 pub mod driver_rq;

@@ -47,7 +47,9 @@ impl RqEngine {
     /// Load the trace into a dst-partitioned dataset.
     pub fn new(sc: &MiniSpark, trace: &Trace, num_partitions: usize) -> Self {
         let prov = Dataset::from_vec(sc, trace.triples.clone(), num_partitions)
-            .hash_partition_by(num_partitions, |t: &ProvTriple| t.dst.raw())
+            .hash_partition_by_tagged(num_partitions, super::KEY_TRIPLE_DST, |t: &ProvTriple| {
+                t.dst.raw()
+            })
             .cache();
         Self { prov }
     }

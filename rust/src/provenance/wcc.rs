@@ -14,6 +14,30 @@
 //!   compiled to an HLO `while`-loop from JAX/Pallas, executed via PJRT.
 //!
 //! Equivalence of all three is a property test (`rust/tests/wcc_props.rs`).
+//!
+//! ## Frontier (delta) propagation
+//!
+//! [`wcc_minispark`] is *frontier-based*: each round joins the adjacency
+//! only against the set of nodes whose label **decreased** last round (the
+//! frontier), instead of re-broadcasting every node's label every round.
+//! Labels are monotone non-increasing, so a node that did not change has
+//! nothing new to tell its neighbours — the classic delta-iteration
+//! argument (GraphX/Pregel's `activeSetOpt`, Flink's delta iterations).
+//! Per-round *shuffle volume* is `O(edges incident to the frontier)`
+//! rather than `O(E + V)` (the narrow label merge still scans the label
+//! state in place), and on skewed provenance traces the frontier
+//! collapses after the first few rounds.
+//!
+//! The round structure leans on minispark's shuffle elision
+//! ([`KeyTag`](crate::minispark::KeyTag)): the adjacency and the frontier
+//! are co-partitioned by node, so the per-round join is narrow; candidate
+//! labels merge into the label state via a partition-aware union plus
+//! [`Dataset::reduce_values`], also narrow. The **only** shuffle each
+//! round moves the (map-side combined) messages re-keyed to their
+//! receiving neighbour. Convergence is an empty frontier — a metadata
+//! check — replacing the naive full-dataset label-sum scan.
+//! [`wcc_minispark_naive`] keeps the old every-round-full-shuffle loop as
+//! the comparison baseline for `bench_wcc_frontier`.
 
 use crate::minispark::{join_u64, Dataset, MiniSpark};
 use crate::provenance::model::Trace;
@@ -85,14 +109,19 @@ impl UnionFind {
     }
 
     /// Normalize to `node → min-id-in-component` labels.
+    ///
+    /// One `find` per key: roots are resolved once up front, then reused
+    /// for both the per-root minimum and the final label map (the second
+    /// `find` pass the old implementation paid is gone — after path
+    /// halving the root is stable, so caching it is sound).
     pub fn min_labels(&mut self) -> FxHashMap<u64, u64> {
         let keys: Vec<u64> = self.keys().collect();
+        let roots: Vec<u64> = keys.iter().map(|&k| self.find(k)).collect();
         let mut min_of_root: FxHashMap<u64, u64> = FxHashMap::default();
-        for &k in &keys {
-            let r = self.find(k);
+        for (&k, &r) in keys.iter().zip(&roots) {
             min_of_root.entry(r).and_modify(|m| *m = (*m).min(k)).or_insert(k);
         }
-        keys.into_iter().map(|k| (k, min_of_root[&self.find(k)])).collect()
+        keys.iter().zip(&roots).map(|(&k, &r)| (k, min_of_root[&r])).collect()
     }
 }
 
@@ -165,27 +194,80 @@ pub fn wcc_driver(trace: &Trace) -> FxHashMap<u64, u64> {
     labels
 }
 
-/// Distributed WCC by iterated min-label propagation on minispark.
-///
-/// State: `labels: (node, label)`; each round joins labels with the
-/// undirected adjacency list and takes the min label seen by each node.
-/// Labels only decrease, so the total label sum is a strictly decreasing
-/// fixpoint witness — iteration stops when it stops changing.
+/// Distributed WCC by frontier-based (delta) min-label propagation on
+/// minispark. See the module docs for the algorithm; returns the same
+/// `node → min-id-in-component` map as [`wcc_driver`].
 pub fn wcc_minispark(sc: &MiniSpark, trace: &Trace, num_partitions: usize) -> FxHashMap<u64, u64> {
+    wcc_minispark_frontier(sc, trace, num_partitions).0
+}
+
+/// [`wcc_minispark`] exposing the round count (benches/tests).
+pub fn wcc_minispark_frontier(
+    sc: &MiniSpark,
+    trace: &Trace,
+    num_partitions: usize,
+) -> (FxHashMap<u64, u64>, usize) {
     let np = num_partitions.max(1);
     if trace.is_empty() {
-        return FxHashMap::default();
+        return (FxHashMap::default(), 0);
     }
     let rows: Vec<(u64, u64)> =
         trace.triples.iter().map(|t| (t.src.raw(), t.dst.raw())).collect();
     let edges = Dataset::from_vec(sc, rows, np);
     // Undirected adjacency (both directions), co-partitioned by node.
-    let adj = edges
-        .flat_map(|&(s, d)| vec![(s, d), (d, s)])
-        .hash_partition_by(np, |r| r.0)
-        .cache();
+    let adj = edges.flat_map(|&(s, d)| vec![(s, d), (d, s)]).partition_by_key(np).cache();
 
     // Initial labels: every node labels itself.
+    let mut labels = edges
+        .flat_map(|&(s, d)| vec![(s, s), (d, d)])
+        .reduce_by_key(np, |&(n, l)| (n, l), u64::min);
+
+    // Round 0: every node's label just "changed" (to itself), so the whole
+    // label set is the first frontier.
+    let mut frontier = labels.clone();
+    let mut rounds = 0;
+    while !frontier.is_empty() {
+        rounds += 1;
+        // Push changed labels across edges: `adj ⋈ frontier` is narrow
+        // (both sides key-partitioned to np); re-keying each message to
+        // its receiving neighbour is the round's only shuffle —
+        // O(edges incident to the frontier), map-side combined.
+        let msgs = join_u64(&adj, &frontier, np).map(|&(_, (nbr, l))| (nbr, l));
+        let cand = msgs.reduce_by_key(np, |&(n, l)| (n, l), u64::min);
+        // Keep only strict improvements; the inner join drops nodes that
+        // received no message. Candidates are the (small) build side; the
+        // label state is only probed. `map_values` keeps the
+        // key-partitioning.
+        let improved = join_u64(&labels, &cand, np)
+            .filter(|&(_, (old, new))| new < old)
+            .map_values(|&(_, new)| new);
+        // Merge improvements into the label state: partition-aware union +
+        // narrow per-partition reduce — zero rows moved.
+        labels = labels.union(&improved).reduce_values(np, u64::min);
+        frontier = improved;
+    }
+    (labels.collect().into_iter().collect(), rounds)
+}
+
+/// The pre-frontier baseline: every round re-broadcasts **all** labels
+/// across **all** edges and re-reduces the full label set, detecting
+/// convergence with a full label-sum scan. Kept for `bench_wcc_frontier`
+/// and the equivalence property tests; use [`wcc_minispark`] everywhere
+/// else. Returns `(labels, rounds)`.
+pub fn wcc_minispark_naive(
+    sc: &MiniSpark,
+    trace: &Trace,
+    num_partitions: usize,
+) -> (FxHashMap<u64, u64>, usize) {
+    let np = num_partitions.max(1);
+    if trace.is_empty() {
+        return (FxHashMap::default(), 0);
+    }
+    let rows: Vec<(u64, u64)> =
+        trace.triples.iter().map(|t| (t.src.raw(), t.dst.raw())).collect();
+    let edges = Dataset::from_vec(sc, rows, np);
+    let adj = edges.flat_map(|&(s, d)| vec![(s, d), (d, s)]).partition_by_key(np).cache();
+
     let mut labels = edges
         .flat_map(|&(s, d)| vec![(s, s), (d, d)])
         .reduce_by_key(np, |&(n, l)| (n, l), u64::min);
@@ -197,13 +279,15 @@ pub fn wcc_minispark(sc: &MiniSpark, trace: &Trace, num_partitions: usize) -> Fx
             .sum()
     };
 
+    let mut rounds = 0;
     let mut prev_sum = label_sum(&labels);
     loop {
+        rounds += 1;
         // (node, (nbr, label)) → messages (nbr, label); min-reduce with
         // the current labels so labels never increase.
         let msgs = join_u64(&adj, &labels, np).map(|&(_, (nbr, l))| (nbr, l));
         labels = labels
-            .union(&msgs.hash_partition_by(np, |r| r.0))
+            .union(&msgs.partition_by_key(np))
             .reduce_by_key(np, |&(n, l)| (n, l), u64::min);
         let sum = label_sum(&labels);
         if sum == prev_sum {
@@ -211,7 +295,7 @@ pub fn wcc_minispark(sc: &MiniSpark, trace: &Trace, num_partitions: usize) -> Fx
         }
         prev_sum = sum;
     }
-    labels.collect().into_iter().collect()
+    (labels.collect().into_iter().collect(), rounds)
 }
 
 /// Group nodes by label: `component min-id → nodes`.
@@ -300,9 +384,33 @@ mod tests {
     }
 
     #[test]
+    fn frontier_equals_naive_and_shuffles_less() {
+        let edges: Vec<(u64, u64)> = (0..60).map(|i| (i, i + 1)).collect();
+        let t = trace(&edges);
+        let s = sc();
+
+        let before = s.metrics().snapshot();
+        let (naive, naive_rounds) = wcc_minispark_naive(&s, &t, 4);
+        let naive_shuffled = s.metrics().snapshot().since(&before).rows_shuffled;
+
+        let before = s.metrics().snapshot();
+        let (frontier, frontier_rounds) = wcc_minispark_frontier(&s, &t, 4);
+        let frontier_shuffled = s.metrics().snapshot().since(&before).rows_shuffled;
+
+        assert_eq!(naive, frontier);
+        assert_eq!(frontier, wcc_driver(&t));
+        assert!(naive_rounds >= 1 && frontier_rounds >= 1);
+        assert!(
+            frontier_shuffled < naive_shuffled,
+            "frontier shuffled {frontier_shuffled} rows, naive {naive_shuffled}"
+        );
+    }
+
+    #[test]
     fn empty_trace_empty_labels() {
         let t = Trace::default();
         assert!(wcc_driver(&t).is_empty());
         assert!(wcc_minispark(&sc(), &t, 4).is_empty());
+        assert!(wcc_minispark_naive(&sc(), &t, 4).0.is_empty());
     }
 }

@@ -189,6 +189,57 @@ fn union_of_copartitioned_filters_is_identity() {
 }
 
 #[test]
+fn elision_never_changes_results() {
+    // The same operator pipeline, once with shuffle elision enabled and
+    // once with every shuffle forced, must produce identical contents for
+    // every intermediate dataset.
+    let on = MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() });
+    let off = MiniSpark::new(ClusterConfig {
+        job_overhead_us: 0,
+        shuffle_elision: false,
+        ..Default::default()
+    });
+    run_prop(
+        "elision_equivalence",
+        &PropCfg { cases: 30, ..Default::default() },
+        gen_rows,
+        |(rows, np)| {
+            let sorted = |mut v: Vec<(u64, u64)>| {
+                v.sort_unstable();
+                v
+            };
+            let run = |s: &MiniSpark| {
+                let d = Dataset::from_vec(s, rows.clone(), *np).partition_by_key(*np);
+                let repart = d.partition_by_key(*np); // elidable
+                let reduced = repart.reduce_values(*np, u64::min); // narrow when elided
+                let mapped = reduced.map_values(|&v| v.wrapping_mul(3));
+                let joined = join_u64(&d, &reduced, *np); // both sides elidable
+                let unioned = d.filter(|r| r.1 % 2 == 0).union(&d.filter(|r| r.1 % 2 == 1));
+                let mut j = joined.collect();
+                j.sort_unstable();
+                (
+                    sorted(repart.collect()),
+                    sorted(reduced.collect()),
+                    sorted(mapped.collect()),
+                    j,
+                    sorted(unioned.collect()),
+                    sorted(d.prune_lookup(&[0, 3, 5]).collect()),
+                    sorted(d.lookup(3)),
+                )
+            };
+            if run(&on) != run(&off) {
+                return Err("elision changed an operator's contents".into());
+            }
+            Ok(())
+        },
+    );
+    // And elision really was exercised: the enabled engine skipped
+    // shuffles, the disabled one never did.
+    assert!(on.metrics().snapshot().shuffles_elided > 0);
+    assert_eq!(off.metrics().snapshot().shuffles_elided, 0);
+}
+
+#[test]
 fn metrics_monotone_and_job_counted() {
     let s = sc();
     let rows: Vec<(u64, u64)> = (0..500).map(|i| (i % 13, i)).collect();

@@ -6,7 +6,9 @@ use provspark::config::ClusterConfig;
 use provspark::minispark::MiniSpark;
 use provspark::proptest_lite::{run_prop, PropCfg};
 use provspark::provenance::model::{ProvTriple, Trace};
-use provspark::provenance::wcc::{wcc_driver, wcc_minispark};
+use provspark::provenance::wcc::{
+    wcc_driver, wcc_minispark, wcc_minispark_frontier, wcc_minispark_naive, UnionFind,
+};
 use provspark::util::ids::{AttrValueId, EntityId, OpId};
 use provspark::util::rng::Pcg64;
 
@@ -48,6 +50,76 @@ fn minispark_equals_driver() {
             } else {
                 Err(format!("labels differ: {} vs {} entries", a.len(), b.len()))
             }
+        },
+    );
+}
+
+#[test]
+fn frontier_equals_naive_and_shuffles_strictly_less() {
+    // The frontier (delta) loop and the naive full-reshuffle loop are the
+    // same fixpoint; on any non-empty trace the frontier must move
+    // strictly fewer rows (it never re-broadcasts unchanged labels).
+    let sc = MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() });
+    run_prop(
+        "wcc_frontier_eq_naive",
+        &PropCfg { cases: 16, ..Default::default() },
+        random_trace,
+        |trace| {
+            let oracle = wcc_driver(trace);
+
+            let before = sc.metrics().snapshot();
+            let (naive, naive_rounds) = wcc_minispark_naive(&sc, trace, 8);
+            let naive_shuffled = sc.metrics().snapshot().since(&before).rows_shuffled;
+
+            let before = sc.metrics().snapshot();
+            let (frontier, frontier_rounds) = wcc_minispark_frontier(&sc, trace, 8);
+            let frontier_shuffled = sc.metrics().snapshot().since(&before).rows_shuffled;
+
+            if naive != oracle {
+                return Err("naive labels != union-find oracle".into());
+            }
+            if frontier != oracle {
+                return Err("frontier labels != union-find oracle".into());
+            }
+            if frontier_shuffled >= naive_shuffled {
+                return Err(format!(
+                    "frontier shuffled {frontier_shuffled} rows \
+                     (rounds={frontier_rounds}), naive {naive_shuffled} \
+                     (rounds={naive_rounds})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn union_find_min_labels_are_component_minima() {
+    // Micro-assert for the single-pass `UnionFind::min_labels`: its labels
+    // must be exactly the component minima the dense driver produces, and
+    // each label must be a self-labelled member of its own component.
+    run_prop(
+        "uf_min_labels_minima",
+        &PropCfg { cases: 20, ..Default::default() },
+        random_trace,
+        |trace| {
+            let mut uf = UnionFind::new();
+            for t in &trace.triples {
+                uf.union(t.src.raw(), t.dst.raw());
+            }
+            let labels = uf.min_labels();
+            if labels != wcc_driver(trace) {
+                return Err("min_labels != wcc_driver".into());
+            }
+            for (&n, &l) in &labels {
+                if l > n {
+                    return Err(format!("label {l} > node {n}: not a minimum"));
+                }
+                if labels.get(&l) != Some(&l) {
+                    return Err(format!("label {l} is not a self-labelled node"));
+                }
+            }
+            Ok(())
         },
     );
 }
