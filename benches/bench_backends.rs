@@ -75,7 +75,8 @@ fn main() -> anyhow::Result<()> {
         ecfg.prov.closure_backend = backend.parse()?;
         ecfg.prov.tau = usize::MAX; // force the driver-side branch
         let sc = MiniSpark::new(ecfg.cluster.clone());
-        let engines = EngineSet::build(&sc, &trace, &pre, &ecfg)?;
+        let engines =
+            EngineSet::build(&sc, Arc::clone(&trace), Arc::clone(&pre), &ecfg)?;
         let stats = run_bench(&bcfg, |_| {
             for &q in &sel.items {
                 let _ = engines.csprov.query(q);

@@ -1,8 +1,11 @@
 //! Regenerates Tables 10, 11 and 12: average query latency per engine
-//! (RQ / CCProv / CSProv) per query class, across scaled datasets.
+//! (RQ / CCProv / CSProv) per query class, across scaled datasets — plus a
+//! batched-execution section comparing `ProvSession::query_many` (requests
+//! fanned across the worker pool) against one-at-a-time execution, with the
+//! per-query `QueryStats` data volumes that explain the latency gaps.
 //!
 //! ```bash
-//! cargo bench --bench bench_queries                  # default: divisor 10, ×1,4,9
+//! cargo bench --bench bench_queries                  # default: divisor 10, ×1,4
 //! cargo bench --bench bench_queries -- --divisor 10 --replications 1,9,24,48
 //! cargo bench --bench bench_queries -- --classes lc-ll --count 10
 //! ```
@@ -12,7 +15,11 @@
 //! finishes on one box — pass the full list to reproduce the whole sweep.
 
 use provspark::cli::Args;
-use provspark::harness::{query_table, ExperimentConfig, QueryClass};
+use provspark::harness::{
+    query_table, select_queries, EngineRouter, ExperimentConfig, QueryClass,
+};
+use provspark::provenance::query::QueryRequest;
+use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env(&["bench"])?;
@@ -37,13 +44,52 @@ fn main() -> anyhow::Result<()> {
         cfg.replications, cfg.queries_per_class, cfg.engine.prov.tau,
         cfg.engine.cluster.job_overhead_us,
     );
-    for class in classes {
+    for &class in &classes {
         let (table, raw) = query_table(class, &cfg)?;
         table.print();
         // Machine-readable line per scale for EXPERIMENTS.md.
         for (label, rq, cc, cs) in raw {
             println!("RAW {class} {label} rq={rq:.4}s ccprov={cc:.4}s csprov={cs:.4}s");
         }
+    }
+
+    // --- Batched execution + per-query data volumes (smallest scale) ------
+    let session = cfg.build_session(cfg.replications[0])?;
+    for &class in &classes {
+        let sel = select_queries(
+            session.trace(),
+            session.pre(),
+            class,
+            cfg.queries_per_class,
+            divisor,
+            cfg.seed,
+        )?;
+        let reqs: Vec<QueryRequest> =
+            sel.items.iter().map(|&q| QueryRequest::new(q)).collect();
+
+        let t0 = Instant::now();
+        let sequential: Vec<_> =
+            reqs.iter().map(|r| session.execute_on(EngineRouter::Auto, r)).collect();
+        let seq_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let batched = session.query_many_on(EngineRouter::Auto, &reqs);
+        let batch_s = t0.elapsed().as_secs_f64();
+
+        for (a, b) in sequential.iter().zip(&batched) {
+            assert_eq!(a.lineage, b.lineage, "batched lineage must match sequential");
+        }
+        let avg = |f: &dyn Fn(&provspark::provenance::query::QueryStats) -> u64| -> u64 {
+            batched.iter().map(|r| f(&r.stats)).sum::<u64>() / batched.len() as u64
+        };
+        println!(
+            "RAW batch {class} n={} sequential={seq_s:.4}s batched={batch_s:.4}s \
+             speedup={:.2}x avg_parts={} avg_rows={}",
+            reqs.len(),
+            seq_s / batch_s.max(1e-9),
+            avg(&|s| s.partitions_scanned),
+            avg(&|s| s.rows_examined),
+        );
     }
     Ok(())
 }

@@ -5,14 +5,17 @@
 //! to the driver (paying the transfer, winning on small volumes — which is
 //! the paper's point, and counter-productive on large components).
 //!
+//! τ is swept per *request* (`QueryRequest::with_tau`) over one shared
+//! `ProvSession` — the engines are built once, not once per τ.
+//!
 //! ```bash
 //! cargo bench --bench bench_tau_sweep -- --divisor 10 [--taus 0,1000,100000]
 //! ```
 
 use provspark::benchkit::Table;
 use provspark::cli::Args;
-use provspark::harness::{select_queries, EngineSet, ExperimentConfig, QueryClass};
-use provspark::minispark::MiniSpark;
+use provspark::harness::{select_queries, EngineRouter, ExperimentConfig, QueryClass};
+use provspark::provenance::query::QueryRequest;
 use provspark::util::fmt::human_duration;
 use std::time::{Duration, Instant};
 
@@ -28,29 +31,31 @@ fn main() -> anyhow::Result<()> {
     cfg.engine.apply_args(&args)?;
     cfg.queries_per_class = args.get_parsed_or("count", 5)?;
 
-    let (trace, pre) = cfg.build_scale(1);
+    let session = cfg.build_session(1)?;
     let mut t = Table::new(
         "τ sweep — avg query latency (CCProv | CSProv)",
         &["τ", "SC-SL", "LC-SL", "LC-LL"],
     );
     for tau in taus {
-        let mut ecfg = cfg.engine.clone();
-        ecfg.prov.tau = tau;
-        let sc = MiniSpark::new(ecfg.cluster.clone());
-        let engines = EngineSet::build(&sc, &trace, &pre, &ecfg)?;
         let mut cells = vec![if tau >= 1_000_000_000 { "∞".into() } else { tau.to_string() }];
         for class in [QueryClass::ScSl, QueryClass::LcSl, QueryClass::LcLl] {
-            let sel =
-                select_queries(&trace, &pre, class, cfg.queries_per_class, divisor, cfg.seed)?;
-            let avg = |f: &dyn Fn(u64) -> provspark::provenance::query::Lineage| {
+            let sel = select_queries(
+                session.trace(),
+                session.pre(),
+                class,
+                cfg.queries_per_class,
+                divisor,
+                cfg.seed,
+            )?;
+            let avg = |router: EngineRouter| -> Duration {
                 let t0 = Instant::now();
                 for &q in &sel.items {
-                    let _ = f(q);
+                    let _ = session.execute_on(router, &QueryRequest::new(q).with_tau(tau));
                 }
                 t0.elapsed() / sel.items.len() as u32
             };
-            let cc: Duration = avg(&|q| engines.ccprov.query(q));
-            let cs: Duration = avg(&|q| engines.csprov.query(q));
+            let cc = avg(EngineRouter::CcProv);
+            let cs = avg(EngineRouter::CsProv);
             cells.push(format!("{} | {}", human_duration(cc), human_duration(cs)));
             println!(
                 "RAW tau={tau} class={class} ccprov={:.4}s csprov={:.4}s",

@@ -10,11 +10,11 @@
 
 use provspark::benchkit::Table;
 use provspark::cli::Args;
-use provspark::harness::{select_queries, EngineSet, ExperimentConfig, QueryClass};
-use provspark::minispark::MiniSpark;
+use provspark::harness::{select_queries, ExperimentConfig, ProvSession, QueryClass};
 use provspark::provenance::pipeline::{preprocess, WccImpl};
 use provspark::util::fmt::{human_count, human_duration};
 use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     let (trace, graph, splits) =
         generate(&GeneratorConfig { scale_divisor: divisor, ..Default::default() });
+    let trace = Arc::new(trace);
     let mut cfg = ExperimentConfig::for_divisor(divisor);
     cfg.engine.apply_args(&args)?;
 
@@ -42,9 +43,10 @@ fn main() -> anyhow::Result<()> {
             println!("theta={theta}: no component reaches θ — CSProv ≡ CCProv; skipping row");
             continue;
         }
-        let sc = MiniSpark::new(cfg.engine.cluster.clone());
-        let engines = EngineSet::build(&sc, &trace, &pre, &cfg.engine)?;
+        let pre = Arc::new(pre);
+        let session = ProvSession::new(&cfg.engine, Arc::clone(&trace), Arc::clone(&pre))?;
         let sel = select_queries(&trace, &pre, QueryClass::LcLl, count, divisor, cfg.seed)?;
+        let engines = session.engines();
         let avg_vol: usize = sel
             .items
             .iter()

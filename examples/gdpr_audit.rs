@@ -17,15 +17,16 @@
 //! ```
 
 use provspark::config::EngineConfig;
-use provspark::harness::{select_queries, EngineSet, QueryClass};
-use provspark::minispark::MiniSpark;
+use provspark::harness::{select_queries, ProvSession, QueryClass};
 use provspark::provenance::model::ProvTriple;
 use provspark::provenance::pipeline::{preprocess, WccImpl};
 use provspark::provenance::query::driver_rq::{AncestorClosure, NativeClosure};
+use provspark::provenance::query::QueryRequest;
 use provspark::util::fmt::human_duration;
 use provspark::util::ids::AttrValueId;
 use provspark::workflow::generator::{generate, GeneratorConfig};
 use rustc_hash::FxHashMap;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let divisor = 50;
@@ -34,21 +35,24 @@ fn main() -> anyhow::Result<()> {
     let theta = (25_000 / divisor).max(50);
     let pre = preprocess(&trace, &graph, &splits, theta, 100, WccImpl::Driver);
     let cfg = EngineConfig::default();
-    let sc = MiniSpark::new(cfg.cluster.clone());
-    let engines = EngineSet::build(&sc, &trace, &pre, &cfg)?;
+    let session = ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre))?;
+    let (trace, pre) = (Arc::clone(session.trace()), Arc::clone(session.pre()));
 
     // The "flagged" value: a deep-lineage item in the largest component.
     let flagged = select_queries(&trace, &pre, QueryClass::LcLl, 1, divisor, 7)?.items[0];
     println!("audit: flagged value {} ({})", flagged, AttrValueId(flagged));
 
-    // 1. Lineage (CSProv): who contributed to this value?
-    let (lineage, dur) = provspark::util::timer::time_it(|| engines.csprov.query(flagged));
+    // 1. Lineage: who contributed to this value? The Auto router sends a
+    //    large-component item to CSProv; the stats prove the minimal touch.
+    let resp = session.execute(&QueryRequest::new(flagged));
+    let lineage = resp.lineage.clone();
     println!(
         "lineage: {} ancestors across {} transformations ({})",
         lineage.ancestors.len(),
         lineage.transformation_count(),
-        human_duration(dur)
+        human_duration(resp.stats.total_time())
     );
+    println!("  via {}", resp.stats.summary());
 
     // 2. Suspect transformation: the op on the edges *into* the flagged
     //    value (the last derivation step), plus a contribution ranking.

@@ -8,10 +8,10 @@
 //! ```
 
 use provspark::cli::Args;
-use provspark::harness::{drilldown_report, select_queries, EngineSet, QueryClass};
-use provspark::minispark::MiniSpark;
+use provspark::harness::{drilldown_report, select_queries, ProvSession, QueryClass};
 use provspark::provenance::pipeline::{preprocess, WccImpl};
 use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env(&[])?;
@@ -21,13 +21,12 @@ fn main() -> anyhow::Result<()> {
     let theta = (25_000 / divisor).max(50);
     let pre = preprocess(&trace, &graph, &splits, theta, (1000 / divisor).max(20), WccImpl::Driver);
     let cfg = provspark::config::EngineConfig::default();
-    let sc = MiniSpark::new(cfg.cluster.clone());
-    let engines = EngineSet::build(&sc, &trace, &pre, &cfg)?;
+    let session = ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre))?;
 
     for class in [QueryClass::ScSl, QueryClass::LcSl, QueryClass::LcLl] {
-        let sel = select_queries(&trace, &pre, class, 1, divisor, 42)?;
+        let sel = select_queries(session.trace(), session.pre(), class, 1, divisor, 42)?;
         println!("--- {class} (ancestors in [{}, {}]) ---", sel.band.0, sel.band.1);
-        print!("{}", drilldown_report(&trace, &pre, &engines, sel.items[0]));
+        print!("{}", drilldown_report(&session, sel.items[0]));
         println!();
     }
     println!(

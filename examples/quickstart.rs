@@ -1,30 +1,42 @@
 //! Quickstart: the whole framework on a tiny synthetic trace, in memory.
 //!
 //! ```bash
-//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart [-- --divisor 500]
 //! ```
 //!
 //! Generates a miniature curation-workflow provenance trace, preprocesses
-//! it (WCC → Algorithm 3 partitioning → set dependencies), and answers the
-//! same lineage query with all three engines — RQ, CCProv, CSProv —
-//! showing they agree while touching very different data volumes.
+//! it (WCC → Algorithm 3 partitioning → set dependencies), opens a
+//! [`ProvSession`] over the result and answers the same lineage query with
+//! all three engines through the uniform `ProvenanceEngine` interface —
+//! showing they agree while their `QueryStats` reveal very different data
+//! volumes. Finishes with the `Auto` router and a batched `query_many`.
 
 use provspark::config::EngineConfig;
-use provspark::harness::EngineSet;
-use provspark::minispark::MiniSpark;
-use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::harness::{select_queries, EngineRouter, ProvSession, QueryClass};
+use provspark::provenance::query::QueryRequest;
 use provspark::util::fmt::human_duration;
 use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Generate a small trace (~1/500 of the paper's base).
-    let gen = GeneratorConfig { scale_divisor: 500, ..Default::default() };
+    let args = provspark::cli::Args::parse_env(&[])?;
+    let divisor: usize = args.get_parsed_or("divisor", 500)?;
+
+    // 1. Generate a small trace (default ~1/500 of the paper's base).
+    let gen = GeneratorConfig { scale_divisor: divisor, ..Default::default() };
     let (trace, graph, splits) = generate(&gen);
     println!("trace: {} triples, {} nodes", trace.len(), trace.node_count());
 
     // 2. Preprocess: components, sets (θ scaled), set dependencies.
-    let theta = (25_000 / gen.scale_divisor.max(1)).max(400);
-    let pre = preprocess(&trace, &graph, &splits, theta, 100, WccImpl::Driver);
+    let theta = (25_000 / divisor.max(1)).max(50);
+    let pre = provspark::provenance::pipeline::preprocess(
+        &trace,
+        &graph,
+        &splits,
+        theta,
+        100,
+        provspark::provenance::pipeline::WccImpl::Driver,
+    );
     println!(
         "preprocess: {} components ({} large), {} sets, {} set-deps",
         pre.component_count,
@@ -33,40 +45,57 @@ fn main() -> anyhow::Result<()> {
         pre.set_deps.len()
     );
 
-    // 3. Build the engines (embedded minispark cluster).
+    // 3. Open a query session. The session owns all three engines over the
+    //    Arc-shared data (no copies of the trace) and routes requests.
     let mut cfg = EngineConfig::default();
     cfg.prov.tau = 5_000; // collect-to-driver threshold
-    let sc = MiniSpark::new(cfg.cluster.clone());
-    let engines = EngineSet::build(&sc, &trace, &pre, &cfg)?;
+    let session = ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre))?;
 
     // 4. Query the lineage of a deep derived value in the largest component
-    //    (the LC-SL class of §4).
-    let q = provspark::harness::select_queries(
-        &trace,
-        &pre,
-        provspark::harness::QueryClass::LcSl,
-        1,
-        gen.scale_divisor,
-        42,
-    )?
-    .items[0];
-
-    for (name, f) in [
-        ("RQ    ", Box::new(|q| engines.rq.query(q)) as Box<dyn Fn(u64) -> _>),
-        ("CCProv", Box::new(|q| engines.ccprov.query(q))),
-        ("CSProv", Box::new(|q| engines.csprov.query(q))),
-    ] {
-        let before = sc.metrics().snapshot();
-        let (lineage, dur) = provspark::util::timer::time_it(|| f(q));
-        let delta = sc.metrics().snapshot().since(&before);
+    //    (the LC-SL class of §4) on every engine, via typed requests.
+    let q = select_queries(session.trace(), session.pre(), QueryClass::LcSl, 1, divisor, 42)?
+        .items[0];
+    let req = QueryRequest::new(q);
+    let mut first = None;
+    for router in [EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv] {
+        let resp = session.execute_on(router, &req);
         println!(
-            "{name}: {} ancestors via {} transformations in {:>8}  (rows scanned: {})",
-            lineage.ancestors.len(),
-            lineage.transformation_count(),
-            human_duration(dur),
-            delta.rows_scanned,
+            "{:6}: {} ancestors via {} transformations in {:>8}",
+            resp.stats.engine,
+            resp.lineage.ancestors.len(),
+            resp.lineage.transformation_count(),
+            human_duration(resp.stats.total_time()),
         );
+        println!("        {}", resp.stats.summary());
+        if let Some(prev) = &first {
+            assert_eq!(prev, &resp.lineage, "engines must agree");
+        } else {
+            first = Some(resp.lineage);
+        }
     }
-    println!("all engines agree; CSProv touches the least data. See DESIGN.md.");
+    println!("all engines agree; CSProv touches the least data.");
+
+    // 5. The Auto router sends each query to the cheapest engine, and
+    //    query_many fans a batch across the worker pool.
+    let auto = session.execute(&req);
+    println!("auto router picked: {}", auto.stats.engine);
+    let batch: Vec<QueryRequest> = select_queries(
+        session.trace(),
+        session.pre(),
+        QueryClass::ScSl,
+        3,
+        divisor,
+        7,
+    )?
+    .items
+    .iter()
+    .map(|&item| QueryRequest::new(item))
+    .collect();
+    let responses = session.query_many(&batch);
+    println!(
+        "batched {} SC-SL queries: engines used = {:?}",
+        responses.len(),
+        responses.iter().map(|r| r.stats.engine).collect::<Vec<_>>(),
+    );
     Ok(())
 }

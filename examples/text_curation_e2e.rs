@@ -17,8 +17,8 @@
 
 use provspark::cli::Args;
 use provspark::harness::{
-    component_census, drilldown_report, query_table, select_queries, table9, EngineSet,
-    ExperimentConfig, QueryClass,
+    component_census, drilldown_report, query_table, select_queries, table9,
+    ExperimentConfig, ProvSession, QueryClass,
 };
 use provspark::minispark::MiniSpark;
 use provspark::provenance::pipeline::{preprocess, WccImpl};
@@ -27,6 +27,7 @@ use provspark::runtime::{xla_wcc, XlaRuntime};
 use provspark::util::fmt::{human_count, human_duration};
 use provspark::util::timer::time_it;
 use provspark::workflow::generator::{generate, GeneratorConfig, TraceStats};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env(&[])?;
@@ -99,12 +100,10 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- 5. drill-down + headline -----------------------------------------
-    let ecfg = xcfg.engine.clone();
-    let sc2 = MiniSpark::new(ecfg.cluster.clone());
-    let engines = EngineSet::build(&sc2, &trace, &pre, &ecfg)?;
-    let sel = select_queries(&trace, &pre, QueryClass::LcLl, 1, divisor, 42)?;
+    let session = ProvSession::new(&xcfg.engine, Arc::new(trace), Arc::new(pre))?;
+    let sel = select_queries(session.trace(), session.pre(), QueryClass::LcLl, 1, divisor, 42)?;
     println!("\n[5] point-query drill-down (LC-LL):");
-    print!("{}", drilldown_report(&trace, &pre, &engines, sel.items[0]));
+    print!("{}", drilldown_report(&session, sel.items[0]));
 
     println!("\n=== headline (largest scale) ===");
     for (class, rq_x, cc_x) in headline {

@@ -51,8 +51,11 @@ impl Args {
                     let v = argv
                         .get(i + 1)
                         .ok_or_else(|| anyhow!("option --{body} expects a value"))?;
-                    if v.starts_with("--") {
-                        bail!("option --{body} expects a value, got {v}");
+                    if looks_like_option(v) {
+                        bail!(
+                            "option --{body} expects a value, got {v} \
+                             (use --{body}={v} if {v} really is the value)"
+                        );
                     }
                     a.opts.entry(body.to_string()).or_default().push(v.clone());
                     i += 1;
@@ -121,6 +124,22 @@ impl Args {
     }
 }
 
+/// True when a token begins a new option rather than serving as a value:
+/// any `--`-prefixed token, or a single-dash token like `-h`/`-x`. Negative
+/// numbers (`-5`, `-.5`) and a bare `-` (stdin convention) are values.
+/// `--key` must never silently swallow such a token — the parser errors
+/// instead, pointing at the `--key=value` form.
+fn looks_like_option(tok: &str) -> bool {
+    match tok.strip_prefix('-') {
+        None => false,
+        Some(rest) => match rest.as_bytes().first() {
+            None => false, // "-" alone
+            Some(b'-') => true,
+            Some(b) => !(b.is_ascii_digit() || *b == b'.'),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +177,29 @@ mod tests {
     fn option_missing_value_errors() {
         assert!(Args::parse(&argv("prog --key"), &[]).is_err());
         assert!(Args::parse(&argv("prog --key --other v"), &[]).is_err());
+    }
+
+    #[test]
+    fn option_never_swallows_option_like_tokens() {
+        // A following `--flag` — even a *known* boolean flag — must never be
+        // consumed as the value.
+        assert!(Args::parse(&argv("prog --key --verbose"), &["verbose"]).is_err());
+        assert!(Args::parse(&argv("prog --key --flag"), &[]).is_err());
+        // Single-dash option tokens are rejected too.
+        assert!(Args::parse(&argv("prog --key -h"), &[]).is_err());
+        assert!(Args::parse(&argv("prog --key -x"), &[]).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_and_dash_are_values() {
+        let a = Args::parse(&argv("prog --offset -5 --ratio -.5 --input -"), &[]).unwrap();
+        assert_eq!(a.get("offset"), Some("-5"));
+        assert_eq!(a.get_parsed_or("offset", 0i64).unwrap(), -5);
+        assert_eq!(a.get("ratio"), Some("-.5"));
+        assert_eq!(a.get("input"), Some("-"));
+        // The `=` form always works, even for option-like values.
+        let a = Args::parse(&argv("prog --key=--flag"), &[]).unwrap();
+        assert_eq!(a.get("key"), Some("--flag"));
     }
 
     #[test]

@@ -115,7 +115,10 @@ fn worker_loop(shared: Arc<Shared>) {
 /// Run `f(i, &items[i])` for every element with at most `parallelism`
 /// threads, returning outputs in input order. Panics in `f` propagate.
 ///
-/// Uses scoped threads (no `'static` bound on inputs or closure).
+/// Uses `std::thread::scope` (no `'static` bound on inputs or closure;
+/// no external scoped-thread crate — the build is offline). This is the
+/// fan-out substrate behind both `MiniSpark::run_job` and
+/// `ProvSession::query_many`.
 pub fn par_map_indexed<T, U, F>(items: &[T], parallelism: usize, f: F) -> Vec<U>
 where
     T: Sync,
@@ -133,9 +136,9 @@ where
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
     let out_ptr = SendPtr(out.as_mut_ptr());
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         for _ in 0..parallelism {
-            scope.spawn(|_| {
+            scope.spawn(|| {
                 let out_ptr = &out_ptr;
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -150,8 +153,9 @@ where
                 }
             });
         }
-    })
-    .expect("par_map worker panicked");
+        // std scope joins all spawned threads on exit and re-panics if a
+        // worker panicked — the propagation guarantee documented above.
+    });
     out.into_iter().map(|v| v.expect("slot filled")).collect()
 }
 

@@ -1,18 +1,26 @@
 //! Engine assembly: build the three query engines from one preprocessed
 //! trace, with the configured τ and closure backend.
+//!
+//! [`EngineSet::build`] takes the trace and preprocessed data behind `Arc`s
+//! and hands the engine builders borrowed slices, which they partition in a
+//! single pass — no wholesale `Vec` clones anywhere on the construction
+//! path. The `(node, csid)` index CSProv resolves items against is derived
+//! here exactly once per set.
 
 use crate::config::{Backend, EngineConfig};
 use crate::minispark::MiniSpark;
 use crate::provenance::model::Trace;
 use crate::provenance::pipeline::Preprocessed;
 use crate::provenance::query::driver_rq::{AncestorClosure, NativeClosure};
-use crate::provenance::query::{CcProvEngine, CsProvEngine, RqEngine};
+use crate::provenance::query::{CcProvEngine, CsProvEngine, ProvenanceEngine, RqEngine};
 use crate::runtime::{XlaClosure, XlaRuntime};
 use anyhow::Result;
 use std::sync::Arc;
 
-/// All three engines over one dataset.
+/// All three engines over one dataset, sharing the source data by `Arc`.
 pub struct EngineSet {
+    trace: Arc<Trace>,
+    pre: Arc<Preprocessed>,
     pub rq: RqEngine,
     pub ccprov: CcProvEngine,
     pub csprov: CsProvEngine,
@@ -31,29 +39,46 @@ pub fn make_closure(cfg: &EngineConfig) -> Result<Arc<dyn AncestorClosure>> {
 }
 
 impl EngineSet {
-    /// Build RQ + CCProv + CSProv from a preprocessed trace.
+    /// Build RQ + CCProv + CSProv from a preprocessed trace. The set keeps
+    /// the `Arc`s alive for its engines and for callers needing the source
+    /// data ([`trace`](Self::trace) / [`pre`](Self::pre)).
     pub fn build(
         sc: &MiniSpark,
-        trace: &Trace,
-        pre: &Preprocessed,
+        trace: Arc<Trace>,
+        pre: Arc<Preprocessed>,
         cfg: &EngineConfig,
     ) -> Result<Self> {
         let np = cfg.cluster.default_partitions;
         let tau = cfg.prov.tau;
         let closure = make_closure(cfg)?;
-        let rq = RqEngine::new(sc, trace, np);
-        let ccprov = CcProvEngine::new(sc, pre.cc_triples.clone(), np, tau)
-            .with_closure(Arc::clone(&closure));
-        let csprov = CsProvEngine::new(
-            sc,
-            pre.cs_triples.clone(),
-            pre.cs_of.iter().map(|(&n, &c)| (n, c)).collect(),
-            pre.set_deps.clone(),
-            np,
-            tau,
-        )
-        .with_closure(closure);
-        Ok(Self { rq, ccprov, csprov })
+        let rq = RqEngine::new(sc, &trace.triples, np);
+        let ccprov =
+            CcProvEngine::new(sc, &pre.cc_triples, np, tau).with_closure(Arc::clone(&closure));
+        // The (node, csid) index is derived from `cs_of` once, here.
+        let node_set: Vec<(u64, u64)> = pre.cs_of.iter().map(|(&n, &c)| (n, c)).collect();
+        let csprov = CsProvEngine::new(sc, &pre.cs_triples, node_set, &pre.set_deps, np, tau)
+            .with_closure(closure);
+        Ok(Self { trace, pre, rq, ccprov, csprov })
+    }
+
+    /// The source trace the engines were built from.
+    pub fn trace(&self) -> &Arc<Trace> {
+        &self.trace
+    }
+
+    /// The preprocessed data the engines were built from.
+    pub fn pre(&self) -> &Arc<Preprocessed> {
+        &self.pre
+    }
+
+    /// The engines as trait objects, in `(name, engine)` pairs — what the
+    /// cross-engine equivalence tests and session routing iterate over.
+    pub fn as_dyn(&self) -> [(&'static str, &dyn ProvenanceEngine); 3] {
+        [
+            (self.rq.name(), &self.rq),
+            (self.ccprov.name(), &self.ccprov),
+            (self.csprov.name(), &self.csprov),
+        ]
     }
 }
 
@@ -61,6 +86,7 @@ impl EngineSet {
 mod tests {
     use super::*;
     use crate::provenance::pipeline::{preprocess, WccImpl};
+    use crate::provenance::query::QueryRequest;
     use crate::workflow::generator::{generate, GeneratorConfig};
 
     #[test]
@@ -72,10 +98,17 @@ mod tests {
         cfg.cluster.job_overhead_us = 0;
         cfg.prov.tau = 50;
         let sc = MiniSpark::new(cfg.cluster.clone());
-        let set = EngineSet::build(&sc, &trace, &pre, &cfg).unwrap();
+        let trace = Arc::new(trace);
+        let set = EngineSet::build(&sc, Arc::clone(&trace), Arc::new(pre), &cfg).unwrap();
         let q = trace.triples[trace.len() / 3].dst.raw();
         let a = set.rq.query(q);
         assert_eq!(set.ccprov.query(q), a);
         assert_eq!(set.csprov.query(q), a);
+        // Trait objects answer the same request identically.
+        for (name, engine) in set.as_dyn() {
+            let resp = engine.execute(&QueryRequest::new(q));
+            assert_eq!(resp.lineage, a, "{name}");
+            assert_eq!(resp.stats.engine, name);
+        }
     }
 }

@@ -3,16 +3,17 @@
 //! class and scale) and the §4-Discussion point-query drill-down.
 
 use super::classes::{select_queries, QueryClass};
-use super::engines::EngineSet;
+use super::session::{EngineRouter, ProvSession};
 use crate::benchkit::Table;
 use crate::config::EngineConfig;
-use crate::minispark::MiniSpark;
 use crate::provenance::model::Trace;
 use crate::provenance::pipeline::{preprocess, Preprocessed, WccImpl};
+use crate::provenance::query::QueryRequest;
 use crate::util::fmt::{human_count, human_duration};
 use crate::workflow::generator::{generate, GeneratorConfig};
 use anyhow::Result;
 use rustc_hash::FxHashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Knobs for the table drivers.
@@ -59,8 +60,9 @@ impl ExperimentConfig {
         }
     }
 
-    /// Generate + preprocess one scale point.
-    pub fn build_scale(&self, replication: usize) -> (Trace, Preprocessed) {
+    /// Generate + preprocess one scale point, `Arc`-shared so sessions and
+    /// reports can reference the data without copying it.
+    pub fn build_scale(&self, replication: usize) -> (Arc<Trace>, Arc<Preprocessed>) {
         let (trace, g, splits) = generate(&GeneratorConfig {
             seed: self.seed,
             scale_divisor: self.divisor,
@@ -68,7 +70,14 @@ impl ExperimentConfig {
             ..Default::default()
         });
         let pre = preprocess(&trace, &g, &splits, self.theta, self.big_threshold, WccImpl::Driver);
-        (trace, pre)
+        (Arc::new(trace), Arc::new(pre))
+    }
+
+    /// [`build_scale`](Self::build_scale) plus a ready [`ProvSession`] over
+    /// the scale point.
+    pub fn build_session(&self, replication: usize) -> Result<ProvSession> {
+        let (trace, pre) = self.build_scale(replication);
+        ProvSession::new(&self.engine, trace, pre)
     }
 }
 
@@ -113,23 +122,22 @@ pub fn query_table(
     let mut raw = Vec::new();
 
     for &rep in &cfg.replications {
-        let (trace, pre) = cfg.build_scale(rep);
+        let session = cfg.build_session(rep)?;
+        let (trace, pre) = (session.trace(), session.pre());
         let elements = trace.len() + pre.cc_of.len();
-        let sc = MiniSpark::new(cfg.engine.cluster.clone());
-        let engines = EngineSet::build(&sc, &trace, &pre, &cfg.engine)?;
         let sel =
-            select_queries(&trace, &pre, class, cfg.queries_per_class, cfg.divisor, cfg.seed)?;
+            select_queries(trace, pre, class, cfg.queries_per_class, cfg.divisor, cfg.seed)?;
 
-        let avg = |f: &dyn Fn(u64) -> crate::provenance::query::Lineage| -> f64 {
+        let avg = |router: EngineRouter| -> f64 {
             let t0 = Instant::now();
             for &q in &sel.items {
-                let _ = f(q);
+                let _ = session.execute_on(router, &QueryRequest::new(q));
             }
             t0.elapsed().as_secs_f64() / sel.items.len() as f64
         };
-        let rq_s = avg(&|q| engines.rq.query(q));
-        let cc_s = avg(&|q| engines.ccprov.query(q));
-        let cs_s = avg(&|q| engines.csprov.query(q));
+        let rq_s = avg(EngineRouter::Rq);
+        let cc_s = avg(EngineRouter::CcProv);
+        let cs_s = avg(EngineRouter::CsProv);
 
         let label = format!("×{rep}");
         t.row(vec![
@@ -146,12 +154,10 @@ pub fn query_table(
 
 /// §4-Discussion drill-down for one query: set, set-lineage size, and the
 /// minimal volume CSProv recurses over vs. what CCProv / RQ would process.
-pub fn drilldown_report(
-    trace: &Trace,
-    pre: &Preprocessed,
-    engines: &EngineSet,
-    q: u64,
-) -> String {
+pub fn drilldown_report(session: &ProvSession, q: u64) -> String {
+    let trace = session.trace();
+    let pre = session.pre();
+    let engines = session.engines();
     let cc = pre.cc_of.get(&q).copied();
     let cs = pre.cs_of.get(&q).copied();
     let mut out = String::new();
@@ -163,7 +169,8 @@ pub fn drilldown_report(
     let comp_edges = trace.triples.iter().filter(|t| pre.cc_of[&t.src.raw()] == cc).count();
     let set_lineage = engines.csprov.set_lineage(cs);
     let volume = engines.csprov.lineage_volume(q);
-    let lineage = engines.csprov.query(q);
+    let resp = session.execute_on(EngineRouter::CsProv, &QueryRequest::new(q));
+    let lineage = &resp.lineage;
     out.push_str(&format!("component       : {cc} ({} triples)\n", human_count(comp_edges as u64)));
     out.push_str(&format!("connected set   : {cs}\n"));
     out.push_str(&format!("set-lineage     : {} sets\n", set_lineage.len()));
@@ -179,6 +186,7 @@ pub fn drilldown_report(
         lineage.triples.len(),
         lineage.transformation_count(),
     ));
+    out.push_str(&format!("query stats     : {}\n", resp.stats.summary()));
     out
 }
 
@@ -247,12 +255,12 @@ mod tests {
     #[test]
     fn drilldown_mentions_volumes() {
         let cfg = tiny_cfg();
-        let (trace, pre) = cfg.build_scale(1);
-        let sc = MiniSpark::new(cfg.engine.cluster.clone());
-        let engines = EngineSet::build(&sc, &trace, &pre, &cfg.engine).unwrap();
-        let sel = select_queries(&trace, &pre, QueryClass::LcSl, 1, 1000, 1).unwrap();
-        let report = drilldown_report(&trace, &pre, &engines, sel.items[0]);
+        let session = cfg.build_session(1).unwrap();
+        let sel =
+            select_queries(session.trace(), session.pre(), QueryClass::LcSl, 1, 1000, 1).unwrap();
+        let report = drilldown_report(&session, sel.items[0]);
         assert!(report.contains("CSProv recurses"), "{report}");
+        assert!(report.contains("query stats"), "{report}");
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! Experiment harness: query-class selection (§4 "Provenance Queries"),
-//! engine assembly, and the drivers that regenerate every table of the
-//! paper's evaluation (Tables 9–12 plus the Discussion drill-downs).
+//! engine assembly, the [`ProvSession`] query service (routing + batched
+//! execution), and the drivers that regenerate every table of the paper's
+//! evaluation (Tables 9–12 plus the Discussion drill-downs).
 
 pub mod classes;
 pub mod engines;
 pub mod experiments;
+pub mod session;
 
 pub use classes::{select_queries, QueryClass};
 pub use engines::EngineSet;
 pub use experiments::{
     component_census, drilldown_report, query_table, table9, ExperimentConfig,
 };
+pub use session::{EngineRouter, ProvSession};

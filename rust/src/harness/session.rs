@@ -1,0 +1,237 @@
+//! `ProvSession` — the query service facade the north-star production
+//! system grows from: one object owning the three engines over `Arc`-shared
+//! data, a routing policy picking the cheapest engine per query, and
+//! batched execution fanned across the `exec` worker threads.
+
+use super::engines::EngineSet;
+use crate::config::EngineConfig;
+use crate::exec::par_map_indexed;
+use crate::minispark::MiniSpark;
+use crate::provenance::model::Trace;
+use crate::provenance::pipeline::Preprocessed;
+use crate::provenance::query::{ProvenanceEngine, QueryRequest, QueryResponse};
+use anyhow::Result;
+use rustc_hash::FxHashSet;
+use std::sync::Arc;
+
+/// Which engine answers a request.
+///
+/// `Auto` routes on data shape, using component size from [`Preprocessed`]:
+/// items in a *large* (Algorithm 3-partitioned) component go to CSProv,
+/// whose set-lineage pruning is what makes those queries real-time; items
+/// in small components go to CCProv (their component is a single set, so
+/// CSProv would reduce to CCProv anyway, §2.3); unknown items go to CSProv,
+/// whose node-index miss is the cheapest rejection. `Auto` never picks RQ —
+/// the baseline exists to be measured against, not to serve traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineRouter {
+    Rq,
+    CcProv,
+    CsProv,
+    #[default]
+    Auto,
+}
+
+impl std::str::FromStr for EngineRouter {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "rq" => Ok(EngineRouter::Rq),
+            "ccprov" => Ok(EngineRouter::CcProv),
+            "csprov" => Ok(EngineRouter::CsProv),
+            "auto" => Ok(EngineRouter::Auto),
+            other => anyhow::bail!("unknown engine {other:?} (rq|ccprov|csprov|auto)"),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineRouter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EngineRouter::Rq => "rq",
+            EngineRouter::CcProv => "ccprov",
+            EngineRouter::CsProv => "csprov",
+            EngineRouter::Auto => "auto",
+        })
+    }
+}
+
+/// A query session: the three engines behind one routed, batchable front.
+pub struct ProvSession {
+    sc: MiniSpark,
+    engines: EngineSet,
+    router: EngineRouter,
+    /// Component ids that were Algorithm 3-partitioned (the `Auto` key).
+    large: FxHashSet<u64>,
+}
+
+impl ProvSession {
+    /// Open a session on its own minispark context.
+    pub fn new(cfg: &EngineConfig, trace: Arc<Trace>, pre: Arc<Preprocessed>) -> Result<Self> {
+        let sc = MiniSpark::new(cfg.cluster.clone());
+        Self::with_context(&sc, cfg, trace, pre)
+    }
+
+    /// Open a session on an existing context (shares its worker pool,
+    /// metrics and config).
+    pub fn with_context(
+        sc: &MiniSpark,
+        cfg: &EngineConfig,
+        trace: Arc<Trace>,
+        pre: Arc<Preprocessed>,
+    ) -> Result<Self> {
+        let engines = EngineSet::build(sc, trace, pre, cfg)?;
+        let large: FxHashSet<u64> =
+            engines.pre().large_components.iter().map(|&(cc, _, _)| cc).collect();
+        Ok(Self { sc: sc.clone(), engines, router: EngineRouter::Auto, large })
+    }
+
+    /// Set the default routing policy (builder-style).
+    pub fn with_router(mut self, router: EngineRouter) -> Self {
+        self.router = router;
+        self
+    }
+
+    pub fn router(&self) -> EngineRouter {
+        self.router
+    }
+
+    pub fn context(&self) -> &MiniSpark {
+        &self.sc
+    }
+
+    pub fn engines(&self) -> &EngineSet {
+        &self.engines
+    }
+
+    pub fn trace(&self) -> &Arc<Trace> {
+        self.engines.trace()
+    }
+
+    pub fn pre(&self) -> &Arc<Preprocessed> {
+        self.engines.pre()
+    }
+
+    /// Resolve a routing policy for one item to a concrete engine.
+    pub fn resolve(&self, router: EngineRouter, item: u64) -> &dyn ProvenanceEngine {
+        match router {
+            EngineRouter::Rq => &self.engines.rq,
+            EngineRouter::CcProv => &self.engines.ccprov,
+            EngineRouter::CsProv => &self.engines.csprov,
+            EngineRouter::Auto => match self.engines.pre().cc_of.get(&item) {
+                Some(cc) if self.large.contains(cc) => &self.engines.csprov,
+                Some(_) => &self.engines.ccprov,
+                None => &self.engines.csprov,
+            },
+        }
+    }
+
+    /// Answer one request with the session's default router.
+    pub fn execute(&self, req: &QueryRequest) -> QueryResponse {
+        self.execute_on(self.router, req)
+    }
+
+    /// Answer one request with an explicit routing policy.
+    pub fn execute_on(&self, router: EngineRouter, req: &QueryRequest) -> QueryResponse {
+        self.resolve(router, req.item).execute(req)
+    }
+
+    /// Answer a batch concurrently on the `exec` worker threads (one logical
+    /// worker per configured executor), preserving request order. Each
+    /// response's [`QueryStats`](crate::provenance::query::QueryStats) is
+    /// still attributed to its own request — the per-query counters don't
+    /// interleave the way the engine-wide metrics do under concurrency.
+    pub fn query_many(&self, reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+        self.query_many_on(self.router, reqs)
+    }
+
+    /// [`query_many`](Self::query_many) with an explicit routing policy.
+    pub fn query_many_on(
+        &self,
+        router: EngineRouter,
+        reqs: &[QueryRequest],
+    ) -> Vec<QueryResponse> {
+        let parallelism = self.sc.config().executors.max(1);
+        par_map_indexed(reqs, parallelism, |_, req| self.execute_on(router, req))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provenance::pipeline::{preprocess, WccImpl};
+    use crate::workflow::generator::{generate, GeneratorConfig};
+
+    fn session(tau: usize) -> ProvSession {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let mut cfg = EngineConfig::default();
+        cfg.cluster.job_overhead_us = 0;
+        cfg.prov.tau = tau;
+        ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre)).unwrap()
+    }
+
+    #[test]
+    fn router_parses_and_displays() {
+        for (s, r) in [
+            ("rq", EngineRouter::Rq),
+            ("ccprov", EngineRouter::CcProv),
+            ("CSPROV", EngineRouter::CsProv),
+            ("auto", EngineRouter::Auto),
+        ] {
+            assert_eq!(s.parse::<EngineRouter>().unwrap(), r);
+        }
+        assert!("spark".parse::<EngineRouter>().is_err());
+        assert_eq!(EngineRouter::Auto.to_string(), "auto");
+    }
+
+    #[test]
+    fn auto_routes_by_component_size() {
+        let s = session(1000);
+        let pre = Arc::clone(s.pre());
+        let large: FxHashSet<u64> =
+            pre.large_components.iter().map(|&(cc, _, _)| cc).collect();
+        let lc_item = s
+            .trace()
+            .triples
+            .iter()
+            .map(|t| t.dst.raw())
+            .find(|n| large.contains(&pre.cc_of[n]))
+            .expect("large-component item");
+        let sc_item = s
+            .trace()
+            .triples
+            .iter()
+            .map(|t| t.dst.raw())
+            .find(|n| !large.contains(&pre.cc_of[n]))
+            .expect("small-component item");
+        assert_eq!(s.resolve(EngineRouter::Auto, lc_item).name(), "csprov");
+        assert_eq!(s.resolve(EngineRouter::Auto, sc_item).name(), "ccprov");
+        // Unknown items: cheapest rejection, never RQ.
+        assert_eq!(s.resolve(EngineRouter::Auto, u64::MAX - 7).name(), "csprov");
+        // Explicit policies resolve to themselves.
+        assert_eq!(s.resolve(EngineRouter::Rq, lc_item).name(), "rq");
+    }
+
+    #[test]
+    fn batched_equals_sequential() {
+        let s = session(500);
+        let reqs: Vec<QueryRequest> = s
+            .trace()
+            .triples
+            .iter()
+            .step_by(s.trace().len() / 12 + 1)
+            .map(|t| QueryRequest::new(t.dst.raw()))
+            .collect();
+        assert!(reqs.len() >= 8);
+        let batched = s.query_many(&reqs);
+        for (req, resp) in reqs.iter().zip(&batched) {
+            let seq = s.execute(req);
+            assert_eq!(resp.lineage, seq.lineage, "item {}", req.item);
+            assert_eq!(resp.stats.engine, seq.stats.engine);
+            assert_eq!(resp.stats.partitions_scanned, seq.stats.partitions_scanned);
+            assert_eq!(resp.stats.rows_examined, seq.stats.rows_examined);
+        }
+    }
+}

@@ -4,7 +4,8 @@
 //! provspark generate    --scale-divisor 10 --replication 1 --out data/trace.bin
 //! provspark stats       --trace data/trace.bin
 //! provspark preprocess  --trace data/trace.bin --out data/pre.bin [--wcc-impl driver|minispark|minispark-naive|xla]
-//! provspark query       --trace data/trace.bin --pre data/pre.bin --engine csprov --item 3:42
+//! provspark query       --trace data/trace.bin --pre data/pre.bin --engine auto --item 3:42
+//!                       [--item 3:43 ...] [--max-depth N] [--max-triples N] [--tau-override N]
 //! provspark classes     --trace data/trace.bin --pre data/pre.bin --class lc-ll
 //! provspark table       --which 9|10|11|12 [--divisor 10] [--replications 1,9]
 //! provspark drilldown   --trace data/trace.bin --pre data/pre.bin --item 3:42
@@ -15,17 +16,19 @@ use anyhow::{anyhow, bail, Context, Result};
 use provspark::cli::Args;
 use provspark::config::{Backend, EngineConfig};
 use provspark::harness::{
-    component_census, drilldown_report, query_table, select_queries, table9, EngineSet,
-    ExperimentConfig, QueryClass,
+    component_census, drilldown_report, query_table, select_queries, table9, EngineRouter,
+    ExperimentConfig, ProvSession, QueryClass,
 };
 use provspark::minispark::MiniSpark;
 use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::query::QueryRequest;
 use provspark::provenance::store;
 use provspark::util::fmt::{human_count, human_duration};
 use provspark::util::ids::AttrValueId;
 use provspark::workflow::curation::text_curation_workflow;
 use provspark::workflow::generator::{generate, GeneratorConfig, TraceStats};
 use std::path::Path;
+use std::sync::Arc;
 
 const FLAGS: &[&str] = &["dot", "csv", "help", "verbose"];
 
@@ -53,7 +56,10 @@ fn print_help() {
          subcommands: generate | stats | preprocess | query | classes | table | drilldown | workflow\n\
          common opts: --executors N --partitions N --job-overhead-us N --tau N --theta N\n\
                       --shuffle-elision true|false --wcc-backend native|xla\n\
-                      --closure-backend native|xla --config FILE"
+                      --closure-backend native|xla --config FILE\n\
+         query opts:  --engine rq|ccprov|csprov|auto  --item ID (repeatable — batches fan\n\
+                      out across the worker pool)  --max-depth N --max-triples N\n\
+                      --tau-override N (per-query driver-collect threshold)"
     );
 }
 
@@ -173,31 +179,52 @@ fn run(args: &Args) -> Result<()> {
             let trace = store::load_trace(Path::new(&args.get_or("trace", "data/trace.bin")))?;
             let pre = store::load_preprocessed(Path::new(&args.get_or("pre", "data/pre.bin")))?;
             let ecfg = engine_config(args)?;
-            let q = parse_item(
-                args.get("item").ok_or_else(|| anyhow!("--item required (raw id or e:serial)"))?,
-            )?;
-            let sc = MiniSpark::new(ecfg.cluster.clone());
-            let engines = EngineSet::build(&sc, &trace, &pre, &ecfg)?;
-            let engine = args.get_or("engine", "csprov");
-            let before = sc.metrics().snapshot();
-            let (lineage, dur) = provspark::util::timer::time_it(|| match engine.as_str() {
-                "rq" => engines.rq.query(q),
-                "ccprov" => engines.ccprov.query(q),
-                _ => engines.csprov.query(q),
-            });
-            let delta = sc.metrics().snapshot().since(&before);
-            println!(
-                "{engine}: {} ancestors, {} triples, {} transformations in {}",
-                lineage.ancestors.len(),
-                lineage.triples.len(),
-                lineage.transformation_count(),
-                human_duration(dur),
-            );
-            println!("engine metrics: {}", delta.summary());
-            if args.has_flag("verbose") {
-                for t in &lineage.triples {
-                    println!("  {} -> {} via op{}", t.src, t.dst, t.op.0);
+            let router: EngineRouter = args.get_or("engine", "auto").parse()?;
+            let items = args.get_all("item");
+            if items.is_empty() {
+                bail!("--item required (raw id or e:serial; repeat for a batch)");
+            }
+            let mut reqs = Vec::with_capacity(items.len());
+            for item in items {
+                let mut req = QueryRequest::new(parse_item(item)?);
+                req.max_depth = args.get("max-depth").map(str::parse).transpose()?;
+                req.max_triples = args.get("max-triples").map(str::parse).transpose()?;
+                req.tau_override = args.get("tau-override").map(str::parse).transpose()?;
+                reqs.push(req);
+            }
+            let session = ProvSession::new(&ecfg, Arc::new(trace), Arc::new(pre))?;
+            let (responses, dur) = provspark::util::timer::time_it(|| {
+                if reqs.len() == 1 {
+                    vec![session.execute_on(router, &reqs[0])]
+                } else {
+                    // Batches fan out across the worker pool.
+                    session.query_many_on(router, &reqs)
                 }
+            });
+            for (req, resp) in reqs.iter().zip(&responses) {
+                let lineage = &resp.lineage;
+                println!(
+                    "{} ({}): {} ancestors, {} triples, {} transformations in {}",
+                    req.item,
+                    AttrValueId(req.item),
+                    lineage.ancestors.len(),
+                    lineage.triples.len(),
+                    lineage.transformation_count(),
+                    human_duration(resp.stats.total_time()),
+                );
+                println!("  stats: {}", resp.stats.summary());
+                if args.has_flag("verbose") {
+                    for t in &lineage.triples {
+                        println!("  {} -> {} via op{}", t.src, t.dst, t.op.0);
+                    }
+                }
+            }
+            if reqs.len() > 1 {
+                println!(
+                    "batch of {} answered in {} (router: {router})",
+                    reqs.len(),
+                    human_duration(dur),
+                );
             }
             Ok(())
         }
@@ -248,9 +275,8 @@ fn run(args: &Args) -> Result<()> {
             let pre = store::load_preprocessed(Path::new(&args.get_or("pre", "data/pre.bin")))?;
             let ecfg = engine_config(args)?;
             let q = parse_item(args.get("item").ok_or_else(|| anyhow!("--item required"))?)?;
-            let sc = MiniSpark::new(ecfg.cluster.clone());
-            let engines = EngineSet::build(&sc, &trace, &pre, &ecfg)?;
-            print!("{}", drilldown_report(&trace, &pre, &engines, q));
+            let session = ProvSession::new(&ecfg, Arc::new(trace), Arc::new(pre))?;
+            print!("{}", drilldown_report(&session, q));
             Ok(())
         }
         "workflow" => {

@@ -5,6 +5,27 @@ use super::partitioner::{HashPartitioner, KeyTag};
 use rustc_hash::FxHashMap;
 use std::sync::Arc;
 
+/// Cost of one scan operation: how many partitions were touched and how
+/// many rows they held. The `*_counted` lookup variants return this so a
+/// caller can attribute data-volume costs to *one* query even when several
+/// queries share the engine-wide [`super::EngineMetrics`] concurrently
+/// (batched execution interleaves the global counters).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScanCost {
+    /// Partitions scanned.
+    pub partitions: u64,
+    /// Rows examined across those partitions.
+    pub rows: u64,
+}
+
+impl ScanCost {
+    /// Accumulate another scan's cost.
+    pub fn add(&mut self, other: ScanCost) {
+        self.partitions += other.partitions;
+        self.rows += other.rows;
+    }
+}
+
 /// How a dataset's rows are distributed across partitions.
 ///
 /// `key_tag` is the key function's semantic identity (see [`KeyTag`]): when
@@ -61,6 +82,64 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             partitions.push(Arc::new(part));
         }
         Self { sc: sc.clone(), partitions, partitioning: None }
+    }
+
+    /// Build a hash-partitioned dataset directly from a borrowed slice in a
+    /// single map/reduce pass — the load-and-partition path engine builders
+    /// use. Unlike `from_vec(..).hash_partition_by_tagged(..)` it never
+    /// materializes an intermediate unpartitioned copy, so constructing an
+    /// engine over a shared (`Arc`-owned) trace costs exactly one copy of
+    /// the rows: the shuffle itself. Metered as a shuffle.
+    pub fn hash_partitioned_from_slice(
+        sc: &MiniSpark,
+        rows: &[T],
+        num_partitions: usize,
+        tag: KeyTag,
+        key_fn: impl Fn(&T) -> u64 + Send + Sync + 'static,
+    ) -> Self {
+        let partitioner = HashPartitioner::new(num_partitions.max(1));
+        let np = partitioner.num_partitions();
+        let key_fn: Arc<dyn Fn(&T) -> u64 + Send + Sync> = Arc::new(key_fn);
+
+        // Map side: bucket slice chunks by target partition.
+        let chunk = rows.len().div_ceil(np).max(1);
+        let chunks: Vec<&[T]> = rows.chunks(chunk).collect();
+        let kf = Arc::clone(&key_fn);
+        let buckets: Vec<Vec<Vec<T>>> = sc.run_job(&chunks, |_, part| {
+            let mut out: Vec<Vec<T>> = (0..np).map(|_| Vec::new()).collect();
+            for row in part.iter() {
+                out[partitioner.partition_of(kf(row))].push(row.clone());
+            }
+            out
+        });
+        sc.metrics().add_shuffled(rows.len() as u64);
+        Self::from_shuffle_buckets(sc, buckets, partitioner, key_fn, Some(tag))
+    }
+
+    /// Reduce side shared by both shuffle paths (the slice constructor
+    /// above and the in-place re-partition): concatenate the map-side
+    /// buckets per target partition and assemble the partitioned dataset.
+    fn from_shuffle_buckets(
+        sc: &MiniSpark,
+        buckets: Vec<Vec<Vec<T>>>,
+        partitioner: HashPartitioner,
+        key_fn: Arc<dyn Fn(&T) -> u64 + Send + Sync>,
+        key_tag: Option<KeyTag>,
+    ) -> Self {
+        let np = partitioner.num_partitions();
+        let targets: Vec<usize> = (0..np).collect();
+        let partitions: Vec<Arc<Vec<T>>> = sc.run_job(&targets, |_, &t| {
+            let mut part = Vec::new();
+            for b in &buckets {
+                part.extend_from_slice(&b[t]);
+            }
+            Arc::new(part)
+        });
+        Self {
+            sc: sc.clone(),
+            partitions,
+            partitioning: Some(Partitioning { partitioner, key_fn, key_tag }),
+        }
     }
 
     /// Engine handle.
@@ -167,22 +246,7 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         });
         let total: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
         self.sc.metrics().add_shuffled(total);
-
-        // Reduce side: concatenate buckets per target partition.
-        let targets: Vec<usize> = (0..np).collect();
-        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&targets, |_, &t| {
-            let mut part = Vec::new();
-            for b in &buckets {
-                part.extend_from_slice(&b[t]);
-            }
-            Arc::new(part)
-        });
-
-        Self {
-            sc: self.sc.clone(),
-            partitions,
-            partitioning: Some(Partitioning { partitioner, key_fn, key_tag }),
-        }
+        Self::from_shuffle_buckets(&self.sc, buckets, partitioner, key_fn, key_tag)
     }
 
     /// Scan every partition, keeping rows satisfying `pred`. Preserves hash
@@ -242,21 +306,25 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
     /// the metrics expose — this is what "Spark does not support indexing,
     /// each such query needs to scan the data" costs.
     pub fn lookup(&self, key: u64) -> Vec<T> {
+        self.lookup_counted(key).0
+    }
+
+    /// [`lookup`](Self::lookup) that also reports the scan's [`ScanCost`]
+    /// (partitions touched, rows examined) for per-query attribution.
+    pub fn lookup_counted(&self, key: u64) -> (Vec<T>, ScanCost) {
         match &self.partitioning {
             Some(p) => {
                 let idx = p.partitioner.partition_of(key);
                 let part = Arc::clone(&self.partitions[idx]);
-                self.sc.metrics().add_scan(1, part.len() as u64);
+                let cost = ScanCost { partitions: 1, rows: part.len() as u64 };
+                self.sc.metrics().add_scan(cost.partitions, cost.rows);
                 let kf = Arc::clone(&p.key_fn);
                 let mut out = self.sc.run_job(&[part], |_, part| {
                     part.iter().filter(|r| kf(r) == key).cloned().collect::<Vec<T>>()
                 });
-                out.pop().unwrap()
+                (out.pop().unwrap(), cost)
             }
             None => {
-                // No partitioner: full scan.
-                let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
-                self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
                 // Without a key function we cannot match; this overload only
                 // exists for hash-partitioned data. Callers on raw datasets
                 // use `filter` directly.
@@ -269,6 +337,12 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
     /// partition once — the paper's "|I| partitions at most" argument (§2.1).
     /// Returns all matching rows, unordered.
     pub fn multi_lookup(&self, keys: &[u64]) -> Vec<T> {
+        self.multi_lookup_counted(keys).0
+    }
+
+    /// [`multi_lookup`](Self::multi_lookup) that also reports the scan's
+    /// [`ScanCost`] for per-query attribution.
+    pub fn multi_lookup_counted(&self, keys: &[u64]) -> (Vec<T>, ScanCost) {
         let p = self
             .partitioning
             .as_ref()
@@ -283,13 +357,14 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             .map(|(idx, ks)| (Arc::clone(&self.partitions[idx]), ks))
             .collect();
         let scanned_rows: u64 = work.iter().map(|(p, _)| p.len() as u64).sum();
-        self.sc.metrics().add_scan(work.len() as u64, scanned_rows);
+        let cost = ScanCost { partitions: work.len() as u64, rows: scanned_rows };
+        self.sc.metrics().add_scan(cost.partitions, cost.rows);
         let kf = Arc::clone(&p.key_fn);
         let found: Vec<Vec<T>> = self.sc.run_job(&work, |_, (part, ks)| {
             let keyset: rustc_hash::FxHashSet<u64> = ks.iter().copied().collect();
             part.iter().filter(|r| keyset.contains(&kf(r))).cloned().collect()
         });
-        found.into_concat()
+        (found.into_concat(), cost)
     }
 
     /// Partition-pruned lookup: a *dataset* containing exactly the rows
@@ -300,6 +375,12 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
     /// CSProv assembles `cs_provRDD` from the set-lineage without touching
     /// the rest of the data.
     pub fn prune_lookup(&self, keys: &[u64]) -> Self {
+        self.prune_lookup_counted(keys).0
+    }
+
+    /// [`prune_lookup`](Self::prune_lookup) that also reports the scan's
+    /// [`ScanCost`] for per-query attribution.
+    pub fn prune_lookup_counted(&self, keys: &[u64]) -> (Self, ScanCost) {
         let p = self
             .partitioning
             .as_ref()
@@ -320,7 +401,8 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             .map(|(_, p, _)| p.len() as u64)
             .sum();
         let n_scanned = work.iter().filter(|(_, _, ks)| ks.is_some()).count() as u64;
-        self.sc.metrics().add_scan(n_scanned, scanned);
+        let cost = ScanCost { partitions: n_scanned, rows: scanned };
+        self.sc.metrics().add_scan(cost.partitions, cost.rows);
         let kf = Arc::clone(&p.key_fn);
         let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&work, |_, (_, part, ks)| {
             match ks {
@@ -330,7 +412,10 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
                 ),
             }
         });
-        Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+        (
+            Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() },
+            cost,
+        )
     }
 
     /// Move every row to the driver (Spark `collect`).
@@ -945,6 +1030,74 @@ mod tests {
         assert!(u.is_hash_partitioned());
         assert_eq!(u.num_partitions(), 4);
         assert_eq!(u.lookup(75).len(), 1);
+    }
+
+    #[test]
+    fn from_slice_matches_from_vec_partitioning() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..500).map(|i| (i % 31, i)).collect();
+        let a = Dataset::hash_partitioned_from_slice(&s, &rows, 8, KeyTag::PAIR_KEY, |r| r.0);
+        let b = Dataset::from_vec(&s, rows.clone(), 8).partition_by_key(8);
+        assert!(a.is_hash_partitioned());
+        assert_eq!(a.num_partitions(), 8);
+        for i in 0..8 {
+            let mut x = a.partition(i).as_ref().clone();
+            let mut y = b.partition(i).as_ref().clone();
+            x.sort_unstable();
+            y.sort_unstable();
+            assert_eq!(x, y, "partition {i}");
+        }
+        // The result is co-partitioned with tagged datasets: elidable.
+        let before = s.metrics().snapshot();
+        let _ = a.partition_by_key(8);
+        assert_eq!(s.metrics().snapshot().since(&before).shuffles_elided, 1);
+    }
+
+    #[test]
+    fn from_slice_empty_and_tiny() {
+        let s = sc();
+        let empty: Vec<(u64, u64)> = vec![];
+        let d = Dataset::hash_partitioned_from_slice(&s, &empty, 4, KeyTag::PAIR_KEY, |r| r.0);
+        assert_eq!(d.num_partitions(), 4);
+        assert!(d.is_empty());
+        assert!(d.lookup(3).is_empty());
+        let one = vec![(7u64, 9u64)];
+        let d = Dataset::hash_partitioned_from_slice(&s, &one, 4, KeyTag::PAIR_KEY, |r| r.0);
+        assert_eq!(d.lookup(7), vec![(7, 9)]);
+    }
+
+    #[test]
+    fn counted_lookups_match_metrics() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..400).map(|i| (i % 20, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 8).partition_by_key(8);
+
+        let before = s.metrics().snapshot();
+        let (hits, cost) = d.lookup_counted(3);
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(hits.len(), 20);
+        assert_eq!(cost.partitions, delta.partitions_scanned);
+        assert_eq!(cost.rows, delta.rows_scanned);
+
+        let before = s.metrics().snapshot();
+        let (hits, cost) = d.multi_lookup_counted(&[1, 2, 3]);
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(hits.len(), 60);
+        assert_eq!(cost.partitions, delta.partitions_scanned);
+        assert_eq!(cost.rows, delta.rows_scanned);
+
+        let before = s.metrics().snapshot();
+        let (pruned, cost) = d.prune_lookup_counted(&[4, 5]);
+        let delta = s.metrics().snapshot().since(&before);
+        assert_eq!(pruned.len(), 40);
+        assert!(cost.partitions <= 2);
+        assert_eq!(cost.partitions, delta.partitions_scanned);
+        assert_eq!(cost.rows, delta.rows_scanned);
+
+        let mut acc = ScanCost::default();
+        acc.add(cost);
+        acc.add(cost);
+        assert_eq!(acc.rows, 2 * cost.rows);
     }
 
     #[test]

@@ -42,6 +42,6 @@ mod metrics;
 mod partitioner;
 
 pub use context::MiniSpark;
-pub use dataset::{join_u64, Dataset};
+pub use dataset::{join_u64, Dataset, ScanCost};
 pub use metrics::{EngineMetrics, MetricsSnapshot};
 pub use partitioner::{HashPartitioner, KeyTag};

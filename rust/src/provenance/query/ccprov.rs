@@ -8,12 +8,14 @@
 //! collected to the driver (Spark job launch overhead dominates tiny jobs;
 //! see §2.2 "Further Optimization").
 
-use super::driver_rq::{AncestorClosure, NativeClosure};
+use super::driver_rq::{bounded_closure, AncestorClosure, NativeClosure};
+use super::engine::{ExecPath, ProvenanceEngine, QueryRequest, QueryResponse, QueryStats};
 use super::result::Lineage;
-use super::rq::rq_on_spark_generic;
+use super::rq::rq_bfs;
 use crate::minispark::{Dataset, MiniSpark};
 use crate::provenance::model::{CcTriple, ProvTriple};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Algorithm 1 engine.
 pub struct CcProvEngine {
@@ -23,18 +25,22 @@ pub struct CcProvEngine {
 }
 
 impl CcProvEngine {
-    /// Build from preprocessed component-tagged triples.
+    /// Build from preprocessed component-tagged triples. Takes a borrowed
+    /// slice (typically `&pre.cc_triples` behind an `Arc<Preprocessed>`)
+    /// and partitions it in one pass — no copy of the full `Vec`.
     pub fn new(
         sc: &MiniSpark,
-        cc_triples: Vec<CcTriple>,
+        cc_triples: &[CcTriple],
         num_partitions: usize,
         tau: usize,
     ) -> Self {
-        let prov = Dataset::from_vec(sc, cc_triples, num_partitions)
-            .hash_partition_by_tagged(num_partitions, super::KEY_TRIPLE_DST, |t: &CcTriple| {
-                t.triple.dst.raw()
-            })
-            .cache();
+        let prov = Dataset::hash_partitioned_from_slice(
+            sc,
+            cc_triples,
+            num_partitions,
+            super::KEY_TRIPLE_DST,
+            |t: &CcTriple| t.triple.dst.raw(),
+        );
         Self { prov, tau, closure: Arc::new(NativeClosure) }
     }
 
@@ -48,27 +54,75 @@ impl CcProvEngine {
         self.tau
     }
 
-    /// Algorithm 1: lineage of `q`.
+    /// Algorithm 1: lineage of `q` (see [`ProvenanceEngine::query`]).
     pub fn query(&self, q: u64) -> Lineage {
+        self.execute(&QueryRequest::new(q)).lineage
+    }
+}
+
+impl ProvenanceEngine for CcProvEngine {
+    fn name(&self) -> &'static str {
+        "ccprov"
+    }
+
+    fn execute(&self, req: &QueryRequest) -> QueryResponse {
+        let q = req.item;
+        let tau = req.tau_override.unwrap_or(self.tau);
+        let mut stats = QueryStats::new("ccprov");
+
         // Find-Connected-Component: one partition scan.
-        let rows = self.prov.lookup(q);
+        let t0 = Instant::now();
+        let (rows, cost) = self.prov.lookup_counted(q);
+        stats.partitions_scanned += cost.partitions;
+        stats.rows_examined += cost.rows;
         let Some(first) = rows.first() else {
-            return Lineage::empty(q); // input value or unknown: no lineage
+            stats.resolve = t0.elapsed();
+            // Input value or unknown: no lineage.
+            return QueryResponse { lineage: Lineage::empty(q), stats };
         };
         let ccid = first.ccid;
+        stats.resolve = t0.elapsed();
 
-        // Find-Prov-Triples-In-Component: filter, partitioning preserved.
+        // Find-Prov-Triples-In-Component: filter, partitioning preserved —
+        // a full scan of the tagged dataset.
+        let t1 = Instant::now();
         let c_prov = self.prov.filter(move |t| t.ccid == ccid);
+        stats.partitions_scanned += self.prov.num_partitions() as u64;
+        stats.rows_examined += self.prov.len() as u64;
+        let volume = c_prov.count();
+        stats.assemble = t1.elapsed();
 
-        if c_prov.count() >= self.tau {
+        let t2 = Instant::now();
+        let lineage = if volume >= tau {
             // RQ on the cluster over the component's triples.
-            rq_on_spark_generic(&c_prov, |t| t.triple, q)
+            stats.path = ExecPath::Cluster;
+            let (lineage, bfs) =
+                rq_bfs(&c_prov, |t| t.triple, q, req.max_depth, req.max_triples);
+            stats.partitions_scanned += bfs.partitions;
+            stats.rows_examined += bfs.rows;
+            stats.bfs_rounds = bfs.rounds;
+            stats.truncated = bfs.truncated;
+            lineage
         } else {
             // Collect to the driver and recurse locally.
+            stats.path = ExecPath::Driver;
             let triples: Vec<ProvTriple> =
                 c_prov.collect().into_iter().map(|t| t.triple).collect();
-            self.closure.closure(&triples, q)
-        }
+            stats.rows_collected = triples.len() as u64;
+            if req.max_depth.is_none() && req.max_triples.is_none() {
+                self.closure.closure(&triples, q)
+            } else {
+                // Caps require level-order expansion, which the pluggable
+                // fixpoint closures can't provide (see QueryRequest docs).
+                let (lineage, rounds, truncated) =
+                    bounded_closure(&triples, q, req.max_depth, req.max_triples);
+                stats.bfs_rounds = rounds;
+                stats.truncated = truncated;
+                lineage
+            }
+        };
+        stats.recurse = t2.elapsed();
+        QueryResponse { lineage, stats }
     }
 }
 
@@ -94,7 +148,7 @@ mod tests {
         });
         let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
         let s = sc();
-        let rq = RqEngine::new(&s, &trace, 16);
+        let rq = RqEngine::new(&s, &trace.triples, 16);
         // Pick a handful of derived items.
         let queries: Vec<u64> = trace
             .triples
@@ -103,7 +157,7 @@ mod tests {
             .map(|t| t.dst.raw())
             .collect();
         for tau in [0usize, usize::MAX] {
-            let cc = CcProvEngine::new(&s, pre.cc_triples.clone(), 16, tau);
+            let cc = CcProvEngine::new(&s, &pre.cc_triples, 16, tau);
             for &q in &queries {
                 assert_eq!(cc.query(q), rq.query(q), "q={q} tau={tau}");
             }
@@ -119,8 +173,12 @@ mod tests {
         )]);
         let (g, splits) = crate::workflow::curation::text_curation_workflow();
         let pre = preprocess(&trace, &g, &splits, 100, 100, WccImpl::Driver);
-        let cc = CcProvEngine::new(&sc(), pre.cc_triples, 4, 10);
-        assert!(cc.query(AttrValueId::new(EntityId(9), 99).raw()).is_empty());
+        let cc = CcProvEngine::new(&sc(), &pre.cc_triples, 4, 10);
+        let resp = cc.execute(&QueryRequest::new(AttrValueId::new(EntityId(9), 99).raw()));
+        assert!(resp.lineage.is_empty());
+        // The resolve lookup still scanned one partition.
+        assert_eq!(resp.stats.partitions_scanned, 1);
+        assert_eq!(resp.stats.bfs_rounds, 0);
     }
 
     #[test]
@@ -131,19 +189,19 @@ mod tests {
         let s = sc();
         let q = trace.triples[trace.len() / 2].dst.raw();
 
-        let spark = CcProvEngine::new(&s, pre.cc_triples.clone(), 16, 0);
-        let before = s.metrics().snapshot();
-        let _ = spark.query(q);
-        let spark_rows = s.metrics().snapshot().since(&before).rows_scanned;
-
-        let driver = CcProvEngine::new(&s, pre.cc_triples.clone(), 16, usize::MAX);
-        let before = s.metrics().snapshot();
-        let _ = driver.query(q);
-        let driver_rows = s.metrics().snapshot().since(&before).rows_scanned;
-
+        let engine = CcProvEngine::new(&s, &pre.cc_triples, 16, 0);
+        // τ per request: same engine, both branches.
+        let spark = engine.execute(&QueryRequest::new(q).with_tau(0));
+        let driver = engine.execute(&QueryRequest::new(q).with_tau(usize::MAX));
+        assert_eq!(spark.lineage, driver.lineage);
+        assert_eq!(spark.stats.path, ExecPath::Cluster);
+        assert_eq!(driver.stats.path, ExecPath::Driver);
+        assert!(driver.stats.rows_collected > 0);
         assert!(
-            driver_rows <= spark_rows,
-            "driver branch should scan no more rows: {driver_rows} vs {spark_rows}"
+            driver.stats.rows_examined <= spark.stats.rows_examined,
+            "driver branch should scan no more rows: {} vs {}",
+            driver.stats.rows_examined,
+            spark.stats.rows_examined
         );
     }
 }

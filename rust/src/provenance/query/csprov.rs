@@ -17,13 +17,15 @@
 //! When the queried item lies in a small component, its component *is* its
 //! set, the set-lineage is empty, and CSProv reduces to CCProv (§2.3).
 
-use super::driver_rq::{AncestorClosure, NativeClosure};
+use super::driver_rq::{bounded_closure, AncestorClosure, NativeClosure};
+use super::engine::{ExecPath, ProvenanceEngine, QueryRequest, QueryResponse, QueryStats};
 use super::result::Lineage;
-use super::rq::rq_on_spark_generic;
-use crate::minispark::{Dataset, MiniSpark};
+use super::rq::{rq_bfs, BfsStats};
+use crate::minispark::{Dataset, KeyTag, MiniSpark};
 use crate::provenance::model::{CsTriple, ProvTriple, SetDep};
 use rustc_hash::FxHashSet;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Algorithm 2 engine.
 pub struct CsProvEngine {
@@ -31,6 +33,7 @@ pub struct CsProvEngine {
     prov_by_set: Dataset<CsTriple>,
     /// `(node, csid)` index, hash-partitioned on node — how
     /// `Find-Connected-Set` resolves a queried item in one partition scan.
+    /// Built once at construction and reused by every query.
     node_set: Dataset<(u64, u64)>,
     /// Set dependencies, hash-partitioned on `dst_csid` (child set).
     set_deps: Dataset<SetDep>,
@@ -40,23 +43,48 @@ pub struct CsProvEngine {
 }
 
 impl CsProvEngine {
+    /// Build from preprocessed set-tagged data. Triples and set
+    /// dependencies are borrowed slices partitioned in one pass (no copy of
+    /// the full `Vec`s); `node_set` is the derived `(node, csid)` index,
+    /// produced once by the caller (see `EngineSet::build`).
     pub fn new(
         sc: &MiniSpark,
-        cs_triples: Vec<CsTriple>,
+        cs_triples: &[CsTriple],
         node_set: Vec<(u64, u64)>,
-        set_deps: Vec<SetDep>,
+        set_deps: &[SetDep],
         num_partitions: usize,
         tau: usize,
     ) -> Self {
         let np = num_partitions;
-        let prov_by_set = Dataset::from_vec(sc, cs_triples, np)
-            .hash_partition_by_tagged(np, super::KEY_DST_CSID, |t: &CsTriple| t.dst_csid.0)
-            .cache();
-        let node_set = Dataset::from_vec(sc, node_set, np).partition_by_key(np).cache();
-        let set_deps = Dataset::from_vec(sc, set_deps, np)
-            .hash_partition_by_tagged(np, super::KEY_DST_CSID, |d: &SetDep| d.dst_csid.0)
-            .cache();
-        Self { prov_by_set, node_set, set_deps, num_partitions: np, tau, closure: Arc::new(NativeClosure) }
+        let prov_by_set = Dataset::hash_partitioned_from_slice(
+            sc,
+            cs_triples,
+            np,
+            super::KEY_DST_CSID,
+            |t: &CsTriple| t.dst_csid.0,
+        );
+        let node_set = Dataset::hash_partitioned_from_slice(
+            sc,
+            &node_set,
+            np,
+            KeyTag::PAIR_KEY,
+            |r: &(u64, u64)| r.0,
+        );
+        let set_deps = Dataset::hash_partitioned_from_slice(
+            sc,
+            set_deps,
+            np,
+            super::KEY_DST_CSID,
+            |d: &SetDep| d.dst_csid.0,
+        );
+        Self {
+            prov_by_set,
+            node_set,
+            set_deps,
+            num_partitions: np,
+            tau,
+            closure: Arc::new(NativeClosure),
+        }
     }
 
     /// Swap the driver-side closure implementation (native / XLA).
@@ -70,12 +98,21 @@ impl CsProvEngine {
     /// dataset — lightweight because both the dataset and the lineage are
     /// small; §2.3).
     pub fn set_lineage(&self, cs: u64) -> Vec<u64> {
+        self.set_lineage_counted(cs).0
+    }
+
+    /// [`set_lineage`](Self::set_lineage) plus the walk's scan cost.
+    fn set_lineage_counted(&self, cs: u64) -> (Vec<u64>, BfsStats) {
+        let mut stats = BfsStats::default();
         let mut seen: FxHashSet<u64> = FxHashSet::default();
         seen.insert(cs);
         let mut frontier = vec![cs];
         let mut out = Vec::new();
         while !frontier.is_empty() {
-            let deps = self.set_deps.multi_lookup(&frontier);
+            let (deps, cost) = self.set_deps.multi_lookup_counted(&frontier);
+            stats.rounds += 1;
+            stats.partitions += cost.partitions;
+            stats.rows += cost.rows;
             let mut next = Vec::new();
             for d in deps {
                 if seen.insert(d.src_csid.0) {
@@ -85,41 +122,12 @@ impl CsProvEngine {
             }
             frontier = next;
         }
-        out
+        (out, stats)
     }
 
-    /// Algorithm 2: lineage of `q`.
+    /// Algorithm 2: lineage of `q` (see [`ProvenanceEngine::query`]).
     pub fn query(&self, q: u64) -> Lineage {
-        // Find-Connected-Set: one partition scan on the node index.
-        let rows = self.node_set.lookup(q);
-        let Some(&(_, cs)) = rows.first() else {
-            return Lineage::empty(q);
-        };
-
-        // S ← cs ∪ Find-Set-Lineage(setDepRDD, cs).
-        let mut s = self.set_lineage(cs);
-        s.push(cs);
-
-        // cs_provRDD: triples whose derived item is in a set of S.
-        // Partition-pruned: scans at most |S| distinct partitions.
-        let cs_prov = self.prov_by_set.prune_lookup(&s);
-
-        if cs_prov.count() >= self.tau {
-            // RQ on the cluster. The pruned dataset is partitioned by
-            // dst_csid; recursive lookups key on dst, so repartition first
-            // (a shuffle of only the minimal volume — the tags differ, so
-            // the engine correctly refuses to elide it).
-            let by_dst = cs_prov.hash_partition_by_tagged(
-                self.num_partitions,
-                super::KEY_TRIPLE_DST,
-                |t: &CsTriple| t.triple.dst.raw(),
-            );
-            rq_on_spark_generic(&by_dst, |t| t.triple, q)
-        } else {
-            let triples: Vec<ProvTriple> =
-                cs_prov.collect().into_iter().map(|t| t.triple).collect();
-            self.closure.closure(&triples, q)
-        }
+        self.execute(&QueryRequest::new(q)).lineage
     }
 
     /// Size of the minimal volume CSProv would recurse over for `q`
@@ -132,6 +140,83 @@ impl CsProvEngine {
         let mut s = self.set_lineage(cs);
         s.push(cs);
         self.prov_by_set.prune_lookup(&s).count()
+    }
+}
+
+impl ProvenanceEngine for CsProvEngine {
+    fn name(&self) -> &'static str {
+        "csprov"
+    }
+
+    fn execute(&self, req: &QueryRequest) -> QueryResponse {
+        let q = req.item;
+        let tau = req.tau_override.unwrap_or(self.tau);
+        let mut stats = QueryStats::new("csprov");
+
+        // Find-Connected-Set: one partition scan on the node index, then
+        // the set-lineage walk over the set-dependency dataset.
+        let t0 = Instant::now();
+        let (rows, cost) = self.node_set.lookup_counted(q);
+        stats.partitions_scanned += cost.partitions;
+        stats.rows_examined += cost.rows;
+        let Some(&(_, cs)) = rows.first() else {
+            stats.resolve = t0.elapsed();
+            return QueryResponse { lineage: Lineage::empty(q), stats };
+        };
+        let (mut s, walk) = self.set_lineage_counted(cs);
+        stats.partitions_scanned += walk.partitions;
+        stats.rows_examined += walk.rows;
+        s.push(cs);
+        stats.resolve = t0.elapsed();
+
+        // cs_provRDD: triples whose derived item is in a set of S.
+        // Partition-pruned: scans at most |S| distinct partitions.
+        let t1 = Instant::now();
+        let (cs_prov, cost) = self.prov_by_set.prune_lookup_counted(&s);
+        stats.partitions_scanned += cost.partitions;
+        stats.rows_examined += cost.rows;
+        let volume = cs_prov.count();
+        stats.assemble = t1.elapsed();
+
+        let t2 = Instant::now();
+        let lineage = if volume >= tau {
+            // RQ on the cluster. The pruned dataset is partitioned by
+            // dst_csid; recursive lookups key on dst, so repartition first
+            // (a shuffle of only the minimal volume — the tags differ, so
+            // the engine correctly refuses to elide it).
+            stats.path = ExecPath::Cluster;
+            stats.rows_shuffled += volume as u64;
+            let by_dst = cs_prov.hash_partition_by_tagged(
+                self.num_partitions,
+                super::KEY_TRIPLE_DST,
+                |t: &CsTriple| t.triple.dst.raw(),
+            );
+            let (lineage, bfs) =
+                rq_bfs(&by_dst, |t| t.triple, q, req.max_depth, req.max_triples);
+            stats.partitions_scanned += bfs.partitions;
+            stats.rows_examined += bfs.rows;
+            stats.bfs_rounds = bfs.rounds;
+            stats.truncated = bfs.truncated;
+            lineage
+        } else {
+            stats.path = ExecPath::Driver;
+            let triples: Vec<ProvTriple> =
+                cs_prov.collect().into_iter().map(|t| t.triple).collect();
+            stats.rows_collected = triples.len() as u64;
+            if req.max_depth.is_none() && req.max_triples.is_none() {
+                self.closure.closure(&triples, q)
+            } else {
+                // Caps require level-order expansion, which the pluggable
+                // fixpoint closures can't provide (see QueryRequest docs).
+                let (lineage, rounds, truncated) =
+                    bounded_closure(&triples, q, req.max_depth, req.max_triples);
+                stats.bfs_rounds = rounds;
+                stats.truncated = truncated;
+                lineage
+            }
+        };
+        stats.recurse = t2.elapsed();
+        QueryResponse { lineage, stats }
     }
 }
 
@@ -151,9 +236,9 @@ mod tests {
     fn build(pre: &Preprocessed, s: &MiniSpark, tau: usize) -> CsProvEngine {
         CsProvEngine::new(
             s,
-            pre.cs_triples.clone(),
+            &pre.cs_triples,
             pre.cs_of.iter().map(|(&n, &c)| (n, c)).collect(),
-            pre.set_deps.clone(),
+            &pre.set_deps,
             16,
             tau,
         )
@@ -166,8 +251,8 @@ mod tests {
         // Small θ so the large components really get partitioned.
         let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
         let s = sc();
-        let rq = RqEngine::new(&s, &trace, 16);
-        let cc = CcProvEngine::new(&s, pre.cc_triples.clone(), 16, 1000);
+        let rq = RqEngine::new(&s, &trace.triples, 16);
+        let cc = CcProvEngine::new(&s, &pre.cc_triples, 16, 1000);
         let queries: Vec<u64> = trace
             .triples
             .iter()
@@ -193,7 +278,7 @@ mod tests {
         let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
         let s = sc();
         let cs_engine = build(&pre, &s, usize::MAX);
-        let rq = RqEngine::new(&s, &trace, 16);
+        let rq = RqEngine::new(&s, &trace.triples, 16);
         for t in trace.triples.iter().step_by(trace.len() / 6 + 1) {
             let q = t.dst.raw();
             let full = rq.query(q);

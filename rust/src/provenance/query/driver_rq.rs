@@ -25,31 +25,65 @@ pub struct NativeClosure;
 
 impl AncestorClosure for NativeClosure {
     fn closure(&self, triples: &[ProvTriple], q: u64) -> Lineage {
-        // Index: dst → triple indices.
-        let mut by_dst: FxHashMap<u64, Vec<u32>> =
-            FxHashMap::with_capacity_and_hasher(triples.len(), Default::default());
-        for (i, t) in triples.iter().enumerate() {
-            by_dst.entry(t.dst.raw()).or_default().push(i as u32);
-        }
-        let mut out: Vec<ProvTriple> = Vec::new();
-        let mut visited: rustc_hash::FxHashSet<u64> = rustc_hash::FxHashSet::default();
-        visited.insert(q);
-        let mut frontier = vec![q];
-        while let Some(node) = frontier.pop() {
-            for &i in by_dst.get(&node).into_iter().flatten() {
-                let t = triples[i as usize];
-                out.push(t);
-                if visited.insert(t.src.raw()) {
-                    frontier.push(t.src.raw());
-                }
-            }
-        }
-        Lineage::from_triples(q, out)
+        // The uncapped case of the bounded traversal below; the lineage is
+        // canonicalized, so the traversal order cannot show through.
+        bounded_closure(triples, q, None, None).0
     }
 
     fn name(&self) -> &'static str {
         "native"
     }
+}
+
+/// Driver-side closure honoring [`QueryRequest`](super::QueryRequest)
+/// depth/triple caps: a strict level-by-level reverse BFS whose rounds
+/// mirror the cluster engines' lookup rounds exactly, so a *capped*
+/// lineage is identical whichever engine (and whichever τ branch)
+/// answers it. Returns `(lineage, rounds_expanded, truncated)`.
+pub fn bounded_closure(
+    triples: &[ProvTriple],
+    q: u64,
+    max_depth: Option<u32>,
+    max_triples: Option<usize>,
+) -> (Lineage, u32, bool) {
+    let mut by_dst: FxHashMap<u64, Vec<u32>> =
+        FxHashMap::with_capacity_and_hasher(triples.len(), Default::default());
+    for (i, t) in triples.iter().enumerate() {
+        by_dst.entry(t.dst.raw()).or_default().push(i as u32);
+    }
+    let mut out: Vec<ProvTriple> = Vec::new();
+    let mut visited: rustc_hash::FxHashSet<u64> = rustc_hash::FxHashSet::default();
+    visited.insert(q);
+    let mut frontier = vec![q];
+    let mut rounds = 0u32;
+    let mut truncated = false;
+    while !frontier.is_empty() {
+        if let Some(d) = max_depth {
+            if rounds >= d {
+                truncated = true;
+                break;
+            }
+        }
+        let mut next = Vec::new();
+        for node in &frontier {
+            for &i in by_dst.get(node).into_iter().flatten() {
+                let t = triples[i as usize];
+                out.push(t);
+                if visited.insert(t.src.raw()) {
+                    next.push(t.src.raw());
+                }
+            }
+        }
+        rounds += 1;
+        if let Some(m) = max_triples {
+            if out.len() >= m {
+                truncated = !next.is_empty();
+                break;
+            }
+        }
+        frontier = next;
+    }
+    (Lineage::from_triples(q, out), rounds, truncated)
 }
 
 #[cfg(test)]
@@ -100,5 +134,42 @@ mod tests {
         let triples = vec![t(1, 2), t(2, 1), t(2, 3)];
         let l = NativeClosure.closure(&triples, raw(3));
         assert_eq!(l.ancestors, vec![raw(1), raw(2)]);
+    }
+
+    #[test]
+    fn bounded_closure_unbounded_matches_native() {
+        let triples = vec![t(1, 2), t(2, 4), t(3, 4), t(4, 5), t(7, 8)];
+        let (l, rounds, truncated) = bounded_closure(&triples, raw(5), None, None);
+        assert_eq!(l, NativeClosure.closure(&triples, raw(5)));
+        assert!(!truncated);
+        // 5 ← 4 ← {2,3} ← 1, plus one empty-frontier-detecting round.
+        assert_eq!(rounds, 4);
+    }
+
+    #[test]
+    fn bounded_closure_depth_cap() {
+        // Chain 1 → 2 → 3 → 4 → 5.
+        let triples = vec![t(1, 2), t(2, 3), t(3, 4), t(4, 5)];
+        let (l, rounds, truncated) = bounded_closure(&triples, raw(5), Some(2), None);
+        assert_eq!(rounds, 2);
+        assert!(truncated);
+        assert_eq!(l.ancestors, vec![raw(3), raw(4)]);
+        // Depth 0: nothing expanded, flagged truncated.
+        let (l0, r0, t0) = bounded_closure(&triples, raw(5), Some(0), None);
+        assert!(l0.is_empty());
+        assert_eq!(r0, 0);
+        assert!(t0);
+    }
+
+    #[test]
+    fn bounded_closure_triple_cap() {
+        let triples = vec![t(1, 2), t(2, 3), t(3, 4), t(4, 5)];
+        let (l, _, truncated) = bounded_closure(&triples, raw(5), None, Some(2));
+        assert!(truncated);
+        assert_eq!(l.triples.len(), 2);
+        // A cap the lineage never reaches is not a truncation.
+        let (full, _, truncated) = bounded_closure(&triples, raw(5), None, Some(5));
+        assert!(!truncated);
+        assert_eq!(full.triples.len(), 4);
     }
 }

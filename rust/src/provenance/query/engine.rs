@@ -1,0 +1,228 @@
+//! The engine-agnostic query interface: typed requests, responses carrying
+//! per-query cost statistics, and the [`ProvenanceEngine`] trait all three
+//! engines (RQ, CCProv, CSProv) implement.
+//!
+//! The paper's evaluation (Tables 10–12) is really measuring *how much data
+//! each engine touches* to answer one lineage query. [`QueryStats`] makes
+//! those quantities first-class per query — partitions scanned, rows
+//! examined, BFS rounds, driver-vs-cluster path, per-phase wall time — so
+//! a router ([`crate::harness::EngineRouter`]) or an operator can compare
+//! engines without instrumenting the engine-wide metrics (which interleave
+//! under concurrent batched execution).
+
+use super::result::Lineage;
+use std::time::Duration;
+
+/// A typed lineage query: the attribute-value to trace plus options.
+///
+/// Options default to "unbounded, engine defaults":
+///
+/// * `max_depth` — cap on BFS rounds (lineage depth). When the cap stops
+///   the recursion early, [`QueryStats::truncated`] is set. All engines
+///   expand level-by-level from the queried item, so a capped lineage is
+///   identical across engines.
+/// * `max_triples` — best-effort cap on collected lineage triples, checked
+///   after each BFS round (a round is never split, so the result may exceed
+///   the cap by up to one round's rows).
+/// * `tau_override` — per-query override of the engine's τ driver-collect
+///   threshold (ignored by RQ, which has no driver path).
+///
+/// Note: when either cap is set and the recursion runs on the driver, the
+/// engines use the built-in level-by-level traversal
+/// (`driver_rq::bounded_closure`) instead of the configured
+/// [`AncestorClosure`](super::AncestorClosure) backend — the pluggable
+/// closures compute full fixpoints and cannot stop at a level boundary. A
+/// backend comparison (native vs XLA) must therefore use uncapped requests.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct QueryRequest {
+    /// The queried attribute-value (raw id).
+    pub item: u64,
+    /// Maximum BFS rounds (lineage depth) to expand.
+    pub max_depth: Option<u32>,
+    /// Best-effort maximum number of lineage triples to collect.
+    pub max_triples: Option<usize>,
+    /// Per-query τ override (driver-collect threshold).
+    pub tau_override: Option<usize>,
+}
+
+impl QueryRequest {
+    /// An unbounded query for `item`.
+    pub fn new(item: u64) -> Self {
+        Self { item, ..Default::default() }
+    }
+
+    /// Cap the number of BFS rounds.
+    pub fn with_max_depth(mut self, depth: u32) -> Self {
+        self.max_depth = Some(depth);
+        self
+    }
+
+    /// Cap (best-effort) the number of collected lineage triples.
+    pub fn with_max_triples(mut self, triples: usize) -> Self {
+        self.max_triples = Some(triples);
+        self
+    }
+
+    /// Override the engine's τ driver-collect threshold for this query.
+    pub fn with_tau(mut self, tau: usize) -> Self {
+        self.tau_override = Some(tau);
+        self
+    }
+}
+
+/// Which execution path answered the recursion phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPath {
+    /// Volume below τ: collected to the driver and recursed locally.
+    Driver,
+    /// Recursed as cluster jobs (one multi-lookup job per BFS round).
+    Cluster,
+}
+
+impl std::fmt::Display for ExecPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExecPath::Driver => "driver",
+            ExecPath::Cluster => "cluster",
+        })
+    }
+}
+
+/// Per-query cost record: the quantities the paper's evaluation reasons
+/// about, attributed to a single request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Engine that produced the response (`"rq" | "ccprov" | "csprov"`).
+    pub engine: &'static str,
+    /// Driver or cluster recursion (RQ is always [`ExecPath::Cluster`]).
+    pub path: ExecPath,
+    /// Partitions scanned across all phases (resolve, assemble, recurse).
+    pub partitions_scanned: u64,
+    /// Rows examined by those scans (the paper's data-volume cost).
+    pub rows_examined: u64,
+    /// Rows moved by shuffles this query triggered (CSProv's re-partition
+    /// of the pruned volume on the cluster path).
+    pub rows_shuffled: u64,
+    /// Rows collected to the driver (driver path only).
+    pub rows_collected: u64,
+    /// Recursion rounds: distributed BFS rounds on the cluster path, or
+    /// levels expanded by the capped driver traversal. 0 only when the
+    /// *uncapped* driver closure answered (it computes a fixpoint, not
+    /// rounds) or the item was unknown — so this does not discriminate
+    /// driver from cluster; use [`QueryStats::path`] for that.
+    pub bfs_rounds: u32,
+    /// True when `max_depth` / `max_triples` stopped the recursion early.
+    pub truncated: bool,
+    /// Wall time locating the component / connected set (+ set-lineage).
+    pub resolve: Duration,
+    /// Wall time assembling the recursion volume (filter / pruned fetch).
+    pub assemble: Duration,
+    /// Wall time of the recursion itself (cluster BFS or driver closure).
+    pub recurse: Duration,
+}
+
+impl QueryStats {
+    /// Fresh zeroed stats for `engine`.
+    pub fn new(engine: &'static str) -> Self {
+        Self {
+            engine,
+            path: ExecPath::Driver,
+            partitions_scanned: 0,
+            rows_examined: 0,
+            rows_shuffled: 0,
+            rows_collected: 0,
+            bfs_rounds: 0,
+            truncated: false,
+            resolve: Duration::ZERO,
+            assemble: Duration::ZERO,
+            recurse: Duration::ZERO,
+        }
+    }
+
+    /// Total wall time across the recorded phases.
+    pub fn total_time(&self) -> Duration {
+        self.resolve + self.assemble + self.recurse
+    }
+
+    /// One-line rendering for CLI / bench output.
+    pub fn summary(&self) -> String {
+        use crate::util::fmt::{human_count, human_duration};
+        format!(
+            "engine={} path={} parts_scanned={} rows_examined={} shuffled={} collected={} \
+             rounds={}{} resolve={} assemble={} recurse={}",
+            self.engine,
+            self.path,
+            self.partitions_scanned,
+            human_count(self.rows_examined),
+            human_count(self.rows_shuffled),
+            human_count(self.rows_collected),
+            self.bfs_rounds,
+            if self.truncated { " truncated" } else { "" },
+            human_duration(self.resolve),
+            human_duration(self.assemble),
+            human_duration(self.recurse),
+        )
+    }
+}
+
+/// A lineage plus the cost of computing it.
+#[derive(Debug, Clone)]
+pub struct QueryResponse {
+    pub lineage: Lineage,
+    pub stats: QueryStats,
+}
+
+/// The uniform query interface over RQ / CCProv / CSProv.
+///
+/// All engines answer any [`QueryRequest`] with an identical [`Lineage`]
+/// (the cross-engine equivalence property test drives them through
+/// `&dyn ProvenanceEngine`); they differ only in the [`QueryStats`] cost of
+/// getting there.
+pub trait ProvenanceEngine: Send + Sync {
+    /// Short stable engine name (`"rq" | "ccprov" | "csprov"`).
+    fn name(&self) -> &'static str;
+
+    /// Answer one typed query.
+    fn execute(&self, req: &QueryRequest) -> QueryResponse;
+
+    /// Convenience: unbounded lineage of `item`, discarding the stats.
+    fn query(&self, item: u64) -> Lineage {
+        self.execute(&QueryRequest::new(item)).lineage
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_builder_sets_options() {
+        let r = QueryRequest::new(7).with_max_depth(3).with_max_triples(100).with_tau(0);
+        assert_eq!(r.item, 7);
+        assert_eq!(r.max_depth, Some(3));
+        assert_eq!(r.max_triples, Some(100));
+        assert_eq!(r.tau_override, Some(0));
+        let d = QueryRequest::new(7);
+        assert_eq!(d.max_depth, None);
+        assert_eq!(d.tau_override, None);
+    }
+
+    #[test]
+    fn stats_summary_and_total() {
+        let mut s = QueryStats::new("csprov");
+        s.path = ExecPath::Cluster;
+        s.partitions_scanned = 3;
+        s.rows_examined = 1200;
+        s.bfs_rounds = 4;
+        s.resolve = Duration::from_millis(2);
+        s.recurse = Duration::from_millis(5);
+        assert_eq!(s.total_time(), Duration::from_millis(7));
+        let line = s.summary();
+        assert!(line.contains("engine=csprov"));
+        assert!(line.contains("path=cluster"));
+        assert!(line.contains("rounds=4"));
+        assert!(!line.contains("truncated"));
+        s.truncated = true;
+        assert!(s.summary().contains("truncated"));
+    }
+}

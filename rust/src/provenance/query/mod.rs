@@ -1,4 +1,17 @@
-//! The three provenance query engines:
+//! The query layer: one engine-agnostic interface over three engines.
+//!
+//! # The `ProvenanceEngine` trait
+//!
+//! Every engine implements [`ProvenanceEngine`]: `execute(&QueryRequest)
+//! -> QueryResponse`. A [`QueryRequest`] names the queried attribute-value
+//! plus options (max BFS depth, best-effort triple cap, per-query τ
+//! override); a [`QueryResponse`] bundles the [`Lineage`] with a
+//! [`QueryStats`] record — partitions scanned, rows examined, BFS rounds,
+//! driver-vs-cluster path, per-phase wall time. Those are the quantities
+//! the paper's Tables 10–12 are really measuring, attributed to a single
+//! query rather than smeared across the engine-wide metrics.
+//!
+//! The engines:
 //!
 //! * [`RqEngine`] — the recursive-querying baseline (§2.1): BFS over the
 //!   *whole* dst-partitioned triple dataset, one multi-lookup job per
@@ -9,8 +22,17 @@
 //!   set-dependency graph for the set-lineage, assemble the minimal triple
 //!   volume by partition-pruned lookups, then recurse (driver-side if < τ).
 //!
-//! All three return identical [`Lineage`]s — a cross-engine property test
-//! enforces it.
+//! All three return identical [`Lineage`]s for any request — a
+//! cross-engine property test drives them through `&dyn ProvenanceEngine`
+//! to enforce it. They differ only in cost, which [`QueryStats`] exposes.
+//!
+//! # Sessions
+//!
+//! Callers normally don't touch engines directly: `harness::ProvSession`
+//! owns all three over one `Arc`-shared preprocessed trace, routes each
+//! request to an engine (`harness::EngineRouter`, including an `Auto`
+//! policy keyed on component size), and fans batches across the worker
+//! pool with `query_many`.
 
 use crate::minispark::KeyTag;
 
@@ -29,11 +51,13 @@ pub const KEY_DST_CSID: KeyTag = KeyTag::named("prov.dst_csid");
 pub mod ccprov;
 pub mod csprov;
 pub mod driver_rq;
+pub mod engine;
 pub mod result;
 pub mod rq;
 
 pub use ccprov::CcProvEngine;
 pub use csprov::CsProvEngine;
 pub use driver_rq::{AncestorClosure, NativeClosure};
+pub use engine::{ExecPath, ProvenanceEngine, QueryRequest, QueryResponse, QueryStats};
 pub use result::Lineage;
 pub use rq::RqEngine;

@@ -7,24 +7,49 @@
 //! the *whole dataset's* partition sizes — which is why RQ degrades as the
 //! trace scales (Tables 10–12) and why CCProv/CSProv shrink the data first.
 
+use super::engine::{ExecPath, ProvenanceEngine, QueryRequest, QueryResponse, QueryStats};
 use super::result::Lineage;
 use crate::minispark::{Dataset, MiniSpark};
-use crate::provenance::model::{ProvTriple, Trace};
+use crate::provenance::model::ProvTriple;
 use rustc_hash::FxHashSet;
+use std::time::Instant;
 
-/// Generic recursive querying over any dst-partitioned row type.
+/// Cost of one recursive-querying run: rounds executed, partitions and rows
+/// scanned by the lookup jobs, and whether a request cap stopped it early.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BfsStats {
+    pub rounds: u32,
+    pub partitions: u64,
+    pub rows: u64,
+    pub truncated: bool,
+}
+
+/// Recursive querying over any dst-partitioned row type, with per-query
+/// cost accounting and the [`QueryRequest`] depth / triple caps.
 /// `to_triple` projects a row to its provenance triple.
-pub fn rq_on_spark_generic<T: Send + Sync + Clone + 'static>(
+pub fn rq_bfs<T: Send + Sync + Clone + 'static>(
     ds: &Dataset<T>,
     to_triple: impl Fn(&T) -> ProvTriple + Send + Sync,
     q: u64,
-) -> Lineage {
+    max_depth: Option<u32>,
+    max_triples: Option<usize>,
+) -> (Lineage, BfsStats) {
+    let mut stats = BfsStats::default();
     let mut collected: Vec<ProvTriple> = Vec::new();
     let mut visited: FxHashSet<u64> = FxHashSet::default();
     visited.insert(q);
     let mut frontier = vec![q];
     while !frontier.is_empty() {
-        let rows = ds.multi_lookup(&frontier);
+        if let Some(d) = max_depth {
+            if stats.rounds >= d {
+                stats.truncated = true;
+                break;
+            }
+        }
+        let (rows, cost) = ds.multi_lookup_counted(&frontier);
+        stats.rounds += 1;
+        stats.partitions += cost.partitions;
+        stats.rows += cost.rows;
         let mut next = Vec::new();
         for r in &rows {
             let t = to_triple(r);
@@ -33,9 +58,25 @@ pub fn rq_on_spark_generic<T: Send + Sync + Clone + 'static>(
             }
             collected.push(t);
         }
+        if let Some(m) = max_triples {
+            if collected.len() >= m {
+                stats.truncated = !next.is_empty();
+                break;
+            }
+        }
         frontier = next;
     }
-    Lineage::from_triples(q, collected)
+    (Lineage::from_triples(q, collected), stats)
+}
+
+/// Generic unbounded recursive querying (the pre-stats entry point; kept
+/// for callers that only want the lineage).
+pub fn rq_on_spark_generic<T: Send + Sync + Clone + 'static>(
+    ds: &Dataset<T>,
+    to_triple: impl Fn(&T) -> ProvTriple + Send + Sync,
+    q: u64,
+) -> Lineage {
+    rq_bfs(ds, to_triple, q, None, None).0
 }
 
 /// The RQ baseline engine: recursive querying over the full trace.
@@ -44,19 +85,23 @@ pub struct RqEngine {
 }
 
 impl RqEngine {
-    /// Load the trace into a dst-partitioned dataset.
-    pub fn new(sc: &MiniSpark, trace: &Trace, num_partitions: usize) -> Self {
-        let prov = Dataset::from_vec(sc, trace.triples.clone(), num_partitions)
-            .hash_partition_by_tagged(num_partitions, super::KEY_TRIPLE_DST, |t: &ProvTriple| {
-                t.dst.raw()
-            })
-            .cache();
+    /// Load the trace's triples into a dst-partitioned dataset. Takes a
+    /// borrowed slice (typically out of an `Arc<Trace>`) and partitions it
+    /// in one pass — no intermediate copy of the full triple `Vec`.
+    pub fn new(sc: &MiniSpark, triples: &[ProvTriple], num_partitions: usize) -> Self {
+        let prov = Dataset::hash_partitioned_from_slice(
+            sc,
+            triples,
+            num_partitions,
+            super::KEY_TRIPLE_DST,
+            |t: &ProvTriple| t.dst.raw(),
+        );
         Self { prov }
     }
 
-    /// Trace the full lineage of `q`.
+    /// Trace the full lineage of `q` (see [`ProvenanceEngine::query`]).
     pub fn query(&self, q: u64) -> Lineage {
-        rq_on_spark_generic(&self.prov, |t| *t, q)
+        self.execute(&QueryRequest::new(q)).lineage
     }
 
     /// The underlying dataset (tests / benches).
@@ -65,10 +110,33 @@ impl RqEngine {
     }
 }
 
+impl ProvenanceEngine for RqEngine {
+    fn name(&self) -> &'static str {
+        "rq"
+    }
+
+    /// RQ has no resolve/assemble phases and no driver path; `tau_override`
+    /// is ignored.
+    fn execute(&self, req: &QueryRequest) -> QueryResponse {
+        let mut stats = QueryStats::new("rq");
+        stats.path = ExecPath::Cluster;
+        let t0 = Instant::now();
+        let (lineage, bfs) =
+            rq_bfs(&self.prov, |t| *t, req.item, req.max_depth, req.max_triples);
+        stats.partitions_scanned = bfs.partitions;
+        stats.rows_examined = bfs.rows;
+        stats.bfs_rounds = bfs.rounds;
+        stats.truncated = bfs.truncated;
+        stats.recurse = t0.elapsed();
+        QueryResponse { lineage, stats }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::ClusterConfig;
+    use crate::provenance::model::Trace;
     use crate::provenance::query::driver_rq::{AncestorClosure, NativeClosure};
     use crate::util::ids::{AttrValueId, EntityId, OpId};
 
@@ -90,7 +158,7 @@ mod tests {
         let triples: Vec<ProvTriple> =
             (0..100).map(|i| t(i, i / 2)).chain((0..50).map(|i| t(i + 100, i))).collect();
         let trace = Trace::new(triples.clone());
-        let engine = RqEngine::new(&sc(), &trace, 8);
+        let engine = RqEngine::new(&sc(), &trace.triples, 8);
         for q in [
             AttrValueId::new(EntityId(1), 0).raw(),
             AttrValueId::new(EntityId(1), 7).raw(),
@@ -105,9 +173,14 @@ mod tests {
     #[test]
     fn rq_unknown_item_empty() {
         let trace = Trace::new(vec![t(1, 2)]);
-        let engine = RqEngine::new(&sc(), &trace, 4);
-        let l = engine.query(AttrValueId::new(EntityId(5), 99).raw());
-        assert!(l.is_empty());
+        let engine = RqEngine::new(&sc(), &trace.triples, 4);
+        let resp = engine.execute(&QueryRequest::new(
+            AttrValueId::new(EntityId(5), 99).raw(),
+        ));
+        assert!(resp.lineage.is_empty());
+        // The first round still scanned one partition looking for it.
+        assert_eq!(resp.stats.bfs_rounds, 1);
+        assert_eq!(resp.stats.partitions_scanned, 1);
     }
 
     #[test]
@@ -125,12 +198,46 @@ mod tests {
             .collect();
         let trace = Trace::new(triples);
         let s = sc();
-        let engine = RqEngine::new(&s, &trace, 4);
+        let engine = RqEngine::new(&s, &trace.triples, 4);
         let before = s.metrics().snapshot();
-        let l = engine.query(AttrValueId::new(e, 0).raw());
+        let resp = engine.execute(&QueryRequest::new(AttrValueId::new(e, 0).raw()));
         let delta = s.metrics().snapshot().since(&before);
-        assert_eq!(l.ancestors.len(), 5);
+        assert_eq!(resp.lineage.ancestors.len(), 5);
         // depth+1 lookup jobs (last round finds nothing new).
         assert!(delta.jobs >= 5 && delta.jobs <= 7, "jobs={}", delta.jobs);
+        assert_eq!(resp.stats.bfs_rounds, 6);
+        // Per-query stats agree with the engine-wide counters.
+        assert_eq!(resp.stats.partitions_scanned, delta.partitions_scanned);
+        assert_eq!(resp.stats.rows_examined, delta.rows_scanned);
+    }
+
+    #[test]
+    fn rq_depth_and_triple_caps() {
+        let e = EntityId(0);
+        let triples: Vec<ProvTriple> = (0..6)
+            .map(|i| {
+                ProvTriple::new(
+                    AttrValueId::new(e, i + 1),
+                    AttrValueId::new(e, i),
+                    OpId(0),
+                )
+            })
+            .collect();
+        let trace = Trace::new(triples);
+        let engine = RqEngine::new(&sc(), &trace.triples, 4);
+        let q = AttrValueId::new(e, 0).raw();
+
+        let capped = engine.execute(&QueryRequest::new(q).with_max_depth(2));
+        assert!(capped.stats.truncated);
+        assert_eq!(capped.stats.bfs_rounds, 2);
+        assert_eq!(capped.lineage.triples.len(), 2);
+
+        let by_rows = engine.execute(&QueryRequest::new(q).with_max_triples(3));
+        assert!(by_rows.stats.truncated);
+        assert_eq!(by_rows.lineage.triples.len(), 3);
+
+        let full = engine.execute(&QueryRequest::new(q));
+        assert!(!full.stats.truncated);
+        assert_eq!(full.lineage.triples.len(), 6);
     }
 }

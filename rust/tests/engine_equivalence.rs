@@ -1,19 +1,24 @@
 //! The central correctness property: **RQ, CCProv and CSProv return
 //! identical lineages** for every query, across τ branches and closure
-//! backends (Invariant 1 of DESIGN.md §6). Driven by `proptest_lite` over
-//! randomized generator configurations and query items.
+//! backends (Invariant 1 of DESIGN.md §6) — driven through
+//! `&dyn ProvenanceEngine` trait objects so the uniform interface itself is
+//! what's under test. Also checks the per-query `QueryStats` contract:
+//! every non-empty lineage reports nonzero partitions scanned, rows
+//! examined and phase time.
 
-use provspark::config::{ClusterConfig, EngineConfig};
-use provspark::harness::EngineSet;
+use provspark::config::EngineConfig;
+use provspark::harness::{EngineSet, ProvSession};
 use provspark::minispark::MiniSpark;
 use provspark::proptest_lite as shim;
 use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::query::{ProvenanceEngine, QueryRequest};
 use provspark::util::rng::Pcg64;
 use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::sync::Arc;
 
 fn no_overhead() -> EngineConfig {
     let mut cfg = EngineConfig::default();
-    cfg.cluster = ClusterConfig { job_overhead_us: 0, ..Default::default() };
+    cfg.cluster.job_overhead_us = 0;
     cfg
 }
 
@@ -52,22 +57,61 @@ fn all_engines_agree() {
             let pre = preprocess(&trace, &g, &splits, case.theta, 100, WccImpl::Driver);
             let mut cfg = no_overhead();
             cfg.prov.tau = case.tau;
-            let sc = MiniSpark::new(cfg.cluster.clone());
-            let engines = EngineSet::build(&sc, &trace, &pre, &cfg)
+            let session = ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre))
                 .map_err(|e| format!("build: {e}"))?;
+            let trace = Arc::clone(session.trace());
             let mut rng = Pcg64::new(case.seed ^ 0xABCD);
-            for _ in 0..case.queries {
+            for i in 0..case.queries {
+                // Query a derived item, (sometimes) a source item, and
+                // (once) a completely unknown id.
                 let t = &trace.triples[rng.range(0, trace.len())];
-                // Query both a derived item and (sometimes) a source item.
-                let q = if rng.chance(0.8) { t.dst.raw() } else { t.src.raw() };
-                let a = engines.rq.query(q);
-                let b = engines.ccprov.query(q);
-                let c = engines.csprov.query(q);
-                if a != b {
-                    return Err(format!("RQ != CCProv for q={q} (tau={})", case.tau));
+                let q = if i == 0 {
+                    u64::MAX - rng.range(0, 1000) as u64
+                } else if rng.chance(0.8) {
+                    t.dst.raw()
+                } else {
+                    t.src.raw()
+                };
+                let req = QueryRequest::new(q);
+                let engines = session.engines().as_dyn();
+                let baseline = engines[0].1.execute(&req);
+                for (name, engine) in engines {
+                    let resp = engine.execute(&req);
+                    if resp.lineage != baseline.lineage {
+                        return Err(format!(
+                            "{name} != rq for q={q} (tau={})",
+                            case.tau
+                        ));
+                    }
+                    if resp.stats.engine != name {
+                        return Err(format!("stats tagged {} on {name}", resp.stats.engine));
+                    }
+                    // The QueryStats contract: a non-empty lineage cannot
+                    // have been produced without touching data.
+                    if !resp.lineage.is_empty() {
+                        if resp.stats.partitions_scanned == 0 {
+                            return Err(format!("{name}: zero partitions_scanned for q={q}"));
+                        }
+                        if resp.stats.rows_examined == 0 {
+                            return Err(format!("{name}: zero rows_examined for q={q}"));
+                        }
+                        if resp.stats.total_time().is_zero() {
+                            return Err(format!("{name}: zero phase time for q={q}"));
+                        }
+                        if resp.stats.truncated {
+                            return Err(format!("{name}: uncapped query marked truncated"));
+                        }
+                    }
                 }
-                if a != c {
-                    return Err(format!("RQ != CSProv for q={q} (tau={})", case.tau));
+                // Depth-capped requests are also engine-independent: every
+                // engine expands the same levels from q.
+                let capped = QueryRequest::new(q).with_max_depth(2);
+                let capped_base = session.engines().as_dyn()[0].1.execute(&capped);
+                for (name, engine) in session.engines().as_dyn() {
+                    let resp = engine.execute(&capped);
+                    if resp.lineage != capped_base.lineage {
+                        return Err(format!("{name} capped lineage differs for q={q}"));
+                    }
                 }
             }
             Ok(())
@@ -92,8 +136,11 @@ fn xla_closure_engine_agrees() {
     let mut xla_cfg = native_cfg.clone();
     xla_cfg.prov.closure_backend = provspark::config::Backend::Xla;
     let sc = MiniSpark::new(native_cfg.cluster.clone());
-    let nat = EngineSet::build(&sc, &trace, &pre, &native_cfg).unwrap();
-    let xla = EngineSet::build(&sc, &trace, &pre, &xla_cfg).unwrap();
+    let trace = Arc::new(trace);
+    let pre = Arc::new(pre);
+    let nat =
+        EngineSet::build(&sc, Arc::clone(&trace), Arc::clone(&pre), &native_cfg).unwrap();
+    let xla = EngineSet::build(&sc, Arc::clone(&trace), Arc::clone(&pre), &xla_cfg).unwrap();
     for t in trace.triples.iter().step_by(trace.len() / 12 + 1) {
         let q = t.dst.raw();
         assert_eq!(nat.csprov.query(q), xla.csprov.query(q), "q={q}");
@@ -112,7 +159,8 @@ fn lineage_is_closed_and_consistent() {
     let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
     let cfg = no_overhead();
     let sc = MiniSpark::new(cfg.cluster.clone());
-    let engines = EngineSet::build(&sc, &trace, &pre, &cfg).unwrap();
+    let trace = Arc::new(trace);
+    let engines = EngineSet::build(&sc, Arc::clone(&trace), Arc::new(pre), &cfg).unwrap();
     for t in trace.triples.iter().step_by(trace.len() / 10 + 1) {
         let q = t.dst.raw();
         let l = engines.csprov.query(q);

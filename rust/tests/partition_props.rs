@@ -1,7 +1,7 @@
 //! Property tests for Algorithm 3 and the set machinery (Invariants 3–5
 //! of DESIGN.md §6) on generated curation traces.
 
-use provspark::config::{ClusterConfig, EngineConfig};
+use provspark::config::EngineConfig;
 use provspark::harness::EngineSet;
 use provspark::minispark::MiniSpark;
 use provspark::proptest_lite::{run_prop, PropCfg};
@@ -142,10 +142,17 @@ fn set_lineage_is_sound() {
         gen_case,
         |c| {
             let mut cfg = EngineConfig::default();
-            cfg.cluster = ClusterConfig { job_overhead_us: 0, ..Default::default() };
+            cfg.cluster.job_overhead_us = 0;
             let sc = MiniSpark::new(cfg.cluster.clone());
-            let engines =
-                EngineSet::build(&sc, &c.trace, &c.pre, &cfg).map_err(|e| e.to_string())?;
+            // The property closure only borrows the case, so the set gets
+            // its own Arc'd copies (test-only; the builders stay clone-free).
+            let engines = EngineSet::build(
+                &sc,
+                std::sync::Arc::new(c.trace.clone()),
+                std::sync::Arc::new(c.pre.clone()),
+                &cfg,
+            )
+            .map_err(|e| e.to_string())?;
             let mut rng = Pcg64::new(42);
             for _ in 0..5 {
                 let t = &c.trace.triples[rng.range(0, c.trace.len())];

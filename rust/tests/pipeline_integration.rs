@@ -2,12 +2,14 @@
 //! (partition-pruning bounds, τ crossover, RQ round counting); CLI-level
 //! workflow parity with in-memory state.
 
-use provspark::config::{ClusterConfig, EngineConfig};
+use provspark::config::EngineConfig;
 use provspark::harness::{select_queries, EngineSet, QueryClass};
 use provspark::minispark::MiniSpark;
-use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::model::Trace;
+use provspark::provenance::pipeline::{preprocess, Preprocessed, WccImpl};
 use provspark::provenance::store;
 use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::sync::Arc;
 
 fn tmpdir() -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!("provspark_it_{}", std::process::id()));
@@ -17,7 +19,7 @@ fn tmpdir() -> std::path::PathBuf {
 
 fn no_overhead() -> EngineConfig {
     let mut cfg = EngineConfig::default();
-    cfg.cluster = ClusterConfig { job_overhead_us: 0, ..Default::default() };
+    cfg.cluster.job_overhead_us = 0;
     cfg
 }
 
@@ -38,8 +40,9 @@ fn persisted_state_answers_identically() {
 
     let cfg = no_overhead();
     let sc = MiniSpark::new(cfg.cluster.clone());
-    let mem = EngineSet::build(&sc, &trace, &pre, &cfg).unwrap();
-    let disk = EngineSet::build(&sc, &trace2, &pre2, &cfg).unwrap();
+    let trace = Arc::new(trace);
+    let mem = EngineSet::build(&sc, Arc::clone(&trace), Arc::new(pre), &cfg).unwrap();
+    let disk = EngineSet::build(&sc, Arc::new(trace2), Arc::new(pre2), &cfg).unwrap();
     for t in trace.triples.iter().step_by(trace.len() / 8 + 1) {
         let q = t.dst.raw();
         assert_eq!(mem.csprov.query(q), disk.csprov.query(q));
@@ -58,7 +61,10 @@ fn csprov_scans_at_most_set_lineage_partitions() {
     let mut cfg = no_overhead();
     cfg.prov.tau = usize::MAX;
     let sc = MiniSpark::new(cfg.cluster.clone());
-    let engines = EngineSet::build(&sc, &trace, &pre, &cfg).unwrap();
+    let trace = Arc::new(trace);
+    let pre = Arc::new(pre);
+    let engines =
+        EngineSet::build(&sc, Arc::clone(&trace), Arc::clone(&pre), &cfg).unwrap();
     let sel = select_queries(&trace, &pre, QueryClass::LcLl, 3, divisor, 3).unwrap();
     for &q in &sel.items {
         let s_len = engines.csprov.set_lineage(pre.cs_of[&q]).len() + 1;
@@ -83,6 +89,8 @@ fn tau_controls_collect_vs_cluster() {
     let (trace, g, splits) =
         generate(&GeneratorConfig { scale_divisor: divisor, ..Default::default() });
     let pre = preprocess(&trace, &g, &splits, (25_000 / divisor).max(50), 100, WccImpl::Driver);
+    let trace = Arc::new(trace);
+    let pre = Arc::new(pre);
     let sel = select_queries(&trace, &pre, QueryClass::LcSl, 2, divisor, 9).unwrap();
     let q = sel.items[0];
 
@@ -90,7 +98,8 @@ fn tau_controls_collect_vs_cluster() {
     let mut cfg = no_overhead();
     cfg.prov.tau = usize::MAX;
     let sc = MiniSpark::new(cfg.cluster.clone());
-    let engines = EngineSet::build(&sc, &trace, &pre, &cfg).unwrap();
+    let engines =
+        EngineSet::build(&sc, Arc::clone(&trace), Arc::clone(&pre), &cfg).unwrap();
     let before = sc.metrics().snapshot();
     let a = engines.csprov.query(q);
     let d_driver = sc.metrics().snapshot().since(&before);
@@ -101,7 +110,8 @@ fn tau_controls_collect_vs_cluster() {
     let mut cfg0 = no_overhead();
     cfg0.prov.tau = 0;
     let sc0 = MiniSpark::new(cfg0.cluster.clone());
-    let engines0 = EngineSet::build(&sc0, &trace, &pre, &cfg0).unwrap();
+    let engines0 =
+        EngineSet::build(&sc0, Arc::clone(&trace), Arc::clone(&pre), &cfg0).unwrap();
     let before = sc0.metrics().snapshot();
     let b = engines0.csprov.query(q);
     let d_cluster = sc0.metrics().snapshot().since(&before);
@@ -131,15 +141,15 @@ fn rq_jobs_scale_with_lineage_depth_not_size() {
     let sel = select_queries(&t1, &pre1, QueryClass::LcSl, 1, 1000, 5).unwrap();
     let q = sel.items[0];
 
-    let run = |trace, pre: &_| {
+    let run = |trace: Arc<Trace>, pre: Arc<Preprocessed>| {
         let sc = MiniSpark::new(cfg.cluster.clone());
         let engines = EngineSet::build(&sc, trace, pre, &cfg).unwrap();
         let before = sc.metrics().snapshot();
         let l = engines.rq.query(q);
         (l, sc.metrics().snapshot().since(&before))
     };
-    let (l1, d1) = run(&t1, &pre1);
-    let (l4, d4) = run(&t4, &pre4);
+    let (l1, d1) = run(Arc::new(t1), Arc::new(pre1));
+    let (l4, d4) = run(Arc::new(t4), Arc::new(pre4));
     assert_eq!(l1, l4, "same item exists in the replicated trace");
     assert_eq!(d1.jobs, d4.jobs, "job count depends on depth only");
     assert!(
@@ -157,7 +167,8 @@ fn queries_on_inputs_and_unknowns_are_empty() {
     let pre = preprocess(&trace, &g, &splits, 300, 100, WccImpl::Driver);
     let cfg = no_overhead();
     let sc = MiniSpark::new(cfg.cluster.clone());
-    let engines = EngineSet::build(&sc, &trace, &pre, &cfg).unwrap();
+    let trace = Arc::new(trace);
+    let engines = EngineSet::build(&sc, Arc::clone(&trace), Arc::new(pre), &cfg).unwrap();
     // A pure source (workflow input value): present but underived.
     let sources: std::collections::HashSet<u64> =
         trace.triples.iter().map(|t| t.src.raw()).collect();
