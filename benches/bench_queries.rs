@@ -57,8 +57,8 @@ fn main() -> anyhow::Result<()> {
     let session = cfg.build_session(cfg.replications[0])?;
     for &class in &classes {
         let sel = select_queries(
-            session.trace(),
-            session.pre(),
+            &session.trace(),
+            &session.pre(),
             class,
             cfg.queries_per_class,
             divisor,

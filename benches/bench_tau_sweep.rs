@@ -40,8 +40,8 @@ fn main() -> anyhow::Result<()> {
         let mut cells = vec![if tau >= 1_000_000_000 { "∞".into() } else { tau.to_string() }];
         for class in [QueryClass::ScSl, QueryClass::LcSl, QueryClass::LcLl] {
             let sel = select_queries(
-                session.trace(),
-                session.pre(),
+                &session.trace(),
+                &session.pre(),
                 class,
                 cfg.queries_per_class,
                 divisor,

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let pre = preprocess(&trace, &graph, &splits, theta, 100, WccImpl::Driver);
     let cfg = EngineConfig::default();
     let session = ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre))?;
-    let (trace, pre) = (Arc::clone(session.trace()), Arc::clone(session.pre()));
+    let (trace, pre) = (session.trace(), session.pre());
 
     // The "flagged" value: a deep-lineage item in the largest component.
     let flagged = select_queries(&trace, &pre, QueryClass::LcLl, 1, divisor, 7)?.items[0];

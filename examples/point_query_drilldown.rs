@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let session = ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre))?;
 
     for class in [QueryClass::ScSl, QueryClass::LcSl, QueryClass::LcLl] {
-        let sel = select_queries(session.trace(), session.pre(), class, 1, divisor, 42)?;
+        let sel = select_queries(&session.trace(), &session.pre(), class, 1, divisor, 42)?;
         println!("--- {class} (ancestors in [{}, {}]) ---", sel.band.0, sel.band.1);
         print!("{}", drilldown_report(&session, sel.items[0]));
         println!();

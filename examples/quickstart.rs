@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
 
     // 4. Query the lineage of a deep derived value in the largest component
     //    (the LC-SL class of §4) on every engine, via typed requests.
-    let q = select_queries(session.trace(), session.pre(), QueryClass::LcSl, 1, divisor, 42)?
+    let q = select_queries(&session.trace(), &session.pre(), QueryClass::LcSl, 1, divisor, 42)?
         .items[0];
     let req = QueryRequest::new(q);
     let mut first = None;
@@ -80,8 +80,8 @@ fn main() -> anyhow::Result<()> {
     let auto = session.execute(&req);
     println!("auto router picked: {}", auto.stats.engine);
     let batch: Vec<QueryRequest> = select_queries(
-        session.trace(),
-        session.pre(),
+        &session.trace(),
+        &session.pre(),
         QueryClass::ScSl,
         3,
         divisor,

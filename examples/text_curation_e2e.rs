@@ -101,7 +101,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 5. drill-down + headline -----------------------------------------
     let session = ProvSession::new(&xcfg.engine, Arc::new(trace), Arc::new(pre))?;
-    let sel = select_queries(session.trace(), session.pre(), QueryClass::LcLl, 1, divisor, 42)?;
+    let sel = select_queries(&session.trace(), &session.pre(), QueryClass::LcLl, 1, divisor, 42)?;
     println!("\n[5] point-query drill-down (LC-LL):");
     print!("{}", drilldown_report(&session, sel.items[0]));
 

@@ -1,26 +1,48 @@
 //! Engine assembly: build the three query engines from one preprocessed
-//! trace, with the configured τ and closure backend.
+//! trace, with the configured τ and closure backend — and keep them live
+//! across incremental-ingestion epochs.
 //!
 //! [`EngineSet::build`] takes the trace and preprocessed data behind `Arc`s
 //! and hands the engine builders borrowed slices, which they partition in a
 //! single pass — no wholesale `Vec` clones anywhere on the construction
 //! path. The `(node, csid)` index CSProv resolves items against is derived
 //! here exactly once per set.
+//!
+//! [`EngineSet::absorb`] is the delta path: given the previous epoch's
+//! engines and the [`AppliedDelta`] an
+//! [`IncrementalIndex`](crate::provenance::incremental::IncrementalIndex)
+//! produced, it derives the next epoch's engines by routing appended rows
+//! into the existing datasets and patching only the partitions whose rows
+//! were retagged ([`Dataset::append_partitioned`] /
+//! [`Dataset::patch_partitions`]) — never a full rebuild.
+//!
+//! [`Dataset::append_partitioned`]: crate::minispark::Dataset::append_partitioned
+//! [`Dataset::patch_partitions`]: crate::minispark::Dataset::patch_partitions
 
+use super::session::EngineRouter;
 use crate::config::{Backend, EngineConfig};
 use crate::minispark::MiniSpark;
-use crate::provenance::model::Trace;
+use crate::provenance::incremental::AppliedDelta;
+use crate::provenance::model::{ProvTriple, SetDep, Trace};
 use crate::provenance::pipeline::Preprocessed;
 use crate::provenance::query::driver_rq::{AncestorClosure, NativeClosure};
-use crate::provenance::query::{CcProvEngine, CsProvEngine, ProvenanceEngine, RqEngine};
+use crate::provenance::query::{
+    CcProvEngine, CsDelta, CsProvEngine, ProvenanceEngine, RqEngine,
+};
 use crate::runtime::{XlaClosure, XlaRuntime};
-use anyhow::Result;
+use crate::util::ids::ComponentId;
+use anyhow::{ensure, Result};
+use rustc_hash::{FxHashMap, FxHashSet};
 use std::sync::Arc;
 
-/// All three engines over one dataset, sharing the source data by `Arc`.
+/// All three engines over one dataset epoch, sharing the source data by
+/// `Arc`. One `EngineSet` is immutable; ingestion produces the *next* set
+/// via [`absorb`](Self::absorb) (see `ProvSession` for the epoch swap).
 pub struct EngineSet {
     trace: Arc<Trace>,
     pre: Arc<Preprocessed>,
+    /// Component ids that were Algorithm 3-partitioned (the `Auto` key).
+    large: FxHashSet<u64>,
     pub rq: RqEngine,
     pub ccprov: CcProvEngine,
     pub csprov: CsProvEngine,
@@ -58,7 +80,85 @@ impl EngineSet {
         let node_set: Vec<(u64, u64)> = pre.cs_of.iter().map(|(&n, &c)| (n, c)).collect();
         let csprov = CsProvEngine::new(sc, &pre.cs_triples, node_set, &pre.set_deps, np, tau)
             .with_closure(closure);
-        Ok(Self { trace, pre, rq, ccprov, csprov })
+        let large = large_of(&pre);
+        Ok(Self { trace, pre, large, rq, ccprov, csprov })
+    }
+
+    /// Derive the next epoch's engines from the previous epoch plus an
+    /// [`AppliedDelta`]: appended rows are routed into the existing
+    /// partitions, retagged rows are dropped/patched only where they live,
+    /// and the `(node, csid)` / set-dependency indexes absorb their diffs.
+    /// τ and the closure backend carry over from `prev`.
+    ///
+    /// `trace` / `pre` must be the post-apply snapshot the delta describes
+    /// (`IncrementalIndex::snapshot`).
+    pub fn absorb(
+        prev: &EngineSet,
+        trace: Arc<Trace>,
+        pre: Arc<Preprocessed>,
+        delta: &AppliedDelta,
+    ) -> Result<Self> {
+        ensure!(
+            pre.cc_triples.len() == trace.len() && pre.cs_triples.len() == trace.len(),
+            "snapshot mismatch: {} triples vs {} cc / {} cs rows",
+            trace.len(),
+            pre.cc_triples.len(),
+            pre.cs_triples.len(),
+        );
+        ensure!(
+            delta.first_new_triple == prev.trace.len()
+                && trace.len() == prev.trace.len() + delta.stats.new_triples,
+            "delta does not extend the previous epoch (prev {} rows, delta starts at {})",
+            prev.trace.len(),
+            delta.first_new_triple,
+        );
+        let first = delta.first_new_triple;
+
+        let rq = prev.rq.with_appended(&trace.triples[first..]);
+
+        // CCProv: dst keys never change, so retagging is an in-place patch.
+        let mut retag_cc: FxHashMap<ProvTriple, ComponentId> = FxHashMap::default();
+        for &i in &delta.retag_cc {
+            let row = pre.cc_triples[i as usize];
+            retag_cc.insert(row.triple, row.ccid);
+        }
+        let ccprov = prev.ccprov.with_delta(&retag_cc, &pre.cc_triples[first..]);
+
+        // CSProv: dst_csid (the partitioning key) can change, so retagged
+        // rows are dropped from their old partitions and re-routed.
+        let mut retag_cs: FxHashMap<ProvTriple, crate::provenance::model::CsTriple> =
+            FxHashMap::default();
+        let mut old_keys: FxHashSet<u64> = FxHashSet::default();
+        let mut rerouted = Vec::with_capacity(delta.retag_cs.len());
+        for &(i, old) in &delta.retag_cs {
+            let new_row = pre.cs_triples[i as usize];
+            retag_cs.insert(old.triple, new_row);
+            old_keys.insert(old.dst_csid.0);
+            rerouted.push(new_row);
+        }
+        let old_keys: Vec<u64> = old_keys.into_iter().collect();
+        let node_patch: FxHashMap<u64, u64> = delta.node_changes.iter().copied().collect();
+        let removed_deps: FxHashSet<SetDep> = delta.removed_deps.iter().copied().collect();
+        let removed_dep_keys: Vec<u64> = removed_deps
+            .iter()
+            .map(|d| d.dst_csid.0)
+            .collect::<FxHashSet<u64>>()
+            .into_iter()
+            .collect();
+        let csprov = prev.csprov.with_delta(&CsDelta {
+            retagged: &retag_cs,
+            old_keys: &old_keys,
+            rerouted: &rerouted,
+            appended: &pre.cs_triples[first..],
+            node_patch: &node_patch,
+            new_nodes: &delta.new_nodes,
+            removed_deps: &removed_deps,
+            removed_dep_keys: &removed_dep_keys,
+            added_deps: &delta.added_deps,
+        });
+
+        let large = large_of(&pre);
+        Ok(Self { trace, pre, large, rq, ccprov, csprov })
     }
 
     /// The source trace the engines were built from.
@@ -69,6 +169,28 @@ impl EngineSet {
     /// The preprocessed data the engines were built from.
     pub fn pre(&self) -> &Arc<Preprocessed> {
         &self.pre
+    }
+
+    /// Resolve a routing policy for one item to a concrete engine.
+    ///
+    /// `Auto` routes on data shape: items in a *large* (Algorithm
+    /// 3-partitioned) component go to CSProv, whose set-lineage pruning is
+    /// what makes those queries real-time; items in small components go to
+    /// CCProv (their component is a single set, so CSProv would reduce to
+    /// CCProv anyway, §2.3); unknown items go to CSProv, whose node-index
+    /// miss is the cheapest rejection. `Auto` never picks RQ — the baseline
+    /// exists to be measured against, not to serve traffic.
+    pub fn route(&self, router: EngineRouter, item: u64) -> &dyn ProvenanceEngine {
+        match router {
+            EngineRouter::Rq => &self.rq,
+            EngineRouter::CcProv => &self.ccprov,
+            EngineRouter::CsProv => &self.csprov,
+            EngineRouter::Auto => match self.pre.cc_of.get(&item) {
+                Some(cc) if self.large.contains(cc) => &self.csprov,
+                Some(_) => &self.ccprov,
+                None => &self.csprov,
+            },
+        }
     }
 
     /// The engines as trait objects, in `(name, engine)` pairs — what the
@@ -82,9 +204,14 @@ impl EngineSet {
     }
 }
 
+fn large_of(pre: &Preprocessed) -> FxHashSet<u64> {
+    pre.large_components.iter().map(|&(cc, _, _)| cc).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::provenance::incremental::{IncrementalIndex, TripleBatch};
     use crate::provenance::pipeline::{preprocess, WccImpl};
     use crate::provenance::query::QueryRequest;
     use crate::workflow::generator::{generate, GeneratorConfig};
@@ -110,5 +237,59 @@ mod tests {
             assert_eq!(resp.lineage, a, "{name}");
             assert_eq!(resp.stats.engine, name);
         }
+    }
+
+    #[test]
+    fn absorbed_engines_match_rebuilt_engines() {
+        let (full, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let cut = full.len() * 9 / 10;
+        let base = Trace::new(full.triples[..cut].to_vec());
+        let batch = TripleBatch::new(full.triples[cut..].to_vec());
+
+        let mut cfg = EngineConfig::default();
+        cfg.cluster.job_overhead_us = 0;
+        cfg.prov.tau = 200;
+        let sc = MiniSpark::new(cfg.cluster.clone());
+
+        let base_pre = preprocess(&base, &g, &splits, 150, 100, WccImpl::Driver);
+        let mut idx =
+            IncrementalIndex::new(base.clone(), base_pre.clone(), g, splits).unwrap();
+        let prev =
+            EngineSet::build(&sc, Arc::new(base), Arc::new(base_pre), &cfg).unwrap();
+        let delta = idx.apply(&batch).unwrap();
+        let (trace, pre) = idx.snapshot();
+        let absorbed = EngineSet::absorb(&prev, trace, Arc::clone(&pre), &delta).unwrap();
+
+        // Rebuild from the same snapshot and compare answers + routing.
+        let (trace2, pre2) = idx.snapshot();
+        let rebuilt = EngineSet::build(&sc, trace2, pre2, &cfg).unwrap();
+        let mut items: Vec<u64> = absorbed
+            .trace()
+            .triples
+            .iter()
+            .step_by(absorbed.trace().len() / 14 + 1)
+            .map(|t| t.dst.raw())
+            .collect();
+        items.push(u64::MAX - 3); // unknown
+        for &q in &items {
+            let req = QueryRequest::new(q);
+            for ((an, ae), (bn, be)) in absorbed.as_dyn().into_iter().zip(rebuilt.as_dyn())
+            {
+                assert_eq!(an, bn);
+                assert_eq!(
+                    ae.execute(&req).lineage,
+                    be.execute(&req).lineage,
+                    "{an} diverges for q={q}"
+                );
+            }
+            assert_eq!(
+                absorbed.route(EngineRouter::Auto, q).name(),
+                rebuilt.route(EngineRouter::Auto, q).name(),
+                "auto routing diverges for q={q}"
+            );
+        }
+        // Absorption did not lose or duplicate rows.
+        assert_eq!(absorbed.rq.dataset().len(), rebuilt.rq.dataset().len());
     }
 }

@@ -8,7 +8,7 @@ use crate::benchkit::Table;
 use crate::config::EngineConfig;
 use crate::provenance::model::Trace;
 use crate::provenance::pipeline::{preprocess, Preprocessed, WccImpl};
-use crate::provenance::query::QueryRequest;
+use crate::provenance::query::{ProvenanceEngine, QueryRequest};
 use crate::util::fmt::{human_count, human_duration};
 use crate::workflow::generator::{generate, GeneratorConfig};
 use anyhow::Result;
@@ -126,7 +126,7 @@ pub fn query_table(
         let (trace, pre) = (session.trace(), session.pre());
         let elements = trace.len() + pre.cc_of.len();
         let sel =
-            select_queries(trace, pre, class, cfg.queries_per_class, cfg.divisor, cfg.seed)?;
+            select_queries(&trace, &pre, class, cfg.queries_per_class, cfg.divisor, cfg.seed)?;
 
         let avg = |router: EngineRouter| -> f64 {
             let t0 = Instant::now();
@@ -155,9 +155,12 @@ pub fn query_table(
 /// §4-Discussion drill-down for one query: set, set-lineage size, and the
 /// minimal volume CSProv recurses over vs. what CCProv / RQ would process.
 pub fn drilldown_report(session: &ProvSession, q: u64) -> String {
-    let trace = session.trace();
-    let pre = session.pre();
+    // One epoch snapshot for the whole report — trace, index, and engines
+    // must describe the same ingestion state even if a concurrent ingest
+    // swaps epochs mid-report.
     let engines = session.engines();
+    let trace = engines.trace();
+    let pre = engines.pre();
     let cc = pre.cc_of.get(&q).copied();
     let cs = pre.cs_of.get(&q).copied();
     let mut out = String::new();
@@ -169,7 +172,7 @@ pub fn drilldown_report(session: &ProvSession, q: u64) -> String {
     let comp_edges = trace.triples.iter().filter(|t| pre.cc_of[&t.src.raw()] == cc).count();
     let set_lineage = engines.csprov.set_lineage(cs);
     let volume = engines.csprov.lineage_volume(q);
-    let resp = session.execute_on(EngineRouter::CsProv, &QueryRequest::new(q));
+    let resp = engines.route(EngineRouter::CsProv, q).execute(&QueryRequest::new(q));
     let lineage = &resp.lineage;
     out.push_str(&format!("component       : {cc} ({} triples)\n", human_count(comp_edges as u64)));
     out.push_str(&format!("connected set   : {cs}\n"));
@@ -257,7 +260,8 @@ mod tests {
         let cfg = tiny_cfg();
         let session = cfg.build_session(1).unwrap();
         let sel =
-            select_queries(session.trace(), session.pre(), QueryClass::LcSl, 1, 1000, 1).unwrap();
+            select_queries(&session.trace(), &session.pre(), QueryClass::LcSl, 1, 1000, 1)
+                .unwrap();
         let report = drilldown_report(&session, sel.items[0]);
         assert!(report.contains("CSProv recurses"), "{report}");
         assert!(report.contains("query stats"), "{report}");

@@ -1,7 +1,9 @@
 //! Experiment harness: query-class selection (§4 "Provenance Queries"),
-//! engine assembly, the [`ProvSession`] query service (routing + batched
-//! execution), and the drivers that regenerate every table of the paper's
-//! evaluation (Tables 9–12 plus the Discussion drill-downs).
+//! engine assembly ([`EngineSet`], including delta absorption across
+//! ingestion epochs), the [`ProvSession`] query service (routing, batched
+//! execution, live [`ProvSession::ingest`]), and the drivers that
+//! regenerate every table of the paper's evaluation (Tables 9–12 plus the
+//! Discussion drill-downs).
 
 pub mod classes;
 pub mod engines;

@@ -1,28 +1,41 @@
 //! `ProvSession` — the query service facade the north-star production
 //! system grows from: one object owning the three engines over `Arc`-shared
-//! data, a routing policy picking the cheapest engine per query, and
-//! batched execution fanned across the `exec` worker threads.
+//! data, a routing policy picking the cheapest engine per query, batched
+//! execution fanned across the `exec` worker threads, and **live
+//! ingestion**: [`ProvSession::ingest`] applies a [`TripleBatch`] to an
+//! incrementally maintained index and swaps in a new engine epoch while
+//! in-flight query batches keep answering over the previous one.
+//!
+//! # Epochs
+//!
+//! The session's engines live behind `RwLock<Arc<EngineSet>>`. Every query
+//! (and every `query_many` batch) clones the current `Arc` once and runs
+//! entirely against that epoch — a concurrent ingest builds the next
+//! [`EngineSet`] off to the side (via [`EngineSet::absorb`], which routes
+//! only the delta into the existing datasets) and then swaps the `Arc`.
+//! Readers never block ingestion and never observe a half-applied batch;
+//! the old epoch is dropped when its last in-flight query finishes.
 
 use super::engines::EngineSet;
 use crate::config::EngineConfig;
 use crate::exec::par_map_indexed;
 use crate::minispark::MiniSpark;
+use crate::provenance::incremental::{DeltaStats, IncrementalIndex, TripleBatch};
 use crate::provenance::model::Trace;
 use crate::provenance::pipeline::Preprocessed;
 use crate::provenance::query::{ProvenanceEngine, QueryRequest, QueryResponse};
+use crate::workflow::curation::text_curation_workflow;
+use crate::workflow::graph::DependencyGraph;
+use crate::workflow::splits::SplitSet;
 use anyhow::Result;
-use rustc_hash::FxHashSet;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 
 /// Which engine answers a request.
 ///
-/// `Auto` routes on data shape, using component size from [`Preprocessed`]:
-/// items in a *large* (Algorithm 3-partitioned) component go to CSProv,
-/// whose set-lineage pruning is what makes those queries real-time; items
-/// in small components go to CCProv (their component is a single set, so
-/// CSProv would reduce to CCProv anyway, §2.3); unknown items go to CSProv,
-/// whose node-index miss is the cheapest rejection. `Auto` never picks RQ —
-/// the baseline exists to be measured against, not to serve traffic.
+/// `Auto` routes on data shape, using component size from [`Preprocessed`]
+/// (see [`EngineSet::route`] for the policy): large-component items →
+/// CSProv, small-component items → CCProv, unknown items → CSProv's cheap
+/// index miss — never RQ.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EngineRouter {
     Rq,
@@ -56,13 +69,42 @@ impl std::fmt::Display for EngineRouter {
     }
 }
 
-/// A query session: the three engines behind one routed, batchable front.
+/// A query session: the three engines behind one routed, batchable,
+/// ingest-capable front.
+///
+/// ```
+/// use provspark::config::EngineConfig;
+/// use provspark::harness::{EngineRouter, ProvSession};
+/// use provspark::provenance::pipeline::{preprocess, WccImpl};
+/// use provspark::provenance::query::QueryRequest;
+/// use provspark::workflow::generator::{generate, GeneratorConfig};
+/// use std::sync::Arc;
+///
+/// // Generate a tiny trace, preprocess it, open a session.
+/// let (trace, graph, splits) =
+///     generate(&GeneratorConfig { scale_divisor: 5000, ..Default::default() });
+/// let pre = preprocess(&trace, &graph, &splits, 100, 50, WccImpl::Driver);
+/// let mut cfg = EngineConfig::default();
+/// cfg.cluster.job_overhead_us = 0;
+/// let session = ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre)).unwrap();
+///
+/// // Query one derived item; the Auto router picks the cheapest engine.
+/// let item = session.trace().triples[0].dst.raw();
+/// let resp = session.execute_on(EngineRouter::Auto, &QueryRequest::new(item));
+/// assert_eq!(resp.lineage.query, item);
+/// assert!(resp.stats.engine == "ccprov" || resp.stats.engine == "csprov");
+/// ```
 pub struct ProvSession {
     sc: MiniSpark,
-    engines: EngineSet,
+    cfg: EngineConfig,
     router: EngineRouter,
-    /// Component ids that were Algorithm 3-partitioned (the `Auto` key).
-    large: FxHashSet<u64>,
+    /// Current engine epoch; `Arc`-cloned per query, swapped per ingest.
+    state: RwLock<Arc<EngineSet>>,
+    /// The incrementally maintained index (lazily cloned from the current
+    /// epoch on first ingest; serializes ingestion).
+    index: Mutex<Option<IncrementalIndex>>,
+    /// Workflow the index re-partitions dirty components against.
+    workflow: (DependencyGraph, SplitSet),
 }
 
 impl ProvSession {
@@ -81,14 +123,34 @@ impl ProvSession {
         pre: Arc<Preprocessed>,
     ) -> Result<Self> {
         let engines = EngineSet::build(sc, trace, pre, cfg)?;
-        let large: FxHashSet<u64> =
-            engines.pre().large_components.iter().map(|&(cc, _, _)| cc).collect();
-        Ok(Self { sc: sc.clone(), engines, router: EngineRouter::Auto, large })
+        Ok(Self {
+            sc: sc.clone(),
+            cfg: cfg.clone(),
+            router: EngineRouter::Auto,
+            state: RwLock::new(Arc::new(engines)),
+            index: Mutex::new(None),
+            workflow: text_curation_workflow(),
+        })
     }
 
     /// Set the default routing policy (builder-style).
     pub fn with_router(mut self, router: EngineRouter) -> Self {
         self.router = router;
+        self
+    }
+
+    /// Set the workflow graph + splits used when ingestion re-partitions a
+    /// dirty component (builder-style; defaults to the text-curation
+    /// workflow every generator trace is drawn from).
+    ///
+    /// **Contract**: this must be the workflow the index was preprocessed
+    /// with — [`Preprocessed`] records θ but not (yet) the workflow itself,
+    /// so the session cannot detect a mismatch, and ingesting under a
+    /// different graph/splits silently breaks the incremental ≡
+    /// from-scratch equivalence (see the ROADMAP open item on recording
+    /// the workflow in the persisted index).
+    pub fn with_workflow(mut self, graph: DependencyGraph, splits: SplitSet) -> Self {
+        self.workflow = (graph, splits);
         self
     }
 
@@ -100,30 +162,45 @@ impl ProvSession {
         &self.sc
     }
 
-    pub fn engines(&self) -> &EngineSet {
-        &self.engines
+    /// The engine configuration this session was opened with (τ, closure
+    /// backend, cluster shape) — every epoch inherits it.
+    pub fn engine_config(&self) -> &EngineConfig {
+        &self.cfg
     }
 
-    pub fn trace(&self) -> &Arc<Trace> {
-        self.engines.trace()
+    /// Snapshot the current engine epoch. The returned `Arc` stays valid —
+    /// and internally consistent — for as long as the caller holds it, even
+    /// across concurrent [`ingest`](Self::ingest) calls.
+    pub fn engines(&self) -> Arc<EngineSet> {
+        Arc::clone(&self.state.read().expect("session state lock poisoned"))
     }
 
-    pub fn pre(&self) -> &Arc<Preprocessed> {
-        self.engines.pre()
+    /// The current epoch's trace.
+    ///
+    /// Each call takes its own epoch snapshot — a concurrent
+    /// [`ingest`](Self::ingest) may land between two accessor calls. When
+    /// trace, index, and engines must describe **one** ingestion state,
+    /// snapshot once via [`engines`](Self::engines) and read all three off
+    /// that [`EngineSet`].
+    pub fn trace(&self) -> Arc<Trace> {
+        Arc::clone(self.engines().trace())
     }
 
-    /// Resolve a routing policy for one item to a concrete engine.
-    pub fn resolve(&self, router: EngineRouter, item: u64) -> &dyn ProvenanceEngine {
-        match router {
-            EngineRouter::Rq => &self.engines.rq,
-            EngineRouter::CcProv => &self.engines.ccprov,
-            EngineRouter::CsProv => &self.engines.csprov,
-            EngineRouter::Auto => match self.engines.pre().cc_of.get(&item) {
-                Some(cc) if self.large.contains(cc) => &self.engines.csprov,
-                Some(_) => &self.engines.ccprov,
-                None => &self.engines.csprov,
-            },
-        }
+    /// The current epoch's preprocessed data (same single-accessor snapshot
+    /// semantics as [`trace`](Self::trace)).
+    pub fn pre(&self) -> Arc<Preprocessed> {
+        Arc::clone(self.engines().pre())
+    }
+
+    /// Batches ingested since the session's underlying full preprocess.
+    pub fn epoch(&self) -> u64 {
+        self.engines().pre().epoch
+    }
+
+    /// Name of the engine a routing policy resolves to for one item
+    /// (`"rq" | "ccprov" | "csprov"`), without executing anything.
+    pub fn route(&self, router: EngineRouter, item: u64) -> &'static str {
+        self.engines().route(router, item).name()
     }
 
     /// Answer one request with the session's default router.
@@ -133,11 +210,13 @@ impl ProvSession {
 
     /// Answer one request with an explicit routing policy.
     pub fn execute_on(&self, router: EngineRouter, req: &QueryRequest) -> QueryResponse {
-        self.resolve(router, req.item).execute(req)
+        self.engines().route(router, req.item).execute(req)
     }
 
     /// Answer a batch concurrently on the `exec` worker threads (one logical
-    /// worker per configured executor), preserving request order. Each
+    /// worker per configured executor), preserving request order. The whole
+    /// batch runs against **one** engine epoch (snapshotted on entry), so a
+    /// concurrent ingest never splits a batch across index versions; each
     /// response's [`QueryStats`](crate::provenance::query::QueryStats) is
     /// still attributed to its own request — the per-query counters don't
     /// interleave the way the engine-wide metrics do under concurrency.
@@ -151,8 +230,69 @@ impl ProvSession {
         router: EngineRouter,
         reqs: &[QueryRequest],
     ) -> Vec<QueryResponse> {
+        let epoch = self.engines();
         let parallelism = self.sc.config().executors.max(1);
-        par_map_indexed(reqs, parallelism, |_, req| self.execute_on(router, req))
+        par_map_indexed(reqs, parallelism, |_, req| epoch.route(router, req.item).execute(req))
+    }
+
+    /// Ingest a batch of new provenance triples: apply it to the
+    /// incrementally maintained index
+    /// ([`IncrementalIndex::apply`] — cost proportional to the delta and
+    /// its dirty components, not the index), derive the next engine epoch
+    /// by absorbing the delta into the current datasets
+    /// ([`EngineSet::absorb`]), and swap it in. Queries running concurrently
+    /// keep their epoch; queries started after this returns see the batch.
+    ///
+    /// Ingestions are serialized; queries are never blocked by one (beyond
+    /// the final pointer swap). Dirty components are re-partitioned against
+    /// the session's workflow — the default (text-curation) is correct for
+    /// every generator-produced trace; an index preprocessed under a custom
+    /// workflow must set it via [`with_workflow`](Self::with_workflow)
+    /// **before** the first ingest.
+    ///
+    /// ```
+    /// use provspark::config::EngineConfig;
+    /// use provspark::harness::ProvSession;
+    /// use provspark::provenance::incremental::TripleBatch;
+    /// use provspark::provenance::model::Trace;
+    /// use provspark::provenance::pipeline::{preprocess, WccImpl};
+    /// use provspark::workflow::generator::{generate, GeneratorConfig};
+    /// use std::sync::Arc;
+    ///
+    /// let (full, graph, splits) =
+    ///     generate(&GeneratorConfig { scale_divisor: 5000, ..Default::default() });
+    /// let cut = full.len() * 9 / 10;
+    /// let base = Trace::new(full.triples[..cut].to_vec());
+    /// let pre = preprocess(&base, &graph, &splits, 100, 50, WccImpl::Driver);
+    /// let mut cfg = EngineConfig::default();
+    /// cfg.cluster.job_overhead_us = 0;
+    /// let session = ProvSession::new(&cfg, Arc::new(base), Arc::new(pre)).unwrap();
+    ///
+    /// // The last 10% of the trace arrives as a live delta.
+    /// let stats = session.ingest(&TripleBatch::new(full.triples[cut..].to_vec())).unwrap();
+    /// assert_eq!(stats.epoch, 1);
+    /// assert_eq!(session.epoch(), 1);
+    /// assert_eq!(session.trace().len(), full.len());
+    /// ```
+    pub fn ingest(&self, batch: &TripleBatch) -> Result<DeltaStats> {
+        let mut guard = self.index.lock().expect("session ingest lock poisoned");
+        if guard.is_none() {
+            let cur = self.engines();
+            let (graph, splits) = self.workflow.clone();
+            *guard = Some(IncrementalIndex::new(
+                cur.trace().as_ref().clone(),
+                cur.pre().as_ref().clone(),
+                graph,
+                splits,
+            )?);
+        }
+        let index = guard.as_mut().expect("index initialized above");
+        let delta = index.apply(batch)?;
+        let (trace, pre) = index.snapshot();
+        let prev = self.engines();
+        let next = EngineSet::absorb(&prev, trace, pre, &delta)?;
+        *self.state.write().expect("session state lock poisoned") = Arc::new(next);
+        Ok(delta.stats)
     }
 }
 
@@ -161,6 +301,7 @@ mod tests {
     use super::*;
     use crate::provenance::pipeline::{preprocess, WccImpl};
     use crate::workflow::generator::{generate, GeneratorConfig};
+    use rustc_hash::FxHashSet;
 
     fn session(tau: usize) -> ProvSession {
         let (trace, g, splits) =
@@ -189,7 +330,7 @@ mod tests {
     #[test]
     fn auto_routes_by_component_size() {
         let s = session(1000);
-        let pre = Arc::clone(s.pre());
+        let pre = s.pre();
         let large: FxHashSet<u64> =
             pre.large_components.iter().map(|&(cc, _, _)| cc).collect();
         let lc_item = s
@@ -206,12 +347,12 @@ mod tests {
             .map(|t| t.dst.raw())
             .find(|n| !large.contains(&pre.cc_of[n]))
             .expect("small-component item");
-        assert_eq!(s.resolve(EngineRouter::Auto, lc_item).name(), "csprov");
-        assert_eq!(s.resolve(EngineRouter::Auto, sc_item).name(), "ccprov");
+        assert_eq!(s.route(EngineRouter::Auto, lc_item), "csprov");
+        assert_eq!(s.route(EngineRouter::Auto, sc_item), "ccprov");
         // Unknown items: cheapest rejection, never RQ.
-        assert_eq!(s.resolve(EngineRouter::Auto, u64::MAX - 7).name(), "csprov");
+        assert_eq!(s.route(EngineRouter::Auto, u64::MAX - 7), "csprov");
         // Explicit policies resolve to themselves.
-        assert_eq!(s.resolve(EngineRouter::Rq, lc_item).name(), "rq");
+        assert_eq!(s.route(EngineRouter::Rq, lc_item), "rq");
     }
 
     #[test]
@@ -221,7 +362,7 @@ mod tests {
             .trace()
             .triples
             .iter()
-            .step_by(s.trace().len() / 12 + 1)
+            .step_by(s.trace().triples.len() / 12 + 1)
             .map(|t| QueryRequest::new(t.dst.raw()))
             .collect();
         assert!(reqs.len() >= 8);
@@ -232,6 +373,57 @@ mod tests {
             assert_eq!(resp.stats.engine, seq.stats.engine);
             assert_eq!(resp.stats.partitions_scanned, seq.stats.partitions_scanned);
             assert_eq!(resp.stats.rows_examined, seq.stats.rows_examined);
+        }
+    }
+
+    #[test]
+    fn ingest_swaps_epochs_and_serves_new_data() {
+        let (full, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let cut = full.len() * 9 / 10;
+        let base = Trace::new(full.triples[..cut].to_vec());
+        let pre = preprocess(&base, &g, &splits, 150, 100, WccImpl::Driver);
+        let mut cfg = EngineConfig::default();
+        cfg.cluster.job_overhead_us = 0;
+        cfg.prov.tau = 200;
+        let s = ProvSession::new(&cfg, Arc::new(base), Arc::new(pre)).unwrap();
+        assert_eq!(s.epoch(), 0);
+
+        // A pre-ingest snapshot keeps answering over the old epoch.
+        let old_epoch = s.engines();
+        let old_len = old_epoch.trace().len();
+
+        let stats =
+            s.ingest(&TripleBatch::new(full.triples[cut..].to_vec())).unwrap();
+        assert_eq!(stats.epoch, 1);
+        assert_eq!(stats.new_triples, full.len() - cut);
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.trace().len(), full.len());
+        assert_eq!(old_epoch.trace().len(), old_len, "in-flight epoch unchanged");
+
+        // Post-ingest queries agree with a from-scratch session over the
+        // concatenated trace, on every routing policy.
+        let (g2, s2) = crate::workflow::curation::text_curation_workflow();
+        let scratch_pre = preprocess(&full, &g2, &s2, 150, 100, WccImpl::Driver);
+        let scratch =
+            ProvSession::new(&cfg, Arc::new(full), Arc::new(scratch_pre)).unwrap();
+        let items: Vec<u64> = scratch
+            .trace()
+            .triples
+            .iter()
+            .step_by(scratch.trace().triples.len() / 10 + 1)
+            .map(|t| t.dst.raw())
+            .collect();
+        for router in
+            [EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv, EngineRouter::Auto]
+        {
+            for &q in &items {
+                let req = QueryRequest::new(q);
+                let a = s.execute_on(router, &req);
+                let b = scratch.execute_on(router, &req);
+                assert_eq!(a.lineage, b.lineage, "router={router} q={q}");
+                assert_eq!(a.stats.engine, b.stats.engine, "router={router} q={q}");
+            }
         }
     }
 }

@@ -12,16 +12,22 @@
 //!   metrics). This is the substrate the paper's algorithms run on.
 //! * [`provenance`] — the paper's contribution: the provenance data model,
 //!   weakly-connected-component computation, Algorithm 3 component
-//!   partitioning, set dependencies, and the three query engines
-//!   (`RQ`, `CCProv`, `CSProv`).
+//!   partitioning, set dependencies, the three query engines
+//!   (`RQ`, `CCProv`, `CSProv`), and — beyond the paper — incremental
+//!   index maintenance ([`provenance::incremental`]) so deltas of new
+//!   triples are absorbed without re-preprocessing.
 //! * [`workflow`] — the workflow dependency graph, a synthetic text-curation
 //!   workload shaped like the paper's Figure 1, and the provenance trace
 //!   generator + replication-based scaling.
 //! * [`runtime`] — the PJRT bridge that loads AOT-compiled HLO artifacts
 //!   (produced by `python/compile/aot.py`) and exposes the XLA-backed
 //!   label-propagation / reachability fixpoints.
-//! * [`harness`] — experiment drivers that regenerate every table in the
-//!   paper's evaluation section.
+//! * [`harness`] — the [`harness::ProvSession`] query service (routing,
+//!   batched execution, live ingestion with epoch swaps) and experiment
+//!   drivers that regenerate every table in the paper's evaluation section.
+//!
+//! Start with the repository-level `README.md` (quickstart, engine menu)
+//! and `ARCHITECTURE.md` (paper-concept → module map, data-flow diagram).
 //!
 //! Support substrates built in-tree (the build environment is offline):
 //! [`exec`] (thread pool), [`cli`] (argument parser), [`benchkit`]

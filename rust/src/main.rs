@@ -4,6 +4,8 @@
 //! provspark generate    --scale-divisor 10 --replication 1 --out data/trace.bin
 //! provspark stats       --trace data/trace.bin
 //! provspark preprocess  --trace data/trace.bin --out data/pre.bin [--wcc-impl driver|minispark|minispark-naive|xla]
+//! provspark ingest      --trace data/trace.bin --pre data/pre.bin --batch delta.bin
+//!                       [--out-trace X --out-pre Y]  (defaults: update in place)
 //! provspark query       --trace data/trace.bin --pre data/pre.bin --engine auto --item 3:42
 //!                       [--item 3:43 ...] [--max-depth N] [--max-triples N] [--tau-override N]
 //! provspark classes     --trace data/trace.bin --pre data/pre.bin --class lc-ll
@@ -20,6 +22,7 @@ use provspark::harness::{
     ExperimentConfig, ProvSession, QueryClass,
 };
 use provspark::minispark::MiniSpark;
+use provspark::provenance::incremental::{IncrementalIndex, TripleBatch};
 use provspark::provenance::pipeline::{preprocess, WccImpl};
 use provspark::provenance::query::QueryRequest;
 use provspark::provenance::store;
@@ -53,7 +56,11 @@ fn main() {
 fn print_help() {
     println!(
         "provspark — workflow provenance queries via weakly connected components/sets\n\
-         subcommands: generate | stats | preprocess | query | classes | table | drilldown | workflow\n\
+         subcommands: generate | stats | preprocess | ingest | query | classes | table |\n\
+                      drilldown | workflow\n\
+         ingest opts: --trace FILE --pre FILE --batch FILE (a trace of new triples)\n\
+                      [--out-trace FILE --out-pre FILE] — applies the delta incrementally\n\
+                      (no full re-preprocess) and persists the updated index\n\
          common opts: --executors N --partitions N --job-overhead-us N --tau N --theta N\n\
                       --shuffle-elision true|false --wcc-backend native|xla\n\
                       --closure-backend native|xla --config FILE\n\
@@ -173,6 +180,42 @@ fn run(args: &Args) -> Result<()> {
             table9(&pre).print();
             component_census(&pre).print();
             println!("→ {out}");
+            Ok(())
+        }
+        "ingest" => {
+            let trace_path = args.get_or("trace", "data/trace.bin");
+            let pre_path = args.get_or("pre", "data/pre.bin");
+            let batch_path = args
+                .get("batch")
+                .ok_or_else(|| anyhow!("--batch required (a trace file of new triples)"))?;
+            let trace = store::load_trace(Path::new(&trace_path))?;
+            let pre = store::load_preprocessed(Path::new(&pre_path))?;
+            let batch: TripleBatch =
+                store::load_trace(Path::new(batch_path))?.into();
+            let (g, splits) = text_curation_workflow();
+            let mut idx = IncrementalIndex::new(trace, pre, g, splits)?;
+            let batch_len = batch.len();
+            let (delta, dur) = provspark::util::timer::time_it(|| idx.apply(&batch));
+            let delta = delta?;
+            let out_trace = args.get_or("out-trace", &trace_path);
+            let out_pre = args.get_or("out-pre", &pre_path);
+            // Atomic temp-file + rename saves: the defaults overwrite the
+            // inputs in place, and an interrupted write must not destroy
+            // the only copy of the index.
+            store::save_trace_atomic(Path::new(&out_trace), idx.trace())?;
+            store::save_preprocessed_atomic(Path::new(&out_pre), idx.pre())?;
+            println!(
+                "ingested {} triples in {} (epoch {}; index now {} triples, {} components, \
+                 {} sets)",
+                human_count(batch_len as u64),
+                human_duration(dur),
+                idx.epoch(),
+                human_count(idx.trace().len() as u64),
+                human_count(idx.pre().component_count as u64),
+                human_count(idx.pre().set_count as u64),
+            );
+            println!("  {}", delta.stats.summary());
+            println!("→ {out_trace}, {out_pre}");
             Ok(())
         }
         "query" => {

@@ -249,6 +249,105 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         Self::from_shuffle_buckets(&self.sc, buckets, partitioner, key_fn, key_tag)
     }
 
+    /// Delta ingest: route `rows` into an existing hash-partitioned dataset
+    /// by its **existing** key function and partitioner, instead of
+    /// rebuilding the dataset from scratch. Partitions that receive no new
+    /// rows share their `Arc` with the input (zero copy); partitions that do
+    /// are extended copy-on-write. The partitioning — including its
+    /// [`KeyTag`] — is preserved, so the result stays co-partitioned (and
+    /// elidable) with everything the input was.
+    ///
+    /// Only the appended rows are metered as shuffled — this is the
+    /// engine-side cost model of absorbing a
+    /// [`TripleBatch`](crate::provenance::incremental::TripleBatch) delta.
+    ///
+    /// Panics on an unpartitioned dataset (there is no key to route by).
+    pub fn append_partitioned(&self, rows: &[T]) -> Self {
+        let p = self
+            .partitioning
+            .as_ref()
+            .expect("append_partitioned() requires a hash-partitioned dataset");
+        if rows.is_empty() {
+            return self.clone();
+        }
+        let np = p.partitioner.num_partitions();
+        let mut buckets: Vec<Vec<T>> = (0..np).map(|_| Vec::new()).collect();
+        for r in rows {
+            buckets[p.partitioner.partition_of((p.key_fn)(r))].push(r.clone());
+        }
+        self.sc.metrics().add_shuffled(rows.len() as u64);
+        let work: Vec<(Arc<Vec<T>>, Vec<T>)> =
+            self.partitions.iter().cloned().zip(buckets).collect();
+        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&work, |_, (part, extra)| {
+            if extra.is_empty() {
+                Arc::clone(part)
+            } else {
+                let mut v = Vec::with_capacity(part.len() + extra.len());
+                v.extend_from_slice(part);
+                v.extend_from_slice(extra);
+                Arc::new(v)
+            }
+        });
+        Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+    }
+
+    /// Delta maintenance: rewrite rows **in place** in the partitions that
+    /// own `keys`, leaving every other partition untouched (`Arc`-shared,
+    /// zero copy). `f` is applied to each row of an owned partition —
+    /// return `Some(row)` to keep or replace it, `None` to drop it.
+    ///
+    /// A replacement must not change the row's partitioning key (rows never
+    /// move; drop here and re-route with
+    /// [`append_partitioned`](Self::append_partitioned) to move one) —
+    /// debug builds assert this. Scans (and meters) only the owned
+    /// partitions; preserves the partitioning.
+    pub fn patch_partitions(
+        &self,
+        keys: &[u64],
+        f: impl Fn(&T) -> Option<T> + Send + Sync,
+    ) -> Self {
+        let p = self
+            .partitioning
+            .as_ref()
+            .expect("patch_partitions() requires a hash-partitioned dataset");
+        if keys.is_empty() {
+            return self.clone();
+        }
+        let targets: rustc_hash::FxHashSet<usize> =
+            keys.iter().map(|&k| p.partitioner.partition_of(k)).collect();
+        let work: Vec<(Arc<Vec<T>>, bool)> = self
+            .partitions
+            .iter()
+            .enumerate()
+            .map(|(i, part)| (Arc::clone(part), targets.contains(&i)))
+            .collect();
+        let scanned_rows: u64 =
+            work.iter().filter(|(_, hit)| *hit).map(|(part, _)| part.len() as u64).sum();
+        self.sc.metrics().add_scan(targets.len() as u64, scanned_rows);
+        let kf = Arc::clone(&p.key_fn);
+        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&work, |_, (part, hit)| {
+            if !*hit {
+                return Arc::clone(part);
+            }
+            Arc::new(
+                part.iter()
+                    .filter_map(|r| {
+                        let out = f(r);
+                        if let Some(nr) = &out {
+                            debug_assert_eq!(
+                                kf(nr),
+                                kf(r),
+                                "patch_partitions must not change a row's key"
+                            );
+                        }
+                        out
+                    })
+                    .collect::<Vec<T>>(),
+            )
+        });
+        Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+    }
+
     /// Scan every partition, keeping rows satisfying `pred`. Preserves hash
     /// partitioning (filter never moves rows) — the property Algorithm 1
     /// relies on ("this preserves the hash-partitioning logic").
@@ -1098,6 +1197,98 @@ mod tests {
         acc.add(cost);
         acc.add(cost);
         assert_eq!(acc.rows, 2 * cost.rows);
+    }
+
+    #[test]
+    fn append_partitioned_routes_by_existing_key() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..200).map(|i| (i % 13, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 8).partition_by_key(8);
+        let before = s.metrics().snapshot();
+        let extra: Vec<(u64, u64)> = (0..26).map(|i| (i % 13, 1000 + i)).collect();
+        let d2 = d.append_partitioned(&extra);
+        let delta = s.metrics().snapshot().since(&before);
+        // Only the appended rows move.
+        assert_eq!(delta.rows_shuffled, 26);
+        assert_eq!(d2.len(), 226);
+        // New rows landed where their key lives: lookup still scans one
+        // partition and sees both old and new rows.
+        let hits = d2.lookup(3);
+        assert_eq!(hits.len(), 200 / 13 + 1 + 2);
+        assert!(hits.contains(&(3, 1003)));
+        // The result stays co-partitioned/elidable with the original.
+        let before = s.metrics().snapshot();
+        let _ = d2.partition_by_key(8);
+        assert_eq!(s.metrics().snapshot().since(&before).shuffles_elided, 1);
+        // Appending nothing is a clean no-op.
+        assert_eq!(d2.append_partitioned(&[]).len(), 226);
+    }
+
+    #[test]
+    fn append_partitioned_shares_untouched_partitions() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..100).map(|i| (i, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 8).partition_by_key(8);
+        // Route a single row: exactly one partition may be rebuilt.
+        let target = 42u64;
+        let d2 = d.append_partitioned(&[(target, 9999)]);
+        let mut rebuilt = 0;
+        for i in 0..d.num_partitions() {
+            if !Arc::ptr_eq(d.partition(i), d2.partition(i)) {
+                rebuilt += 1;
+            }
+        }
+        assert_eq!(rebuilt, 1, "only the receiving partition is copied");
+        assert_eq!(d2.lookup(target).len(), 2);
+    }
+
+    #[test]
+    fn patch_partitions_rewrites_only_owned_keys() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..300).map(|i| (i % 30, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 10).partition_by_key(10);
+        let before = s.metrics().snapshot();
+        // Replace key 7's values, drop key 11's rows entirely.
+        let d2 = d.patch_partitions(&[7, 11], |&(k, v)| match k {
+            7 => Some((7, v + 1_000_000)),
+            11 => None,
+            _ => Some((k, v)),
+        });
+        let delta = s.metrics().snapshot().since(&before);
+        assert!(delta.partitions_scanned <= 2, "touches only owner partitions");
+        assert_eq!(delta.rows_shuffled, 0, "patching never moves rows");
+        assert_eq!(d2.lookup(11).len(), 0);
+        let sevens = d2.lookup(7);
+        assert_eq!(sevens.len(), 10);
+        assert!(sevens.iter().all(|&(_, v)| v >= 1_000_000));
+        // Unrelated keys are untouched, and untouched partitions are shared.
+        assert_eq!(d2.lookup(3), d.lookup(3));
+        let shared = (0..d.num_partitions())
+            .filter(|&i| Arc::ptr_eq(d.partition(i), d2.partition(i)))
+            .count();
+        assert!(shared >= d.num_partitions() - 2);
+        // Partitioning survives: a follow-up re-partition elides.
+        let before = s.metrics().snapshot();
+        let _ = d2.partition_by_key(10);
+        assert_eq!(s.metrics().snapshot().since(&before).shuffles_elided, 1);
+        // Empty key list is a no-op clone.
+        assert_eq!(d2.patch_partitions(&[], |r| Some(*r)).len(), d2.len());
+    }
+
+    #[test]
+    fn patch_then_append_moves_rows_between_keys() {
+        // The drop + re-route composition engines use when a row's key
+        // changes (CSProv retagging: dst_csid is the partitioning key).
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..100).map(|i| (i % 10, i)).collect();
+        let d = Dataset::from_vec(&s, rows, 4).partition_by_key(4);
+        let moved: Vec<(u64, u64)> =
+            d.lookup(2).into_iter().map(|(_, v)| (77u64, v)).collect();
+        let d2 = d.patch_partitions(&[2], |&(k, v)| if k == 2 { None } else { Some((k, v)) });
+        let d3 = d2.append_partitioned(&moved);
+        assert_eq!(d3.len(), d.len());
+        assert_eq!(d3.lookup(2).len(), 0);
+        assert_eq!(d3.lookup(77).len(), 10);
     }
 
     #[test]

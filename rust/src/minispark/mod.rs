@@ -21,6 +21,14 @@
 //! * **filter / lookup / collect** — the three operations the paper names.
 //!   `filter` scans every partition (preserving partitioning), `collect`
 //!   moves all rows to the driver.
+//! * **Delta ingest** — [`Dataset::append_partitioned`] routes newly
+//!   arrived rows into an existing partitioned dataset by its recorded key
+//!   function (copy-on-write per receiving partition), and
+//!   [`Dataset::patch_partitions`] rewrites/drops rows only in the
+//!   partitions owning a key set. Together they let the query engines
+//!   absorb incremental preprocessing deltas
+//!   ([`crate::provenance::incremental`]) without rebuilding their
+//!   datasets.
 //! * **Job overhead** — every operation runs as a *job* with a configurable
 //!   simulated scheduling overhead ([`ClusterConfig::job_overhead_us`]),
 //!   modelling Spark's job/stage launch cost. This is the effect that makes

@@ -1,7 +1,16 @@
 //! The paper's core: provenance data model, preprocessing (weakly
-//! connected components, component partitioning, set dependencies) and the
-//! three query engines (RQ, CCProv, CSProv).
+//! connected components, component partitioning, set dependencies),
+//! incremental index maintenance, and the three query engines (RQ, CCProv,
+//! CSProv).
+//!
+//! Offline path: [`preprocess`] runs WCC ([`wcc`]) → Algorithm 3
+//! partitioning ([`partition`]) → tagging + set-dependency extraction
+//! ([`setdeps`]), producing a [`Preprocessed`] index ([`store`] persists
+//! it). Online path: [`incremental::IncrementalIndex`] keeps that index
+//! live under [`incremental::TripleBatch`] deltas, and [`query`] answers
+//! lineage requests over it.
 
+pub mod incremental;
 pub mod model;
 pub mod partition;
 pub mod pipeline;
@@ -10,5 +19,6 @@ pub mod setdeps;
 pub mod store;
 pub mod wcc;
 
+pub use incremental::{AppliedDelta, DeltaStats, IncrementalIndex, TripleBatch};
 pub use model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 pub use pipeline::{preprocess, Preprocessed};

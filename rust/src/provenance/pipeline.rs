@@ -53,6 +53,16 @@ pub struct Preprocessed {
     pub set_count: usize,
     /// Phase timings (wcc / partition / tag / setdeps).
     pub timings: Vec<(String, std::time::Duration)>,
+    /// Algorithm 3's θ this index was built with. Recorded so incremental
+    /// delta application ([`crate::provenance::incremental`]) re-partitions
+    /// growing components with the same cutoff; persisted by the store.
+    pub theta: usize,
+    /// The "big set" statistic bound the index was built with (Table 9);
+    /// persisted alongside `theta` for the same reason.
+    pub big_threshold: usize,
+    /// Incremental epoch: 0 for a fresh [`preprocess`] run, bumped once per
+    /// applied [`TripleBatch`](crate::provenance::incremental::TripleBatch).
+    pub epoch: u64,
 }
 
 /// Run the full preprocessing pipeline.
@@ -71,7 +81,7 @@ pub fn preprocess(
     wcc: WccImpl<'_>,
 ) -> Preprocessed {
     let mut timer = Timer::new();
-    let mut out = Preprocessed::default();
+    let mut out = Preprocessed { theta, big_threshold, ..Default::default() };
 
     // ---- Phase 1: weakly connected components ---------------------------
     let labels = match wcc {
@@ -126,14 +136,19 @@ pub fn preprocess(
             for n in set {
                 cs_of.insert(n, sid);
             }
-            out.set_count += 1;
         }
     }
-    // Small components: one set each (its component id).
+    // Small components: one set each (its component id). For large
+    // components this `or_insert` also backfills any node whose entity no
+    // split covers (Algorithm 3 only assigns covered nodes).
     for (&node, &cc) in &labels {
         cs_of.entry(node).or_insert(cc);
     }
-    out.set_count += comps.len() - out.large_components.len();
+    // set_count = distinct set ids — the definition incremental maintenance
+    // reconstructs and maintains, so the two always agree (including the
+    // backfill case above, where a fallback group is a set of its own).
+    let distinct_sets: rustc_hash::FxHashSet<u64> = cs_of.values().copied().collect();
+    out.set_count = distinct_sets.len();
     timer.lap("partition");
 
     // ---- Phase 3: tag triples --------------------------------------------
@@ -182,6 +197,15 @@ mod tests {
             assert!(pre.cc_of.contains_key(&t.src.raw()));
             assert!(pre.cs_of.contains_key(&t.dst.raw()));
         }
+    }
+
+    #[test]
+    fn preprocess_records_epoch_parameters() {
+        let (trace, g, splits) = tiny();
+        let pre = preprocess(&trace, &g, &splits, 500, 100, WccImpl::Driver);
+        assert_eq!(pre.theta, 500);
+        assert_eq!(pre.big_threshold, 100);
+        assert_eq!(pre.epoch, 0);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use super::result::Lineage;
 use super::rq::rq_bfs;
 use crate::minispark::{Dataset, MiniSpark};
 use crate::provenance::model::{CcTriple, ProvTriple};
+use rustc_hash::FxHashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -48,6 +49,39 @@ impl CcProvEngine {
     pub fn with_closure(mut self, closure: Arc<dyn AncestorClosure>) -> Self {
         self.closure = closure;
         self
+    }
+
+    /// Delta ingest: absorb an incremental-preprocessing delta without
+    /// rebuilding the dataset. `retagged` maps pre-existing triples to
+    /// their new component id (rows are keyed by `dst`, which retagging
+    /// never changes, so they are patched in place in their partitions);
+    /// `appended` rows are routed to their partitions by the existing key.
+    pub fn with_delta(
+        &self,
+        retagged: &FxHashMap<ProvTriple, crate::util::ids::ComponentId>,
+        appended: &[CcTriple],
+    ) -> Self {
+        let prov = if retagged.is_empty() {
+            self.prov.clone()
+        } else {
+            let keys: Vec<u64> = retagged
+                .keys()
+                .map(|t| t.dst.raw())
+                .collect::<rustc_hash::FxHashSet<u64>>()
+                .into_iter()
+                .collect();
+            self.prov.patch_partitions(&keys, |t| {
+                Some(match retagged.get(&t.triple) {
+                    Some(&ccid) => CcTriple { triple: t.triple, ccid },
+                    None => *t,
+                })
+            })
+        };
+        Self {
+            prov: prov.append_partitioned(appended),
+            tau: self.tau,
+            closure: Arc::clone(&self.closure),
+        }
     }
 
     pub fn tau(&self) -> usize {

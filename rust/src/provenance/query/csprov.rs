@@ -23,9 +23,43 @@ use super::result::Lineage;
 use super::rq::{rq_bfs, BfsStats};
 use crate::minispark::{Dataset, KeyTag, MiniSpark};
 use crate::provenance::model::{CsTriple, ProvTriple, SetDep};
-use rustc_hash::FxHashSet;
+use rustc_hash::{FxHashMap, FxHashSet};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// An incremental-preprocessing delta in the shape CSProv's three datasets
+/// absorb it (assembled by `EngineSet::absorb` from an
+/// [`AppliedDelta`](crate::provenance::incremental::AppliedDelta)).
+///
+/// Retagged triples may change their `dst_csid` — the partitioning key of
+/// the triple dataset — so absorption is *drop old copies + re-route new
+/// copies*, not an in-place patch: [`retagged`](Self::retagged) identifies
+/// the rows to drop inside the partitions owned by
+/// [`old_keys`](Self::old_keys), and [`rerouted`](Self::rerouted) carries
+/// their new versions (plus nothing else — brand-new rows arrive via
+/// [`appended`](Self::appended)).
+pub struct CsDelta<'a> {
+    /// Pre-existing triples whose set tags changed (old row → new row).
+    pub retagged: &'a FxHashMap<ProvTriple, CsTriple>,
+    /// Distinct *old* `dst_csid` keys of the retagged rows (where their old
+    /// copies live).
+    pub old_keys: &'a [u64],
+    /// New versions of the retagged rows, one per old row occurrence.
+    pub rerouted: &'a [CsTriple],
+    /// Rows appended by the batch (already tagged).
+    pub appended: &'a [CsTriple],
+    /// Pre-existing nodes whose connected-set id changed (`node` is the
+    /// index key and never changes — patched in place).
+    pub node_patch: &'a FxHashMap<u64, u64>,
+    /// Nodes first seen in the batch: `(node, csid)`.
+    pub new_nodes: &'a [(u64, u64)],
+    /// Set dependencies to drop (their component was recomputed)…
+    pub removed_deps: &'a FxHashSet<SetDep>,
+    /// …and the distinct `dst_csid` keys owning them.
+    pub removed_dep_keys: &'a [u64],
+    /// Recomputed set dependencies for the dirty components.
+    pub added_deps: &'a [SetDep],
+}
 
 /// Algorithm 2 engine.
 pub struct CsProvEngine {
@@ -91,6 +125,59 @@ impl CsProvEngine {
     pub fn with_closure(mut self, closure: Arc<dyn AncestorClosure>) -> Self {
         self.closure = closure;
         self
+    }
+
+    /// Delta ingest: absorb an incremental-preprocessing delta across all
+    /// three datasets without rebuilding them — retagged triples are
+    /// dropped from their old `dst_csid` partitions and re-routed under
+    /// their new key, appended rows are routed in place, the `(node, csid)`
+    /// index is patched for changed nodes and extended for new ones, and
+    /// the set-dependency dataset absorbs the dirty components' diff.
+    pub fn with_delta(&self, d: &CsDelta<'_>) -> Self {
+        let mut prov_by_set = if d.old_keys.is_empty() {
+            self.prov_by_set.clone()
+        } else {
+            self.prov_by_set.patch_partitions(d.old_keys, |t| {
+                if d.retagged.contains_key(&t.triple) {
+                    None
+                } else {
+                    Some(*t)
+                }
+            })
+        };
+        prov_by_set = prov_by_set.append_partitioned(d.rerouted).append_partitioned(d.appended);
+
+        let mut node_set = if d.node_patch.is_empty() {
+            self.node_set.clone()
+        } else {
+            let keys: Vec<u64> = d.node_patch.keys().copied().collect();
+            self.node_set.patch_partitions(&keys, |&(n, c)| {
+                Some((n, d.node_patch.get(&n).copied().unwrap_or(c)))
+            })
+        };
+        node_set = node_set.append_partitioned(d.new_nodes);
+
+        let mut set_deps = if d.removed_dep_keys.is_empty() {
+            self.set_deps.clone()
+        } else {
+            self.set_deps.patch_partitions(d.removed_dep_keys, |dep| {
+                if d.removed_deps.contains(dep) {
+                    None
+                } else {
+                    Some(*dep)
+                }
+            })
+        };
+        set_deps = set_deps.append_partitioned(d.added_deps);
+
+        Self {
+            prov_by_set,
+            node_set,
+            set_deps,
+            num_partitions: self.num_partitions,
+            tau: self.tau,
+            closure: Arc::clone(&self.closure),
+        }
     }
 
     /// The set-lineage of set `cs`: every set contributing to its

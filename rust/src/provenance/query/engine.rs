@@ -33,6 +33,16 @@ use std::time::Duration;
 /// [`AncestorClosure`](super::AncestorClosure) backend — the pluggable
 /// closures compute full fixpoints and cannot stop at a level boundary. A
 /// backend comparison (native vs XLA) must therefore use uncapped requests.
+///
+/// ```
+/// use provspark::provenance::query::QueryRequest;
+///
+/// let req = QueryRequest::new(42).with_max_depth(3).with_tau(0);
+/// assert_eq!(req.item, 42);
+/// assert_eq!(req.max_depth, Some(3));
+/// assert_eq!(req.tau_override, Some(0));
+/// assert_eq!(req.max_triples, None); // unset options keep engine defaults
+/// ```
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct QueryRequest {
     /// The queried attribute-value (raw id).
@@ -90,6 +100,16 @@ impl std::fmt::Display for ExecPath {
 
 /// Per-query cost record: the quantities the paper's evaluation reasons
 /// about, attributed to a single request.
+///
+/// ```
+/// use provspark::provenance::query::QueryStats;
+///
+/// let mut stats = QueryStats::new("csprov");
+/// stats.partitions_scanned = 3;
+/// stats.rows_examined = 1200;
+/// assert!(stats.summary().contains("engine=csprov"));
+/// assert!(stats.total_time().is_zero()); // no phases timed yet
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct QueryStats {
     /// Engine that produced the response (`"rq" | "ccprov" | "csprov"`).
@@ -178,6 +198,27 @@ pub struct QueryResponse {
 /// (the cross-engine equivalence property test drives them through
 /// `&dyn ProvenanceEngine`); they differ only in the [`QueryStats`] cost of
 /// getting there.
+///
+/// ```
+/// use provspark::config::ClusterConfig;
+/// use provspark::minispark::MiniSpark;
+/// use provspark::provenance::model::ProvTriple;
+/// use provspark::provenance::query::{ProvenanceEngine, QueryRequest, RqEngine};
+/// use provspark::util::ids::{AttrValueId, EntityId, OpId};
+///
+/// // One derivation step: b ← a.
+/// let a = AttrValueId::new(EntityId(0), 1);
+/// let b = AttrValueId::new(EntityId(1), 1);
+/// let triples = vec![ProvTriple::new(a, b, OpId(0))];
+/// let sc = MiniSpark::new(ClusterConfig { job_overhead_us: 0, ..Default::default() });
+///
+/// // Any engine — here the RQ baseline — serves the same interface.
+/// let engine: &dyn ProvenanceEngine = &RqEngine::new(&sc, &triples, 4);
+/// let resp = engine.execute(&QueryRequest::new(b.raw()));
+/// assert_eq!(resp.lineage.ancestors, vec![a.raw()]);
+/// assert_eq!(resp.stats.engine, "rq");
+/// assert!(engine.query(a.raw()).is_empty()); // inputs have no lineage
+/// ```
 pub trait ProvenanceEngine: Send + Sync {
     /// Short stable engine name (`"rq" | "ccprov" | "csprov"`).
     fn name(&self) -> &'static str;

@@ -56,7 +56,7 @@ pub mod result;
 pub mod rq;
 
 pub use ccprov::CcProvEngine;
-pub use csprov::CsProvEngine;
+pub use csprov::{CsDelta, CsProvEngine};
 pub use driver_rq::{AncestorClosure, NativeClosure};
 pub use engine::{ExecPath, ProvenanceEngine, QueryRequest, QueryResponse, QueryStats};
 pub use result::Lineage;

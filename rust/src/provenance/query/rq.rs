@@ -99,6 +99,14 @@ impl RqEngine {
         Self { prov }
     }
 
+    /// Delta ingest: a new engine over the old dataset plus `appended`
+    /// triples, routed into their dst partitions in place
+    /// ([`Dataset::append_partitioned`]) — RQ rows carry no preprocessing
+    /// tags, so an append is all a delta ever needs here.
+    pub fn with_appended(&self, appended: &[ProvTriple]) -> Self {
+        Self { prov: self.prov.append_partitioned(appended) }
+    }
+
     /// Trace the full lineage of `q` (see [`ProvenanceEngine::query`]).
     pub fn query(&self, q: u64) -> Lineage {
         self.execute(&QueryRequest::new(q)).lineage

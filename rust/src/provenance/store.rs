@@ -3,6 +3,14 @@
 //! The paper stores provenance on HDFS and pre-computes components/sets
 //! once; we persist the same artifacts locally in a simple length-prefixed
 //! little-endian binary format (with a CSV export for inspection).
+//!
+//! Preprocessed files are written in the **v2** layout (`PSPKPRE2`), whose
+//! header records the incremental-epoch fields — θ, the big-set bound, and
+//! the epoch counter — so a persisted index can keep absorbing
+//! [`TripleBatch`](crate::provenance::incremental::TripleBatch) deltas
+//! after a reload (the CLI `ingest` subcommand round-trips through here).
+//! v1 files (`PSPKPRE1`, pre-epoch) still load, with those fields zeroed —
+//! such an index answers queries but refuses ingestion until re-preprocessed.
 
 use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 use crate::provenance::pipeline::Preprocessed;
@@ -13,7 +21,8 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC_TRACE: &[u8; 8] = b"PSPKTRC1";
-const MAGIC_PRE: &[u8; 8] = b"PSPKPRE1";
+const MAGIC_PRE_V1: &[u8; 8] = b"PSPKPRE1";
+const MAGIC_PRE: &[u8; 8] = b"PSPKPRE2";
 
 fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -64,14 +73,18 @@ pub fn save_trace(path: &Path, trace: &Trace) -> Result<()> {
     Ok(())
 }
 
-/// Load a raw trace.
+/// Load a raw trace. Errors name the offending path.
 pub fn load_trace(path: &Path) -> Result<Trace> {
+    load_trace_inner(path).with_context(|| format!("loading trace file {path:?}"))
+}
+
+fn load_trace_inner(path: &Path) -> Result<Trace> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic).context("read magic")?;
     if &magic != MAGIC_TRACE {
-        bail!("{path:?}: not a provspark trace file");
+        bail!("not a provspark trace file (bad magic)");
     }
     let n = r_u64(&mut r)? as usize;
     let mut triples = Vec::with_capacity(n);
@@ -81,11 +94,16 @@ pub fn load_trace(path: &Path) -> Result<Trace> {
     Ok(Trace::new(triples))
 }
 
-/// Save preprocessed provenance (everything the query engines need).
+/// Save preprocessed provenance (everything the query engines need),
+/// including the incremental-epoch header (θ / big-set bound / epoch).
 pub fn save_preprocessed(path: &Path, pre: &Preprocessed) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC_PRE)?;
+    // v2 header: the fields incremental ingestion needs to keep going.
+    w_u64(&mut w, pre.theta as u64)?;
+    w_u64(&mut w, pre.big_threshold as u64)?;
+    w_u64(&mut w, pre.epoch)?;
 
     w_u64(&mut w, pre.cc_triples.len() as u64)?;
     for t in &pre.cc_triples {
@@ -127,15 +145,27 @@ pub fn save_preprocessed(path: &Path, pre: &Preprocessed) -> Result<()> {
 
 /// Load preprocessed provenance. Pass-stats and timings are not persisted
 /// (they are preprocessing-run artifacts, reported at preprocessing time).
+/// Accepts v2 (`PSPKPRE2`) and legacy v1 (`PSPKPRE1`, epoch fields zeroed)
+/// files; errors name the offending path.
 pub fn load_preprocessed(path: &Path) -> Result<Preprocessed> {
+    load_preprocessed_inner(path)
+        .with_context(|| format!("loading preprocessed file {path:?}"))
+}
+
+fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC_PRE {
-        bail!("{path:?}: not a provspark preprocessed file");
+    r.read_exact(&mut magic).context("read magic")?;
+    if &magic != MAGIC_PRE && &magic != MAGIC_PRE_V1 {
+        bail!("not a provspark preprocessed file (bad magic)");
     }
     let mut pre = Preprocessed::default();
+    if &magic == MAGIC_PRE {
+        pre.theta = r_u64(&mut r).context("read theta")? as usize;
+        pre.big_threshold = r_u64(&mut r).context("read big_threshold")? as usize;
+        pre.epoch = r_u64(&mut r).context("read epoch")?;
+    }
 
     let n = r_u64(&mut r)? as usize;
     pre.cc_triples.reserve(n);
@@ -184,6 +214,30 @@ pub fn load_preprocessed(path: &Path) -> Result<Preprocessed> {
     pre.component_count = r_u64(&mut r)? as usize;
     pre.set_count = r_u64(&mut r)? as usize;
     Ok(pre)
+}
+
+/// [`save_trace`] through a temp file + atomic rename: an interrupted
+/// write never destroys an existing file at `path`. This is what the CLI
+/// `ingest` subcommand persists with — it updates its own inputs in place,
+/// so a mid-write crash must not lose the only copy of the index.
+pub fn save_trace_atomic(path: &Path, trace: &Trace) -> Result<()> {
+    save_atomic(path, |tmp| save_trace(tmp, trace))
+}
+
+/// [`save_preprocessed`] through a temp file + atomic rename (see
+/// [`save_trace_atomic`]).
+pub fn save_preprocessed_atomic(path: &Path, pre: &Preprocessed) -> Result<()> {
+    save_atomic(path, |tmp| save_preprocessed(tmp, pre))
+}
+
+fn save_atomic(path: &Path, write: impl FnOnce(&Path) -> Result<()>) -> Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    write(&tmp)?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("moving {tmp:?} into place at {path:?}"))?;
+    Ok(())
 }
 
 /// CSV export of a trace (`src,dst,op`) for external inspection.
@@ -244,6 +298,80 @@ mod tests {
         std::fs::write(&p, b"NOTMAGIC123").unwrap();
         assert!(load_trace(&p).is_err());
         assert!(load_preprocessed(&p).is_err());
+    }
+
+    #[test]
+    fn atomic_save_replaces_and_leaves_no_temp() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 5000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let tp = tmp("atomic_trace.bin");
+        let pp = tmp("atomic_pre.bin");
+        // Seed the destination with garbage an interrupted write must not
+        // be able to leave behind.
+        std::fs::write(&tp, b"GARBAGE").unwrap();
+        save_trace_atomic(&tp, &trace).unwrap();
+        save_preprocessed_atomic(&pp, &pre).unwrap();
+        assert_eq!(load_trace(&tp).unwrap().triples, trace.triples);
+        assert_eq!(load_preprocessed(&pp).unwrap().epoch, pre.epoch);
+        for p in [&tp, &pp] {
+            let mut t = p.as_os_str().to_owned();
+            t.push(".tmp");
+            assert!(!std::path::PathBuf::from(t).exists(), "temp file left behind");
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_incremental_epoch_fields() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let mut pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        pre.epoch = 7; // as if 7 batches were ingested
+        assert_eq!(pre.theta, 200);
+        let p = tmp("pre_epoch.bin");
+        save_preprocessed(&p, &pre).unwrap();
+        let loaded = load_preprocessed(&p).unwrap();
+        assert_eq!(loaded.theta, 200);
+        assert_eq!(loaded.big_threshold, 100);
+        assert_eq!(loaded.epoch, 7);
+        // …alongside everything the query engines need.
+        assert_eq!(pre.cc_triples, loaded.cc_triples);
+        assert_eq!(pre.cs_of, loaded.cs_of);
+    }
+
+    #[test]
+    fn legacy_v1_file_loads_with_zeroed_epoch_fields() {
+        // A minimal empty v1 file: old magic + the 8 zero section counts
+        // (cc, cs, deps, cc_of, cs_of, large, component_count, set_count).
+        let p = tmp("pre_v1.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKPRE1");
+        bytes.extend_from_slice(&[0u8; 8 * 8]);
+        std::fs::write(&p, bytes).unwrap();
+        let loaded = load_preprocessed(&p).unwrap();
+        assert_eq!(loaded.theta, 0, "v1 has no recorded θ");
+        assert_eq!(loaded.epoch, 0);
+        assert!(loaded.cc_triples.is_empty());
+    }
+
+    #[test]
+    fn load_errors_name_the_offending_path() {
+        let missing = tmp("definitely_missing.bin");
+        let _ = std::fs::remove_file(&missing);
+        for err in [
+            format!("{:#}", load_trace(&missing).unwrap_err()),
+            format!("{:#}", load_preprocessed(&missing).unwrap_err()),
+        ] {
+            assert!(
+                err.contains("definitely_missing.bin"),
+                "error must name the path: {err}"
+            );
+        }
+        // Truncated file: magic only, sections missing.
+        let p = tmp("truncated.bin");
+        std::fs::write(&p, b"PSPKPRE2").unwrap();
+        let err = format!("{:#}", load_preprocessed(&p).unwrap_err());
+        assert!(err.contains("truncated.bin"), "error must name the path: {err}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!   as the correctness oracle and the default preprocessing path.
 //! * [`wcc_minispark`] — distributed min-label propagation on the
 //!   `minispark` engine (the paper computes WCC with a Spark
-//!   implementation [1]; this is the faithful reproduction of that phase
+//!   implementation; this is the faithful reproduction of that phase
 //!   and what `bench_preprocess` times).
 //! * the XLA fixpoint in [`crate::runtime`] — the same label propagation
 //!   compiled to an HLO `while`-loop from JAX/Pallas, executed via PJRT.
@@ -122,6 +122,130 @@ impl UnionFind {
             min_of_root.entry(r).and_modify(|m| *m = (*m).min(k)).or_insert(k);
         }
         keys.iter().zip(&roots).map(|(&k, &r)| (k, min_of_root[&r])).collect()
+    }
+}
+
+/// Outcome of one [`LabeledUnion::union`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Merge {
+    /// Label of the surviving (larger) component.
+    pub winner: u64,
+    /// Label of the component absorbed into `winner` (`None` when both
+    /// endpoints already shared a component).
+    pub absorbed: Option<u64>,
+    /// Index into `members(winner)` where the relabelled (absorbed) nodes
+    /// begin — callers mirror exactly `members(winner)[relabelled_from..]`
+    /// into any external label map.
+    pub relabelled_from: usize,
+}
+
+impl Merge {
+    /// Number of nodes whose label this union rewrote.
+    pub fn relabelled(&self, members_after: usize) -> usize {
+        members_after - self.relabelled_from
+    }
+}
+
+/// Incrementally maintained component labelling: union-find semantics with
+/// **explicit membership lists**, so merging two components rewrites only
+/// the smaller side's labels (classic small-to-large; total relabel work
+/// over any append sequence is `O(n log n)`).
+///
+/// Unlike [`wcc_driver`]'s min-id labels, a `LabeledUnion` label is *some
+/// member node's id* — stable across merges of smaller components into it,
+/// but not necessarily the minimum. Downstream equivalence with a
+/// from-scratch labelling therefore holds **up to relabelling**; use
+/// [`crate::provenance::incremental::canonical_labels`] to compare.
+#[derive(Debug, Clone, Default)]
+pub struct LabeledUnion {
+    label_of: FxHashMap<u64, u64>,
+    members: FxHashMap<u64, Vec<u64>>,
+}
+
+impl LabeledUnion {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Adopt an existing `node → label` map (e.g. a [`Preprocessed`]'s
+    /// `cc_of`, whatever implementation produced it).
+    ///
+    /// [`Preprocessed`]: crate::provenance::pipeline::Preprocessed
+    pub fn from_labels(labels: &FxHashMap<u64, u64>) -> Self {
+        let mut lu = Self {
+            label_of: labels.clone(),
+            members: FxHashMap::default(),
+        };
+        for (&n, &l) in labels {
+            lu.members.entry(l).or_default().push(n);
+        }
+        lu
+    }
+
+    /// Insert `x` as a singleton component; returns `true` if `x` was new.
+    pub fn insert(&mut self, x: u64) -> bool {
+        if self.label_of.contains_key(&x) {
+            return false;
+        }
+        self.label_of.insert(x, x);
+        self.members.insert(x, vec![x]);
+        true
+    }
+
+    /// Current label of `x`, if known.
+    pub fn label(&self, x: u64) -> Option<u64> {
+        self.label_of.get(&x).copied()
+    }
+
+    /// Members of the component labelled `label` (empty if unknown).
+    pub fn members(&self, label: u64) -> &[u64] {
+        self.members.get(&label).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Union the components of `a` and `b` (both inserted if new). The
+    /// side with fewer members is relabelled and appended to the winner's
+    /// member list; see [`Merge`].
+    pub fn union(&mut self, a: u64, b: u64) -> Merge {
+        self.insert(a);
+        self.insert(b);
+        let la = self.label_of[&a];
+        let lb = self.label_of[&b];
+        if la == lb {
+            return Merge {
+                winner: la,
+                absorbed: None,
+                relabelled_from: self.members[&la].len(),
+            };
+        }
+        let (winner, loser) =
+            if self.members[&la].len() >= self.members[&lb].len() { (la, lb) } else { (lb, la) };
+        let moved = self.members.remove(&loser).expect("loser has members");
+        for &n in &moved {
+            self.label_of.insert(n, winner);
+        }
+        let wv = self.members.get_mut(&winner).expect("winner has members");
+        let relabelled_from = wv.len();
+        wv.extend(moved);
+        Merge { winner, absorbed: Some(loser), relabelled_from }
+    }
+
+    /// Number of distinct components.
+    pub fn component_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Number of known nodes.
+    pub fn len(&self) -> usize {
+        self.label_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.label_of.is_empty()
+    }
+
+    /// The full `node → label` map (borrow; for canonicalization/tests).
+    pub fn labels(&self) -> &FxHashMap<u64, u64> {
+        &self.label_of
     }
 }
 
@@ -404,6 +528,50 @@ mod tests {
             frontier_shuffled < naive_shuffled,
             "frontier shuffled {frontier_shuffled} rows, naive {naive_shuffled}"
         );
+    }
+
+    #[test]
+    fn labeled_union_small_side_relabels() {
+        let mut lu = LabeledUnion::new();
+        // Build a 3-node component {1,2,3} and a singleton {9}.
+        lu.union(1, 2);
+        lu.union(2, 3);
+        assert_eq!(lu.component_count(), 1);
+        let big = lu.label(1).unwrap();
+        assert_eq!(lu.members(big).len(), 3);
+        lu.insert(9);
+        assert_eq!(lu.component_count(), 2);
+        // Merging the singleton in relabels exactly one node — the smaller
+        // side — and the big component's label survives.
+        let m = lu.union(9, 3);
+        assert_eq!(m.winner, big);
+        assert_eq!(m.absorbed, Some(9));
+        assert_eq!(m.relabelled(lu.members(big).len()), 1);
+        assert_eq!(lu.label(9), Some(big));
+        assert_eq!(lu.component_count(), 1);
+        // Unioning within one component is a no-op.
+        let m = lu.union(1, 9);
+        assert_eq!(m.absorbed, None);
+        assert_eq!(m.relabelled(lu.members(big).len()), 0);
+    }
+
+    #[test]
+    fn labeled_union_from_labels_roundtrip() {
+        let t = trace(&[(1, 1), (1, 2), (3, 4)]);
+        let labels = wcc_driver(&t);
+        let lu = LabeledUnion::from_labels(&labels);
+        assert_eq!(lu.labels(), &labels);
+        assert_eq!(lu.len(), labels.len());
+        let c = components_from_labels(&labels);
+        assert_eq!(lu.component_count(), c.len());
+        for (&l, nodes) in &c {
+            let mut got: Vec<u64> = lu.members(l).to_vec();
+            let mut want = nodes.clone();
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        }
+        assert!(lu.members(u64::MAX).is_empty());
     }
 
     #[test]

@@ -59,7 +59,8 @@ fn all_engines_agree() {
             cfg.prov.tau = case.tau;
             let session = ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre))
                 .map_err(|e| format!("build: {e}"))?;
-            let trace = Arc::clone(session.trace());
+            let trace = session.trace();
+            let epoch = session.engines();
             let mut rng = Pcg64::new(case.seed ^ 0xABCD);
             for i in 0..case.queries {
                 // Query a derived item, (sometimes) a source item, and
@@ -73,7 +74,7 @@ fn all_engines_agree() {
                     t.src.raw()
                 };
                 let req = QueryRequest::new(q);
-                let engines = session.engines().as_dyn();
+                let engines = epoch.as_dyn();
                 let baseline = engines[0].1.execute(&req);
                 for (name, engine) in engines {
                     let resp = engine.execute(&req);
@@ -106,8 +107,8 @@ fn all_engines_agree() {
                 // Depth-capped requests are also engine-independent: every
                 // engine expands the same levels from q.
                 let capped = QueryRequest::new(q).with_max_depth(2);
-                let capped_base = session.engines().as_dyn()[0].1.execute(&capped);
-                for (name, engine) in session.engines().as_dyn() {
+                let capped_base = epoch.as_dyn()[0].1.execute(&capped);
+                for (name, engine) in epoch.as_dyn() {
                     let resp = engine.execute(&capped);
                     if resp.lineage != capped_base.lineage {
                         return Err(format!("{name} capped lineage differs for q={q}"));

@@ -1,0 +1,248 @@
+//! The incremental-ingestion correctness property: an [`IncrementalIndex`]
+//! that absorbed N random append batches is **query-equivalent** to a
+//! from-scratch `preprocess` of the concatenated trace — same component
+//! and set partitions (up to label choice), same counts, identical
+//! lineages from all three engines and identical `Auto` routing — and the
+//! `ProvSession::ingest` epoch-swap path (which absorbs deltas into the
+//! live engine datasets instead of rebuilding) matches a session built
+//! fresh over the concatenated trace.
+
+use provspark::config::EngineConfig;
+use provspark::harness::{EngineRouter, EngineSet, ProvSession};
+use provspark::minispark::MiniSpark;
+use provspark::proptest_lite as shim;
+use provspark::provenance::incremental::{check_equivalence, IncrementalIndex, TripleBatch};
+use provspark::provenance::model::Trace;
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::query::{ProvenanceEngine, QueryRequest};
+use provspark::util::rng::Pcg64;
+use provspark::workflow::curation::text_curation_workflow;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::sync::Arc;
+
+fn no_overhead(tau: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.prov.tau = tau;
+    cfg
+}
+
+#[derive(Debug)]
+struct Case {
+    seed: u64,
+    divisor: usize,
+    theta: usize,
+    batches: usize,
+    base_frac: f64,
+}
+
+fn gen_case(rng: &mut Pcg64, shrink: u32) -> Case {
+    Case {
+        seed: rng.next_u64(),
+        divisor: if shrink > 0 { 4000 } else { *rng.pick(&[2000, 3000]) },
+        theta: *rng.pick(&[100, 150, 300]),
+        batches: if shrink > 0 { 1 } else { *rng.pick(&[1, 3, 5]) },
+        base_frac: *rng.pick(&[0.5, 0.8, 0.95]),
+    }
+}
+
+#[test]
+fn incremental_index_equals_scratch_preprocess() {
+    shim::run_prop(
+        "incremental_equals_scratch",
+        &shim::PropCfg { cases: 5, ..Default::default() },
+        gen_case,
+        |case| {
+            let (full, graph, splits) = generate(&GeneratorConfig {
+                seed: case.seed,
+                scale_divisor: case.divisor,
+                ..Default::default()
+            });
+            let mut rng = Pcg64::new(case.seed ^ 0xFEED);
+            let cut = ((full.len() as f64 * case.base_frac) as usize).max(1);
+            let base = Trace::new(full.triples[..cut].to_vec());
+            let base_pre = preprocess(&base, &graph, &splits, case.theta, 100, WccImpl::Driver);
+            let mut idx = IncrementalIndex::new(base, base_pre, graph.clone(), splits.clone())
+                .map_err(|e| format!("index: {e}"))?;
+
+            // Split the remainder into `batches` random batches (some may
+            // be empty — an epoch bump with no data must also hold).
+            let rest = &full.triples[cut..];
+            let mut cuts: Vec<usize> =
+                (0..case.batches - 1).map(|_| rng.range(0, rest.len() + 1)).collect();
+            cuts.sort_unstable();
+            cuts.insert(0, 0);
+            cuts.push(rest.len());
+            for w in cuts.windows(2) {
+                let batch = TripleBatch::new(rest[w[0]..w[1]].to_vec());
+                idx.apply(&batch).map_err(|e| format!("apply: {e}"))?;
+
+                // After every batch the index matches a from-scratch
+                // preprocess of everything ingested so far.
+                let so_far = Trace::new(full.triples[..cut + w[1]].to_vec());
+                let scratch =
+                    preprocess(&so_far, &graph, &splits, case.theta, 100, WccImpl::Driver);
+                check_equivalence(idx.pre(), &scratch)
+                    .map_err(|e| format!("after batch ending at {}: {e}", w[1]))?;
+            }
+            if idx.epoch() != case.batches as u64 {
+                return Err(format!("epoch {} != {}", idx.epoch(), case.batches));
+            }
+
+            // Query equivalence over the final state: all three engines +
+            // Auto routing, incremental-built vs scratch-built engine sets.
+            let scratch =
+                preprocess(&full, &graph, &splits, case.theta, 100, WccImpl::Driver);
+            let cfg = no_overhead(*Pcg64::new(case.seed).pick(&[0, 500, usize::MAX]));
+            let sc = MiniSpark::new(cfg.cluster.clone());
+            let (inc_trace, inc_pre) = idx.snapshot();
+            let inc_set = EngineSet::build(&sc, inc_trace, inc_pre, &cfg)
+                .map_err(|e| format!("build inc: {e}"))?;
+            let scratch_set = EngineSet::build(
+                &sc,
+                Arc::new(full.clone()),
+                Arc::new(scratch),
+                &cfg,
+            )
+            .map_err(|e| format!("build scratch: {e}"))?;
+            let mut items: Vec<u64> = full
+                .triples
+                .iter()
+                .step_by(full.len() / 8 + 1)
+                .map(|t| t.dst.raw())
+                .collect();
+            items.push(u64::MAX - rng.range(0, 1000) as u64); // unknown
+            for &q in &items {
+                let req = QueryRequest::new(q);
+                for ((an, ae), (bn, be)) in
+                    inc_set.as_dyn().into_iter().zip(scratch_set.as_dyn())
+                {
+                    if an != bn {
+                        return Err(format!("engine order diverges: {an} vs {bn}"));
+                    }
+                    if ae.execute(&req).lineage != be.execute(&req).lineage {
+                        return Err(format!("{an} lineage diverges for q={q}"));
+                    }
+                }
+                let (ar, br) = (
+                    inc_set.route(EngineRouter::Auto, q).name(),
+                    scratch_set.route(EngineRouter::Auto, q).name(),
+                );
+                if ar != br {
+                    return Err(format!("auto routing diverges for q={q}: {ar} vs {br}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn session_ingest_matches_fresh_session() {
+    // The full service path: ProvSession::ingest (incremental apply +
+    // engine-dataset absorption + epoch swap) against a session built from
+    // scratch over the concatenated trace — identical lineages, stats
+    // engines, and routing for a mixed batch of requests.
+    let (full, graph, splits) = generate(&GeneratorConfig {
+        scale_divisor: 2000,
+        ..Default::default()
+    });
+    let cut = full.len() * 4 / 5;
+    let base = Trace::new(full.triples[..cut].to_vec());
+    let pre = preprocess(&base, &graph, &splits, 150, 100, WccImpl::Driver);
+    let cfg = no_overhead(400);
+    let live = ProvSession::new(&cfg, Arc::new(base), Arc::new(pre)).unwrap();
+
+    // Ingest the remainder in three batches (middle one empty).
+    let mid = cut + (full.len() - cut) / 2;
+    for (lo, hi) in [(cut, mid), (mid, mid), (mid, full.len())] {
+        let stats =
+            live.ingest(&TripleBatch::new(full.triples[lo..hi].to_vec())).unwrap();
+        assert_eq!(stats.new_triples, hi - lo);
+    }
+    assert_eq!(live.epoch(), 3);
+    assert_eq!(live.trace().len(), full.len());
+
+    let (g2, s2) = text_curation_workflow();
+    let scratch_pre = preprocess(&full, &g2, &s2, 150, 100, WccImpl::Driver);
+    let fresh =
+        ProvSession::new(&cfg, Arc::new(full.clone()), Arc::new(scratch_pre)).unwrap();
+
+    let mut reqs: Vec<QueryRequest> = full
+        .triples
+        .iter()
+        .step_by(full.len() / 12 + 1)
+        .map(|t| QueryRequest::new(t.dst.raw()))
+        .collect();
+    reqs.push(QueryRequest::new(u64::MAX - 11)); // unknown
+    reqs.push(QueryRequest::new(reqs[0].item).with_max_depth(2)); // capped
+    reqs.push(QueryRequest::new(reqs[1].item).with_tau(0)); // forced cluster
+
+    for router in
+        [EngineRouter::Auto, EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv]
+    {
+        let a = live.query_many_on(router, &reqs);
+        let b = fresh.query_many_on(router, &reqs);
+        for ((req, ra), rb) in reqs.iter().zip(&a).zip(&b) {
+            assert_eq!(ra.lineage, rb.lineage, "router={router} item={}", req.item);
+            assert_eq!(
+                ra.stats.engine, rb.stats.engine,
+                "router={router} item={}",
+                req.item
+            );
+            assert_eq!(
+                ra.stats.truncated, rb.stats.truncated,
+                "router={router} item={}",
+                req.item
+            );
+        }
+    }
+}
+
+#[test]
+fn ingest_preserves_index_integrity_invariants() {
+    // Structural invariants after a merge-heavy ingest: tags in the
+    // maintained artifacts agree with the maps, sets nest in components,
+    // and the parallel triple arrays stay aligned with the trace.
+    let (full, graph, splits) = generate(&GeneratorConfig {
+        scale_divisor: 2500,
+        ..Default::default()
+    });
+    // Interleave base/delta so batch triples constantly touch existing
+    // components (maximizing merges + retags).
+    let base: Vec<_> = full.triples.iter().step_by(2).copied().collect();
+    let delta: Vec<_> = full.triples.iter().skip(1).step_by(2).copied().collect();
+    let base = Trace::new(base);
+    let pre = preprocess(&base, &graph, &splits, 150, 100, WccImpl::Driver);
+    let mut idx = IncrementalIndex::new(base, pre, graph, splits).unwrap();
+    idx.apply(&TripleBatch::new(delta)).unwrap();
+
+    let (trace, pre) = idx.snapshot();
+    assert_eq!(pre.cc_triples.len(), trace.len());
+    assert_eq!(pre.cs_triples.len(), trace.len());
+    let mut set_cc: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    for (i, t) in trace.triples.iter().enumerate() {
+        assert_eq!(pre.cc_triples[i].triple, *t, "cc row {i} misaligned");
+        assert_eq!(pre.cs_triples[i].triple, *t, "cs row {i} misaligned");
+        assert_eq!(pre.cc_of[&t.src.raw()], pre.cc_of[&t.dst.raw()], "edge crosses components");
+        assert_eq!(pre.cc_triples[i].ccid.0, pre.cc_of[&t.dst.raw()], "cc tag stale");
+        assert_eq!(pre.cs_triples[i].src_csid.0, pre.cs_of[&t.src.raw()], "src cs tag stale");
+        assert_eq!(pre.cs_triples[i].dst_csid.0, pre.cs_of[&t.dst.raw()], "dst cs tag stale");
+    }
+    for (&node, &sid) in &pre.cs_of {
+        let cc = pre.cc_of[&node];
+        match set_cc.get(&sid) {
+            Some(&prev) => assert_eq!(prev, cc, "set {sid} spans components"),
+            None => {
+                set_cc.insert(sid, cc);
+            }
+        }
+    }
+    assert!(pre.set_count >= pre.component_count);
+    // Every set-dep endpoint is a live set.
+    let sets: std::collections::HashSet<u64> = pre.cs_of.values().copied().collect();
+    for d in &pre.set_deps {
+        assert!(sets.contains(&d.src_csid.0) && sets.contains(&d.dst_csid.0));
+        assert_ne!(d.src_csid, d.dst_csid);
+    }
+}

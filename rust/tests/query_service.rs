@@ -36,7 +36,7 @@ fn stats_volume_ordering_on_lc_queries() {
     let s = session(usize::MAX); // driver recursion for CC/CS
     let np = s.context().config().default_partitions as u64;
     let sel =
-        select_queries(s.trace(), s.pre(), QueryClass::LcLl, 6, DIVISOR, 11).unwrap();
+        select_queries(&s.trace(), &s.pre(), QueryClass::LcLl, 6, DIVISOR, 11).unwrap();
     let mut checked = 0;
     for &q in &sel.items {
         let cs = s.pre().cs_of[&q];
@@ -140,7 +140,7 @@ fn auto_router_avoids_rq_and_picks_by_component() {
 #[test]
 fn tau_override_flips_path_not_result() {
     let s = session(1000);
-    let sel = select_queries(s.trace(), s.pre(), QueryClass::LcSl, 2, DIVISOR, 5).unwrap();
+    let sel = select_queries(&s.trace(), &s.pre(), QueryClass::LcSl, 2, DIVISOR, 5).unwrap();
     let q = sel.items[0];
     for router in [EngineRouter::CcProv, EngineRouter::CsProv] {
         let driver = s.execute_on(router, &QueryRequest::new(q).with_tau(usize::MAX));
@@ -157,7 +157,7 @@ fn tau_override_flips_path_not_result() {
 #[test]
 fn caps_truncate_consistently_across_engines() {
     let s = session(usize::MAX);
-    let sel = select_queries(s.trace(), s.pre(), QueryClass::LcLl, 4, DIVISOR, 23).unwrap();
+    let sel = select_queries(&s.trace(), &s.pre(), QueryClass::LcLl, 4, DIVISOR, 23).unwrap();
     // Need an item whose lineage extends past depth 3: rounds ≥ 4 means
     // round 3 discovered new ancestors, i.e. triples beyond a depth-2 cap
     // certainly exist, so the capped lineage is strictly smaller.
