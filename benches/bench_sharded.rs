@@ -1,0 +1,190 @@
+//! Batched `query_many` throughput across component-space shard counts —
+//! the tentpole perf claim of the sharded-session PR.
+//!
+//! One trace is generated and preprocessed once; the same request batch is
+//! then served by a [`ShardedSession`] at shards ∈ {1, 2, 4, 8} (the
+//! 1-shard session runs the identical scatter-gather code path, so the
+//! comparison isolates *sharding*, not code shape). Every configuration's
+//! answers are verified identical to the 1-shard baseline before anything
+//! is timed. Per-query work shrinks with the owning shard's dataset —
+//! CCProv's component filter and CSProv's pruned partitions scan the
+//! shard, not the world — so batched throughput rises with shard count.
+//!
+//! Writes `BENCH_sharded.json` and **fails** unless 4-shard batched
+//! throughput beats 1-shard on the fresh-run trace (and the deterministic
+//! rows-examined volume shrank with it).
+//!
+//! ```bash
+//! cargo bench --bench bench_sharded -- --divisor 150 --queries 256 --iters 3
+//! ```
+
+use provspark::benchkit::Table;
+use provspark::cli::Args;
+use provspark::config::EngineConfig;
+use provspark::harness::{EngineRouter, ShardedSession};
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::query::QueryRequest;
+use provspark::util::fmt::{human_count, human_duration};
+use provspark::util::timer::time_it;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+struct Row {
+    shards: usize,
+    wall_s: f64,
+    qps: f64,
+    rows_examined: u64,
+    partitions_scanned: u64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["bench"])?;
+    let divisor: usize = args.get_parsed_or("divisor", 150)?;
+    let replication: usize = args.get_parsed_or("replication", 1)?;
+    let queries: usize = args.get_parsed_or("queries", 256)?;
+    let iters: usize = args.get_parsed_or("iters", 3)?;
+    let tau: usize = args.get_parsed_or("tau", 5_000)?;
+    // Few, large partitions keep per-query cost scan-bound (every lookup
+    // scans whole partitions), which is the quantity sharding divides.
+    let partitions: usize = args.get_parsed_or("partitions", 8)?;
+    // Wall-clock gate: 4-shard throughput must exceed 1-shard × this
+    // factor. 1.0 = strictly faster; loosen below 1.0 only on very noisy
+    // shared hardware (the rows-examined gate stays strict regardless).
+    let min_speedup: f64 = args.get_parsed_or("min-speedup", 1.0)?;
+    let out_path = args.get_or("out", "BENCH_sharded.json");
+    let theta = (25_000 / divisor).max(50);
+    let big = (1000 / divisor).max(20);
+
+    let (trace, graph, splits) = generate(&GeneratorConfig {
+        scale_divisor: divisor,
+        replication,
+        ..Default::default()
+    });
+    let pre = preprocess(&trace, &graph, &splits, theta, big, WccImpl::Driver);
+    println!(
+        "trace: {} triples, {} components ({} large), θ={theta}; batch of {queries} \
+         Auto-routed queries",
+        human_count(trace.len() as u64),
+        human_count(pre.component_count as u64),
+        pre.large_components.len(),
+    );
+
+    let reqs: Vec<QueryRequest> = trace
+        .triples
+        .iter()
+        .step_by(trace.len() / queries + 1)
+        .take(queries)
+        .map(|t| QueryRequest::new(t.dst.raw()))
+        .collect();
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.cluster.default_partitions = partitions;
+    cfg.prov.tau = tau;
+    let (trace, pre) = (Arc::new(trace), Arc::new(pre));
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut baseline = None;
+    for shards in [1usize, 2, 4, 8] {
+        let session =
+            ShardedSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre), shards)?;
+        // Warm-up pass doubles as the correctness check against 1 shard.
+        let (responses, report) = session.query_many_report_on(EngineRouter::Auto, &reqs);
+        match &baseline {
+            None => baseline = Some(responses),
+            Some(base) => {
+                for (i, (a, b)) in base.iter().zip(&responses).enumerate() {
+                    anyhow::ensure!(
+                        a.lineage == b.lineage && a.stats.engine == b.stats.engine,
+                        "{shards}-shard answer {i} diverges from the 1-shard baseline"
+                    );
+                }
+            }
+        }
+        let mut best = Duration::MAX;
+        for _ in 0..iters {
+            let (_, d) = time_it(|| session.query_many_on(EngineRouter::Auto, &reqs));
+            best = best.min(d);
+        }
+        let total = report.total();
+        let qps = reqs.len() as f64 / best.as_secs_f64().max(1e-9);
+        println!(
+            "RAW sharded shards={shards} wall_s={:.5} qps={qps:.0} rows_examined={} \
+             parts_scanned={}",
+            best.as_secs_f64(),
+            total.rows_examined,
+            total.partitions_scanned,
+        );
+        rows.push(Row {
+            shards,
+            wall_s: best.as_secs_f64(),
+            qps,
+            rows_examined: total.rows_examined,
+            partitions_scanned: total.partitions_scanned,
+        });
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Batched query_many throughput vs shard count (divisor {divisor} \
+             ×{replication}, {queries} queries, τ={tau})"
+        ),
+        &["shards", "batch wall", "queries/s", "rows examined", "parts scanned"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.shards.to_string(),
+            human_duration(Duration::from_secs_f64(r.wall_s)),
+            format!("{:.0}", r.qps),
+            human_count(r.rows_examined),
+            r.partitions_scanned.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Hand-rolled JSON (the offline build has no serde).
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"sharded\",\n");
+    json.push_str(&format!(
+        "  \"divisor\": {divisor},\n  \"replication\": {replication},\n  \
+         \"trace_triples\": {},\n  \"queries\": {},\n  \"tau\": {tau},\n  \
+         \"theta\": {theta},\n",
+        trace.len(),
+        reqs.len(),
+    ));
+    json.push_str("  \"shard_counts\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"shards\": {}, \"batch_wall_s\": {:.6}, \"qps\": {:.1}, \
+             \"rows_examined\": {}, \"partitions_scanned\": {}}}{}\n",
+            r.shards,
+            r.wall_s,
+            r.qps,
+            r.rows_examined,
+            r.partitions_scanned,
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {out_path}");
+
+    // Gates: sharding must pay on the fresh-run trace — structurally
+    // (each query scans only its shard) and in wall-clock throughput.
+    let one = rows.iter().find(|r| r.shards == 1).expect("1-shard row");
+    let four = rows.iter().find(|r| r.shards == 4).expect("4-shard row");
+    anyhow::ensure!(
+        four.rows_examined < one.rows_examined,
+        "4-shard batch examined {} rows, not fewer than 1-shard's {}",
+        four.rows_examined,
+        one.rows_examined,
+    );
+    anyhow::ensure!(
+        four.qps > one.qps * min_speedup,
+        "4-shard batched throughput must beat 1-shard ×{min_speedup} \
+         (got {:.0} vs {:.0} q/s)",
+        four.qps,
+        one.qps,
+    );
+    Ok(())
+}

@@ -9,10 +9,17 @@
 //! [`ProvSession`] over the result and answers the same lineage query with
 //! all three engines through the uniform `ProvenanceEngine` interface —
 //! showing they agree while their `QueryStats` reveal very different data
-//! volumes. Finishes with the `Auto` router and a batched `query_many`.
+//! volumes. Finishes with the `Auto` router and a batched `query_many`,
+//! and — with `--shards N` — proves a component-space [`ShardedSession`]
+//! answers every query identically to the unsharded session (the CI
+//! sharded smoke test runs this with `--shards 4`).
+//!
+//! [`ShardedSession`]: provspark::harness::ShardedSession
 
 use provspark::config::EngineConfig;
-use provspark::harness::{select_queries, EngineRouter, ProvSession, QueryClass};
+use provspark::harness::{
+    select_queries, EngineRouter, ProvSession, QueryClass, ShardedSession,
+};
 use provspark::provenance::query::QueryRequest;
 use provspark::util::fmt::human_duration;
 use provspark::workflow::generator::{generate, GeneratorConfig};
@@ -21,6 +28,7 @@ use std::sync::Arc;
 fn main() -> anyhow::Result<()> {
     let args = provspark::cli::Args::parse_env(&[])?;
     let divisor: usize = args.get_parsed_or("divisor", 500)?;
+    let shards: usize = args.get_parsed_or("shards", 1)?;
 
     // 1. Generate a small trace (default ~1/500 of the paper's base).
     let gen = GeneratorConfig { scale_divisor: divisor, ..Default::default() };
@@ -49,7 +57,8 @@ fn main() -> anyhow::Result<()> {
     //    Arc-shared data (no copies of the trace) and routes requests.
     let mut cfg = EngineConfig::default();
     cfg.prov.tau = 5_000; // collect-to-driver threshold
-    let session = ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre))?;
+    let (trace, pre) = (Arc::new(trace), Arc::new(pre));
+    let session = ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre))?;
 
     // 4. Query the lineage of a deep derived value in the largest component
     //    (the LC-SL class of §4) on every engine, via typed requests.
@@ -97,5 +106,41 @@ fn main() -> anyhow::Result<()> {
         responses.len(),
         responses.iter().map(|r| r.stats.engine).collect::<Vec<_>>(),
     );
+
+    // 6. Optional: shard the component space and prove the scatter-gather
+    //    front is invisible to queries — identical lineages and routing on
+    //    every request above.
+    if shards > 1 {
+        let sharded = ShardedSession::new(&cfg, trace, pre, shards)?;
+        let mut reqs: Vec<QueryRequest> = vec![req.clone()];
+        reqs.extend(batch.iter().cloned());
+        let mut auto_report = None;
+        for router in
+            [EngineRouter::Auto, EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv]
+        {
+            let a = session.query_many_on(router, &reqs);
+            let (b, report) = sharded.query_many_report_on(router, &reqs);
+            for ((r, ra), rb) in reqs.iter().zip(&a).zip(&b) {
+                assert_eq!(
+                    ra.lineage, rb.lineage,
+                    "sharded answer diverges (router {router}, item {})",
+                    r.item
+                );
+                assert_eq!(
+                    ra.stats.engine, rb.stats.engine,
+                    "sharded routing diverges (router {router}, item {})",
+                    r.item
+                );
+            }
+            if router == EngineRouter::Auto {
+                auto_report = Some(report);
+            }
+        }
+        println!(
+            "sharded x{shards}: all {} answers match the unsharded session",
+            reqs.len()
+        );
+        print!("{}", auto_report.expect("Auto ran first").summary());
+    }
     Ok(())
 }

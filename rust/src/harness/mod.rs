@@ -1,7 +1,8 @@
 //! Experiment harness: query-class selection (§4 "Provenance Queries"),
 //! engine assembly ([`EngineSet`], including delta absorption across
 //! ingestion epochs), the [`ProvSession`] query service (routing, batched
-//! execution, live [`ProvSession::ingest`]), and the drivers that
+//! execution, live [`ProvSession::ingest`]), the [`ShardedSession`]
+//! scatter-gather front over component-space shards, and the drivers that
 //! regenerate every table of the paper's evaluation (Tables 9–12 plus the
 //! Discussion drill-downs).
 
@@ -9,6 +10,7 @@ pub mod classes;
 pub mod engines;
 pub mod experiments;
 pub mod session;
+pub mod sharded;
 
 pub use classes::{select_queries, QueryClass};
 pub use engines::EngineSet;
@@ -16,3 +18,6 @@ pub use experiments::{
     component_census, drilldown_report, query_table, table9, ExperimentConfig,
 };
 pub use session::{EngineRouter, ProvSession};
+pub use sharded::{
+    ShardBatchStats, ShardedBatchReport, ShardedDeltaStats, ShardedSession, ShardRouter,
+};

@@ -144,11 +144,11 @@ impl ProvSession {
     /// workflow every generator trace is drawn from).
     ///
     /// **Contract**: this must be the workflow the index was preprocessed
-    /// with — [`Preprocessed`] records θ but not (yet) the workflow itself,
-    /// so the session cannot detect a mismatch, and ingesting under a
-    /// different graph/splits silently breaks the incremental ≡
-    /// from-scratch equivalence (see the ROADMAP open item on recording
-    /// the workflow in the persisted index).
+    /// with. [`Preprocessed`] records a workflow fingerprint (persisted in
+    /// the v3 store header), and the first [`ingest`](Self::ingest) fails
+    /// loudly on a mismatch; indexes loaded from legacy v1/v2 files carry
+    /// no fingerprint, and for those a wrong workflow silently breaks the
+    /// incremental ≡ from-scratch equivalence.
     pub fn with_workflow(mut self, graph: DependencyGraph, splits: SplitSet) -> Self {
         self.workflow = (graph, splits);
         self
@@ -156,6 +156,18 @@ impl ProvSession {
 
     pub fn router(&self) -> EngineRouter {
         self.router
+    }
+
+    /// Fingerprint of the workflow this session re-partitions dirty
+    /// components against on ingest
+    /// ([`crate::workflow::workflow_fingerprint`]) — what a recorded
+    /// [`Preprocessed::workflow_fingerprint`] must match for
+    /// [`ingest`](Self::ingest) to proceed. The sharded front uses this to
+    /// preflight every touched shard *before* mutating any of them.
+    ///
+    /// [`Preprocessed::workflow_fingerprint`]: crate::provenance::pipeline::Preprocessed::workflow_fingerprint
+    pub fn workflow_fingerprint(&self) -> u64 {
+        crate::workflow::workflow_fingerprint(&self.workflow.0, &self.workflow.1)
     }
 
     pub fn context(&self) -> &MiniSpark {
@@ -293,6 +305,30 @@ impl ProvSession {
         let next = EngineSet::absorb(&prev, trace, pre, &delta)?;
         *self.state.write().expect("session state lock poisoned") = Arc::new(next);
         Ok(delta.stats)
+    }
+
+    /// Replace the session's entire data state: rebuild the engines over
+    /// `trace`/`pre` ([`EngineSet::build`] — full engine construction, not
+    /// a delta absorb) and swap them in as the next epoch. The maintained
+    /// incremental index is discarded; the next [`ingest`](Self::ingest)
+    /// lazily reconstructs it from the new state.
+    ///
+    /// In-flight query batches keep their previous epoch, exactly as under
+    /// `ingest`. This is the shard-migration primitive: when a cross-shard
+    /// component merge moves a component *off* a shard
+    /// (`ShardedSession::ingest`), the losing shard's session is rebuilt
+    /// over its kept remainder — datasets have an append/patch path but no
+    /// removal path, so shrinking a shard is a rebuild of what remains
+    /// (bounded by the smaller, losing side).
+    pub fn replace_state(&self, trace: Arc<Trace>, pre: Arc<Preprocessed>) -> Result<()> {
+        // Same lock order as `ingest` (index, then state write): the index
+        // must be invalidated together with the swap, or a racing ingest
+        // could re-apply a stale index over the replaced state.
+        let mut guard = self.index.lock().expect("session ingest lock poisoned");
+        let next = EngineSet::build(&self.sc, trace, pre, &self.cfg)?;
+        *self.state.write().expect("session state lock poisoned") = Arc::new(next);
+        *guard = None;
+        Ok(())
     }
 }
 

@@ -1,0 +1,848 @@
+//! `ShardedSession` — N independent [`ProvSession`] shards over the
+//! component space, behind one scatter-gather front.
+//!
+//! A [`ShardPlan`](crate::provenance::shard::ShardPlan) assigns every
+//! weakly connected component to one shard (lineages never cross
+//! components, so shards never need each other); construction splits the
+//! trace and preprocessed index with `split_by_plan` and opens one
+//! [`ProvSession`] per shard on a **shared** minispark context — each shard
+//! keeps its own `EngineSet` + epoch behind the existing
+//! `RwLock<Arc<_>>` machinery, so all three engines and
+//! [`EngineRouter::Auto`] work per shard unchanged.
+//!
+//! # Scatter-gather queries
+//!
+//! [`ShardedSession::query_many`] resolves each request's owning shard by
+//! probing the per-shard epoch snapshots (a [`ShardRouter`] — one hash
+//! lookup per shard, no front-side routing state to keep in sync), then
+//! fans the whole batch across the shared `exec` worker pool,
+//! order-preserving. Per-query [`QueryStats`] aggregate into a per-shard
+//! [`ShardedBatchReport`]. The batch runs against one epoch snapshot *per
+//! shard*; a concurrent ingest never splits a batch across index versions.
+//!
+//! # Sharded ingest and cross-shard merges
+//!
+//! [`ShardedSession::ingest`] routes a [`TripleBatch`]'s triples to only
+//! the shards whose components they touch. The hard case is a batch edge
+//! connecting components that live on *different* shards: the components
+//! must merge, and a merged component must live on exactly one shard. The
+//! resolver unions batch endpoints with the component labels they drag in
+//! ([`UnionFind::groups`]), and for every group spanning >1 shard picks the
+//! shard holding the most member nodes as the **winner** — mirroring
+//! [`LabeledUnion`](crate::provenance::wcc::LabeledUnion)'s small-to-large
+//! discipline, the smaller side moves. Losing shards have the migrating
+//! components *extracted* (a `split_by_plan` with a keep-vs-migrate
+//! assignment) and are rebuilt over their kept remainder
+//! ([`ProvSession::replace_state`] — datasets have no removal path, so
+//! shrinking is a rebuild of the smaller, losing side); the extracted
+//! triples are prepended to the winner's sub-batch, whose own
+//! [`ProvSession::ingest`] re-derives the merged component's structure
+//! incrementally. The apply order is failure- and reader-safe: every
+//! predictable error is preflighted before any shard mutates, and winners
+//! absorb before losers shrink, so a concurrent query always finds the
+//! migrating component on some shard. Equivalence with an unsharded
+//! session — identical answers, CS membership and routing — is
+//! property-tested in `rust/tests/sharded_props.rs`.
+//!
+//! [`QueryStats`]: crate::provenance::query::QueryStats
+
+use super::engines::EngineSet;
+use super::session::{EngineRouter, ProvSession};
+use crate::config::EngineConfig;
+use crate::exec::par_map_indexed;
+use crate::minispark::MiniSpark;
+use crate::provenance::incremental::{DeltaStats, TripleBatch};
+use crate::provenance::model::{ProvTriple, Trace};
+use crate::provenance::pipeline::Preprocessed;
+use crate::provenance::query::{ProvenanceEngine, QueryRequest, QueryResponse};
+use crate::provenance::shard::{merge_shards, ShardAssignment, ShardPlan};
+use crate::provenance::wcc::UnionFind;
+use crate::workflow::graph::DependencyGraph;
+use crate::workflow::splits::SplitSet;
+use anyhow::{ensure, Result};
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Resolves items to owning shards against a fixed set of per-shard epoch
+/// snapshots: probe each shard's `cc_of` (one hash lookup per shard);
+/// unknown items fall back to the plan's deterministic hash — every shard
+/// answers an unknown item identically (empty lineage via CSProv's index
+/// miss), so any deterministic choice preserves equivalence.
+pub struct ShardRouter<'a> {
+    plan: &'a ShardPlan,
+    epochs: &'a [Arc<EngineSet>],
+}
+
+impl<'a> ShardRouter<'a> {
+    pub fn new(plan: &'a ShardPlan, epochs: &'a [Arc<EngineSet>]) -> Self {
+        Self { plan, epochs }
+    }
+
+    /// Shard that answers queries for `item`.
+    pub fn owner(&self, item: u64) -> usize {
+        self.known_owner(item).unwrap_or_else(|| self.plan.shard_of_item(item))
+    }
+
+    /// Shard whose component space contains `item`, if any.
+    pub fn known_owner(&self, item: u64) -> Option<usize> {
+        self.epochs.iter().position(|e| e.pre().cc_of.contains_key(&item))
+    }
+}
+
+/// Per-shard aggregate of the [`QueryStats`] a scattered batch produced on
+/// that shard.
+///
+/// [`QueryStats`]: crate::provenance::query::QueryStats
+#[derive(Debug, Clone, Default)]
+pub struct ShardBatchStats {
+    pub requests: usize,
+    pub partitions_scanned: u64,
+    pub rows_examined: u64,
+    pub rows_shuffled: u64,
+    pub rows_collected: u64,
+    /// Sum of the per-query phase wall times attributed to this shard.
+    pub wall: Duration,
+}
+
+impl ShardBatchStats {
+    fn absorb(&mut self, resp: &QueryResponse) {
+        self.requests += 1;
+        self.partitions_scanned += resp.stats.partitions_scanned;
+        self.rows_examined += resp.stats.rows_examined;
+        self.rows_shuffled += resp.stats.rows_shuffled;
+        self.rows_collected += resp.stats.rows_collected;
+        self.wall += resp.stats.total_time();
+    }
+}
+
+/// The batch-level report of one scattered [`ShardedSession::query_many`]:
+/// per-shard request counts and scan volumes, plus totals.
+#[derive(Debug, Clone, Default)]
+pub struct ShardedBatchReport {
+    /// Indexed by shard.
+    pub per_shard: Vec<ShardBatchStats>,
+}
+
+impl ShardedBatchReport {
+    /// Aggregate over all shards.
+    pub fn total(&self) -> ShardBatchStats {
+        let mut t = ShardBatchStats::default();
+        for s in &self.per_shard {
+            t.requests += s.requests;
+            t.partitions_scanned += s.partitions_scanned;
+            t.rows_examined += s.rows_examined;
+            t.rows_shuffled += s.rows_shuffled;
+            t.rows_collected += s.rows_collected;
+            t.wall += s.wall;
+        }
+        t
+    }
+
+    /// Multi-line rendering (one line per shard that served requests).
+    pub fn summary(&self) -> String {
+        use crate::util::fmt::{human_count, human_duration};
+        let mut out = String::new();
+        for (i, s) in self.per_shard.iter().enumerate() {
+            if s.requests == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "shard {i}: {} reqs, {} parts scanned, {} rows examined, {} collected, {}\n",
+                s.requests,
+                s.partitions_scanned,
+                human_count(s.rows_examined),
+                human_count(s.rows_collected),
+                human_duration(s.wall),
+            ));
+        }
+        let t = self.total();
+        out.push_str(&format!(
+            "total: {} reqs, {} parts scanned, {} rows examined across {} shards\n",
+            t.requests,
+            t.partitions_scanned,
+            human_count(t.rows_examined),
+            self.per_shard.len(),
+        ));
+        out
+    }
+}
+
+/// What one [`ShardedSession::ingest`] did: the per-shard deltas plus the
+/// cross-shard merge/migration work the front performed.
+#[derive(Debug, Clone, Default)]
+pub struct ShardedDeltaStats {
+    /// Sharded batches applied since the session opened.
+    pub batch: u64,
+    pub new_triples: usize,
+    /// Merge groups whose components spanned more than one shard.
+    pub cross_shard_merges: usize,
+    /// Components moved off a losing shard.
+    pub migrated_components: usize,
+    /// Triples moved with them (re-ingested on the winning shard).
+    pub migrated_triples: usize,
+    /// Losing shards rebuilt over their kept remainder by this batch's
+    /// migrations (a shard can be rebuilt even when it ingested no rows —
+    /// its `per_shard` entry is `None` in that case).
+    pub rebuilt_shards: Vec<usize>,
+    /// Per-shard delta stats (`None` = no sub-batch was ingested on the
+    /// shard; see [`rebuilt_shards`](Self::rebuilt_shards) for shards that
+    /// were still modified by a migration).
+    pub per_shard: Vec<Option<DeltaStats>>,
+}
+
+impl ShardedDeltaStats {
+    /// One-line rendering for CLI / bench output.
+    pub fn summary(&self) -> String {
+        let touched = self.per_shard.iter().filter(|d| d.is_some()).count();
+        format!(
+            "batch={} new_triples={} shards_ingesting={}/{} cross_shard_merges={} \
+             migrated_components={} migrated_triples={} rebuilt_shards={:?}",
+            self.batch,
+            self.new_triples,
+            touched,
+            self.per_shard.len(),
+            self.cross_shard_merges,
+            self.migrated_components,
+            self.migrated_triples,
+            self.rebuilt_shards,
+        )
+    }
+}
+
+/// A sharded query session: the same query surface as [`ProvSession`]
+/// (route / execute / `query_many` / ingest), served by N component-space
+/// shards behind a scatter-gather front.
+///
+/// ```
+/// use provspark::config::EngineConfig;
+/// use provspark::harness::{EngineRouter, ProvSession, ShardedSession};
+/// use provspark::provenance::pipeline::{preprocess, WccImpl};
+/// use provspark::provenance::query::QueryRequest;
+/// use provspark::workflow::generator::{generate, GeneratorConfig};
+/// use std::sync::Arc;
+///
+/// let (trace, graph, splits) =
+///     generate(&GeneratorConfig { scale_divisor: 5000, ..Default::default() });
+/// let pre = preprocess(&trace, &graph, &splits, 100, 50, WccImpl::Driver);
+/// let mut cfg = EngineConfig::default();
+/// cfg.cluster.job_overhead_us = 0;
+/// let (trace, pre) = (Arc::new(trace), Arc::new(pre));
+///
+/// let single = ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+/// let sharded = ShardedSession::new(&cfg, trace, pre, 4).unwrap();
+/// assert_eq!(sharded.shard_count(), 4);
+///
+/// // Sharding is invisible to queries: identical answers and routing.
+/// let item = single.trace().triples[0].dst.raw();
+/// let req = QueryRequest::new(item);
+/// let (a, b) = (single.execute_on(EngineRouter::Auto, &req),
+///               sharded.execute_on(EngineRouter::Auto, &req));
+/// assert_eq!(a.lineage, b.lineage);
+/// assert_eq!(a.stats.engine, b.stats.engine);
+/// ```
+pub struct ShardedSession {
+    sc: MiniSpark,
+    plan: ShardPlan,
+    router: EngineRouter,
+    shards: Vec<ProvSession>,
+    /// Sharded batches applied (the front's own epoch counter — shard
+    /// epochs advance independently, only when a batch touches them).
+    batches: AtomicU64,
+    /// Serializes sharded ingestion (migrations touch multiple shards).
+    ingest_lock: Mutex<()>,
+}
+
+impl ShardedSession {
+    /// Split `trace`/`pre` across `shards` component-space shards and open
+    /// one session per shard on a fresh shared minispark context.
+    pub fn new(
+        cfg: &EngineConfig,
+        trace: Arc<Trace>,
+        pre: Arc<Preprocessed>,
+        shards: usize,
+    ) -> Result<Self> {
+        let sc = MiniSpark::new(cfg.cluster.clone());
+        Self::with_context(&sc, cfg, trace, pre, shards)
+    }
+
+    /// [`new`](Self::new) on an existing context (shares its worker pool).
+    pub fn with_context(
+        sc: &MiniSpark,
+        cfg: &EngineConfig,
+        trace: Arc<Trace>,
+        pre: Arc<Preprocessed>,
+        shards: usize,
+    ) -> Result<Self> {
+        ensure!(shards >= 1, "shard count must be >= 1");
+        let plan = ShardPlan::new(shards);
+        let asg = plan.assignment(&pre.cc_of);
+        let traces = trace.split_by_plan(&pre.cc_of, &asg)?;
+        let pres = pre.split_by_plan(&asg)?;
+        let mut sessions = Vec::with_capacity(shards);
+        for (t, p) in traces.into_iter().zip(pres) {
+            sessions.push(ProvSession::with_context(sc, cfg, Arc::new(t), Arc::new(p))?);
+        }
+        Ok(Self {
+            sc: sc.clone(),
+            plan,
+            router: EngineRouter::Auto,
+            shards: sessions,
+            batches: AtomicU64::new(0),
+            ingest_lock: Mutex::new(()),
+        })
+    }
+
+    /// Set the default routing policy (builder-style).
+    pub fn with_router(mut self, router: EngineRouter) -> Self {
+        self.router = router;
+        self
+    }
+
+    /// Set the workflow every shard re-partitions dirty components against
+    /// on ingest (builder-style; see [`ProvSession::with_workflow`]).
+    pub fn with_workflow(mut self, graph: DependencyGraph, splits: SplitSet) -> Self {
+        self.shards = self
+            .shards
+            .into_iter()
+            .map(|s| s.with_workflow(graph.clone(), splits.clone()))
+            .collect();
+        self
+    }
+
+    pub fn router(&self) -> EngineRouter {
+        self.router
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The per-shard sessions (shard `i` serves plan bucket `i`).
+    ///
+    /// **Read-only by contract**: querying through a shard directly is
+    /// fine, but never call [`ProvSession::ingest`] (or
+    /// [`ProvSession::replace_state`]) on one — a batch referencing a node
+    /// owned by another shard would be treated as brand-new there, putting
+    /// the node on two shards and breaking the one-shard-per-component
+    /// invariant every front operation relies on. All ingestion must go
+    /// through [`ShardedSession::ingest`], which resolves cross-shard
+    /// merges first.
+    pub fn shard_sessions(&self) -> &[ProvSession] {
+        &self.shards
+    }
+
+    pub fn context(&self) -> &MiniSpark {
+        &self.sc
+    }
+
+    /// Sharded batches ingested through this front.
+    pub fn batches_ingested(&self) -> u64 {
+        self.batches.load(Ordering::SeqCst)
+    }
+
+    /// Shard whose component space currently contains `item` (`None` for
+    /// unknown items, which any shard rejects identically).
+    pub fn shard_of(&self, item: u64) -> Option<usize> {
+        let epochs = self.epoch_snapshot();
+        ShardRouter::new(&self.plan, &epochs).known_owner(item)
+    }
+
+    /// Name of the engine a routing policy resolves to for one item on its
+    /// owning shard (same contract as [`ProvSession::route`]).
+    pub fn route(&self, router: EngineRouter, item: u64) -> &'static str {
+        let epochs = self.epoch_snapshot();
+        let owner = ShardRouter::new(&self.plan, &epochs).owner(item);
+        epochs[owner].route(router, item).name()
+    }
+
+    /// Answer one request with the session's default router.
+    pub fn execute(&self, req: &QueryRequest) -> QueryResponse {
+        self.execute_on(self.router, req)
+    }
+
+    /// Answer one request with an explicit routing policy on the owning
+    /// shard.
+    pub fn execute_on(&self, router: EngineRouter, req: &QueryRequest) -> QueryResponse {
+        let epochs = self.epoch_snapshot();
+        let owner = ShardRouter::new(&self.plan, &epochs).owner(req.item);
+        epochs[owner].route(router, req.item).execute(req)
+    }
+
+    /// Scatter a batch across the shards and gather the responses in
+    /// request order (see [`query_many_report`](Self::query_many_report)
+    /// for the per-shard cost report).
+    pub fn query_many(&self, reqs: &[QueryRequest]) -> Vec<QueryResponse> {
+        self.query_many_on(self.router, reqs)
+    }
+
+    /// [`query_many`](Self::query_many) with an explicit routing policy.
+    pub fn query_many_on(
+        &self,
+        router: EngineRouter,
+        reqs: &[QueryRequest],
+    ) -> Vec<QueryResponse> {
+        self.query_many_report_on(router, reqs).0
+    }
+
+    /// Scatter-gather with the batch-level report: each request is resolved
+    /// to its owning shard (one epoch snapshot per shard for the whole
+    /// batch), the full batch fans out across the shared `exec` worker
+    /// pool, responses come back in request order, and every shard's
+    /// per-query stats aggregate into a [`ShardedBatchReport`].
+    pub fn query_many_report(
+        &self,
+        reqs: &[QueryRequest],
+    ) -> (Vec<QueryResponse>, ShardedBatchReport) {
+        self.query_many_report_on(self.router, reqs)
+    }
+
+    /// [`query_many_report`](Self::query_many_report) with an explicit
+    /// routing policy.
+    pub fn query_many_report_on(
+        &self,
+        router: EngineRouter,
+        reqs: &[QueryRequest],
+    ) -> (Vec<QueryResponse>, ShardedBatchReport) {
+        let epochs = self.epoch_snapshot();
+        let front = ShardRouter::new(&self.plan, &epochs);
+        let owners: Vec<usize> = reqs.iter().map(|r| front.owner(r.item)).collect();
+        let parallelism = self.sc.config().executors.max(1);
+        let responses = par_map_indexed(reqs, parallelism, |i, req| {
+            epochs[owners[i]].route(router, req.item).execute(req)
+        });
+        let mut report = ShardedBatchReport {
+            per_shard: vec![ShardBatchStats::default(); self.shards.len()],
+        };
+        for (owner, resp) in owners.iter().zip(&responses) {
+            report.per_shard[*owner].absorb(resp);
+        }
+        (responses, report)
+    }
+
+    /// Ingest a batch through the sharded front: triples are routed to only
+    /// the shards whose components they touch; components merged *across*
+    /// shards by batch edges are migrated to the winning (larger) shard,
+    /// and every receiving shard absorbs its sub-batch through the normal
+    /// [`ProvSession::ingest`] incremental path. All predictable failures
+    /// are preflighted before any shard mutates; winners absorb before
+    /// losers shrink, so queries running concurrently always find every
+    /// component on some shard (each serving a legitimate epoch).
+    pub fn ingest(&self, batch: &TripleBatch) -> Result<ShardedDeltaStats> {
+        let _serial = self.ingest_lock.lock().expect("sharded ingest lock poisoned");
+        let n = self.shards.len();
+        let mut stats = ShardedDeltaStats {
+            new_triples: batch.len(),
+            per_shard: vec![None; n],
+            ..Default::default()
+        };
+        if batch.is_empty() {
+            stats.batch = self.batches.fetch_add(1, Ordering::SeqCst) + 1;
+            return Ok(stats);
+        }
+        let epochs = self.epoch_snapshot();
+
+        // ---- Resolve merge groups --------------------------------------
+        // Union batch endpoints with the component labels they drag in: a
+        // label is itself a member node of its component, so two batch
+        // groups touching the same component share a union-find root, and
+        // a group's members name every existing component it merges.
+        let mut uf = UnionFind::new();
+        let mut known: FxHashMap<u64, (usize, u64)> = FxHashMap::default();
+        for t in &batch.triples {
+            let (s, d) = (t.src.raw(), t.dst.raw());
+            uf.union(s, d);
+            for x in [s, d] {
+                if known.contains_key(&x) {
+                    continue;
+                }
+                for (si, e) in epochs.iter().enumerate() {
+                    if let Some(&l) = e.pre().cc_of.get(&x) {
+                        known.insert(x, (si, l));
+                        known.entry(l).or_insert((si, l));
+                        uf.union(x, l);
+                        break;
+                    }
+                }
+            }
+        }
+
+        struct GroupInfo {
+            min_member: u64,
+            /// shard → labels of its components this group merges.
+            involved: FxHashMap<usize, FxHashSet<u64>>,
+        }
+        let groups = uf.groups();
+        let mut infos: Vec<(u64, GroupInfo)> = Vec::with_capacity(groups.len());
+        // Component sizes are only needed for contested (multi-shard)
+        // groups; collect those labels per shard so each shard's node map
+        // is scanned at most once.
+        let mut need: FxHashMap<usize, FxHashSet<u64>> = FxHashMap::default();
+        for (&root, members) in &groups {
+            let mut gi = GroupInfo { min_member: u64::MAX, involved: FxHashMap::default() };
+            for m in members {
+                gi.min_member = gi.min_member.min(*m);
+                if let Some(&(s, l)) = known.get(m) {
+                    gi.involved.entry(s).or_default().insert(l);
+                }
+            }
+            if gi.involved.len() > 1 {
+                for (&s, ls) in &gi.involved {
+                    need.entry(s).or_default().extend(ls.iter().copied());
+                }
+            }
+            infos.push((root, gi));
+        }
+        let mut size_of: FxHashMap<(usize, u64), usize> = FxHashMap::default();
+        for (&s, labels) in &need {
+            for l in epochs[s].pre().cc_of.values() {
+                if labels.contains(l) {
+                    *size_of.entry((s, *l)).or_insert(0) += 1;
+                }
+            }
+        }
+
+        // ---- Pick winners, schedule migrations -------------------------
+        let mut target_of: FxHashMap<u64, usize> = FxHashMap::default();
+        let mut migrate: FxHashMap<usize, FxHashMap<u64, usize>> = FxHashMap::default();
+        for (root, gi) in &infos {
+            let target = match gi.involved.len() {
+                // All-new component: hash its minimum node id — the
+                // canonical label it will have.
+                0 => self.plan.shard_of_item(gi.min_member),
+                1 => *gi.involved.keys().next().expect("one involved shard"),
+                _ => {
+                    stats.cross_shard_merges += 1;
+                    // Winner = shard with the most member nodes across its
+                    // involved components (the smaller side moves); ties
+                    // break to the lowest shard index for determinism.
+                    let mut by_size: Vec<(usize, usize)> = gi
+                        .involved
+                        .iter()
+                        .map(|(&s, ls)| {
+                            let sz: usize = ls
+                                .iter()
+                                .map(|l| size_of.get(&(s, *l)).copied().unwrap_or(0))
+                                .sum();
+                            (s, sz)
+                        })
+                        .collect();
+                    by_size.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                    let winner = by_size[0].0;
+                    for (&s, ls) in &gi.involved {
+                        if s == winner {
+                            continue;
+                        }
+                        for &l in ls {
+                            migrate.entry(s).or_default().insert(l, winner);
+                            stats.migrated_components += 1;
+                        }
+                    }
+                    winner
+                }
+            };
+            target_of.insert(*root, target);
+        }
+
+        // ---- Route batch triples to their target shards -----------------
+        let mut subs: Vec<Vec<ProvTriple>> = vec![Vec::new(); n];
+        for t in &batch.triples {
+            let root = uf.find(t.src.raw());
+            subs[target_of[&root]].push(*t);
+        }
+
+        // ---- Extract migrating components from losing shards ------------
+        // Bucket 0 = keep; buckets 1.. = one per distinct winning shard.
+        // Extraction only *reads* the epoch snapshots: the kept remainder
+        // and the extracted raw triples are staged here, and no shard state
+        // is mutated until the preflight below has passed.
+        let mut extra: Vec<Vec<ProvTriple>> = vec![Vec::new(); n];
+        let mut kept: Vec<Option<(Trace, Preprocessed)>> = (0..n).map(|_| None).collect();
+        let mut losers: Vec<usize> = migrate.keys().copied().collect();
+        losers.sort_unstable();
+        for &s in &losers {
+            let moving = &migrate[&s];
+            let mut winners: Vec<usize> =
+                moving.values().copied().collect::<FxHashSet<usize>>().into_iter().collect();
+            winners.sort_unstable();
+            let bucket_of: FxHashMap<usize, usize> =
+                winners.iter().enumerate().map(|(i, &w)| (w, i + 1)).collect();
+            let e = &epochs[s];
+            let mut of_label: FxHashMap<u64, usize> = FxHashMap::default();
+            for &l in e.pre().cc_of.values() {
+                of_label
+                    .entry(l)
+                    .or_insert_with(|| moving.get(&l).map(|w| bucket_of[w]).unwrap_or(0));
+            }
+            let asg = ShardAssignment::new(1 + winners.len(), of_label);
+            let mut parts_t = e.trace().split_by_plan(&e.pre().cc_of, &asg)?;
+            let parts_p = e.pre().split_by_plan(&asg)?;
+            let kept_t = parts_t.remove(0);
+            let mut kept_p = parts_p.into_iter().next().expect("keep bucket");
+            // The keep bucket stays at this shard's position in the
+            // *session's* plan — not position 0 of the extraction split.
+            kept_p.shard_index = e.pre().shard_index;
+            kept_p.shard_count = e.pre().shard_count;
+            kept[s] = Some((kept_t, kept_p));
+            for (bi, &w) in winners.iter().enumerate() {
+                stats.migrated_triples += parts_t[bi].len();
+                extra[w].extend_from_slice(&parts_t[bi].triples);
+            }
+        }
+
+        // ---- Preflight: fail before mutating anything -------------------
+        // Every predictable per-shard ingest failure (θ unrecorded,
+        // mismatched workflow fingerprint, triple-index overflow) must
+        // surface *before* any shard state changes — an error after a
+        // partial apply would strand migrated components between shards.
+        // The triple-index bound is per shard — the whole point of
+        // sharding is that only each shard's own index must fit.
+        for s in 0..n {
+            if extra[s].is_empty() && subs[s].is_empty() {
+                continue;
+            }
+            let after = epochs[s].trace().len() + extra[s].len() + subs[s].len();
+            ensure!(
+                after <= u32::MAX as usize,
+                "shard {s} would exceed the u32 triple index ({after} rows)"
+            );
+            let pre = epochs[s].pre();
+            ensure!(
+                pre.theta != 0,
+                "shard {s} has θ = 0 (pre-epoch index): re-run preprocess with θ ≥ 1 \
+                 before ingesting"
+            );
+            let fp = self.shards[s].workflow_fingerprint();
+            ensure!(
+                pre.workflow_fingerprint == 0 || pre.workflow_fingerprint == fp,
+                "shard {s} was preprocessed under a different workflow (recorded \
+                 fingerprint {:#018x}, session workflow {:#018x})",
+                pre.workflow_fingerprint,
+                fp,
+            );
+        }
+
+        // ---- Apply: winners absorb first, losers shrink last ------------
+        // Until a loser's `replace_state` lands, its previous epoch still
+        // serves the migrating component — so a concurrent query always
+        // finds the component on *some* shard (the loser's pre-merge state
+        // or the winner's merged state, each a legitimate epoch), never a
+        // silent empty answer.
+        for s in 0..n {
+            if kept[s].is_some() || (extra[s].is_empty() && subs[s].is_empty()) {
+                continue;
+            }
+            let mut triples = std::mem::take(&mut extra[s]);
+            triples.append(&mut subs[s]);
+            stats.per_shard[s] = Some(self.shards[s].ingest(&TripleBatch::new(triples))?);
+        }
+        for &s in &losers {
+            let (kept_t, kept_p) = kept[s].take().expect("loser kept state staged above");
+            self.shards[s].replace_state(Arc::new(kept_t), Arc::new(kept_p))?;
+            stats.rebuilt_shards.push(s);
+            // A loser can also be receiving rows (for other merge groups,
+            // or as another group's winner): its sub-batch applies to the
+            // kept state it was staged against.
+            if !(extra[s].is_empty() && subs[s].is_empty()) {
+                let mut triples = std::mem::take(&mut extra[s]);
+                triples.append(&mut subs[s]);
+                stats.per_shard[s] =
+                    Some(self.shards[s].ingest(&TripleBatch::new(triples))?);
+            }
+        }
+        stats.batch = self.batches.fetch_add(1, Ordering::SeqCst) + 1;
+        Ok(stats)
+    }
+
+    /// Gather every shard's current state back into one combined
+    /// `(Trace, Preprocessed)` — what the CLI persists after a sharded
+    /// ingest (see [`merge_shards`]). Serialized against
+    /// [`ingest`](Self::ingest), so it never observes the transient
+    /// mid-migration window where a moving component exists on two shards.
+    pub fn merged_state(&self) -> Result<(Trace, Preprocessed)> {
+        let _serial = self.ingest_lock.lock().expect("sharded ingest lock poisoned");
+        let parts: Vec<(Arc<Trace>, Arc<Preprocessed>)> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let e = s.engines();
+                (Arc::clone(e.trace()), Arc::clone(e.pre()))
+            })
+            .collect();
+        merge_shards(&parts)
+    }
+
+    fn epoch_snapshot(&self) -> Vec<Arc<EngineSet>> {
+        self.shards.iter().map(|s| s.engines()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provenance::pipeline::{preprocess, WccImpl};
+    use crate::util::ids::{AttrValueId, OpId};
+    use crate::workflow::generator::{generate, GeneratorConfig};
+
+    fn cfg(tau: usize) -> EngineConfig {
+        let mut cfg = EngineConfig::default();
+        cfg.cluster.job_overhead_us = 0;
+        cfg.prov.tau = tau;
+        cfg
+    }
+
+    fn sample_items(trace: &Trace, n: usize) -> Vec<u64> {
+        trace
+            .triples
+            .iter()
+            .step_by(trace.len() / n + 1)
+            .map(|t| t.dst.raw())
+            .collect()
+    }
+
+    #[test]
+    fn sharded_construction_matches_unsharded() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let cfg = cfg(400);
+        let (trace, pre) = (Arc::new(trace), Arc::new(pre));
+        let single =
+            ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+        let sharded =
+            ShardedSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre), 3).unwrap();
+
+        // Shards cover the data without overlap.
+        let total: usize =
+            sharded.shard_sessions().iter().map(|s| s.trace().len()).sum();
+        assert_eq!(total, trace.len());
+        assert!(
+            sharded.shard_sessions().iter().filter(|s| !s.trace().is_empty()).count() >= 2,
+            "degenerate shard balance"
+        );
+
+        let mut reqs: Vec<QueryRequest> =
+            sample_items(&trace, 10).into_iter().map(QueryRequest::new).collect();
+        reqs.push(QueryRequest::new(u64::MAX - 5)); // unknown
+        reqs.push(reqs[0].clone().with_max_depth(2)); // capped
+        for router in
+            [EngineRouter::Auto, EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv]
+        {
+            let a = single.query_many_on(router, &reqs);
+            let (b, report) = sharded.query_many_report_on(router, &reqs);
+            for ((req, ra), rb) in reqs.iter().zip(&a).zip(&b) {
+                assert_eq!(ra.lineage, rb.lineage, "router={router} item={}", req.item);
+                assert_eq!(ra.stats.engine, rb.stats.engine, "item={}", req.item);
+                assert_eq!(ra.stats.truncated, rb.stats.truncated, "item={}", req.item);
+            }
+            assert_eq!(report.total().requests, reqs.len());
+            assert!(report.per_shard.iter().filter(|s| s.requests > 0).count() >= 1);
+        }
+        // Routing names agree item by item.
+        for &q in &sample_items(&trace, 10) {
+            assert_eq!(
+                single.route(EngineRouter::Auto, q),
+                sharded.route(EngineRouter::Auto, q)
+            );
+        }
+    }
+
+    #[test]
+    fn cross_shard_bridge_migrates_and_stays_equivalent() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2500, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let cfg = cfg(300);
+        let (trace_arc, pre_arc) = (Arc::new(trace.clone()), Arc::new(pre));
+        let single =
+            ProvSession::new(&cfg, Arc::clone(&trace_arc), Arc::clone(&pre_arc)).unwrap();
+        let sharded =
+            ShardedSession::new(&cfg, Arc::clone(&trace_arc), Arc::clone(&pre_arc), 4)
+                .unwrap();
+
+        // Find two existing items on different shards and bridge them.
+        let items = sample_items(&trace, 50);
+        let a = items[0];
+        let sa = sharded.shard_of(a).expect("known item");
+        let b = *items
+            .iter()
+            .find(|&&x| sharded.shard_of(x).expect("known item") != sa)
+            .expect("an item on another shard");
+        let bridge = ProvTriple::new(AttrValueId(a), AttrValueId(b), OpId(0));
+        let batch = TripleBatch::new(vec![bridge]);
+
+        let d_single = single.ingest(&batch).unwrap();
+        let d_sharded = sharded.ingest(&batch).unwrap();
+        assert!(d_single.components_merged >= 1);
+        assert_eq!(d_sharded.new_triples, 1);
+        assert_eq!(d_sharded.cross_shard_merges, 1);
+        assert!(d_sharded.migrated_components >= 1);
+        assert!(d_sharded.migrated_triples >= 1);
+        assert!(!d_sharded.rebuilt_shards.is_empty(), "a losing shard was rebuilt");
+        assert_eq!(d_sharded.batch, 1);
+        assert_eq!(sharded.batches_ingested(), 1);
+
+        // Both endpoints now live on one shard…
+        assert_eq!(sharded.shard_of(a), sharded.shard_of(b));
+        // …and answers still match the unsharded session everywhere.
+        let mut reqs: Vec<QueryRequest> =
+            items.iter().copied().map(QueryRequest::new).collect();
+        reqs.push(QueryRequest::new(b));
+        for router in [EngineRouter::Auto, EngineRouter::Rq, EngineRouter::CsProv] {
+            let x = single.query_many_on(router, &reqs);
+            let y = sharded.query_many_on(router, &reqs);
+            for ((req, rx), ry) in reqs.iter().zip(&x).zip(&y) {
+                assert_eq!(rx.lineage, ry.lineage, "router={router} item={}", req.item);
+                assert_eq!(rx.stats.engine, ry.stats.engine, "item={}", req.item);
+            }
+        }
+        // No rows lost or duplicated across the migration.
+        let total: usize =
+            sharded.shard_sessions().iter().map(|s| s.trace().len()).sum();
+        assert_eq!(total, trace.len() + 1);
+    }
+
+    #[test]
+    fn empty_batch_is_a_front_level_noop() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 4000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let sharded =
+            ShardedSession::new(&cfg(100), Arc::new(trace), Arc::new(pre), 2).unwrap();
+        let before: Vec<u64> =
+            sharded.shard_sessions().iter().map(|s| s.epoch()).collect();
+        let d = sharded.ingest(&TripleBatch::default()).unwrap();
+        assert_eq!(d.batch, 1);
+        assert_eq!(d.new_triples, 0);
+        assert!(d.per_shard.iter().all(|s| s.is_none()));
+        let after: Vec<u64> = sharded.shard_sessions().iter().map(|s| s.epoch()).collect();
+        assert_eq!(before, after, "no shard epoch moves on an empty batch");
+    }
+
+    #[test]
+    fn merged_state_roundtrips_through_a_new_session() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let cfg = cfg(200);
+        let sharded =
+            ShardedSession::new(&cfg, Arc::new(trace.clone()), Arc::new(pre), 3).unwrap();
+        let (mt, mp) = sharded.merged_state().unwrap();
+        assert_eq!(mt.len(), trace.len());
+        // The merged state opens as a fresh session and answers like the
+        // sharded one.
+        let reopened = ProvSession::new(&cfg, Arc::new(mt), Arc::new(mp)).unwrap();
+        for &q in &sample_items(&trace, 8) {
+            let req = QueryRequest::new(q);
+            assert_eq!(
+                reopened.execute_on(EngineRouter::Auto, &req).lineage,
+                sharded.execute_on(EngineRouter::Auto, &req).lineage,
+            );
+        }
+    }
+}

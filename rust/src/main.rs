@@ -4,10 +4,13 @@
 //! provspark generate    --scale-divisor 10 --replication 1 --out data/trace.bin
 //! provspark stats       --trace data/trace.bin
 //! provspark preprocess  --trace data/trace.bin --out data/pre.bin [--wcc-impl driver|minispark|minispark-naive|xla]
+//!                       [--shards N]  (also writes per-shard pre/trace files)
 //! provspark ingest      --trace data/trace.bin --pre data/pre.bin --batch delta.bin
 //!                       [--out-trace X --out-pre Y]  (defaults: update in place)
+//!                       [--shards N]  (sharded scatter ingest with component migration)
 //! provspark query       --trace data/trace.bin --pre data/pre.bin --engine auto --item 3:42
 //!                       [--item 3:43 ...] [--max-depth N] [--max-triples N] [--tau-override N]
+//!                       [--shards N]  (scatter-gather across component-space shards)
 //! provspark classes     --trace data/trace.bin --pre data/pre.bin --class lc-ll
 //! provspark table       --which 9|10|11|12 [--divisor 10] [--replications 1,9]
 //! provspark drilldown   --trace data/trace.bin --pre data/pre.bin --item 3:42
@@ -19,7 +22,7 @@ use provspark::cli::Args;
 use provspark::config::{Backend, EngineConfig};
 use provspark::harness::{
     component_census, drilldown_report, query_table, select_queries, table9, EngineRouter,
-    ExperimentConfig, ProvSession, QueryClass,
+    ExperimentConfig, ProvSession, QueryClass, ShardedSession,
 };
 use provspark::minispark::MiniSpark;
 use provspark::provenance::incremental::{IncrementalIndex, TripleBatch};
@@ -66,7 +69,11 @@ fn print_help() {
                       --closure-backend native|xla --config FILE\n\
          query opts:  --engine rq|ccprov|csprov|auto  --item ID (repeatable — batches fan\n\
                       out across the worker pool)  --max-depth N --max-triples N\n\
-                      --tau-override N (per-query driver-collect threshold)"
+                      --tau-override N (per-query driver-collect threshold)\n\
+         sharding:    --shards N on preprocess/query/ingest — component-space shards\n\
+                      behind a scatter-gather front (preprocess also writes per-shard\n\
+                      files next to --out; ingest migrates components merged across\n\
+                      shards and persists the gathered state)"
     );
 }
 
@@ -180,6 +187,30 @@ fn run(args: &Args) -> Result<()> {
             table9(&pre).print();
             component_census(&pre).print();
             println!("→ {out}");
+            let shards: usize = args.get_parsed_or("shards", 1)?;
+            if shards > 1 {
+                // Split the index component-space and persist one
+                // (trace, pre) pair per shard, headers recording the
+                // position in the plan.
+                let plan = provspark::provenance::shard::ShardPlan::new(shards);
+                let asg = plan.assignment(&pre.cc_of);
+                let shard_traces = trace.split_by_plan(&pre.cc_of, &asg)?;
+                let shard_pres = pre.split_by_plan(&asg)?;
+                for (i, (t, p)) in shard_traces.iter().zip(&shard_pres).enumerate() {
+                    let pre_path = format!("{out}.shard{i}");
+                    let trace_path = format!("{out}.shard{i}.trace");
+                    store::save_preprocessed(Path::new(&pre_path), p)?;
+                    store::save_trace(Path::new(&trace_path), t)?;
+                    println!(
+                        "shard {i}: {} triples, {} components ({} large), {} sets \
+                         → {pre_path} (+ .trace)",
+                        human_count(t.len() as u64),
+                        human_count(p.component_count as u64),
+                        p.large_components.len(),
+                        human_count(p.set_count as u64),
+                    );
+                }
+            }
             Ok(())
         }
         "ingest" => {
@@ -192,13 +223,50 @@ fn run(args: &Args) -> Result<()> {
             let pre = store::load_preprocessed(Path::new(&pre_path))?;
             let batch: TripleBatch =
                 store::load_trace(Path::new(batch_path))?.into();
-            let (g, splits) = text_curation_workflow();
-            let mut idx = IncrementalIndex::new(trace, pre, g, splits)?;
             let batch_len = batch.len();
-            let (delta, dur) = provspark::util::timer::time_it(|| idx.apply(&batch));
-            let delta = delta?;
             let out_trace = args.get_or("out-trace", &trace_path);
             let out_pre = args.get_or("out-pre", &pre_path);
+            let shards: usize = args.get_parsed_or("shards", 1)?;
+            if shards > 1 {
+                // Sharded ingest: split component-space, route the batch
+                // through the scatter front (migrating components merged
+                // across shards), then gather and persist the combined
+                // state.
+                let ecfg = engine_config(args)?;
+                let session = ShardedSession::new(
+                    &ecfg,
+                    Arc::new(trace),
+                    Arc::new(pre),
+                    shards,
+                )?;
+                let (stats, dur) =
+                    provspark::util::timer::time_it(|| session.ingest(&batch));
+                let stats = stats?;
+                let (merged_trace, merged_pre) = session.merged_state()?;
+                store::save_trace_atomic(Path::new(&out_trace), &merged_trace)?;
+                store::save_preprocessed_atomic(Path::new(&out_pre), &merged_pre)?;
+                println!(
+                    "ingested {} triples across {shards} shards in {} (index now {} \
+                     triples, {} components, {} sets)",
+                    human_count(batch_len as u64),
+                    human_duration(dur),
+                    human_count(merged_trace.len() as u64),
+                    human_count(merged_pre.component_count as u64),
+                    human_count(merged_pre.set_count as u64),
+                );
+                println!("  {}", stats.summary());
+                for (i, d) in stats.per_shard.iter().enumerate() {
+                    if let Some(d) = d {
+                        println!("  shard {i}: {}", d.summary());
+                    }
+                }
+                println!("→ {out_trace}, {out_pre}");
+                return Ok(());
+            }
+            let (g, splits) = text_curation_workflow();
+            let mut idx = IncrementalIndex::new(trace, pre, g, splits)?;
+            let (delta, dur) = provspark::util::timer::time_it(|| idx.apply(&batch));
+            let delta = delta?;
             // Atomic temp-file + rename saves: the defaults overwrite the
             // inputs in place, and an interrupted write must not destroy
             // the only copy of the index.
@@ -235,15 +303,26 @@ fn run(args: &Args) -> Result<()> {
                 req.tau_override = args.get("tau-override").map(str::parse).transpose()?;
                 reqs.push(req);
             }
-            let session = ProvSession::new(&ecfg, Arc::new(trace), Arc::new(pre))?;
-            let (responses, dur) = provspark::util::timer::time_it(|| {
-                if reqs.len() == 1 {
-                    vec![session.execute_on(router, &reqs[0])]
-                } else {
-                    // Batches fan out across the worker pool.
-                    session.query_many_on(router, &reqs)
-                }
-            });
+            let shards: usize = args.get_parsed_or("shards", 1)?;
+            let (responses, shard_report, dur) = if shards > 1 {
+                let session =
+                    ShardedSession::new(&ecfg, Arc::new(trace), Arc::new(pre), shards)?;
+                let ((responses, report), dur) = provspark::util::timer::time_it(|| {
+                    session.query_many_report_on(router, &reqs)
+                });
+                (responses, Some(report), dur)
+            } else {
+                let session = ProvSession::new(&ecfg, Arc::new(trace), Arc::new(pre))?;
+                let (responses, dur) = provspark::util::timer::time_it(|| {
+                    if reqs.len() == 1 {
+                        vec![session.execute_on(router, &reqs[0])]
+                    } else {
+                        // Batches fan out across the worker pool.
+                        session.query_many_on(router, &reqs)
+                    }
+                });
+                (responses, None, dur)
+            };
             for (req, resp) in reqs.iter().zip(&responses) {
                 let lineage = &resp.lineage;
                 println!(
@@ -268,6 +347,9 @@ fn run(args: &Args) -> Result<()> {
                     reqs.len(),
                     human_duration(dur),
                 );
+            }
+            if let Some(report) = shard_report {
+                print!("{}", report.summary());
             }
             Ok(())
         }

@@ -202,6 +202,21 @@ impl IncrementalIndex {
                  with θ ≥ 1 to enable ingestion"
             );
         }
+        // Dirty components are re-partitioned against `graph`/`splits`; an
+        // index preprocessed under a different workflow would silently
+        // mis-partition. A recorded fingerprint (v3 store header) makes the
+        // mismatch detectable; 0 = unrecorded (legacy v1/v2 files) and is
+        // accepted on trust, as before.
+        let session_fp = crate::workflow::workflow_fingerprint(&graph, &splits);
+        ensure!(
+            pre.workflow_fingerprint == 0 || pre.workflow_fingerprint == session_fp,
+            "preprocessed index was built under a different workflow (recorded \
+             fingerprint {:#018x}, this graph/splits {:#018x}): ingesting would silently \
+             mis-partition dirty components — construct the index with the workflow it \
+             was preprocessed under, or re-run `preprocess`",
+            pre.workflow_fingerprint,
+            session_fp,
+        );
         ensure!(trace.len() <= u32::MAX as usize, "trace too large for the triple index");
         let labels = LabeledUnion::from_labels(&pre.cc_of);
         let mut tri_of: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
@@ -649,6 +664,20 @@ mod tests {
         pre.cc_triples.pop();
         let (g3, s3) = text_curation_workflow();
         assert!(IncrementalIndex::new(trace.clone(), pre, g3, s3).is_err());
+        // A recorded workflow fingerprint that does not match the session's
+        // graph/splits → refused loudly (the mismatch would silently
+        // mis-partition dirty components).
+        let mut pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        assert_ne!(pre.workflow_fingerprint, 0);
+        pre.workflow_fingerprint ^= 1;
+        let (g5, s5) = text_curation_workflow();
+        let err = IncrementalIndex::new(trace.clone(), pre, g5, s5).unwrap_err();
+        assert!(format!("{err:#}").contains("different workflow"), "{err:#}");
+        // …while an unrecorded (legacy) fingerprint is accepted on trust.
+        let mut pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        pre.workflow_fingerprint = 0;
+        let (g6, s6) = text_curation_workflow();
+        assert!(IncrementalIndex::new(trace.clone(), pre, g6, s6).is_ok());
         // An index that does not label the trace's nodes (e.g. built from a
         // different trace) → a named error, not a map-index panic — on
         // either endpoint.

@@ -8,7 +8,9 @@
 //! ([`setdeps`]), producing a [`Preprocessed`] index ([`store`] persists
 //! it). Online path: [`incremental::IncrementalIndex`] keeps that index
 //! live under [`incremental::TripleBatch`] deltas, and [`query`] answers
-//! lineage requests over it.
+//! lineage requests over it. Scale-out path: [`shard`] carves the
+//! component space into independent shards (components never reference
+//! each other), served by `harness::ShardedSession`.
 
 pub mod incremental;
 pub mod model;
@@ -16,9 +18,11 @@ pub mod partition;
 pub mod pipeline;
 pub mod query;
 pub mod setdeps;
+pub mod shard;
 pub mod store;
 pub mod wcc;
 
 pub use incremental::{AppliedDelta, DeltaStats, IncrementalIndex, TripleBatch};
 pub use model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 pub use pipeline::{preprocess, Preprocessed};
+pub use shard::{merge_shards, ShardAssignment, ShardPlan};

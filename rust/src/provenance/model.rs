@@ -7,8 +7,10 @@
 //! both endpoints ([`CsTriple`], CSProv — the paper drops `ccid` and adds
 //! `src_csid`/`dst_csid`, Table 7).
 
+use crate::provenance::shard::ShardAssignment;
 use crate::util::ids::{AttrValueId, ComponentId, OpId, SetId};
-use rustc_hash::FxHashSet;
+use anyhow::{bail, Result};
+use rustc_hash::{FxHashMap, FxHashSet};
 
 /// `⟨src, dst, op⟩` — `dst` derived from `src` via transformation `op`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -90,6 +92,36 @@ impl Trace {
             nodes.insert(t.dst);
         }
         nodes.into_iter().collect()
+    }
+
+    /// Partition the trace into per-shard traces under a component-space
+    /// [`ShardAssignment`]: each triple follows its component (`cc_of` of
+    /// its `dst` — both endpoints share a component by construction).
+    ///
+    /// Iterates in trace order, so the shard traces stay row-parallel with
+    /// the shard indexes produced by
+    /// [`Preprocessed::split_by_plan`](crate::provenance::pipeline::Preprocessed::split_by_plan)
+    /// from the same assignment. Errors when the labelling or the
+    /// assignment does not cover the trace.
+    pub fn split_by_plan(
+        &self,
+        cc_of: &FxHashMap<u64, u64>,
+        asg: &ShardAssignment,
+    ) -> Result<Vec<Trace>> {
+        let mut out: Vec<Trace> = (0..asg.shards()).map(|_| Trace::default()).collect();
+        for (i, t) in self.triples.iter().enumerate() {
+            let Some(&label) = cc_of.get(&t.dst.raw()) else {
+                bail!(
+                    "labelling does not cover the trace: triple {i} has unlabelled dst {}",
+                    t.dst
+                );
+            };
+            let Some(s) = asg.shard_of_label(label) else {
+                bail!("shard assignment does not cover component {label} (triple {i})");
+            };
+            out[s].triples.push(*t);
+        }
+        Ok(out)
     }
 }
 

@@ -63,6 +63,100 @@ pub struct Preprocessed {
     /// Incremental epoch: 0 for a fresh [`preprocess`] run, bumped once per
     /// applied [`TripleBatch`](crate::provenance::incremental::TripleBatch).
     pub epoch: u64,
+    /// Fingerprint of the workflow graph + splits this index was
+    /// preprocessed under ([`crate::workflow::workflow_fingerprint`]);
+    /// 0 = unrecorded (legacy v1/v2 store files). Ingestion re-partitions
+    /// dirty components against a workflow, so `IncrementalIndex::new`
+    /// refuses a recorded fingerprint that does not match its
+    /// graph/splits — a mismatch would silently mis-partition.
+    pub workflow_fingerprint: u64,
+    /// Which shard of a component-space [`ShardPlan`] this index is
+    /// (`shard_index < shard_count`); `shard_count == 0` means unsharded.
+    /// Set by [`Preprocessed::split_by_plan`], persisted by the store.
+    ///
+    /// [`ShardPlan`]: crate::provenance::shard::ShardPlan
+    pub shard_index: u64,
+    /// Total shards in the plan this index was split under (0 = unsharded).
+    pub shard_count: u64,
+}
+
+impl Preprocessed {
+    /// Partition the index into per-shard indexes under a component-space
+    /// [`ShardAssignment`]: every per-node map entry, tagged triple row,
+    /// set dependency and large-component record follows its component's
+    /// shard. Components are independent by construction (no triple or set
+    /// dependency crosses them), so each shard is a complete, self-
+    /// contained index over its components — per-shard `component_count` /
+    /// `set_count` are recomputed, θ / big-set bound / epoch / workflow
+    /// fingerprint carry over, and `shard_index`/`shard_count` record the
+    /// position in the plan.
+    ///
+    /// Triple rows are emitted in index order, so each shard stays
+    /// row-parallel with the [`Trace::split_by_plan`] output for the same
+    /// assignment.
+    ///
+    /// [`ShardAssignment`]: crate::provenance::shard::ShardAssignment
+    /// [`Trace::split_by_plan`]: crate::provenance::model::Trace::split_by_plan
+    pub fn split_by_plan(
+        &self,
+        asg: &crate::provenance::shard::ShardAssignment,
+    ) -> anyhow::Result<Vec<Preprocessed>> {
+        let n = asg.shards();
+        let mut out: Vec<Preprocessed> = (0..n)
+            .map(|i| Preprocessed {
+                theta: self.theta,
+                big_threshold: self.big_threshold,
+                epoch: self.epoch,
+                workflow_fingerprint: self.workflow_fingerprint,
+                shard_index: i as u64,
+                shard_count: n as u64,
+                ..Default::default()
+            })
+            .collect();
+        let shard_of = |label: u64| -> anyhow::Result<usize> {
+            asg.shard_of_label(label).ok_or_else(|| {
+                anyhow::anyhow!("shard assignment does not cover component {label}")
+            })
+        };
+        for (&node, &label) in &self.cc_of {
+            out[shard_of(label)?].cc_of.insert(node, label);
+        }
+        for (&node, &sid) in &self.cs_of {
+            let Some(&label) = self.cc_of.get(&node) else {
+                anyhow::bail!("node {node} has a set id but no component label");
+            };
+            out[shard_of(label)?].cs_of.insert(node, sid);
+        }
+        anyhow::ensure!(
+            self.cc_triples.len() == self.cs_triples.len(),
+            "cc/cs triple arrays misaligned ({} vs {})",
+            self.cc_triples.len(),
+            self.cs_triples.len(),
+        );
+        for (cc_row, cs_row) in self.cc_triples.iter().zip(&self.cs_triples) {
+            let s = shard_of(cc_row.ccid.0)?;
+            out[s].cc_triples.push(*cc_row);
+            out[s].cs_triples.push(*cs_row);
+        }
+        for d in &self.set_deps {
+            // A set id is a member node of its component; both endpoints of
+            // a dependency share one component (a triple witnesses it).
+            let Some(&label) = self.cc_of.get(&d.src_csid.0) else {
+                anyhow::bail!("set dependency references unknown set {}", d.src_csid.0);
+            };
+            out[shard_of(label)?].set_deps.push(*d);
+        }
+        for &(cc, nodes, edges) in &self.large_components {
+            out[shard_of(cc)?].large_components.push((cc, nodes, edges));
+        }
+        for p in &mut out {
+            let comps: rustc_hash::FxHashSet<u64> = p.cc_of.values().copied().collect();
+            p.component_count = comps.len();
+            let sets: rustc_hash::FxHashSet<u64> = p.cs_of.values().copied().collect();
+            p.set_count = sets.len();
+        }
+        Ok(out)
+    }
 }
 
 /// Run the full preprocessing pipeline.
@@ -81,7 +175,12 @@ pub fn preprocess(
     wcc: WccImpl<'_>,
 ) -> Preprocessed {
     let mut timer = Timer::new();
-    let mut out = Preprocessed { theta, big_threshold, ..Default::default() };
+    let mut out = Preprocessed {
+        theta,
+        big_threshold,
+        workflow_fingerprint: crate::workflow::workflow_fingerprint(graph, splits),
+        ..Default::default()
+    };
 
     // ---- Phase 1: weakly connected components ---------------------------
     let labels = match wcc {
@@ -206,6 +305,13 @@ mod tests {
         assert_eq!(pre.theta, 500);
         assert_eq!(pre.big_threshold, 100);
         assert_eq!(pre.epoch, 0);
+        assert_eq!(
+            pre.workflow_fingerprint,
+            crate::workflow::workflow_fingerprint(&g, &splits),
+            "fingerprint must be recorded and deterministic"
+        );
+        assert_ne!(pre.workflow_fingerprint, 0);
+        assert_eq!(pre.shard_count, 0, "a fresh preprocess is unsharded");
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Component-space sharding: the plan that carves one preprocessed
+//! provenance index into N independent shards.
+//!
+//! The paper's observation is that a queried attribute-value's lineage is
+//! confined to its weakly connected component — components never reference
+//! each other. That makes the *component space* embarrassingly shardable:
+//! assign every component (and thus every item, every tagged triple, every
+//! set and set-dependency) to exactly one shard and no query ever needs a
+//! cross-shard edge. A [`ShardPlan`] fixes that assignment by hashing each
+//! component's **canonical label** (its minimum member id — stable across
+//! the min-id labels a fresh [`preprocess`] produces and the
+//! representative labels an
+//! [`IncrementalIndex`](crate::provenance::incremental::IncrementalIndex)
+//! maintains), so the same data always shards the same way regardless of
+//! how its labelling was produced.
+//!
+//! [`Trace::split_by_plan`] and [`Preprocessed::split_by_plan`] partition
+//! the artifacts under a materialized [`ShardAssignment`]; both iterate the
+//! parallel triple arrays in the same order, so each shard's trace and
+//! index stay row-parallel (the invariant `EngineSet::build` and
+//! `IncrementalIndex::new` check). [`merge_shards`] is the inverse —
+//! gather shard states back into one combined index (what the CLI persists
+//! after a sharded ingest).
+//!
+//! The scatter-gather front that *serves* a sharded index lives in
+//! [`crate::harness::ShardedSession`]; this module is only the data-layout
+//! layer.
+//!
+//! [`preprocess`]: crate::provenance::pipeline::preprocess
+//! [`Trace::split_by_plan`]: crate::provenance::model::Trace::split_by_plan
+//! [`Preprocessed::split_by_plan`]: crate::provenance::pipeline::Preprocessed::split_by_plan
+
+use crate::provenance::incremental::canonical_of;
+use crate::provenance::model::Trace;
+use crate::provenance::pipeline::Preprocessed;
+use crate::util::rng::mix64;
+use anyhow::{ensure, Result};
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+
+/// A component-space sharding policy: `shards` buckets, components hashed
+/// by canonical label.
+///
+/// ```
+/// use provspark::provenance::shard::ShardPlan;
+///
+/// let plan = ShardPlan::new(4);
+/// // Deterministic: the same component always maps to the same shard.
+/// assert_eq!(plan.shard_of_label(42), plan.shard_of_label(42));
+/// assert!(plan.shard_of_label(42) < 4);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    shards: usize,
+}
+
+impl ShardPlan {
+    /// A plan over `shards ≥ 1` buckets.
+    pub fn new(shards: usize) -> Self {
+        assert!(shards >= 1, "a shard plan needs at least one shard");
+        Self { shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard owning the component whose **canonical** (minimum member id)
+    /// label is `canonical_label`.
+    pub fn shard_of_label(&self, canonical_label: u64) -> usize {
+        (mix64(canonical_label) % self.shards as u64) as usize
+    }
+
+    /// Deterministic shard for an item with no known component: unknown
+    /// items answer identically (an empty lineage) on every shard, so any
+    /// deterministic choice preserves equivalence; hashing the item spreads
+    /// the misses. A brand-new component formed entirely by an ingested
+    /// batch is also placed with this (keyed by its minimum node id — the
+    /// canonical label it will have).
+    pub fn shard_of_item(&self, item: u64) -> usize {
+        self.shard_of_label(item)
+    }
+
+    /// Materialize the `component label → shard` assignment for a concrete
+    /// labelling (any representative scheme — labels are canonicalized to
+    /// minimum member ids before hashing).
+    pub fn assignment(&self, cc_of: &FxHashMap<u64, u64>) -> ShardAssignment {
+        let canon = canonical_of(cc_of);
+        let of_label: FxHashMap<u64, usize> =
+            canon.iter().map(|(&l, &c)| (l, self.shard_of_label(c))).collect();
+        ShardAssignment { shards: self.shards, of_label }
+    }
+}
+
+/// A concrete `component label → shard` map, as consumed by
+/// [`Trace::split_by_plan`] / [`Preprocessed::split_by_plan`].
+///
+/// Usually built by [`ShardPlan::assignment`]; the sharded ingest path also
+/// builds ad-hoc assignments (keep vs migrate buckets) when a cross-shard
+/// component merge moves data between shards.
+#[derive(Debug, Clone)]
+pub struct ShardAssignment {
+    shards: usize,
+    of_label: FxHashMap<u64, usize>,
+}
+
+impl ShardAssignment {
+    /// An explicit assignment. Every shard index in `of_label` must be
+    /// `< shards`.
+    pub fn new(shards: usize, of_label: FxHashMap<u64, usize>) -> Self {
+        assert!(shards >= 1);
+        debug_assert!(of_label.values().all(|&s| s < shards));
+        Self { shards, of_label }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard of the component labelled `label` (as labelled in the data
+    /// being split — not canonicalized), if covered.
+    pub fn shard_of_label(&self, label: u64) -> Option<usize> {
+        self.of_label.get(&label).copied()
+    }
+}
+
+/// Gather shard states back into one combined `(Trace, Preprocessed)` —
+/// the inverse of `split_by_plan`. Shards must agree on θ, the big-set
+/// bound and the workflow fingerprint; the merged epoch is the maximum
+/// shard epoch (shards ingest independently), and the merged header is
+/// unsharded (`shard_index = shard_count = 0`).
+pub fn merge_shards(parts: &[(Arc<Trace>, Arc<Preprocessed>)]) -> Result<(Trace, Preprocessed)> {
+    ensure!(!parts.is_empty(), "cannot merge zero shards");
+    let first = &parts[0].1;
+    let mut out = Preprocessed {
+        theta: first.theta,
+        big_threshold: first.big_threshold,
+        workflow_fingerprint: first.workflow_fingerprint,
+        ..Default::default()
+    };
+    let mut trace = Trace::default();
+    for (i, (t, p)) in parts.iter().enumerate() {
+        ensure!(
+            p.theta == out.theta
+                && p.big_threshold == out.big_threshold
+                && p.workflow_fingerprint == out.workflow_fingerprint,
+            "shard {i} disagrees on θ / big-set bound / workflow fingerprint"
+        );
+        ensure!(
+            p.cc_triples.len() == t.len() && p.cs_triples.len() == t.len(),
+            "shard {i} index covers {} cc / {} cs rows but its trace has {}",
+            p.cc_triples.len(),
+            p.cs_triples.len(),
+            t.len(),
+        );
+        trace.triples.extend_from_slice(&t.triples);
+        out.cc_triples.extend_from_slice(&p.cc_triples);
+        out.cs_triples.extend_from_slice(&p.cs_triples);
+        out.set_deps.extend_from_slice(&p.set_deps);
+        out.large_components.extend_from_slice(&p.large_components);
+        for (&n, &l) in &p.cc_of {
+            ensure!(
+                out.cc_of.insert(n, l).is_none(),
+                "node {n} appears on more than one shard"
+            );
+        }
+        for (&n, &s) in &p.cs_of {
+            out.cs_of.insert(n, s);
+        }
+        out.component_count += p.component_count;
+        out.set_count += p.set_count;
+        out.epoch = out.epoch.max(p.epoch);
+    }
+    out.set_deps.sort_unstable();
+    out.large_components.sort_unstable_by(|a, b| b.1.cmp(&a.1));
+    Ok((trace, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provenance::incremental::check_equivalence;
+    use crate::provenance::pipeline::{preprocess, WccImpl};
+    use crate::workflow::generator::{generate, GeneratorConfig};
+    use rustc_hash::FxHashSet;
+
+    #[test]
+    fn plan_is_deterministic_and_in_range() {
+        let plan = ShardPlan::new(5);
+        for l in [0u64, 1, 7, 1 << 40, u64::MAX] {
+            let s = plan.shard_of_label(l);
+            assert!(s < 5);
+            assert_eq!(s, plan.shard_of_label(l));
+            assert_eq!(s, ShardPlan::new(5).shard_of_label(l));
+        }
+        // One shard: everything maps to it.
+        let one = ShardPlan::new(1);
+        assert_eq!(one.shard_of_label(123), 0);
+    }
+
+    #[test]
+    fn assignment_ignores_representative_choice() {
+        // Two labellings of the same partition — {1,5,9} under label 9 vs
+        // label 1 — must shard identically (hash of the canonical label).
+        let plan = ShardPlan::new(8);
+        let mut a: FxHashMap<u64, u64> = FxHashMap::default();
+        let mut b: FxHashMap<u64, u64> = FxHashMap::default();
+        for n in [1u64, 5, 9] {
+            a.insert(n, 9);
+            b.insert(n, 1);
+        }
+        let (aa, ab) = (plan.assignment(&a), plan.assignment(&b));
+        assert_eq!(aa.shard_of_label(9), ab.shard_of_label(1));
+    }
+
+    #[test]
+    fn split_then_merge_roundtrips() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let plan = ShardPlan::new(3);
+        let asg = plan.assignment(&pre.cc_of);
+        let traces = trace.split_by_plan(&pre.cc_of, &asg).unwrap();
+        let pres = pre.split_by_plan(&asg).unwrap();
+        assert_eq!(traces.len(), 3);
+        assert_eq!(pres.len(), 3);
+
+        // Per-shard invariants: parallel rows, whole components, headers.
+        let mut seen_nodes: FxHashSet<u64> = FxHashSet::default();
+        for (i, (t, p)) in traces.iter().zip(&pres).enumerate() {
+            assert_eq!(p.cc_triples.len(), t.len(), "shard {i} rows");
+            assert_eq!(p.cs_triples.len(), t.len(), "shard {i} rows");
+            assert_eq!(p.shard_index, i as u64);
+            assert_eq!(p.shard_count, 3);
+            assert_eq!(p.theta, pre.theta);
+            assert_eq!(p.workflow_fingerprint, pre.workflow_fingerprint);
+            for (j, tr) in t.triples.iter().enumerate() {
+                assert_eq!(p.cc_triples[j].triple, *tr, "shard {i} row {j} misaligned");
+                assert_eq!(p.cs_triples[j].triple, *tr, "shard {i} row {j} misaligned");
+                assert!(p.cc_of.contains_key(&tr.src.raw()), "src off-shard");
+                assert!(p.cc_of.contains_key(&tr.dst.raw()), "dst off-shard");
+            }
+            for &n in p.cc_of.keys() {
+                assert!(seen_nodes.insert(n), "node {n} on two shards");
+            }
+        }
+        assert!(traces.iter().filter(|t| !t.is_empty()).count() >= 2, "degenerate split");
+        assert_eq!(seen_nodes.len(), pre.cc_of.len());
+
+        // Merging back reproduces the original index structurally.
+        let parts: Vec<(Arc<Trace>, Arc<Preprocessed>)> = traces
+            .into_iter()
+            .zip(pres)
+            .map(|(t, p)| (Arc::new(t), Arc::new(p)))
+            .collect();
+        let (mt, mp) = merge_shards(&parts).unwrap();
+        assert_eq!(mt.len(), trace.len());
+        check_equivalence(&mp, &pre).unwrap();
+        let mut a = mt.triples.clone();
+        let mut b = trace.triples.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "triple multiset changed");
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_headers() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 4000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let asg = ShardPlan::new(2).assignment(&pre.cc_of);
+        let traces = trace.split_by_plan(&pre.cc_of, &asg).unwrap();
+        let mut pres = pre.split_by_plan(&asg).unwrap();
+        pres[1].theta += 1;
+        let parts: Vec<(Arc<Trace>, Arc<Preprocessed>)> = traces
+            .into_iter()
+            .zip(pres)
+            .map(|(t, p)| (Arc::new(t), Arc::new(p)))
+            .collect();
+        assert!(merge_shards(&parts).is_err());
+    }
+}

@@ -4,13 +4,17 @@
 //! once; we persist the same artifacts locally in a simple length-prefixed
 //! little-endian binary format (with a CSV export for inspection).
 //!
-//! Preprocessed files are written in the **v2** layout (`PSPKPRE2`), whose
+//! Preprocessed files are written in the **v3** layout (`PSPKPRE3`), whose
 //! header records the incremental-epoch fields — θ, the big-set bound, and
-//! the epoch counter — so a persisted index can keep absorbing
-//! [`TripleBatch`](crate::provenance::incremental::TripleBatch) deltas
-//! after a reload (the CLI `ingest` subcommand round-trips through here).
-//! v1 files (`PSPKPRE1`, pre-epoch) still load, with those fields zeroed —
-//! such an index answers queries but refuses ingestion until re-preprocessed.
+//! the epoch counter — plus the workflow fingerprint
+//! ([`crate::workflow::workflow_fingerprint`], so a reloaded index can
+//! refuse ingestion under a mismatched workflow) and the component-space
+//! shard assignment (`shard_index`/`shard_count`, 0/0 = unsharded — see
+//! [`crate::provenance::shard`]). v2 files (`PSPKPRE2`, pre-fingerprint)
+//! and v1 files (`PSPKPRE1`, pre-epoch) still load, with the missing
+//! header fields zeroed — a v1 index answers queries but refuses ingestion
+//! until re-preprocessed, and a v2 index ingests without workflow
+//! validation (fingerprint unrecorded).
 
 use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 use crate::provenance::pipeline::Preprocessed;
@@ -22,7 +26,8 @@ use std::path::Path;
 
 const MAGIC_TRACE: &[u8; 8] = b"PSPKTRC1";
 const MAGIC_PRE_V1: &[u8; 8] = b"PSPKPRE1";
-const MAGIC_PRE: &[u8; 8] = b"PSPKPRE2";
+const MAGIC_PRE_V2: &[u8; 8] = b"PSPKPRE2";
+const MAGIC_PRE: &[u8; 8] = b"PSPKPRE3";
 
 fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -95,57 +100,69 @@ fn load_trace_inner(path: &Path) -> Result<Trace> {
 }
 
 /// Save preprocessed provenance (everything the query engines need),
-/// including the incremental-epoch header (θ / big-set bound / epoch).
+/// including the incremental-epoch header (θ / big-set bound / epoch), the
+/// workflow fingerprint and the shard assignment.
 pub fn save_preprocessed(path: &Path, pre: &Preprocessed) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC_PRE)?;
-    // v2 header: the fields incremental ingestion needs to keep going.
+    // v3 header: the fields incremental ingestion and sharding need to
+    // keep going after a reload.
     w_u64(&mut w, pre.theta as u64)?;
     w_u64(&mut w, pre.big_threshold as u64)?;
     w_u64(&mut w, pre.epoch)?;
-
-    w_u64(&mut w, pre.cc_triples.len() as u64)?;
-    for t in &pre.cc_triples {
-        w_triple(&mut w, &t.triple)?;
-        w_u64(&mut w, t.ccid.0)?;
-    }
-    w_u64(&mut w, pre.cs_triples.len() as u64)?;
-    for t in &pre.cs_triples {
-        w_triple(&mut w, &t.triple)?;
-        w_u64(&mut w, t.src_csid.0)?;
-        w_u64(&mut w, t.dst_csid.0)?;
-    }
-    w_u64(&mut w, pre.set_deps.len() as u64)?;
-    for d in &pre.set_deps {
-        w_u64(&mut w, d.src_csid.0)?;
-        w_u64(&mut w, d.dst_csid.0)?;
-    }
-    w_u64(&mut w, pre.cc_of.len() as u64)?;
-    for (&n, &c) in &pre.cc_of {
-        w_u64(&mut w, n)?;
-        w_u64(&mut w, c)?;
-    }
-    w_u64(&mut w, pre.cs_of.len() as u64)?;
-    for (&n, &c) in &pre.cs_of {
-        w_u64(&mut w, n)?;
-        w_u64(&mut w, c)?;
-    }
-    w_u64(&mut w, pre.large_components.len() as u64)?;
-    for &(cc, nodes, edges) in &pre.large_components {
-        w_u64(&mut w, cc)?;
-        w_u64(&mut w, nodes as u64)?;
-        w_u64(&mut w, edges as u64)?;
-    }
-    w_u64(&mut w, pre.component_count as u64)?;
-    w_u64(&mut w, pre.set_count as u64)?;
+    w_u64(&mut w, pre.workflow_fingerprint)?;
+    w_u64(&mut w, pre.shard_index)?;
+    w_u64(&mut w, pre.shard_count)?;
+    write_sections(&mut w, pre)?;
     w.flush()?;
+    Ok(())
+}
+
+/// The version-independent body shared by every preprocessed layout (the
+/// v1/v2/v3 formats differ only in the header fields after the magic).
+fn write_sections(w: &mut impl Write, pre: &Preprocessed) -> Result<()> {
+    w_u64(w, pre.cc_triples.len() as u64)?;
+    for t in &pre.cc_triples {
+        w_triple(w, &t.triple)?;
+        w_u64(w, t.ccid.0)?;
+    }
+    w_u64(w, pre.cs_triples.len() as u64)?;
+    for t in &pre.cs_triples {
+        w_triple(w, &t.triple)?;
+        w_u64(w, t.src_csid.0)?;
+        w_u64(w, t.dst_csid.0)?;
+    }
+    w_u64(w, pre.set_deps.len() as u64)?;
+    for d in &pre.set_deps {
+        w_u64(w, d.src_csid.0)?;
+        w_u64(w, d.dst_csid.0)?;
+    }
+    w_u64(w, pre.cc_of.len() as u64)?;
+    for (&n, &c) in &pre.cc_of {
+        w_u64(w, n)?;
+        w_u64(w, c)?;
+    }
+    w_u64(w, pre.cs_of.len() as u64)?;
+    for (&n, &c) in &pre.cs_of {
+        w_u64(w, n)?;
+        w_u64(w, c)?;
+    }
+    w_u64(w, pre.large_components.len() as u64)?;
+    for &(cc, nodes, edges) in &pre.large_components {
+        w_u64(w, cc)?;
+        w_u64(w, nodes as u64)?;
+        w_u64(w, edges as u64)?;
+    }
+    w_u64(w, pre.component_count as u64)?;
+    w_u64(w, pre.set_count as u64)?;
     Ok(())
 }
 
 /// Load preprocessed provenance. Pass-stats and timings are not persisted
 /// (they are preprocessing-run artifacts, reported at preprocessing time).
-/// Accepts v2 (`PSPKPRE2`) and legacy v1 (`PSPKPRE1`, epoch fields zeroed)
+/// Accepts v3 (`PSPKPRE3`), v2 (`PSPKPRE2`, workflow-fingerprint and shard
+/// fields zeroed) and legacy v1 (`PSPKPRE1`, epoch fields zeroed too)
 /// files; errors name the offending path.
 pub fn load_preprocessed(path: &Path) -> Result<Preprocessed> {
     load_preprocessed_inner(path)
@@ -157,14 +174,22 @@ fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("read magic")?;
-    if &magic != MAGIC_PRE && &magic != MAGIC_PRE_V1 {
+    if &magic != MAGIC_PRE && &magic != MAGIC_PRE_V2 && &magic != MAGIC_PRE_V1 {
         bail!("not a provspark preprocessed file (bad magic)");
     }
     let mut pre = Preprocessed::default();
-    if &magic == MAGIC_PRE {
+    if &magic != MAGIC_PRE_V1 {
+        // v2 header fields.
         pre.theta = r_u64(&mut r).context("read theta")? as usize;
         pre.big_threshold = r_u64(&mut r).context("read big_threshold")? as usize;
         pre.epoch = r_u64(&mut r).context("read epoch")?;
+    }
+    if &magic == MAGIC_PRE {
+        // v3 additions.
+        pre.workflow_fingerprint =
+            r_u64(&mut r).context("read workflow_fingerprint")?;
+        pre.shard_index = r_u64(&mut r).context("read shard_index")?;
+        pre.shard_count = r_u64(&mut r).context("read shard_count")?;
     }
 
     let n = r_u64(&mut r)? as usize;
@@ -230,13 +255,48 @@ pub fn save_preprocessed_atomic(path: &Path, pre: &Preprocessed) -> Result<()> {
     save_atomic(path, |tmp| save_preprocessed(tmp, pre))
 }
 
+/// `EXDEV` — "invalid cross-device link" — on Linux, macOS and the BSDs.
+/// `rename(2)` returns it when source and destination are on different
+/// filesystems, where an atomic move is impossible.
+const EXDEV: i32 = 18;
+
 fn save_atomic(path: &Path, write: impl FnOnce(&Path) -> Result<()>) -> Result<()> {
     let mut tmp = path.as_os_str().to_owned();
     tmp.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp);
     write(&tmp)?;
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("moving {tmp:?} into place at {path:?}"))?;
+    // fsync the temp file before the rename: without it a crash shortly
+    // after the rename can leave the *new* name pointing at unflushed (and
+    // therefore possibly empty/truncated) data — losing the only copy the
+    // rename was supposed to protect.
+    std::fs::File::open(&tmp)
+        .and_then(|f| f.sync_all())
+        .with_context(|| format!("fsyncing {tmp:?} before the atomic rename"))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let crosses_fs = e.raw_os_error() == Some(EXDEV);
+        let _ = std::fs::remove_file(&tmp);
+        if crosses_fs {
+            // The temp file sits next to the destination, so this needs an
+            // exotic layout (e.g. a mount point or cross-device symlink at
+            // the destination path) — but when it happens, the failure mode
+            // deserves a precise name rather than a generic rename error.
+            bail!(
+                "cannot atomically move {tmp:?} into place at {path:?}: rename(2) \
+                 reported EXDEV (the two paths resolve to different filesystems, so \
+                 an atomic replace is impossible there)"
+            );
+        }
+        return Err(anyhow::Error::new(e)
+            .context(format!("moving {tmp:?} into place at {path:?}")));
+    }
+    // Durability of the *rename* needs a directory fsync; best-effort (not
+    // every filesystem supports fsync on a directory handle) — the data
+    // itself was already synced above.
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
     Ok(())
 }
 
@@ -340,6 +400,66 @@ mod tests {
     }
 
     #[test]
+    fn v3_roundtrip_preserves_fingerprint_and_shard_fields() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let mut pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        assert_ne!(pre.workflow_fingerprint, 0, "preprocess records the workflow");
+        pre.shard_index = 2;
+        pre.shard_count = 4;
+        let p = tmp("pre_v3.bin");
+        save_preprocessed(&p, &pre).unwrap();
+        let loaded = load_preprocessed(&p).unwrap();
+        assert_eq!(loaded.workflow_fingerprint, pre.workflow_fingerprint);
+        assert_eq!(loaded.shard_index, 2);
+        assert_eq!(loaded.shard_count, 4);
+        assert_eq!(loaded.cc_triples, pre.cc_triples);
+        assert_eq!(loaded.cs_triples, pre.cs_triples);
+    }
+
+    /// The exact v2 (`PSPKPRE2`) layout as PR 3 wrote it — a regression
+    /// fixture for backwards compatibility, kept in sync with nothing (that
+    /// is the point: old files must keep loading verbatim).
+    fn save_preprocessed_v2(path: &std::path::Path, pre: &Preprocessed) {
+        let f = std::fs::File::create(path).unwrap();
+        let mut w = BufWriter::new(f);
+        w.write_all(b"PSPKPRE2").unwrap();
+        w_u64(&mut w, pre.theta as u64).unwrap();
+        w_u64(&mut w, pre.big_threshold as u64).unwrap();
+        w_u64(&mut w, pre.epoch).unwrap();
+        write_sections(&mut w, pre).unwrap();
+        w.flush().unwrap();
+    }
+
+    #[test]
+    fn v2_file_loads_with_zeroed_fingerprint_and_shard_fields() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let mut pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        pre.epoch = 3;
+        let p = tmp("pre_v2.bin");
+        save_preprocessed_v2(&p, &pre);
+        let loaded = load_preprocessed(&p).unwrap();
+        // v2 header fields survive…
+        assert_eq!(loaded.theta, 200);
+        assert_eq!(loaded.big_threshold, 100);
+        assert_eq!(loaded.epoch, 3);
+        // …the v3 additions load as "unrecorded"…
+        assert_eq!(loaded.workflow_fingerprint, 0, "v2 has no recorded workflow");
+        assert_eq!(loaded.shard_index, 0);
+        assert_eq!(loaded.shard_count, 0);
+        // …and the body is intact.
+        assert_eq!(loaded.cc_triples, pre.cc_triples);
+        assert_eq!(loaded.cs_triples, pre.cs_triples);
+        assert_eq!(loaded.cc_of, pre.cc_of);
+        assert_eq!(loaded.cs_of, pre.cs_of);
+        assert_eq!(loaded.set_deps, pre.set_deps);
+        assert_eq!(loaded.large_components, pre.large_components);
+        assert_eq!(loaded.component_count, pre.component_count);
+        assert_eq!(loaded.set_count, pre.set_count);
+    }
+
+    #[test]
     fn legacy_v1_file_loads_with_zeroed_epoch_fields() {
         // A minimal empty v1 file: old magic + the 8 zero section counts
         // (cc, cs, deps, cc_of, cs_of, large, component_count, set_count).
@@ -351,6 +471,8 @@ mod tests {
         let loaded = load_preprocessed(&p).unwrap();
         assert_eq!(loaded.theta, 0, "v1 has no recorded θ");
         assert_eq!(loaded.epoch, 0);
+        assert_eq!(loaded.workflow_fingerprint, 0);
+        assert_eq!(loaded.shard_count, 0);
         assert!(loaded.cc_triples.is_empty());
     }
 

@@ -100,6 +100,21 @@ impl UnionFind {
         self.parent.keys().copied()
     }
 
+    /// Group every inserted key by its set: `root → members`. One `find`
+    /// per key (path halving keeps later finds O(1)). This is how the
+    /// sharded ingest front (`harness::ShardedSession`) resolves which
+    /// batch triples — and which existing components they drag in — belong
+    /// to one merge group.
+    pub fn groups(&mut self) -> FxHashMap<u64, Vec<u64>> {
+        let keys: Vec<u64> = self.keys().collect();
+        let mut out: FxHashMap<u64, Vec<u64>> = FxHashMap::default();
+        for k in keys {
+            let r = self.find(k);
+            out.entry(r).or_default().push(k);
+        }
+        out
+    }
+
     pub fn len(&self) -> usize {
         self.parent.len()
     }
@@ -580,5 +595,29 @@ mod tests {
         assert!(wcc_driver(&t).is_empty());
         assert!(wcc_minispark(&sc(), &t, 4).is_empty());
         assert!(wcc_minispark_naive(&sc(), &t, 4).0.is_empty());
+    }
+
+    #[test]
+    fn union_find_groups_partition_the_keys() {
+        let mut uf = UnionFind::new();
+        uf.union(1, 2);
+        uf.union(2, 3);
+        uf.union(10, 11);
+        uf.insert(99);
+        let groups = uf.groups();
+        assert_eq!(groups.len(), 3);
+        let total: usize = groups.values().map(|v| v.len()).sum();
+        assert_eq!(total, 6);
+        let of = |n: u64| {
+            groups
+                .iter()
+                .find(|(_, v)| v.contains(&n))
+                .map(|(&r, _)| r)
+                .expect("member present")
+        };
+        assert_eq!(of(1), of(3));
+        assert_eq!(of(10), of(11));
+        assert_ne!(of(1), of(10));
+        assert_ne!(of(99), of(1));
     }
 }

@@ -13,3 +13,91 @@ pub use curation::text_curation_workflow;
 pub use generator::{GeneratorConfig, TraceStats};
 pub use graph::{DependencyGraph, EntityInfo};
 pub use splits::{Split, SplitSet};
+
+use crate::util::rng::mix64;
+
+/// A deterministic 64-bit fingerprint of a workflow: the dependency graph
+/// (entities, derivation edges) plus the split decomposition Algorithm 3
+/// partitions against. Two calls agree iff the workflow is structurally
+/// identical, across processes and runs (no hasher randomization).
+///
+/// Recorded in [`Preprocessed::workflow_fingerprint`] by
+/// [`preprocess`](crate::provenance::pipeline::preprocess) and persisted in
+/// the v3 store header, so
+/// [`IncrementalIndex::new`](crate::provenance::incremental::IncrementalIndex::new)
+/// can refuse to ingest under a workflow the index was not built with.
+///
+/// [`Preprocessed::workflow_fingerprint`]: crate::provenance::pipeline::Preprocessed::workflow_fingerprint
+pub fn workflow_fingerprint(graph: &DependencyGraph, splits: &SplitSet) -> u64 {
+    fn fold(h: u64, x: u64) -> u64 {
+        mix64(h ^ x.wrapping_add(0x9E37_79B9_7F4A_7C15))
+    }
+    fn fold_str(mut h: u64, s: &str) -> u64 {
+        h = fold(h, s.len() as u64);
+        for b in s.bytes() {
+            h = fold(h, b as u64);
+        }
+        h
+    }
+    fn fold_split(mut h: u64, sp: &Split) -> u64 {
+        h = fold_str(h, sp.name());
+        h = fold(h, sp.entities().len() as u64);
+        for &e in sp.entities() {
+            h = fold(h, e.0 as u64);
+        }
+        h
+    }
+
+    let mut h: u64 = 0x5057_464C_4F57_0001; // "PWFLOW" domain tag, version 1
+    h = fold(h, graph.entities().len() as u64);
+    for e in graph.entities() {
+        h = fold(h, e.id.0 as u64);
+        h = fold(h, e.is_input as u64);
+        h = fold_str(h, &e.name);
+    }
+    h = fold(h, graph.edges().len() as u64);
+    for d in graph.edges() {
+        h = fold(h, d.parent.0 as u64);
+        h = fold(h, d.child.0 as u64);
+        h = fold(h, d.op.0 as u64);
+    }
+    h = fold(h, splits.top_level().len() as u64);
+    for sp in splits.top_level() {
+        h = fold_split(h, sp);
+    }
+    let subs = splits.sub_split_entries();
+    h = fold(h, subs.len() as u64);
+    for (name, group) in subs {
+        h = fold_str(h, name);
+        h = fold(h, group.len() as u64);
+        for sp in group {
+            h = fold_split(h, sp);
+        }
+    }
+    // 0 is reserved for "unrecorded" (legacy store files).
+    h.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_deterministic_and_structure_sensitive() {
+        let (g, s) = text_curation_workflow();
+        let fp = workflow_fingerprint(&g, &s);
+        assert_ne!(fp, 0);
+        let (g2, s2) = text_curation_workflow();
+        assert_eq!(fp, workflow_fingerprint(&g2, &s2), "same workflow, same fingerprint");
+
+        // Any structural change moves the fingerprint.
+        let (mut g3, s3) = text_curation_workflow();
+        g3.add_entity("XTRA", false);
+        assert_ne!(fp, workflow_fingerprint(&g3, &s3));
+        let (mut g4, s4) = text_curation_workflow();
+        let a = g4.entities()[0].id;
+        let b = g4.entities()[1].id;
+        g4.add_derivation(b, a);
+        assert_ne!(fp, workflow_fingerprint(&g4, &s4));
+    }
+}

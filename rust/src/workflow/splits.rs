@@ -78,6 +78,16 @@ impl SplitSet {
     pub fn split_of(&self, e: EntityId) -> Option<&str> {
         self.top.iter().find(|s| s.contains(e)).map(|s| s.name())
     }
+
+    /// All registered sub-split decompositions, sorted by parent-split name
+    /// (a deterministic iteration order — what
+    /// [`crate::workflow::workflow_fingerprint`] hashes).
+    pub fn sub_split_entries(&self) -> Vec<(&str, &[Split])> {
+        let mut v: Vec<(&str, &[Split])> =
+            self.subs.iter().map(|(k, s)| (k.as_str(), s.as_slice())).collect();
+        v.sort_unstable_by_key(|&(k, _)| k);
+        v
+    }
 }
 
 /// Bisect a weakly connected split into two weakly connected halves by

@@ -1,0 +1,236 @@
+//! The sharding correctness property (the PR's acceptance criterion): a
+//! [`ShardedSession`] — any shard count, including after N random ingest
+//! batches that force components to merge **across** shards — is
+//! query-equivalent to a single unsharded [`ProvSession`] over the same
+//! data: identical lineages and `stats.engine` on all three engines and
+//! the `Auto` router, identical component / connected-set membership (up
+//! to label choice), and a clean partition of the component space (every
+//! node on exactly one shard, counts summing to the unsharded totals).
+
+use provspark::config::EngineConfig;
+use provspark::harness::{EngineRouter, ProvSession, ShardedSession};
+use provspark::proptest_lite as shim;
+use provspark::provenance::incremental::{canonical_labels, TripleBatch};
+use provspark::provenance::model::{ProvTriple, Trace};
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::query::QueryRequest;
+use provspark::util::ids::{AttrValueId, OpId};
+use provspark::util::rng::Pcg64;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+
+fn no_overhead(tau: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.prov.tau = tau;
+    cfg
+}
+
+#[derive(Debug)]
+struct Case {
+    seed: u64,
+    divisor: usize,
+    theta: usize,
+    tau: usize,
+    shards: usize,
+    batches: usize,
+    base_frac: f64,
+}
+
+fn gen_case(rng: &mut Pcg64, shrink: u32) -> Case {
+    Case {
+        seed: rng.next_u64(),
+        divisor: if shrink > 0 { 4000 } else { *rng.pick(&[2000, 3000]) },
+        theta: *rng.pick(&[100, 150, 300]),
+        tau: *rng.pick(&[0, 400, usize::MAX]),
+        shards: if shrink > 0 { 2 } else { *rng.pick(&[2, 3, 5]) },
+        batches: if shrink > 0 { 1 } else { *rng.pick(&[0, 1, 3]) },
+        base_frac: *rng.pick(&[0.6, 0.85, 0.95]),
+    }
+}
+
+/// Gather the shards' `cc_of`/`cs_of` maps into combined maps, asserting
+/// no node appears on two shards.
+fn gathered_maps(
+    sharded: &ShardedSession,
+) -> Result<(FxHashMap<u64, u64>, FxHashMap<u64, u64>), String> {
+    let mut cc: FxHashMap<u64, u64> = FxHashMap::default();
+    let mut cs: FxHashMap<u64, u64> = FxHashMap::default();
+    for (i, shard) in sharded.shard_sessions().iter().enumerate() {
+        let pre = shard.pre();
+        for (&n, &l) in &pre.cc_of {
+            if cc.insert(n, l).is_some() {
+                return Err(format!("node {n} labelled on two shards (shard {i})"));
+            }
+        }
+        for (&n, &s) in &pre.cs_of {
+            cs.insert(n, s);
+        }
+    }
+    Ok((cc, cs))
+}
+
+#[test]
+fn sharded_session_is_query_equivalent_to_unsharded() {
+    shim::run_prop(
+        "sharded_equals_unsharded",
+        &shim::PropCfg { cases: 4, ..Default::default() },
+        gen_case,
+        |case| {
+            let (full, graph, splits) = generate(&GeneratorConfig {
+                seed: case.seed,
+                scale_divisor: case.divisor,
+                ..Default::default()
+            });
+            let mut rng = Pcg64::new(case.seed ^ 0x5AAD);
+            let cut = ((full.len() as f64 * case.base_frac) as usize).max(1);
+            let base = Trace::new(full.triples[..cut].to_vec());
+            let pre = preprocess(&base, &graph, &splits, case.theta, 100, WccImpl::Driver);
+            let cfg = no_overhead(case.tau);
+            let (base, pre) = (Arc::new(base), Arc::new(pre));
+            let single = ProvSession::new(&cfg, Arc::clone(&base), Arc::clone(&pre))
+                .map_err(|e| format!("single: {e}"))?;
+            let sharded = ShardedSession::new(&cfg, base, pre, case.shards)
+                .map_err(|e| format!("sharded: {e}"))?;
+
+            // Ingest the remainder in random batches, each *guaranteed* to
+            // force a cross-shard component merge: a bridge triple between
+            // two existing items that currently live on different shards
+            // rides along with every non-final batch slice.
+            let rest = &full.triples[cut..];
+            let mut cuts: Vec<usize> = (0..case.batches.saturating_sub(1))
+                .map(|_| rng.range(0, rest.len() + 1))
+                .collect();
+            cuts.sort_unstable();
+            cuts.insert(0, 0);
+            cuts.push(rest.len());
+            let mut forced_migrations = 0usize;
+            let mut bridges_added = 0usize;
+            for w in cuts.windows(2) {
+                if case.batches == 0 {
+                    break;
+                }
+                let mut triples = rest[w[0]..w[1]].to_vec();
+                if let Some(bridge) = cross_shard_bridge(&sharded, &mut rng) {
+                    triples.push(bridge);
+                    bridges_added += 1;
+                }
+                let batch = TripleBatch::new(triples);
+                single.ingest(&batch).map_err(|e| format!("single ingest: {e}"))?;
+                let d = sharded.ingest(&batch).map_err(|e| format!("sharded ingest: {e}"))?;
+                forced_migrations += d.migrated_components;
+                // Conservation: no shard gained or lost rows beyond the
+                // batch + migrations.
+                let total: usize =
+                    sharded.shard_sessions().iter().map(|s| s.trace().len()).sum();
+                if total != single.trace().len() {
+                    return Err(format!(
+                        "shard traces hold {total} rows, single holds {}",
+                        single.trace().len()
+                    ));
+                }
+            }
+            if bridges_added > 0 && forced_migrations == 0 {
+                return Err("bridged batches forced no migration".into());
+            }
+
+            // Membership equivalence: gathered shard maps describe the
+            // same partitions as the unsharded session's index.
+            let (cc, cs) = gathered_maps(&sharded)?;
+            let spre = single.pre();
+            if canonical_labels(&cc) != canonical_labels(&spre.cc_of) {
+                return Err("gathered cc_of partition diverges".into());
+            }
+            if canonical_labels(&cs) != canonical_labels(&spre.cs_of) {
+                return Err("gathered cs_of partition diverges".into());
+            }
+            let comp_sum: usize = sharded
+                .shard_sessions()
+                .iter()
+                .map(|s| s.pre().component_count)
+                .sum();
+            if comp_sum != spre.component_count {
+                return Err(format!(
+                    "component counts diverge: {comp_sum} vs {}",
+                    spre.component_count
+                ));
+            }
+            let set_sum: usize =
+                sharded.shard_sessions().iter().map(|s| s.pre().set_count).sum();
+            if set_sum != spre.set_count {
+                return Err(format!("set counts diverge: {set_sum} vs {}", spre.set_count));
+            }
+
+            // Query equivalence: sampled items + unknowns + capped and
+            // τ-overridden requests, on every routing policy.
+            let items: Vec<u64> = single
+                .trace()
+                .triples
+                .iter()
+                .step_by(single.trace().len() / 10 + 1)
+                .map(|t| t.dst.raw())
+                .collect();
+            let mut reqs: Vec<QueryRequest> =
+                items.iter().copied().map(QueryRequest::new).collect();
+            reqs.push(QueryRequest::new(u64::MAX - rng.range(0, 1000) as u64));
+            reqs.push(QueryRequest::new(items[0]).with_max_depth(2));
+            reqs.push(QueryRequest::new(items[items.len() / 2]).with_tau(0));
+            for router in [
+                EngineRouter::Auto,
+                EngineRouter::Rq,
+                EngineRouter::CcProv,
+                EngineRouter::CsProv,
+            ] {
+                let a = single.query_many_on(router, &reqs);
+                let (b, report) = sharded.query_many_report_on(router, &reqs);
+                for ((req, ra), rb) in reqs.iter().zip(&a).zip(&b) {
+                    if ra.lineage != rb.lineage {
+                        return Err(format!(
+                            "lineage diverges: router={router} item={}",
+                            req.item
+                        ));
+                    }
+                    if ra.stats.engine != rb.stats.engine {
+                        return Err(format!(
+                            "engine diverges: router={router} item={} ({} vs {})",
+                            req.item, ra.stats.engine, rb.stats.engine
+                        ));
+                    }
+                    if ra.stats.truncated != rb.stats.truncated {
+                        return Err(format!(
+                            "truncation diverges: router={router} item={}",
+                            req.item
+                        ));
+                    }
+                }
+                if report.total().requests != reqs.len() {
+                    return Err("report lost requests".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A triple bridging two existing items that currently live on different
+/// shards (forcing the cross-shard merge + migration path), if the shard
+/// layout offers one.
+fn cross_shard_bridge(sharded: &ShardedSession, rng: &mut Pcg64) -> Option<ProvTriple> {
+    // Sample candidate nodes from two different non-empty shards.
+    let shards = sharded.shard_sessions();
+    let populated: Vec<usize> = (0..shards.len())
+        .filter(|&i| !shards[i].trace().is_empty())
+        .collect();
+    if populated.len() < 2 {
+        return None;
+    }
+    let i = populated[rng.range(0, populated.len())];
+    let j = *populated.iter().find(|&&x| x != i)?;
+    let pick = |shard: usize, rng: &mut Pcg64| -> u64 {
+        let t = shards[shard].trace();
+        t.triples[rng.range(0, t.len())].dst.raw()
+    };
+    let (a, b) = (pick(i, rng), pick(j, rng));
+    Some(ProvTriple::new(AttrValueId(a), AttrValueId(b), OpId(0)))
+}
