@@ -12,7 +12,11 @@
 //! volumes. Finishes with the `Auto` router and a batched `query_many`,
 //! and — with `--shards N` — proves a component-space [`ShardedSession`]
 //! answers every query identically to the unsharded session (the CI
-//! sharded smoke test runs this with `--shards 4`).
+//! sharded smoke test runs this with `--shards 4`). With `--fault-plan`
+//! (e.g. `panic:shuffle:0.05,seed=6`) deterministic faults are injected
+//! into the cluster's tasks and absorbed by the retrying supervisor
+//! (budget: `--task-retries`) — every assertion still holds, which is the
+//! CI fault-injection smoke test.
 //!
 //! [`ShardedSession`]: provspark::harness::ShardedSession
 
@@ -29,6 +33,11 @@ fn main() -> anyhow::Result<()> {
     let args = provspark::cli::Args::parse_env(&[])?;
     let divisor: usize = args.get_parsed_or("divisor", 500)?;
     let shards: usize = args.get_parsed_or("shards", 1)?;
+    let fault_plan = args
+        .get("fault-plan")
+        .map(|s| s.parse::<provspark::fault::FaultPlan>())
+        .transpose()?;
+    let task_retries: u32 = args.get_parsed_or("task-retries", 2)?;
 
     // 1. Generate a small trace (default ~1/500 of the paper's base).
     let gen = GeneratorConfig { scale_divisor: divisor, ..Default::default() };
@@ -57,6 +66,8 @@ fn main() -> anyhow::Result<()> {
     //    Arc-shared data (no copies of the trace) and routes requests.
     let mut cfg = EngineConfig::default();
     cfg.prov.tau = 5_000; // collect-to-driver threshold
+    cfg.cluster.fault_plan = fault_plan;
+    cfg.cluster.task_retries = task_retries;
     let (trace, pre) = (Arc::new(trace), Arc::new(pre));
     let session = ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre))?;
 
@@ -141,6 +152,19 @@ fn main() -> anyhow::Result<()> {
             reqs.len()
         );
         print!("{}", auto_report.expect("Auto ran first").summary());
+    }
+
+    // 7. Supervision report: with --fault-plan, injected task faults were
+    //    absorbed by the retrying supervisor — the assertions above prove
+    //    the answers are unaffected.
+    if let Some(inj) = session.context().fault() {
+        let m = session.context().metrics().snapshot();
+        println!(
+            "fault injection ({}): {} fault(s) fired, {} task retry(ies) absorbed",
+            inj.plan(),
+            inj.fired(),
+            m.tasks_retried,
+        );
     }
     Ok(())
 }

@@ -65,6 +65,16 @@ pub struct ClusterConfig {
     /// optimization). Disable to force every shuffle — property tests use
     /// this to check elision never changes results.
     pub shuffle_elision: bool,
+    /// Deterministic fault-injection schedule (see [`crate::fault`]).
+    /// `None` disables injection — the probes short-circuit on one branch
+    /// check, which is what keeps the happy path free.
+    pub fault_plan: Option<crate::fault::FaultPlan>,
+    /// Extra attempts a supervised task gets after its first failure
+    /// (Spark's `spark.task.maxFailures` minus one).
+    pub task_retries: u32,
+    /// Base backoff between task retry attempts, in microseconds; doubles
+    /// per failure, capped at 32× (see [`crate::exec::RetryPolicy`]).
+    pub retry_backoff_us: u64,
 }
 
 impl Default for ClusterConfig {
@@ -74,6 +84,9 @@ impl Default for ClusterConfig {
             default_partitions: 64,
             job_overhead_us: 20_000,
             shuffle_elision: true,
+            fault_plan: None,
+            task_retries: 2,
+            retry_backoff_us: 200,
         }
     }
 }
@@ -135,6 +148,9 @@ impl EngineConfig {
                 "cluster.default_partitions" => self.cluster.default_partitions = v.parse()?,
                 "cluster.job_overhead_us" => self.cluster.job_overhead_us = v.parse()?,
                 "cluster.shuffle_elision" => self.cluster.shuffle_elision = v.parse()?,
+                "cluster.fault_plan" => self.cluster.fault_plan = Some(v.parse()?),
+                "cluster.task_retries" => self.cluster.task_retries = v.parse()?,
+                "cluster.retry_backoff_us" => self.cluster.retry_backoff_us = v.parse()?,
                 "prov.tau" => self.prov.tau = v.parse()?,
                 "prov.theta" => self.prov.theta = v.parse()?,
                 "prov.wcc_backend" => self.prov.wcc_backend = v.parse()?,
@@ -155,6 +171,13 @@ impl EngineConfig {
             args.get_parsed_or("job-overhead-us", self.cluster.job_overhead_us)?;
         self.cluster.shuffle_elision =
             args.get_parsed_or("shuffle-elision", self.cluster.shuffle_elision)?;
+        if let Some(spec) = args.get("fault-plan") {
+            self.cluster.fault_plan = Some(spec.parse()?);
+        }
+        self.cluster.task_retries =
+            args.get_parsed_or("task-retries", self.cluster.task_retries)?;
+        self.cluster.retry_backoff_us =
+            args.get_parsed_or("retry-backoff-us", self.cluster.retry_backoff_us)?;
         self.prov.tau = args.get_parsed_or("tau", self.prov.tau)?;
         self.prov.theta = args.get_parsed_or("theta", self.prov.theta)?;
         self.prov.wcc_backend = args.get_parsed_or("wcc-backend", self.prov.wcc_backend)?;
@@ -256,6 +279,23 @@ mod tests {
         let mut cfg = EngineConfig::default();
         cfg.cluster.executors = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fault_plan_key_parses_and_round_trips() {
+        let mut cfg = EngineConfig::default();
+        let kv = parse_kv_str(
+            "[cluster]\nfault_plan = \"panic:shuffle:0.05,seed=6\"\ntask_retries = 4\n",
+        )
+        .unwrap();
+        cfg.apply_kv(&kv).unwrap();
+        let plan = cfg.cluster.fault_plan.as_ref().unwrap();
+        assert_eq!(plan.seed(), 6);
+        assert_eq!(plan.to_string().parse::<crate::fault::FaultPlan>().unwrap(), *plan);
+        assert_eq!(cfg.cluster.task_retries, 4);
+        assert!(cfg
+            .apply_kv(&parse_kv_str("[cluster]\nfault_plan = bogus\n").unwrap())
+            .is_err());
     }
 
     #[test]

@@ -4,8 +4,13 @@
 //! fixed pool of OS threads with an injector queue is the right substrate
 //! anyway. [`ThreadPool`] executes boxed jobs; [`par_map_indexed`] runs a
 //! closure over a slice of inputs with bounded parallelism and preserves
-//! input order in the output.
+//! input order in the output; [`par_map_supervised`] is the fault-tolerant
+//! variant — per-task `catch_unwind`, typed [`TaskError`]s, and
+//! [`RetryPolicy`]-driven retries before a task is quarantined.
 
 mod pool;
 
-pub use pool::{par_map_indexed, ThreadPool};
+pub use pool::{
+    panic_message, par_map_indexed, par_map_supervised, RetryPolicy, SupervisionStats,
+    TaskError, ThreadPool,
+};

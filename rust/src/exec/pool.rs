@@ -1,9 +1,16 @@
-//! Fixed-size thread pool with a shared FIFO injector queue.
+//! Fixed-size thread pool with a shared FIFO injector queue, plus the
+//! supervised parallel-map substrate: every task attempt runs under
+//! `catch_unwind`, panics become typed [`TaskError`]s, and a
+//! [`RetryPolicy`] re-runs failed tasks with capped exponential backoff
+//! before quarantining them.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -112,14 +119,94 @@ fn worker_loop(shared: Arc<Shared>) {
     }
 }
 
+/// One supervised task's terminal failure: every attempt the
+/// [`RetryPolicy`] allowed panicked, and the task was quarantined.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskError {
+    /// Input index of the failed task.
+    pub index: usize,
+    /// How many attempts were made (first run + retries).
+    pub attempts: u32,
+    /// Panic message of the final attempt.
+    pub message: String,
+}
+
+impl fmt::Display for TaskError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "task {} failed after {} attempt{}: {}",
+            self.index,
+            self.attempts,
+            if self.attempts == 1 { "" } else { "s" },
+            self.message
+        )
+    }
+}
+
+impl std::error::Error for TaskError {}
+
+/// Retry schedule for supervised tasks: up to `max_attempts` runs, with
+/// capped exponential backoff (`backoff`, `2·backoff`, `4·backoff`, … up
+/// to `backoff_cap`) between consecutive attempts of the same task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    pub backoff: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl RetryPolicy {
+    /// `retries` extra attempts after the first, backing off from
+    /// `backoff` and capping at `32·backoff`.
+    pub fn new(retries: u32, backoff: Duration) -> Self {
+        Self {
+            max_attempts: retries.saturating_add(1),
+            backoff,
+            backoff_cap: backoff.saturating_mul(32),
+        }
+    }
+
+    /// Single attempt, no backoff — the unsupervised contract.
+    pub fn no_retry() -> Self {
+        Self { max_attempts: 1, backoff: Duration::ZERO, backoff_cap: Duration::ZERO }
+    }
+
+    /// Sleep before attempt `failures + 1` (exponential in the number of
+    /// failures so far, capped).
+    fn delay(&self, failures: u32) -> Duration {
+        let mult = 1u32 << failures.saturating_sub(1).min(16);
+        self.backoff.saturating_mul(mult).min(self.backoff_cap)
+    }
+}
+
+/// Tally of one supervised fan-out.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SupervisionStats {
+    /// Task attempts re-run after a caught panic.
+    pub retries: u64,
+    /// Tasks that exhausted every attempt (their slot holds an `Err`).
+    pub quarantined: u64,
+}
+
 /// Run `f(i, &items[i])` for every element with at most `parallelism`
-/// threads, returning outputs in input order. Panics in `f` propagate.
+/// threads, each attempt under `catch_unwind`, retrying per `policy`.
+/// Outputs come back in input order; a task that exhausts its attempts
+/// yields `Err(TaskError)` in its slot instead of poisoning the fan-out.
+///
+/// Robustness contract: a panicking task can neither kill its worker
+/// thread nor hang the collection — the panic is caught *inside* the
+/// claim loop, so the worker lives on to claim the remaining slice, and
+/// every slot is filled with `Ok` or `Err` before this returns.
 ///
 /// Uses `std::thread::scope` (no `'static` bound on inputs or closure;
-/// no external scoped-thread crate — the build is offline). This is the
-/// fan-out substrate behind both `MiniSpark::run_job` and
-/// `ProvSession::query_many`.
-pub fn par_map_indexed<T, U, F>(items: &[T], parallelism: usize, f: F) -> Vec<U>
+/// no external scoped-thread crate — the build is offline).
+pub fn par_map_supervised<T, U, F>(
+    items: &[T],
+    parallelism: usize,
+    policy: &RetryPolicy,
+    f: F,
+) -> (Vec<Result<U, TaskError>>, SupervisionStats)
 where
     T: Sync,
     U: Send,
@@ -127,36 +214,101 @@ where
 {
     let n = items.len();
     if n == 0 {
-        return Vec::new();
+        return (Vec::new(), SupervisionStats::default());
     }
     let parallelism = parallelism.clamp(1, n);
-    if parallelism == 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
-    let out_ptr = SendPtr(out.as_mut_ptr());
-    std::thread::scope(|scope| {
-        for _ in 0..parallelism {
-            scope.spawn(|| {
-                let out_ptr = &out_ptr;
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+    let retries = AtomicU64::new(0);
+    let quarantined = AtomicU64::new(0);
+    let max_attempts = policy.max_attempts.max(1);
+    let run_one = |i: usize| -> Result<U, TaskError> {
+        let mut failures = 0u32;
+        loop {
+            match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
+                Ok(v) => return Ok(v),
+                Err(payload) => {
+                    failures += 1;
+                    if failures >= max_attempts {
+                        quarantined.fetch_add(1, Ordering::Relaxed);
+                        return Err(TaskError {
+                            index: i,
+                            attempts: failures,
+                            message: panic_message(payload.as_ref()),
+                        });
                     }
-                    let v = f(i, &items[i]);
-                    // SAFETY: each index i is claimed exactly once via the
-                    // atomic counter, so no two threads write the same slot,
-                    // and the Vec outlives the scope.
-                    unsafe { *out_ptr.0.add(i) = Some(v) };
+                    retries.fetch_add(1, Ordering::Relaxed);
+                    let d = policy.delay(failures);
+                    if !d.is_zero() {
+                        std::thread::sleep(d);
+                    }
                 }
-            });
+            }
         }
-        // std scope joins all spawned threads on exit and re-panics if a
-        // worker panicked — the propagation guarantee documented above.
-    });
-    out.into_iter().map(|v| v.expect("slot filled")).collect()
+    };
+    let out: Vec<Result<U, TaskError>> = if parallelism == 1 {
+        (0..n).map(run_one).collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let mut slots: Vec<Option<Result<U, TaskError>>> = (0..n).map(|_| None).collect();
+        let out_ptr = SendPtr(slots.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for _ in 0..parallelism {
+                scope.spawn(|| {
+                    let out_ptr = &out_ptr;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let v = run_one(i);
+                        // SAFETY: each index i is claimed exactly once via
+                        // the atomic counter, so no two threads write the
+                        // same slot, and the Vec outlives the scope.
+                        unsafe { *out_ptr.0.add(i) = Some(v) };
+                    }
+                });
+            }
+        });
+        slots.into_iter().map(|v| v.expect("every claimed slot is filled")).collect()
+    };
+    let stats = SupervisionStats {
+        retries: retries.load(Ordering::Relaxed),
+        quarantined: quarantined.load(Ordering::Relaxed),
+    };
+    (out, stats)
+}
+
+/// Extract a readable message from a caught panic payload.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked with a non-string payload".to_string()
+    }
+}
+
+/// Run `f(i, &items[i])` for every element with at most `parallelism`
+/// threads, returning outputs in input order. A panic in `f` fails the
+/// whole map: it re-surfaces (carrying the [`TaskError`] message) after
+/// every other task finished — workers are never torn down mid-slice.
+///
+/// This is the fan-out substrate behind both `MiniSpark::run_job` and
+/// `ProvSession::query_many`; callers wanting per-task errors and retries
+/// use [`par_map_supervised`] directly.
+pub fn par_map_indexed<T, U, F>(items: &[T], parallelism: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let (out, _) = par_map_supervised(items, parallelism, &RetryPolicy::no_retry(), f);
+    out.into_iter()
+        .map(|r| match r {
+            Ok(v) => v,
+            Err(e) => panic!("{e}"),
+        })
+        .collect()
 }
 
 /// Wrapper making a raw pointer Sync for the disjoint-write pattern above.
@@ -210,5 +362,102 @@ mod tests {
         let items: Vec<u32> = (0..10).collect();
         let out = par_map_indexed(&items, 1, |_, &x| x + 1);
         assert_eq!(out, (1..11).collect::<Vec<_>>());
+    }
+
+    /// Silence the default panic hook while injected panics fly; restores
+    /// the previous hook on drop. Tests using it run single-file via the
+    /// mutex so they cannot unhook each other.
+    struct QuietPanics {
+        _guard: std::sync::MutexGuard<'static, ()>,
+    }
+
+    static HOOK_MX: Mutex<()> = Mutex::new(());
+
+    impl QuietPanics {
+        fn new() -> Self {
+            let guard = HOOK_MX.lock().unwrap_or_else(|e| e.into_inner());
+            std::panic::set_hook(Box::new(|_| {}));
+            Self { _guard: guard }
+        }
+    }
+
+    impl Drop for QuietPanics {
+        fn drop(&mut self) {
+            let _ = std::panic::take_hook();
+        }
+    }
+
+    #[test]
+    fn supervised_retries_clear_a_transient_panic() {
+        let _quiet = QuietPanics::new();
+        let items: Vec<u32> = (0..64).collect();
+        let failed_once = AtomicU64::new(0);
+        let policy = RetryPolicy::new(2, Duration::from_micros(50));
+        let (out, stats) = par_map_supervised(&items, 8, &policy, |i, &x| {
+            // Index 13 panics on its first attempt only.
+            if i == 13 && failed_once.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("transient fault");
+            }
+            x * 2
+        });
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(*r.as_ref().unwrap(), items[i] * 2);
+        }
+        assert_eq!(stats.retries, 1);
+        assert_eq!(stats.quarantined, 0);
+    }
+
+    #[test]
+    fn supervised_quarantines_a_persistent_panic_without_hanging() {
+        let _quiet = QuietPanics::new();
+        let items: Vec<u32> = (0..32).collect();
+        let policy = RetryPolicy::new(2, Duration::ZERO);
+        let (out, stats) = par_map_supervised(&items, 4, &policy, |i, &x| {
+            if i == 7 {
+                panic!("hard fault at {i}");
+            }
+            x + 1
+        });
+        // The sick task's worker survived and finished the rest of the
+        // slice: every other slot is Ok.
+        for (i, r) in out.iter().enumerate() {
+            if i == 7 {
+                let e = r.as_ref().unwrap_err();
+                assert_eq!(e.index, 7);
+                assert_eq!(e.attempts, 3);
+                assert!(e.message.contains("hard fault"), "{e}");
+                assert!(e.to_string().contains("after 3 attempts"), "{e}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), items[i] + 1);
+            }
+        }
+        assert_eq!(stats.retries, 2);
+        assert_eq!(stats.quarantined, 1);
+    }
+
+    #[test]
+    fn par_map_indexed_propagates_a_task_panic() {
+        let _quiet = QuietPanics::new();
+        let items: Vec<u32> = (0..16).collect();
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            par_map_indexed(&items, 4, |i, &x| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                x
+            })
+        }));
+        let msg = panic_message(caught.unwrap_err().as_ref());
+        assert!(msg.contains("task 3 failed after 1 attempt: boom"), "{msg}");
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let p = RetryPolicy::new(10, Duration::from_micros(100));
+        assert_eq!(p.delay(1), Duration::from_micros(100));
+        assert_eq!(p.delay(2), Duration::from_micros(200));
+        assert_eq!(p.delay(3), Duration::from_micros(400));
+        assert_eq!(p.delay(20), p.backoff_cap);
+        assert_eq!(p.backoff_cap, Duration::from_micros(3200));
     }
 }

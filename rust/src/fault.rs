@@ -1,0 +1,417 @@
+//! Deterministic fault injection: seed-driven panic / delay / io-error
+//! probes keyed by site × probe index.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string (the `--fault-plan`
+//! CLI flag or the `cluster.fault_plan` config key):
+//!
+//! ```text
+//! panic:shuffle:0.05,seed=6      # 5% of shuffle tasks panic
+//! delay:task:0.2,io:store:@1     # 20% of tasks stall; 2nd store IO errors
+//! ```
+//!
+//! Each clause is `kind:site:trigger` with kind ∈ {`panic`, `delay`, `io`},
+//! site ∈ {`task`, `shuffle`, `store`, `journal`}, and a trigger that is
+//! either a firing probability in `[0, 1]` or `@N` (fire exactly on the
+//! N-th probe of that site, 0-based). A trailing `seed=N` fixes the
+//! probability draws.
+//!
+//! A [`FaultInjector`] owns one monotone counter per site; every probe
+//! consumes one index, and whether index `i` of site `s` fires is a pure
+//! function of `(seed, s, i)` — a run's fault *pattern* is reproducible
+//! from the plan string alone no matter how work interleaves across worker
+//! threads (which thread draws a firing index may vary; the set of firing
+//! indices does not). Two consequences the fault-tolerance layer leans on:
+//! retried tasks draw *fresh* indices, so a probability fault almost
+//! always clears on retry (the transient-failure model Spark's task
+//! supervision assumes), and an exact `@N` clause can never re-fire during
+//! journal recovery, which makes crash-replay tests deterministic without
+//! ever clearing the plan.
+
+use anyhow::{bail, ensure, Result};
+use std::cell::RefCell;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// What an armed probe does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic in the probing thread (a crashed task / process step).
+    Panic,
+    /// Stall the probing thread briefly (a straggler).
+    Delay,
+    /// Fail with an error. At IO probes this is a returned `Err`; at task
+    /// probes an IO error still surfaces as a task failure (panic), since
+    /// task closures have no error channel.
+    Io,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Delay => "delay",
+            FaultKind::Io => "io",
+        })
+    }
+}
+
+/// Where a probe is planted. Each site has its own monotone probe counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Every task dispatched through the worker pool.
+    Task,
+    /// Map-side tasks of the `Dataset` shuffle paths.
+    Shuffle,
+    /// `store` load/save entry points.
+    StoreIo,
+    /// Each step of a journaled shard-migration apply.
+    Journal,
+}
+
+/// All sites, in counter-index order.
+const SITES: [FaultSite; 4] =
+    [FaultSite::Task, FaultSite::Shuffle, FaultSite::StoreIo, FaultSite::Journal];
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Task => 0,
+            FaultSite::Shuffle => 1,
+            FaultSite::StoreIo => 2,
+            FaultSite::Journal => 3,
+        }
+    }
+}
+
+impl fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FaultSite::Task => "task",
+            FaultSite::Shuffle => "shuffle",
+            FaultSite::StoreIo => "store",
+            FaultSite::Journal => "journal",
+        })
+    }
+}
+
+/// When a probe fires: on a deterministic pseudo-random draw, or exactly
+/// on one probe index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Trigger {
+    Prob(f64),
+    At(u64),
+}
+
+/// One `kind:site:trigger` clause of a plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Probe {
+    kind: FaultKind,
+    site: FaultSite,
+    trigger: Trigger,
+}
+
+impl fmt::Display for Probe {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.trigger {
+            Trigger::Prob(p) => write!(f, "{}:{}:{}", self.kind, self.site, p),
+            Trigger::At(n) => write!(f, "{}:{}:@{}", self.kind, self.site, n),
+        }
+    }
+}
+
+/// A deterministic fault schedule: a set of probes plus the seed driving
+/// their probability draws. Parsed from / printed as the spec grammar in
+/// the module docs ([`FromStr`] and [`Display`](fmt::Display) round-trip).
+///
+/// ```
+/// use provspark::fault::FaultPlan;
+/// let plan: FaultPlan = "panic:shuffle:0.05,seed=6".parse().unwrap();
+/// assert_eq!(plan.to_string().parse::<FaultPlan>().unwrap(), plan);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    probes: Vec<Probe>,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// The seed driving probability draws.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// True if no clause targets `site` (its probes can short-circuit).
+    pub fn is_silent_at(&self, site: FaultSite) -> bool {
+        self.probes.iter().all(|p| p.site != site)
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let mut probes = Vec::new();
+        let mut seed = 0u64;
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            if let Some(v) = clause.strip_prefix("seed=") {
+                seed = v.parse().map_err(|e| {
+                    anyhow::anyhow!("fault plan: bad seed {v:?} in {clause:?}: {e}")
+                })?;
+                continue;
+            }
+            let mut parts = clause.split(':');
+            let (kind, site, trig) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(k), Some(s), Some(t)) if parts.next().is_none() => (k, s, t),
+                _ => bail!("fault plan: clause {clause:?} is not kind:site:trigger"),
+            };
+            let kind = match kind {
+                "panic" => FaultKind::Panic,
+                "delay" => FaultKind::Delay,
+                "io" => FaultKind::Io,
+                other => bail!("fault plan: unknown kind {other:?} (panic|delay|io)"),
+            };
+            let site = match site {
+                "task" => FaultSite::Task,
+                "shuffle" => FaultSite::Shuffle,
+                "store" => FaultSite::StoreIo,
+                "journal" => FaultSite::Journal,
+                other => {
+                    bail!("fault plan: unknown site {other:?} (task|shuffle|store|journal)")
+                }
+            };
+            let trigger = if let Some(n) = trig.strip_prefix('@') {
+                Trigger::At(n.parse().map_err(|e| {
+                    anyhow::anyhow!("fault plan: bad probe index in {clause:?}: {e}")
+                })?)
+            } else {
+                let p: f64 = trig.parse().map_err(|e| {
+                    anyhow::anyhow!("fault plan: bad probability in {clause:?}: {e}")
+                })?;
+                ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "fault plan: probability {p} in {clause:?} outside [0, 1]"
+                );
+                Trigger::Prob(p)
+            };
+            probes.push(Probe { kind, site, trigger });
+        }
+        ensure!(!probes.is_empty(), "fault plan: no probe clauses in {s:?}");
+        Ok(Self { probes, seed })
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for p in &self.probes {
+            write!(f, "{p},")?;
+        }
+        write!(f, "seed={}", self.seed)
+    }
+}
+
+/// The runtime half of a [`FaultPlan`]: per-site probe counters plus a
+/// fired-fault tally. Shared (`Arc`) between the driver, the worker pool
+/// and — via [`install_io_faults`] — the store's thread-local slot.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    counters: [AtomicU64; 4],
+    fired: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self { plan, counters: Default::default(), fired: AtomicU64::new(0) }
+    }
+
+    /// Draw the next probe index for `site` and decide whether it fires.
+    /// Deterministic in `(seed, site, index)`; sites with no clause don't
+    /// consume indices (so unrelated sites never perturb each other).
+    fn draw(&self, site: FaultSite) -> Option<(FaultKind, u64)> {
+        if self.plan.is_silent_at(site) {
+            return None;
+        }
+        let idx = self.counters[site.index()].fetch_add(1, Ordering::Relaxed);
+        for p in self.plan.probes.iter().filter(|p| p.site == site) {
+            let hit = match p.trigger {
+                Trigger::At(n) => idx == n,
+                Trigger::Prob(prob) => unit_draw(self.plan.seed, site, idx) < prob,
+            };
+            if hit {
+                self.fired.fetch_add(1, Ordering::Relaxed);
+                return Some((p.kind, idx));
+            }
+        }
+        None
+    }
+
+    /// Probe from inside a task or process step: a firing `panic`/`io`
+    /// clause panics (tasks have no error channel; the supervisor converts
+    /// the panic to a typed error), a `delay` clause stalls ~2ms.
+    pub fn fire_task(&self, site: FaultSite) {
+        if let Some((kind, idx)) = self.draw(site) {
+            match kind {
+                FaultKind::Delay => {
+                    std::thread::sleep(std::time::Duration::from_millis(2))
+                }
+                FaultKind::Panic | FaultKind::Io => {
+                    panic!("injected {kind} fault at {site} probe #{idx}")
+                }
+            }
+        }
+    }
+
+    /// Probe from an IO path: a firing `io`/`panic` clause returns a named
+    /// error (IO code must *never* panic — that is what this layer tests),
+    /// a `delay` clause stalls ~2ms.
+    pub fn fire_io(&self, site: FaultSite) -> Result<()> {
+        if let Some((kind, idx)) = self.draw(site) {
+            match kind {
+                FaultKind::Delay => {
+                    std::thread::sleep(std::time::Duration::from_millis(2))
+                }
+                FaultKind::Panic | FaultKind::Io => {
+                    bail!("injected {kind} fault at {site} probe #{idx}")
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// How many probes have fired so far.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::Relaxed)
+    }
+
+    /// The plan this injector executes.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+/// Map `(seed, site, index)` to a uniform draw in `[0, 1)` via two rounds
+/// of splitmix64 (the 53 high bits become the mantissa).
+fn unit_draw(seed: u64, site: FaultSite, idx: u64) -> f64 {
+    let mut x = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((site.index() as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add(idx);
+    for _ in 0..2 {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+    }
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+thread_local! {
+    /// The store's fault slot. Store IO runs on whatever thread calls
+    /// `load_*`/`save_*` (the driver, in the CLI), so a thread-local keeps
+    /// concurrently running tests from injecting into each other.
+    static IO_FAULTS: RefCell<Option<Arc<FaultInjector>>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear, with `None`) the fault injector consulted by
+/// [`io_probe`] on this thread.
+pub fn install_io_faults(injector: Option<Arc<FaultInjector>>) {
+    IO_FAULTS.with(|slot| *slot.borrow_mut() = injector);
+}
+
+/// Probe the thread's installed IO injector, if any. Store load/save entry
+/// points call this; with nothing installed it is a no-op.
+pub fn io_probe(site: FaultSite) -> Result<()> {
+    IO_FAULTS.with(|slot| match slot.borrow().as_ref() {
+        Some(inj) => inj.fire_io(site),
+        None => Ok(()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_and_round_trips() {
+        for spec in
+            ["panic:shuffle:0.05,seed=6", "delay:task:0.2,io:store:@1,seed=0", "panic:journal:@3"]
+        {
+            let plan: FaultPlan = spec.parse().unwrap();
+            let back: FaultPlan = plan.to_string().parse().unwrap();
+            assert_eq!(back, plan, "{spec}");
+        }
+    }
+
+    #[test]
+    fn plan_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "seed=4",
+            "panic:shuffle",
+            "panic:nowhere:0.1",
+            "explode:task:0.1",
+            "panic:task:1.5",
+            "panic:task:@x",
+            "seed=abc,panic:task:0.1",
+        ] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn exact_trigger_fires_once_at_its_index() {
+        let inj = FaultInjector::new("io:store:@2".parse().unwrap());
+        assert!(inj.fire_io(FaultSite::StoreIo).is_ok());
+        assert!(inj.fire_io(FaultSite::StoreIo).is_ok());
+        let err = inj.fire_io(FaultSite::StoreIo).unwrap_err();
+        assert!(err.to_string().contains("store probe #2"), "{err}");
+        for _ in 0..8 {
+            assert!(inj.fire_io(FaultSite::StoreIo).is_ok());
+        }
+        assert_eq!(inj.fired(), 1);
+    }
+
+    #[test]
+    fn probability_draws_are_deterministic_and_site_local() {
+        let mk = || FaultInjector::new("io:task:0.3,seed=42".parse().unwrap());
+        let (a, b) = (mk(), mk());
+        let pattern = |inj: &FaultInjector| -> Vec<bool> {
+            (0..200).map(|_| inj.draw(FaultSite::Task).is_some()).collect()
+        };
+        let pa = pattern(&a);
+        assert_eq!(pa, pattern(&b), "same seed must fire the same indices");
+        let hits = pa.iter().filter(|&&h| h).count();
+        assert!((20..=100).contains(&hits), "0.3 over 200 draws fired {hits} times");
+        // Sites without a clause never fire and never consume indices.
+        for site in SITES {
+            if site != FaultSite::Task {
+                assert!(a.draw(site).is_none());
+            }
+        }
+        assert_eq!(a.counters[FaultSite::Shuffle.index()].load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn seed_changes_the_pattern() {
+        let a = FaultInjector::new("panic:shuffle:0.2,seed=1".parse().unwrap());
+        let b = FaultInjector::new("panic:shuffle:0.2,seed=2".parse().unwrap());
+        let pat = |inj: &FaultInjector| -> Vec<bool> {
+            (0..256).map(|_| inj.draw(FaultSite::Shuffle).is_some()).collect()
+        };
+        assert_ne!(pat(&a), pat(&b));
+    }
+
+    #[test]
+    fn io_probe_without_installation_is_a_noop() {
+        install_io_faults(None);
+        assert!(io_probe(FaultSite::StoreIo).is_ok());
+        install_io_faults(Some(Arc::new(FaultInjector::new(
+            "io:store:@0".parse().unwrap(),
+        ))));
+        assert!(io_probe(FaultSite::StoreIo).is_err());
+        assert!(io_probe(FaultSite::StoreIo).is_ok());
+        install_io_faults(None);
+    }
+}

@@ -18,17 +18,54 @@
 
 use super::engines::EngineSet;
 use crate::config::EngineConfig;
-use crate::exec::par_map_indexed;
+use crate::exec::{panic_message, par_map_indexed};
 use crate::minispark::MiniSpark;
 use crate::provenance::incremental::{DeltaStats, IncrementalIndex, TripleBatch};
 use crate::provenance::model::Trace;
 use crate::provenance::pipeline::Preprocessed;
-use crate::provenance::query::{ProvenanceEngine, QueryRequest, QueryResponse};
+use crate::provenance::query::{
+    Completeness, Lineage, ProvenanceEngine, QueryOutcome, QueryRequest, QueryResponse,
+    QueryStats,
+};
 use crate::workflow::curation::text_curation_workflow;
 use crate::workflow::graph::DependencyGraph;
 use crate::workflow::splits::SplitSet;
 use anyhow::Result;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex, RwLock};
+
+/// Execute one request under supervision: a panicking engine (a quarantined
+/// task surfacing through `run_job`, or an injected fault that outlived its
+/// retry budget) is caught and the request retried up to
+/// [`QueryRequest::retries`] more times. When every attempt dies, the
+/// caller gets a well-formed *failed* response instead of a crash: an empty
+/// lineage whose [`Completeness`] says nothing was proven
+/// (`exhausted = false`), classified [`QueryOutcome::Failed`] — so one
+/// poisoned item degrades one answer, never the batch or the process.
+pub fn execute_supervised(
+    engine: &dyn ProvenanceEngine,
+    req: &QueryRequest,
+) -> (QueryResponse, QueryOutcome) {
+    let attempts = req.retries.saturating_add(1);
+    let mut last_panic = String::new();
+    for _ in 0..attempts {
+        match catch_unwind(AssertUnwindSafe(|| engine.execute(req))) {
+            Ok(resp) => {
+                let outcome = QueryOutcome::of(&resp.stats);
+                return (resp, outcome);
+            }
+            Err(payload) => last_panic = panic_message(payload.as_ref()),
+        }
+    }
+    let mut stats = QueryStats::new(engine.name());
+    stats.completeness =
+        Completeness { rounds_done: 0, frontier_remaining: 0, exhausted: false };
+    eprintln!(
+        "provspark: query {} failed after {attempts} attempt(s): {last_panic}",
+        req.item
+    );
+    (QueryResponse { lineage: Lineage::empty(req.item), stats }, QueryOutcome::Failed)
+}
 
 /// Which engine answers a request.
 ///
@@ -247,6 +284,32 @@ impl ProvSession {
         par_map_indexed(reqs, parallelism, |_, req| epoch.route(router, req.item).execute(req))
     }
 
+    /// [`query_many`](Self::query_many) with per-item supervision: each
+    /// request runs through [`execute_supervised`], so a failing item yields
+    /// a `(empty response, Failed)` pair instead of sinking the batch, and
+    /// every answer carries its [`QueryOutcome`] classification
+    /// (full / partial-under-deadline / failed).
+    pub fn query_many_outcomes(
+        &self,
+        reqs: &[QueryRequest],
+    ) -> Vec<(QueryResponse, QueryOutcome)> {
+        self.query_many_outcomes_on(self.router, reqs)
+    }
+
+    /// [`query_many_outcomes`](Self::query_many_outcomes) with an explicit
+    /// routing policy.
+    pub fn query_many_outcomes_on(
+        &self,
+        router: EngineRouter,
+        reqs: &[QueryRequest],
+    ) -> Vec<(QueryResponse, QueryOutcome)> {
+        let epoch = self.engines();
+        let parallelism = self.sc.config().executors.max(1);
+        par_map_indexed(reqs, parallelism, |_, req| {
+            execute_supervised(epoch.route(router, req.item), req)
+        })
+    }
+
     /// Ingest a batch of new provenance triples: apply it to the
     /// incrementally maintained index
     /// ([`IncrementalIndex::apply`] — cost proportional to the delta and
@@ -299,12 +362,33 @@ impl ProvSession {
             )?);
         }
         let index = guard.as_mut().expect("index initialized above");
-        let delta = index.apply(batch)?;
-        let (trace, pre) = index.snapshot();
-        let prev = self.engines();
-        let next = EngineSet::absorb(&prev, trace, pre, &delta)?;
-        *self.state.write().expect("session state lock poisoned") = Arc::new(next);
-        Ok(delta.stats)
+        // Fault atomicity: the swap below is the *only* externally visible
+        // effect. If anything before it fails — an `apply`/`absorb` error,
+        // or a panic out of a quarantined worker — the maintained index may
+        // hold a half-applied batch, so it is discarded: served state is
+        // untouched (epochs are immutable), and the next ingest lazily
+        // rebuilds the index *from the served state*. Each ingest is
+        // therefore all-or-nothing, which is what the sharded front's
+        // migration journal replays against.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            let delta = index.apply(batch)?;
+            let (trace, pre) = index.snapshot();
+            let prev = self.engines();
+            let next = EngineSet::absorb(&prev, trace, pre, &delta)?;
+            *self.state.write().expect("session state lock poisoned") = Arc::new(next);
+            Ok(delta.stats)
+        }));
+        match outcome {
+            Ok(Ok(stats)) => Ok(stats),
+            Ok(Err(e)) => {
+                *guard = None;
+                Err(e)
+            }
+            Err(payload) => {
+                *guard = None;
+                anyhow::bail!("ingest panicked: {}", panic_message(payload.as_ref()))
+            }
+        }
     }
 
     /// Replace the session's entire data state: rebuild the engines over
@@ -323,12 +407,28 @@ impl ProvSession {
     pub fn replace_state(&self, trace: Arc<Trace>, pre: Arc<Preprocessed>) -> Result<()> {
         // Same lock order as `ingest` (index, then state write): the index
         // must be invalidated together with the swap, or a racing ingest
-        // could re-apply a stale index over the replaced state.
+        // could re-apply a stale index over the replaced state. Like
+        // `ingest`, a failure (error or panic) before the swap leaves the
+        // served state untouched and only costs the cached index — the
+        // build is pure construction off to the side.
         let mut guard = self.index.lock().expect("session ingest lock poisoned");
-        let next = EngineSet::build(&self.sc, trace, pre, &self.cfg)?;
-        *self.state.write().expect("session state lock poisoned") = Arc::new(next);
-        *guard = None;
-        Ok(())
+        let outcome =
+            catch_unwind(AssertUnwindSafe(|| EngineSet::build(&self.sc, trace, pre, &self.cfg)));
+        match outcome {
+            Ok(Ok(next)) => {
+                *self.state.write().expect("session state lock poisoned") = Arc::new(next);
+                *guard = None;
+                Ok(())
+            }
+            Ok(Err(e)) => {
+                *guard = None;
+                Err(e)
+            }
+            Err(payload) => {
+                *guard = None;
+                anyhow::bail!("replace_state panicked: {}", panic_message(payload.as_ref()))
+            }
+        }
     }
 }
 
@@ -409,6 +509,84 @@ mod tests {
             assert_eq!(resp.stats.engine, seq.stats.engine);
             assert_eq!(resp.stats.partitions_scanned, seq.stats.partitions_scanned);
             assert_eq!(resp.stats.rows_examined, seq.stats.rows_examined);
+        }
+    }
+
+    #[test]
+    fn supervised_execution_retries_and_isolates_failures() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+
+        /// Panics on the first `fail_first` calls, then answers.
+        struct Flaky {
+            fail_first: u32,
+            calls: AtomicU32,
+        }
+        impl ProvenanceEngine for Flaky {
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+            fn execute(&self, req: &QueryRequest) -> QueryResponse {
+                if self.calls.fetch_add(1, Ordering::SeqCst) < self.fail_first {
+                    panic!("injected engine crash");
+                }
+                QueryResponse {
+                    lineage: Lineage::empty(req.item),
+                    stats: QueryStats::new("flaky"),
+                }
+            }
+        }
+
+        // Two failures, two retries: the third attempt answers.
+        let flaky = Flaky { fail_first: 2, calls: AtomicU32::new(0) };
+        let (resp, outcome) =
+            execute_supervised(&flaky, &QueryRequest::new(7).with_retries(2));
+        assert_eq!(outcome, QueryOutcome::Full);
+        assert_eq!(resp.lineage.query, 7);
+        assert_eq!(flaky.calls.load(Ordering::SeqCst), 3);
+
+        // Budget exhausted: a well-formed failed answer, no crash.
+        let dead = Flaky { fail_first: u32::MAX, calls: AtomicU32::new(0) };
+        let (resp, outcome) =
+            execute_supervised(&dead, &QueryRequest::new(9).with_retries(1));
+        assert_eq!(outcome, QueryOutcome::Failed);
+        assert!(resp.lineage.is_empty());
+        assert!(!resp.stats.completeness.exhausted);
+        assert_eq!(dead.calls.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn batched_outcomes_classify_deadline_cuts() {
+        use std::time::Duration;
+        let s = session(500);
+        let items: Vec<u64> = s
+            .trace()
+            .triples
+            .iter()
+            .step_by(s.trace().triples.len() / 6 + 1)
+            .map(|t| t.dst.raw())
+            .collect();
+        // Generous deadlines: everything completes, outcomes are Full and
+        // answers match the unsupervised batch path.
+        let reqs: Vec<QueryRequest> = items
+            .iter()
+            .map(|&q| QueryRequest::new(q).with_deadline(Duration::from_secs(3600)))
+            .collect();
+        let plain = s.query_many(&reqs);
+        let supervised = s.query_many_outcomes(&reqs);
+        for ((resp, outcome), want) in supervised.iter().zip(&plain) {
+            assert_eq!(*outcome, QueryOutcome::Full);
+            assert_eq!(resp.lineage, want.lineage);
+        }
+        // Zero deadlines: partial answers with an honest bound, and each
+        // partial lineage is a prefix (subset) of the full one.
+        let cut: Vec<QueryRequest> =
+            items.iter().map(|&q| QueryRequest::new(q).with_deadline(Duration::ZERO)).collect();
+        for ((resp, outcome), full) in s.query_many_outcomes(&cut).iter().zip(&plain) {
+            assert_eq!(*outcome, QueryOutcome::Partial);
+            assert!(!resp.stats.completeness.exhausted);
+            assert!(resp.lineage.triples.len() <= full.lineage.triples.len());
+            let full_set: FxHashSet<_> = full.lineage.triples.iter().collect();
+            assert!(resp.lineage.triples.iter().all(|t| full_set.contains(t)));
         }
     }
 

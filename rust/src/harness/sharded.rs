@@ -44,23 +44,41 @@
 //! session — identical answers, CS membership and routing — is
 //! property-tested in `rust/tests/sharded_props.rs`.
 //!
+//! # Crash-safe ingest: the migration journal
+//!
+//! The apply phase is **write-ahead journaled**: the full step plan (each
+//! receiving shard's sub-batch ingest, each losing shard's rebuild) is
+//! staged — and, with [`ShardedSession::with_journal_path`], durably
+//! recorded — *before* the first shard mutates, and each step commits as
+//! it lands. Steps are all-or-nothing at the [`ProvSession`] layer (a
+//! failed `ingest`/`replace_state` discards its half-applied index and
+//! leaves the served epoch untouched), so an injected fault or worker
+//! crash mid-plan parks the remainder with its cursor;
+//! [`ShardedSession::recover`] resumes from the first uncommitted step and
+//! converges to exactly the state the uninterrupted ingest would have
+//! produced — property-tested by interrupting a forced cross-shard merge
+//! at *every* step index (`rust/tests/sharded_props.rs`).
+//!
 //! [`QueryStats`]: crate::provenance::query::QueryStats
 
 use super::engines::EngineSet;
-use super::session::{EngineRouter, ProvSession};
+use super::session::{execute_supervised, EngineRouter, ProvSession};
 use crate::config::EngineConfig;
 use crate::exec::par_map_indexed;
+use crate::fault::FaultSite;
 use crate::minispark::MiniSpark;
 use crate::provenance::incremental::{DeltaStats, TripleBatch};
+use crate::provenance::journal::MigrationJournal;
 use crate::provenance::model::{ProvTriple, Trace};
 use crate::provenance::pipeline::Preprocessed;
-use crate::provenance::query::{ProvenanceEngine, QueryRequest, QueryResponse};
+use crate::provenance::query::{ProvenanceEngine, QueryOutcome, QueryRequest, QueryResponse};
 use crate::provenance::shard::{merge_shards, ShardAssignment, ShardPlan};
 use crate::provenance::wcc::UnionFind;
 use crate::workflow::graph::DependencyGraph;
 use crate::workflow::splits::SplitSet;
 use anyhow::{ensure, Result};
 use rustc_hash::{FxHashMap, FxHashSet};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -102,17 +120,28 @@ pub struct ShardBatchStats {
     pub rows_examined: u64,
     pub rows_shuffled: u64,
     pub rows_collected: u64,
+    /// Requests answered completely ([`QueryOutcome::Full`]).
+    pub full: usize,
+    /// Degraded answers — cap- or deadline-bounded ([`QueryOutcome::Partial`]).
+    pub partial: usize,
+    /// Requests whose every supervised attempt died ([`QueryOutcome::Failed`]).
+    pub failed: usize,
     /// Sum of the per-query phase wall times attributed to this shard.
     pub wall: Duration,
 }
 
 impl ShardBatchStats {
-    fn absorb(&mut self, resp: &QueryResponse) {
+    fn absorb(&mut self, resp: &QueryResponse, outcome: QueryOutcome) {
         self.requests += 1;
         self.partitions_scanned += resp.stats.partitions_scanned;
         self.rows_examined += resp.stats.rows_examined;
         self.rows_shuffled += resp.stats.rows_shuffled;
         self.rows_collected += resp.stats.rows_collected;
+        match outcome {
+            QueryOutcome::Full => self.full += 1,
+            QueryOutcome::Partial => self.partial += 1,
+            QueryOutcome::Failed => self.failed += 1,
+        }
         self.wall += resp.stats.total_time();
     }
 }
@@ -123,6 +152,11 @@ impl ShardBatchStats {
 pub struct ShardedBatchReport {
     /// Indexed by shard.
     pub per_shard: Vec<ShardBatchStats>,
+    /// Per-request classification, in request order: a failing shard (or a
+    /// deadline cut) degrades its own items to `Partial`/`Failed` while the
+    /// rest of the batch answers `Full` — failures are isolated per item,
+    /// never batch-fatal.
+    pub outcomes: Vec<QueryOutcome>,
 }
 
 impl ShardedBatchReport {
@@ -135,6 +169,9 @@ impl ShardedBatchReport {
             t.rows_examined += s.rows_examined;
             t.rows_shuffled += s.rows_shuffled;
             t.rows_collected += s.rows_collected;
+            t.full += s.full;
+            t.partial += s.partial;
+            t.failed += s.failed;
             t.wall += s.wall;
         }
         t
@@ -165,6 +202,12 @@ impl ShardedBatchReport {
             human_count(t.rows_examined),
             self.per_shard.len(),
         ));
+        if t.partial > 0 || t.failed > 0 {
+            out.push_str(&format!(
+                "outcomes: {} full, {} partial, {} failed\n",
+                t.full, t.partial, t.failed,
+            ));
+        }
         out
     }
 }
@@ -190,6 +233,10 @@ pub struct ShardedDeltaStats {
     /// shard; see [`rebuilt_shards`](Self::rebuilt_shards) for shards that
     /// were still modified by a migration).
     pub per_shard: Vec<Option<DeltaStats>>,
+    /// Steps in this batch's write-ahead migration journal (every
+    /// shard-mutating action is one journaled, individually recoverable
+    /// step).
+    pub journal_steps: usize,
 }
 
 impl ShardedDeltaStats {
@@ -198,7 +245,8 @@ impl ShardedDeltaStats {
         let touched = self.per_shard.iter().filter(|d| d.is_some()).count();
         format!(
             "batch={} new_triples={} shards_ingesting={}/{} cross_shard_merges={} \
-             migrated_components={} migrated_triples={} rebuilt_shards={:?}",
+             migrated_components={} migrated_triples={} rebuilt_shards={:?} \
+             journal_steps={}",
             self.batch,
             self.new_triples,
             touched,
@@ -207,8 +255,43 @@ impl ShardedDeltaStats {
             self.migrated_components,
             self.migrated_triples,
             self.rebuilt_shards,
+            self.journal_steps,
         )
     }
+}
+
+/// One shard-mutating action of a sharded ingest, staged before any shard
+/// changes. Steps hold their full inputs (`TripleBatch` / kept state), so
+/// an interrupted plan can resume without re-deriving anything — and since
+/// each [`ProvSession`] mutation is all-or-nothing, re-running the step at
+/// the journal cursor is always safe.
+enum PlannedStep {
+    /// Apply a sub-batch through the shard's incremental ingest path.
+    Ingest { shard: usize, batch: TripleBatch },
+    /// Rebuild a losing shard over its kept remainder.
+    Replace { shard: usize, trace: Arc<Trace>, pre: Arc<Preprocessed> },
+}
+
+impl PlannedStep {
+    fn describe(&self) -> String {
+        match self {
+            PlannedStep::Ingest { shard, batch } => {
+                format!("ingest shard {shard} ({} triples)", batch.len())
+            }
+            PlannedStep::Replace { shard, trace, .. } => {
+                format!("replace shard {shard} ({} kept triples)", trace.len())
+            }
+        }
+    }
+}
+
+/// An interrupted sharded ingest, parked for [`ShardedSession::recover`]:
+/// the journal (cursor at the first uncommitted step), the staged steps,
+/// and the stats accumulated by the steps that already landed.
+struct PendingMigration {
+    journal: MigrationJournal,
+    steps: Vec<PlannedStep>,
+    stats: ShardedDeltaStats,
 }
 
 /// A sharded query session: the same query surface as [`ProvSession`]
@@ -252,6 +335,11 @@ pub struct ShardedSession {
     batches: AtomicU64,
     /// Serializes sharded ingestion (migrations touch multiple shards).
     ingest_lock: Mutex<()>,
+    /// An interrupted ingest's parked plan (see [`recover`](Self::recover)).
+    pending: Mutex<Option<PendingMigration>>,
+    /// Where the write-ahead migration journal is mirrored on disk, if
+    /// anywhere ([`with_journal_path`](Self::with_journal_path)).
+    journal_path: Option<PathBuf>,
 }
 
 impl ShardedSession {
@@ -291,12 +379,23 @@ impl ShardedSession {
             shards: sessions,
             batches: AtomicU64::new(0),
             ingest_lock: Mutex::new(()),
+            pending: Mutex::new(None),
+            journal_path: None,
         })
     }
 
     /// Set the default routing policy (builder-style).
     pub fn with_router(mut self, router: EngineRouter) -> Self {
         self.router = router;
+        self
+    }
+
+    /// Mirror every ingest's write-ahead migration journal to a file
+    /// (builder-style). A file left behind after a process crash is the
+    /// durable evidence that a batch never fully applied — the CLI reports
+    /// it on startup and treats the stored (pre-batch) state as canonical.
+    pub fn with_journal_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.journal_path = Some(path.into());
         self
     }
 
@@ -413,14 +512,21 @@ impl ShardedSession {
         let front = ShardRouter::new(&self.plan, &epochs);
         let owners: Vec<usize> = reqs.iter().map(|r| front.owner(r.item)).collect();
         let parallelism = self.sc.config().executors.max(1);
-        let responses = par_map_indexed(reqs, parallelism, |i, req| {
-            epochs[owners[i]].route(router, req.item).execute(req)
+        // Supervised per item: a crash on one shard's engine yields a
+        // `Failed` outcome for that item alone; the rest of the batch is
+        // unaffected.
+        let answered = par_map_indexed(reqs, parallelism, |i, req| {
+            execute_supervised(epochs[owners[i]].route(router, req.item), req)
         });
         let mut report = ShardedBatchReport {
             per_shard: vec![ShardBatchStats::default(); self.shards.len()],
+            outcomes: Vec::with_capacity(answered.len()),
         };
-        for (owner, resp) in owners.iter().zip(&responses) {
-            report.per_shard[*owner].absorb(resp);
+        let mut responses = Vec::with_capacity(answered.len());
+        for (owner, (resp, outcome)) in owners.iter().zip(answered) {
+            report.per_shard[*owner].absorb(&resp, outcome);
+            report.outcomes.push(outcome);
+            responses.push(resp);
         }
         (responses, report)
     }
@@ -627,36 +733,123 @@ impl ShardedSession {
             );
         }
 
-        // ---- Apply: winners absorb first, losers shrink last ------------
-        // Until a loser's `replace_state` lands, its previous epoch still
-        // serves the migrating component — so a concurrent query always
-        // finds the component on *some* shard (the loser's pre-merge state
-        // or the winner's merged state, each a legitimate epoch), never a
-        // silent empty answer.
+        // ---- Stage the journaled apply plan -----------------------------
+        // Winners absorb first, losers shrink last: until a loser's
+        // `replace_state` lands, its previous epoch still serves the
+        // migrating component — so a concurrent query always finds the
+        // component on *some* shard (the loser's pre-merge state or the
+        // winner's merged state, each a legitimate epoch), never a silent
+        // empty answer. Every step carries its full inputs, so the plan is
+        // resumable from any cursor.
+        let mut steps: Vec<PlannedStep> = Vec::new();
         for s in 0..n {
             if kept[s].is_some() || (extra[s].is_empty() && subs[s].is_empty()) {
                 continue;
             }
             let mut triples = std::mem::take(&mut extra[s]);
             triples.append(&mut subs[s]);
-            stats.per_shard[s] = Some(self.shards[s].ingest(&TripleBatch::new(triples))?);
+            steps.push(PlannedStep::Ingest { shard: s, batch: TripleBatch::new(triples) });
         }
         for &s in &losers {
             let (kept_t, kept_p) = kept[s].take().expect("loser kept state staged above");
-            self.shards[s].replace_state(Arc::new(kept_t), Arc::new(kept_p))?;
-            stats.rebuilt_shards.push(s);
+            steps.push(PlannedStep::Replace {
+                shard: s,
+                trace: Arc::new(kept_t),
+                pre: Arc::new(kept_p),
+            });
             // A loser can also be receiving rows (for other merge groups,
             // or as another group's winner): its sub-batch applies to the
             // kept state it was staged against.
             if !(extra[s].is_empty() && subs[s].is_empty()) {
                 let mut triples = std::mem::take(&mut extra[s]);
                 triples.append(&mut subs[s]);
-                stats.per_shard[s] =
-                    Some(self.shards[s].ingest(&TripleBatch::new(triples))?);
+                steps.push(PlannedStep::Ingest { shard: s, batch: TripleBatch::new(triples) });
             }
         }
-        stats.batch = self.batches.fetch_add(1, Ordering::SeqCst) + 1;
-        Ok(stats)
+        stats.journal_steps = steps.len();
+
+        // ---- Journal the plan, then execute it --------------------------
+        // The journal (durably, when a path is configured) records every
+        // step before the first shard mutates.
+        let descriptions: Vec<String> = steps.iter().map(PlannedStep::describe).collect();
+        let journal = MigrationJournal::begin(descriptions, self.journal_path.as_deref())?;
+        self.run_steps(PendingMigration { journal, steps, stats })
+    }
+
+    /// Execute a staged migration plan from its journal cursor. On a step
+    /// failure the remaining plan is parked (with its journal) for
+    /// [`recover`](Self::recover); completed steps stay committed — each is
+    /// all-or-nothing at the shard-session layer, so the observable state
+    /// is always "plan applied up to the cursor".
+    fn run_steps(&self, mut p: PendingMigration) -> Result<ShardedDeltaStats> {
+        while !p.journal.is_complete() {
+            let i = p.journal.cursor();
+            // The per-step fault probe (FaultSite::Journal): the injection
+            // point the recovery property test drives to interrupt a plan
+            // at every step index.
+            let probed: Result<()> = match self.sc.fault() {
+                Some(inj) => inj.fire_io(FaultSite::Journal),
+                None => Ok(()),
+            };
+            let effect = probed.and_then(|()| match &p.steps[i] {
+                PlannedStep::Ingest { shard, batch } => {
+                    self.shards[*shard].ingest(batch).map(|d| (*shard, Some(d)))
+                }
+                PlannedStep::Replace { shard, trace, pre } => self.shards[*shard]
+                    .replace_state(Arc::clone(trace), Arc::clone(pre))
+                    .map(|()| (*shard, None)),
+            });
+            let committed = match effect {
+                Ok((s, Some(delta))) => {
+                    p.stats.per_shard[s] = Some(delta);
+                    p.journal.mark_done()
+                }
+                Ok((s, None)) => {
+                    p.stats.rebuilt_shards.push(s);
+                    p.journal.mark_done()
+                }
+                Err(e) => Err(e),
+            };
+            if let Err(e) = committed {
+                let desc = p.steps[i].describe();
+                let total = p.steps.len();
+                *self.pending.lock().expect("pending migration lock poisoned") = Some(p);
+                return Err(e.context(format!(
+                    "sharded ingest interrupted at journal step {i}/{total} ({desc}); \
+                     every committed step landed atomically and shard state is \
+                     consistent — call recover() to resume"
+                )));
+            }
+        }
+        let PendingMigration { journal, stats: mut done, .. } = p;
+        if let Err(e) = journal.finish() {
+            // All steps landed; a stale journal file only costs a spurious
+            // rolled-back-batch report on the next startup.
+            eprintln!("provspark: warning: completed migration journal not removed: {e:#}");
+        }
+        done.batch = self.batches.fetch_add(1, Ordering::SeqCst) + 1;
+        Ok(done)
+    }
+
+    /// Whether an interrupted ingest is parked awaiting
+    /// [`recover`](Self::recover).
+    pub fn has_pending(&self) -> bool {
+        self.pending.lock().expect("pending migration lock poisoned").is_some()
+    }
+
+    /// Resume an interrupted [`ingest`](Self::ingest) from its journal
+    /// cursor: already-committed steps are not re-run (each landed
+    /// atomically), the remaining steps execute in plan order, and the
+    /// returned stats describe the *whole* batch. Errors if nothing is
+    /// pending; a recovery that fails again re-parks the plan, so `recover`
+    /// can be retried until the underlying fault clears.
+    pub fn recover(&self) -> Result<ShardedDeltaStats> {
+        let _serial = self.ingest_lock.lock().expect("sharded ingest lock poisoned");
+        let parked = self.pending.lock().expect("pending migration lock poisoned").take();
+        match parked {
+            Some(p) => self.run_steps(p),
+            None => anyhow::bail!("no interrupted sharded ingest to recover"),
+        }
     }
 
     /// Gather every shard's current state back into one combined
@@ -805,6 +998,78 @@ mod tests {
         let total: usize =
             sharded.shard_sessions().iter().map(|s| s.trace().len()).sum();
         assert_eq!(total, trace.len() + 1);
+    }
+
+    #[test]
+    fn interrupted_ingest_parks_and_recovers_to_equivalence() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2500, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let cfg_ok = cfg(300);
+        // Same engine config plus a fault plan that kills the *second*
+        // journal step (probe index 1) exactly once.
+        let mut cfg_faulty = cfg_ok.clone();
+        cfg_faulty.cluster.fault_plan = Some("io:journal:@1,seed=5".parse().unwrap());
+        let (trace_arc, pre_arc) = (Arc::new(trace.clone()), Arc::new(pre));
+        let single =
+            ProvSession::new(&cfg_ok, Arc::clone(&trace_arc), Arc::clone(&pre_arc)).unwrap();
+        let journal_file = std::env::temp_dir().join(format!(
+            "provspark-sharded-recover-{}.journal",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&journal_file);
+        let sharded = ShardedSession::new(
+            &cfg_faulty,
+            Arc::clone(&trace_arc),
+            Arc::clone(&pre_arc),
+            4,
+        )
+        .unwrap()
+        .with_journal_path(&journal_file);
+
+        // A cross-shard bridge forces a multi-step plan (winner ingest +
+        // loser rebuild).
+        let items = sample_items(&trace, 50);
+        let a = items[0];
+        let sa = sharded.shard_of(a).expect("known item");
+        let b = *items
+            .iter()
+            .find(|&&x| sharded.shard_of(x).expect("known item") != sa)
+            .expect("an item on another shard");
+        let batch =
+            TripleBatch::new(vec![ProvTriple::new(AttrValueId(a), AttrValueId(b), OpId(0))]);
+
+        let err = sharded.ingest(&batch).unwrap_err();
+        assert!(format!("{err:#}").contains("call recover()"), "{err:#}");
+        assert!(sharded.has_pending());
+        assert!(journal_file.exists(), "interrupted journal stays on disk");
+        assert_eq!(sharded.batches_ingested(), 0, "interrupted batch not counted");
+
+        // The exact @1 probe cannot re-fire (indices keep advancing), so
+        // recovery completes the plan.
+        let d = sharded.recover().unwrap();
+        assert!(!sharded.has_pending());
+        assert!(!journal_file.exists(), "completed journal is retired");
+        assert_eq!(d.batch, 1);
+        assert_eq!(d.cross_shard_merges, 1);
+        assert!(d.journal_steps >= 2, "bridge needs winner ingest + loser rebuild");
+        assert!(sharded.recover().is_err(), "nothing left to recover");
+
+        // Converged state answers exactly like the unsharded session.
+        let _ = single.ingest(&batch).unwrap();
+        assert_eq!(sharded.shard_of(a), sharded.shard_of(b));
+        let reqs: Vec<QueryRequest> =
+            items.iter().copied().map(QueryRequest::new).collect();
+        let x = single.query_many_on(EngineRouter::Auto, &reqs);
+        let (y, report) = sharded.query_many_report_on(EngineRouter::Auto, &reqs);
+        for ((req, rx), ry) in reqs.iter().zip(&x).zip(&y) {
+            assert_eq!(rx.lineage, ry.lineage, "item={}", req.item);
+        }
+        assert_eq!(report.outcomes.len(), reqs.len());
+        assert!(report.outcomes.iter().all(|o| *o == QueryOutcome::Full));
+        let total: usize =
+            sharded.shard_sessions().iter().map(|s| s.trace().len()).sum();
+        assert_eq!(total, trace.len() + 1, "no rows lost or duplicated by recovery");
     }
 
     #[test]

@@ -31,12 +31,14 @@
 //!
 //! Support substrates built in-tree (the build environment is offline):
 //! [`exec`] (thread pool), [`cli`] (argument parser), [`benchkit`]
-//! (benchmark harness), [`proptest_lite`] (property testing), [`config`].
+//! (benchmark harness), [`proptest_lite`] (property testing), [`config`],
+//! [`fault`] (deterministic fault injection for the robustness tests).
 
 pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod exec;
+pub mod fault;
 pub mod harness;
 pub mod minispark;
 pub mod proptest_lite;

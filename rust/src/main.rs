@@ -8,8 +8,10 @@
 //! provspark ingest      --trace data/trace.bin --pre data/pre.bin --batch delta.bin
 //!                       [--out-trace X --out-pre Y]  (defaults: update in place)
 //!                       [--shards N]  (sharded scatter ingest with component migration)
+//!                       [--retries N]  (journal-resume budget for interrupted migrations)
 //! provspark query       --trace data/trace.bin --pre data/pre.bin --engine auto --item 3:42
 //!                       [--item 3:43 ...] [--max-depth N] [--max-triples N] [--tau-override N]
+//!                       [--deadline-ms N] [--retries N]  (deadline-bounded degraded answers)
 //!                       [--shards N]  (scatter-gather across component-space shards)
 //! provspark classes     --trace data/trace.bin --pre data/pre.bin --class lc-ll
 //! provspark table       --which 9|10|11|12 [--divisor 10] [--replications 1,9]
@@ -20,21 +22,25 @@
 use anyhow::{anyhow, bail, Context, Result};
 use provspark::cli::Args;
 use provspark::config::{Backend, EngineConfig};
+use provspark::fault::{install_io_faults, FaultInjector, FaultPlan};
 use provspark::harness::{
     component_census, drilldown_report, query_table, select_queries, table9, EngineRouter,
     ExperimentConfig, ProvSession, QueryClass, ShardedSession,
 };
 use provspark::minispark::MiniSpark;
 use provspark::provenance::incremental::{IncrementalIndex, TripleBatch};
+use provspark::provenance::journal::staged_path;
 use provspark::provenance::pipeline::{preprocess, WccImpl};
 use provspark::provenance::query::QueryRequest;
 use provspark::provenance::store;
+use provspark::provenance::{commit_files, recover_commit, CommitRecovery, MigrationJournal};
 use provspark::util::fmt::{human_count, human_duration};
 use provspark::util::ids::AttrValueId;
 use provspark::workflow::curation::text_curation_workflow;
 use provspark::workflow::generator::{generate, GeneratorConfig, TraceStats};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 const FLAGS: &[&str] = &["dot", "csv", "help", "verbose"];
 
@@ -70,10 +76,21 @@ fn print_help() {
          query opts:  --engine rq|ccprov|csprov|auto  --item ID (repeatable — batches fan\n\
                       out across the worker pool)  --max-depth N --max-triples N\n\
                       --tau-override N (per-query driver-collect threshold)\n\
+                      --deadline-ms N (degrade past the budget: partial prefix lineage +\n\
+                      completeness bound)  --retries N (per-item re-execution budget;\n\
+                      failures are isolated, never batch-fatal)\n\
          sharding:    --shards N on preprocess/query/ingest — component-space shards\n\
                       behind a scatter-gather front (preprocess also writes per-shard\n\
                       files next to --out; ingest migrates components merged across\n\
-                      shards and persists the gathered state)"
+                      shards and persists the gathered state)\n\
+         resilience:  --fault-plan SPEC (deterministic injection, e.g.\n\
+                      panic:shuffle:0.05,seed=6 or io:journal:@1 — sites\n\
+                      task|shuffle|store|journal)  --task-retries N\n\
+                      --retry-backoff-us N (supervised in-job task retries)\n\
+                      ingest --retries N resumes an interrupted sharded migration\n\
+                      from its write-ahead journal; ingest publishes trace+index\n\
+                      via staged files + a commit journal and self-recovers an\n\
+                      interrupted publish on the next run"
     );
 }
 
@@ -107,6 +124,14 @@ fn scaled_defaults(args: &Args, divisor: usize) -> Result<(usize, usize)> {
 }
 
 fn run(args: &Args) -> Result<()> {
+    // `--fault-plan` reaches two layers: the cluster config (task/shuffle
+    // probes inside minispark jobs, via `engine_config`) and this
+    // thread-local installation, which arms the store/journal IO probes on
+    // the CLI's own load/save paths.
+    if let Some(spec) = args.get("fault-plan") {
+        let plan: FaultPlan = spec.parse().context("--fault-plan")?;
+        install_io_faults(Some(Arc::new(FaultInjector::new(plan))));
+    }
     match args.subcommand().unwrap() {
         "generate" => {
             let cfg = gen_config(args)?;
@@ -219,13 +244,45 @@ fn run(args: &Args) -> Result<()> {
             let batch_path = args
                 .get("batch")
                 .ok_or_else(|| anyhow!("--batch required (a trace file of new triples)"))?;
-            let trace = store::load_trace(Path::new(&trace_path))?;
-            let pre = store::load_preprocessed(Path::new(&pre_path))?;
-            let batch: TripleBatch =
-                store::load_trace(Path::new(batch_path))?.into();
-            let batch_len = batch.len();
             let out_trace = args.get_or("out-trace", &trace_path);
             let out_pre = args.get_or("out-pre", &pre_path);
+            let finals = [PathBuf::from(&out_trace), PathBuf::from(&out_pre)];
+            let publish_journal = PathBuf::from(format!("{out_pre}.publish-journal"));
+            let migration_journal = PathBuf::from(format!("{out_pre}.migration-journal"));
+            // Startup recovery, *before* anything loads: an interrupted
+            // two-phase publish is rolled forward (journal durable ⇒
+            // staging was complete) or its orphaned staged files discarded.
+            match recover_commit(&publish_journal, &finals)? {
+                CommitRecovery::Clean => {}
+                CommitRecovery::RolledForward(n) => println!(
+                    "recovered an interrupted publish: rolled {n} staged file(s) forward"
+                ),
+                CommitRecovery::RolledBack(n) => println!(
+                    "recovered an interrupted publish: discarded {n} orphaned staged file(s)"
+                ),
+            }
+            // A leftover migration journal means a sharded ingest died
+            // mid-plan in a previous process. Stores are only rewritten
+            // after a batch fully applies, so the on-disk state is the
+            // pre-batch state: report, roll the journal back, re-ingest.
+            if let Some(j) = MigrationJournal::load(&migration_journal)? {
+                println!(
+                    "found an interrupted sharded-ingest journal at {} ({}/{} steps \
+                     committed); on-disk state is the pre-batch state — rolling back \
+                     (this ingest starts the batch over)",
+                    migration_journal.display(),
+                    j.cursor(),
+                    j.steps().len(),
+                );
+                std::fs::remove_file(&migration_journal).with_context(|| {
+                    format!("rolling back {}", migration_journal.display())
+                })?;
+            }
+            let trace = store::load_trace(Path::new(&trace_path))?;
+            let pre = store::load_preprocessed(Path::new(&pre_path))?;
+            let batch: TripleBatch = store::load_trace(Path::new(batch_path))?.into();
+            let batch_len = batch.len();
+            let retries: u32 = args.get_parsed_or("retries", 0)?;
             let shards: usize = args.get_parsed_or("shards", 1)?;
             if shards > 1 {
                 // Sharded ingest: split component-space, route the batch
@@ -233,18 +290,29 @@ fn run(args: &Args) -> Result<()> {
                 // across shards), then gather and persist the combined
                 // state.
                 let ecfg = engine_config(args)?;
-                let session = ShardedSession::new(
-                    &ecfg,
-                    Arc::new(trace),
-                    Arc::new(pre),
-                    shards,
-                )?;
-                let (stats, dur) =
-                    provspark::util::timer::time_it(|| session.ingest(&batch));
+                let session = ShardedSession::new(&ecfg, Arc::new(trace), Arc::new(pre), shards)?
+                    .with_journal_path(&migration_journal);
+                let (stats, dur) = provspark::util::timer::time_it(|| {
+                    let mut res = session.ingest(&batch);
+                    // `--retries` here is a recovery budget: each attempt
+                    // resumes the journaled plan from its cursor rather
+                    // than starting the batch over.
+                    for _ in 0..retries {
+                        if res.is_ok() || !session.has_pending() {
+                            break;
+                        }
+                        if let Err(e) = &res {
+                            eprintln!("ingest interrupted: {e:#}; recovering");
+                        }
+                        res = session.recover();
+                    }
+                    res
+                });
                 let stats = stats?;
                 let (merged_trace, merged_pre) = session.merged_state()?;
-                store::save_trace_atomic(Path::new(&out_trace), &merged_trace)?;
-                store::save_preprocessed_atomic(Path::new(&out_pre), &merged_pre)?;
+                store::save_trace_atomic(&staged_path(&finals[0]), &merged_trace)?;
+                store::save_preprocessed_atomic(&staged_path(&finals[1]), &merged_pre)?;
+                commit_files(&publish_journal, &finals)?;
                 println!(
                     "ingested {} triples across {shards} shards in {} (index now {} \
                      triples, {} components, {} sets)",
@@ -267,11 +335,13 @@ fn run(args: &Args) -> Result<()> {
             let mut idx = IncrementalIndex::new(trace, pre, g, splits)?;
             let (delta, dur) = provspark::util::timer::time_it(|| idx.apply(&batch));
             let delta = delta?;
-            // Atomic temp-file + rename saves: the defaults overwrite the
-            // inputs in place, and an interrupted write must not destroy
-            // the only copy of the index.
-            store::save_trace_atomic(Path::new(&out_trace), idx.trace())?;
-            store::save_preprocessed_atomic(Path::new(&out_pre), idx.pre())?;
+            // Two-phase publish: the defaults overwrite the inputs in
+            // place, and trace + index are *two* files — staging both and
+            // committing through a journal closes the crash window where
+            // one is new and the other old (two bare renames cannot).
+            store::save_trace_atomic(&staged_path(&finals[0]), idx.trace())?;
+            store::save_preprocessed_atomic(&staged_path(&finals[1]), idx.pre())?;
+            commit_files(&publish_journal, &finals)?;
             println!(
                 "ingested {} triples in {} (epoch {}; index now {} triples, {} components, \
                  {} sets)",
@@ -295,35 +365,43 @@ fn run(args: &Args) -> Result<()> {
             if items.is_empty() {
                 bail!("--item required (raw id or e:serial; repeat for a batch)");
             }
+            let deadline = args
+                .get("deadline-ms")
+                .map(|ms| ms.parse::<u64>().context("--deadline-ms"))
+                .transpose()?
+                .map(Duration::from_millis);
+            let retries: u32 = args.get_parsed_or("retries", 0)?;
             let mut reqs = Vec::with_capacity(items.len());
             for item in items {
                 let mut req = QueryRequest::new(parse_item(item)?);
                 req.max_depth = args.get("max-depth").map(str::parse).transpose()?;
                 req.max_triples = args.get("max-triples").map(str::parse).transpose()?;
                 req.tau_override = args.get("tau-override").map(str::parse).transpose()?;
+                req.deadline = deadline;
+                req.retries = retries;
                 reqs.push(req);
             }
             let shards: usize = args.get_parsed_or("shards", 1)?;
-            let (responses, shard_report, dur) = if shards > 1 {
+            let (responses, outcomes, shard_report, dur) = if shards > 1 {
                 let session =
                     ShardedSession::new(&ecfg, Arc::new(trace), Arc::new(pre), shards)?;
                 let ((responses, report), dur) = provspark::util::timer::time_it(|| {
                     session.query_many_report_on(router, &reqs)
                 });
-                (responses, Some(report), dur)
+                let outcomes = report.outcomes.clone();
+                (responses, outcomes, Some(report), dur)
             } else {
                 let session = ProvSession::new(&ecfg, Arc::new(trace), Arc::new(pre))?;
-                let (responses, dur) = provspark::util::timer::time_it(|| {
-                    if reqs.len() == 1 {
-                        vec![session.execute_on(router, &reqs[0])]
-                    } else {
-                        // Batches fan out across the worker pool.
-                        session.query_many_on(router, &reqs)
-                    }
+                // Supervised execution: per-item retry budget, failures
+                // isolated (a failed item reports `failed`, the rest of the
+                // batch still answers).
+                let (pairs, dur) = provspark::util::timer::time_it(|| {
+                    session.query_many_outcomes_on(router, &reqs)
                 });
-                (responses, None, dur)
+                let (responses, outcomes): (Vec<_>, Vec<_>) = pairs.into_iter().unzip();
+                (responses, outcomes, None, dur)
             };
-            for (req, resp) in reqs.iter().zip(&responses) {
+            for ((req, resp), outcome) in reqs.iter().zip(&responses).zip(&outcomes) {
                 let lineage = &resp.lineage;
                 println!(
                     "{} ({}): {} ancestors, {} triples, {} transformations in {}",
@@ -335,6 +413,16 @@ fn run(args: &Args) -> Result<()> {
                     human_duration(resp.stats.total_time()),
                 );
                 println!("  stats: {}", resp.stats.summary());
+                let c = &resp.stats.completeness;
+                if c.exhausted {
+                    println!("  outcome: {outcome}");
+                } else {
+                    println!(
+                        "  outcome: {outcome} — a depth-{} prefix of the full lineage \
+                         ({} frontier node(s) unexplored at the cut)",
+                        c.rounds_done, c.frontier_remaining,
+                    );
+                }
                 if args.has_flag("verbose") {
                     for t in &lineage.triples {
                         println!("  {} -> {} via op{}", t.src, t.dst, t.op.0);

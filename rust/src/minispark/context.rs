@@ -1,9 +1,11 @@
-//! The engine handle: worker pool + config + metrics, and the job runner
-//! that charges the simulated per-job scheduling overhead.
+//! The engine handle: worker pool + config + metrics, and the supervised
+//! job runner that charges the simulated per-job scheduling overhead,
+//! probes the fault injector, and retries panicking tasks.
 
 use super::metrics::EngineMetrics;
 use crate::config::ClusterConfig;
-use crate::exec::par_map_indexed;
+use crate::exec::{par_map_supervised, RetryPolicy};
+use crate::fault::{FaultInjector, FaultSite};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -18,11 +20,17 @@ pub struct MiniSpark {
 struct Inner {
     cfg: ClusterConfig,
     metrics: EngineMetrics,
+    /// Armed from `cfg.fault_plan`; `None` on production configs.
+    fault: Option<Arc<FaultInjector>>,
+    retry: RetryPolicy,
 }
 
 impl MiniSpark {
     pub fn new(cfg: ClusterConfig) -> Self {
-        Self { inner: Arc::new(Inner { cfg, metrics: EngineMetrics::default() }) }
+        let fault = cfg.fault_plan.clone().map(|p| Arc::new(FaultInjector::new(p)));
+        let retry =
+            RetryPolicy::new(cfg.task_retries, Duration::from_micros(cfg.retry_backoff_us));
+        Self { inner: Arc::new(Inner { cfg, metrics: EngineMetrics::default(), fault, retry }) }
     }
 
     /// Default-configured engine (used by tests and examples).
@@ -49,12 +57,28 @@ impl MiniSpark {
         self.inner.cfg.shuffle_elision
     }
 
+    /// The armed fault injector, if the config carries a fault plan. The
+    /// `Dataset` shuffle paths probe it; callers can read its fired-fault
+    /// tally for reports.
+    pub fn fault(&self) -> Option<&Arc<FaultInjector>> {
+        self.inner.fault.as_ref()
+    }
+
     /// Run one *job*: charge the simulated scheduling overhead, then execute
     /// `tasks` closures (one per involved partition) on the worker pool and
     /// return their outputs in order.
     ///
+    /// Every task attempt runs supervised: a panic (injected or real) is
+    /// caught and the task re-run up to `cfg.task_retries` times with
+    /// capped exponential backoff — safe because task closures read
+    /// `Arc`-shared partitions and build fresh outputs, so an abandoned
+    /// attempt leaves nothing behind. A task that exhausts its budget fails
+    /// the job: the panic resurfaces carrying the typed
+    /// [`TaskError`](crate::exec::TaskError) message, to be caught at the
+    /// harness's supervised execution boundaries.
+    ///
     /// Every public `Dataset` operation funnels through here so the job /
-    /// task accounting is uniform.
+    /// task accounting (and the fault-injection task probe) is uniform.
     pub fn run_job<T, U, F>(&self, inputs: &[T], f: F) -> Vec<U>
     where
         T: Sync,
@@ -68,7 +92,23 @@ impl MiniSpark {
             // Models Spark driver → scheduler → executor launch latency.
             std::thread::sleep(Duration::from_micros(overhead));
         }
-        par_map_indexed(inputs, self.inner.cfg.executors, f)
+        let fault = self.inner.fault.as_deref();
+        let (out, sup) =
+            par_map_supervised(inputs, self.inner.cfg.executors, &self.inner.retry, |i, t| {
+                if let Some(inj) = fault {
+                    inj.fire_task(FaultSite::Task);
+                }
+                f(i, t)
+            });
+        if sup.retries > 0 {
+            self.inner.metrics.add_tasks_retried(sup.retries);
+        }
+        out.into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(e) => panic!("{e}"),
+            })
+            .collect()
     }
 }
 
@@ -115,5 +155,27 @@ mod tests {
         let sc2 = sc.clone();
         let _ = sc2.run_job(&[1u32], |_, &x| x);
         assert_eq!(sc.metrics().snapshot().jobs, 1);
+    }
+
+    #[test]
+    fn injected_task_faults_are_retried_transparently() {
+        // 20% of task probes panic; 9 retries make exhausting the budget
+        // (p^10 per task) impossible in practice, so the job's *answers*
+        // are indistinguishable from a fault-free run.
+        let cfg = ClusterConfig {
+            job_overhead_us: 0,
+            fault_plan: Some("panic:task:0.2,seed=9".parse().unwrap()),
+            task_retries: 9,
+            retry_backoff_us: 0,
+            ..Default::default()
+        };
+        let sc = MiniSpark::new(cfg);
+        let inputs: Vec<u32> = (0..64).collect();
+        let out = sc.run_job(&inputs, |_, &x| x * 2);
+        assert_eq!(out, (0..64).map(|x| x * 2).collect::<Vec<_>>());
+        let snap = sc.metrics().snapshot();
+        assert!(snap.tasks_retried > 0, "0.2 over 64+ probes must fire");
+        assert_eq!(sc.fault().unwrap().fired(), snap.tasks_retried);
+        assert!(snap.summary().contains("retried="));
     }
 }

@@ -2,6 +2,7 @@
 
 use super::context::MiniSpark;
 use super::partitioner::{HashPartitioner, KeyTag};
+use crate::fault::FaultSite;
 use rustc_hash::FxHashMap;
 use std::sync::Arc;
 
@@ -105,7 +106,11 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         let chunk = rows.len().div_ceil(np).max(1);
         let chunks: Vec<&[T]> = rows.chunks(chunk).collect();
         let kf = Arc::clone(&key_fn);
+        let fault = sc.fault().cloned();
         let buckets: Vec<Vec<Vec<T>>> = sc.run_job(&chunks, |_, part| {
+            if let Some(inj) = &fault {
+                inj.fire_task(FaultSite::Shuffle);
+            }
             let mut out: Vec<Vec<T>> = (0..np).map(|_| Vec::new()).collect();
             for row in part.iter() {
                 out[partitioner.partition_of(kf(row))].push(row.clone());
@@ -237,7 +242,11 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
 
         // Map side: bucket each input partition's rows by target.
         let kf = Arc::clone(&key_fn);
+        let fault = self.sc.fault().cloned();
         let buckets: Vec<Vec<Vec<T>>> = self.sc.run_job(&self.partitions, |_, part| {
+            if let Some(inj) = &fault {
+                inj.fire_task(FaultSite::Shuffle);
+            }
             let mut out: Vec<Vec<T>> = (0..np).map(|_| Vec::new()).collect();
             for row in part.iter() {
                 out[partitioner.partition_of(kf(row))].push(row.clone());
@@ -278,7 +287,11 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         self.sc.metrics().add_shuffled(rows.len() as u64);
         let work: Vec<(Arc<Vec<T>>, Vec<T>)> =
             self.partitions.iter().cloned().zip(buckets).collect();
+        let fault = self.sc.fault().cloned();
         let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&work, |_, (part, extra)| {
+            if let Some(inj) = &fault {
+                inj.fire_task(FaultSite::Shuffle);
+            }
             if extra.is_empty() {
                 Arc::clone(part)
             } else {
@@ -800,6 +813,7 @@ mod tests {
             default_partitions: 8,
             job_overhead_us: 0,
             shuffle_elision: true,
+            ..Default::default()
         })
     }
 
@@ -1056,6 +1070,7 @@ mod tests {
             default_partitions: 8,
             job_overhead_us: 0,
             shuffle_elision: false,
+            ..Default::default()
         });
         let rows: Vec<(u64, u64)> = (0..100).map(|i| (i % 7, i)).collect();
         let d = Dataset::from_vec(&s, rows, 4).partition_by_key(4);

@@ -19,6 +19,9 @@ pub struct EngineMetrics {
     /// Rows removed by map-side combining before the shuffle (input rows
     /// minus pre-aggregated rows actually moved).
     pub rows_combined: AtomicU64,
+    /// Task attempts re-run by the supervisor after a caught panic (fault
+    /// injection or a real bug; see `exec::par_map_supervised`).
+    pub tasks_retried: AtomicU64,
 }
 
 /// A point-in-time copy of the counters, with subtraction for deltas.
@@ -32,6 +35,7 @@ pub struct MetricsSnapshot {
     pub rows_collected: u64,
     pub shuffles_elided: u64,
     pub rows_combined: u64,
+    pub tasks_retried: u64,
 }
 
 impl EngineMetrics {
@@ -45,6 +49,7 @@ impl EngineMetrics {
             rows_collected: self.rows_collected.load(Ordering::Relaxed),
             shuffles_elided: self.shuffles_elided.load(Ordering::Relaxed),
             rows_combined: self.rows_combined.load(Ordering::Relaxed),
+            tasks_retried: self.tasks_retried.load(Ordering::Relaxed),
         }
     }
 
@@ -83,6 +88,11 @@ impl EngineMetrics {
     pub fn add_combined(&self, rows: u64) {
         self.rows_combined.fetch_add(rows, Ordering::Relaxed);
     }
+
+    #[inline]
+    pub fn add_tasks_retried(&self, n: u64) {
+        self.tasks_retried.fetch_add(n, Ordering::Relaxed);
+    }
 }
 
 impl MetricsSnapshot {
@@ -97,13 +107,14 @@ impl MetricsSnapshot {
             rows_collected: self.rows_collected - earlier.rows_collected,
             shuffles_elided: self.shuffles_elided - earlier.shuffles_elided,
             rows_combined: self.rows_combined - earlier.rows_combined,
+            tasks_retried: self.tasks_retried - earlier.tasks_retried,
         }
     }
 
     pub fn summary(&self) -> String {
         format!(
             "jobs={} tasks={} parts_scanned={} rows_scanned={} shuffled={} collected={} \
-             elided={} combined={}",
+             elided={} combined={} retried={}",
             self.jobs,
             self.tasks,
             self.partitions_scanned,
@@ -112,6 +123,7 @@ impl MetricsSnapshot {
             crate::util::fmt::human_count(self.rows_collected),
             self.shuffles_elided,
             crate::util::fmt::human_count(self.rows_combined),
+            self.tasks_retried,
         )
     }
 }

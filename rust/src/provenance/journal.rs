@@ -1,0 +1,428 @@
+//! Write-ahead journaling for multi-step state mutations.
+//!
+//! Two cooperating pieces:
+//!
+//! * [`MigrationJournal`] — records a sharded-ingest migration plan
+//!   *before* any shard mutates, then commits each step as it lands. Every
+//!   step is all-or-nothing at the [`ProvSession`] layer (a failed
+//!   `ingest`/`replace_state` leaves the served epoch untouched), so the
+//!   journal cursor is an exact resume point: `ShardedSession::recover`
+//!   re-runs the plan from the first uncommitted step and converges to the
+//!   same final state the uninterrupted ingest would have reached. The
+//!   journal lives in memory and, when a path is configured, mirrors to a
+//!   human-readable file — a crashed *process* leaves that file behind as
+//!   evidence the batch never fully applied (the CLI reports it and rolls
+//!   back on startup: stored state is always the pre-batch state, because
+//!   stores are only rewritten after a batch completes).
+//!
+//! * [`commit_files`] / [`recover_commit`] — a two-phase publish for the
+//!   store files themselves. The CLI persists trace + index as *two* files;
+//!   two bare renames leave a crash window where one file is new and the
+//!   other old. Instead, every file is staged (`<final>.staged`, fsynced),
+//!   a journal naming the publish set is fsynced, and only then are the
+//!   staged files renamed over the finals. On startup, [`recover_commit`]
+//!   rolls an interrupted publish forward (journal present ⇒ staging was
+//!   complete) or discards orphaned staged files (no journal ⇒ the publish
+//!   never became durable).
+//!
+//! All file operations probe the thread-local fault injector at
+//! [`FaultSite::Journal`] (see [`crate::fault::io_probe`]), so crash
+//! recovery is testable by injection.
+//!
+//! [`ProvSession`]: crate::harness::ProvSession
+
+use crate::fault::{io_probe, FaultSite};
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::{self, File, OpenOptions};
+use std::hash::Hasher;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// First line of every journal file.
+pub const JOURNAL_MAGIC: &str = "PSPKJRNL1";
+
+/// Deterministic fingerprint of a step plan (content-addresses the plan so
+/// a resumed journal can be checked against the plan it was written for).
+pub fn plan_fingerprint(steps: &[String]) -> u64 {
+    let mut h = rustc_hash::FxHasher::default();
+    for s in steps {
+        h.write(s.as_bytes());
+        h.write_u8(0xff);
+    }
+    h.finish()
+}
+
+/// The write-ahead record of one sharded-ingest migration plan: the full
+/// step list written up front, plus a commit cursor advanced as steps land.
+#[derive(Debug)]
+pub struct MigrationJournal {
+    fingerprint: u64,
+    steps: Vec<String>,
+    done: usize,
+    path: Option<PathBuf>,
+}
+
+impl MigrationJournal {
+    /// Start a journal for `steps`, durably recording the whole plan (when
+    /// `path` is given) before the caller mutates anything.
+    pub fn begin(steps: Vec<String>, path: Option<&Path>) -> Result<Self> {
+        let fingerprint = plan_fingerprint(&steps);
+        let j = Self { fingerprint, steps, done: 0, path: path.map(Path::to_path_buf) };
+        if let Some(p) = &j.path {
+            io_probe(FaultSite::Journal)?;
+            let mut body = format!("{JOURNAL_MAGIC}\nfingerprint {fingerprint:016x}\n");
+            for (i, s) in j.steps.iter().enumerate() {
+                body.push_str(&format!("step {i} {s}\n"));
+            }
+            write_sync(p, body.as_bytes())
+                .with_context(|| format!("writing migration journal {}", p.display()))?;
+        }
+        Ok(j)
+    }
+
+    /// Parse a journal file left by an interrupted run. `Ok(None)` when no
+    /// file exists (the common, clean case).
+    pub fn load(path: &Path) -> Result<Option<Self>> {
+        io_probe(FaultSite::Journal)?;
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading migration journal {}", path.display()))
+            }
+        };
+        let mut lines = text.lines();
+        ensure!(
+            lines.next() == Some(JOURNAL_MAGIC),
+            "migration journal {} has a bad magic line (not a {JOURNAL_MAGIC} file)",
+            path.display()
+        );
+        let fp_line = lines
+            .next()
+            .with_context(|| format!("migration journal {} is truncated", path.display()))?;
+        let fingerprint = fp_line
+            .strip_prefix("fingerprint ")
+            .and_then(|h| u64::from_str_radix(h, 16).ok())
+            .with_context(|| {
+                format!("migration journal {}: bad fingerprint line {fp_line:?}", path.display())
+            })?;
+        let mut steps = Vec::new();
+        let mut done = 0usize;
+        for line in lines {
+            if let Some(rest) = line.strip_prefix("step ") {
+                let (idx, desc) = rest.split_once(' ').with_context(|| {
+                    format!("migration journal {}: bad step line {line:?}", path.display())
+                })?;
+                ensure!(
+                    idx.parse::<usize>().ok() == Some(steps.len()),
+                    "migration journal {}: step lines out of order at {line:?}",
+                    path.display()
+                );
+                steps.push(desc.to_string());
+            } else if let Some(idx) = line.strip_prefix("commit ") {
+                ensure!(
+                    idx.parse::<usize>().ok() == Some(done),
+                    "migration journal {}: commit lines out of order at {line:?}",
+                    path.display()
+                );
+                done += 1;
+            } else if !line.is_empty() {
+                bail!("migration journal {}: unrecognized line {line:?}", path.display());
+            }
+        }
+        ensure!(
+            done <= steps.len(),
+            "migration journal {}: more commits than steps",
+            path.display()
+        );
+        Ok(Some(Self { fingerprint, steps, done, path: Some(path.to_path_buf()) }))
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn steps(&self) -> &[String] {
+        &self.steps
+    }
+
+    /// Index of the first step not yet committed — where execution resumes.
+    pub fn cursor(&self) -> usize {
+        self.done
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.done >= self.steps.len()
+    }
+
+    /// Commit the step at the cursor. The in-memory cursor advances even if
+    /// the durable append then fails (the step *did* land; in-process
+    /// recovery must not re-run it — the stale file only ever under-counts,
+    /// and the CLI's startup path treats any leftover journal as a
+    /// rolled-back batch anyway).
+    pub fn mark_done(&mut self) -> Result<()> {
+        ensure!(!self.is_complete(), "journal already complete");
+        let i = self.done;
+        self.done += 1;
+        if let Some(p) = &self.path {
+            io_probe(FaultSite::Journal)?;
+            append_sync(p, format!("commit {i}\n").as_bytes())
+                .with_context(|| format!("committing step {i} to {}", p.display()))?;
+        }
+        Ok(())
+    }
+
+    /// All steps landed: retire the journal (removes the file, if any).
+    pub fn finish(self) -> Result<()> {
+        ensure!(self.is_complete(), "journal finished with uncommitted steps");
+        if let Some(p) = &self.path {
+            io_probe(FaultSite::Journal)?;
+            fs::remove_file(p)
+                .with_context(|| format!("removing migration journal {}", p.display()))?;
+        }
+        Ok(())
+    }
+}
+
+/// What [`recover_commit`] found and did on startup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommitRecovery {
+    /// No interrupted publish.
+    Clean,
+    /// A publish journal existed: staging was complete, so the remaining
+    /// staged files were renamed into place (count given).
+    RolledForward(usize),
+    /// Orphaned staged files with no journal: the publish never became
+    /// durable, so they were discarded (count given).
+    RolledBack(usize),
+}
+
+/// The staging sibling of a final path (`<final>.staged`).
+pub fn staged_path(final_path: &Path) -> PathBuf {
+    let mut os = final_path.as_os_str().to_os_string();
+    os.push(".staged");
+    PathBuf::from(os)
+}
+
+/// Atomically publish a set of already-staged files: the caller has written
+/// every `staged_path(final)`; this fsyncs a journal naming the set, renames
+/// each staged file over its final path, then retires the journal. A crash
+/// at any point is recoverable by [`recover_commit`]: before the journal is
+/// durable nothing is published (staged files are discarded); after it, the
+/// whole set is rolled forward.
+pub fn commit_files(journal_path: &Path, finals: &[PathBuf]) -> Result<()> {
+    io_probe(FaultSite::Journal)?;
+    for f in finals {
+        let s = staged_path(f);
+        ensure!(s.exists(), "staged file {} missing before publish", s.display());
+    }
+    let mut body = format!("{JOURNAL_MAGIC}\n");
+    for f in finals {
+        body.push_str(&format!("publish {}\n", f.display()));
+    }
+    write_sync(journal_path, body.as_bytes())
+        .with_context(|| format!("writing publish journal {}", journal_path.display()))?;
+    for f in finals {
+        io_probe(FaultSite::Journal)?;
+        fs::rename(staged_path(f), f)
+            .with_context(|| format!("publishing {}", f.display()))?;
+    }
+    fs::remove_file(journal_path)
+        .with_context(|| format!("removing publish journal {}", journal_path.display()))?;
+    Ok(())
+}
+
+/// Startup recovery for [`commit_files`]: roll an interrupted publish
+/// forward (journal present) or discard orphaned staged files (no journal).
+/// `finals` is the full set of store paths this process publishes — used to
+/// find orphans; the roll-forward set comes from the journal itself.
+pub fn recover_commit(journal_path: &Path, finals: &[PathBuf]) -> Result<CommitRecovery> {
+    io_probe(FaultSite::Journal)?;
+    match fs::read_to_string(journal_path) {
+        Ok(text) => {
+            let mut lines = text.lines();
+            ensure!(
+                lines.next() == Some(JOURNAL_MAGIC),
+                "publish journal {} has a bad magic line",
+                journal_path.display()
+            );
+            let mut moved = 0usize;
+            for line in lines {
+                let Some(f) = line.strip_prefix("publish ") else {
+                    if line.is_empty() {
+                        continue;
+                    }
+                    bail!(
+                        "publish journal {}: unrecognized line {line:?}",
+                        journal_path.display()
+                    );
+                };
+                let f = PathBuf::from(f);
+                let s = staged_path(&f);
+                if s.exists() {
+                    fs::rename(&s, &f)
+                        .with_context(|| format!("rolling forward {}", f.display()))?;
+                    moved += 1;
+                }
+                // Staged file gone + journal present: this file was already
+                // renamed before the crash — nothing to do.
+            }
+            fs::remove_file(journal_path)
+                .with_context(|| format!("removing publish journal {}", journal_path.display()))?;
+            Ok(CommitRecovery::RolledForward(moved))
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            let mut dropped = 0usize;
+            for f in finals {
+                let s = staged_path(f);
+                if s.exists() {
+                    fs::remove_file(&s)
+                        .with_context(|| format!("discarding orphaned {}", s.display()))?;
+                    dropped += 1;
+                }
+            }
+            Ok(if dropped > 0 {
+                CommitRecovery::RolledBack(dropped)
+            } else {
+                CommitRecovery::Clean
+            })
+        }
+        Err(e) => Err(e)
+            .with_context(|| format!("reading publish journal {}", journal_path.display())),
+    }
+}
+
+fn write_sync(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut f = File::create(path)?;
+    f.write_all(bytes)?;
+    f.sync_all()
+}
+
+fn append_sync(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut f = OpenOptions::new().append(true).open(path)?;
+    f.write_all(bytes)?;
+    f.sync_all()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("provspark-journal-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn journal_round_trips_through_its_file() {
+        let d = tmpdir("roundtrip");
+        let p = d.join("migration.journal");
+        let steps = vec!["ingest shard 1".to_string(), "replace shard 0".to_string()];
+        let mut j = MigrationJournal::begin(steps.clone(), Some(&p)).unwrap();
+        assert_eq!(j.cursor(), 0);
+        j.mark_done().unwrap();
+
+        let loaded = MigrationJournal::load(&p).unwrap().expect("file exists");
+        assert_eq!(loaded.steps(), &steps[..]);
+        assert_eq!(loaded.cursor(), 1);
+        assert!(!loaded.is_complete());
+        assert_eq!(loaded.fingerprint(), plan_fingerprint(&steps));
+
+        j.mark_done().unwrap();
+        assert!(j.is_complete());
+        j.finish().unwrap();
+        assert!(MigrationJournal::load(&p).unwrap().is_none(), "finish removes the file");
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_journal_files_error_with_the_path() {
+        let d = tmpdir("corrupt");
+        for (name, body) in [
+            ("bad-magic", "NOTAJRNL\n"),
+            ("truncated", "PSPKJRNL1\n"),
+            ("bad-step-order", "PSPKJRNL1\nfingerprint 0\nstep 1 x\n"),
+            ("bad-commit", "PSPKJRNL1\nfingerprint 0\nstep 0 x\ncommit 5\n"),
+            ("garbage", "PSPKJRNL1\nfingerprint 0\nwat\n"),
+        ] {
+            let p = d.join(name);
+            fs::write(&p, body).unwrap();
+            let err = MigrationJournal::load(&p).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(name),
+                "error for {name} names the path: {err:#}"
+            );
+        }
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn publish_rolls_forward_and_back() {
+        let d = tmpdir("publish");
+        let finals = vec![d.join("trace.bin"), d.join("pre.bin")];
+        let journal = d.join("publish.journal");
+        for f in &finals {
+            fs::write(f, b"old").unwrap();
+            fs::write(staged_path(f), b"new").unwrap();
+        }
+
+        // Clean publish.
+        commit_files(&journal, &finals).unwrap();
+        assert!(!journal.exists());
+        for f in &finals {
+            assert_eq!(fs::read(f).unwrap(), b"new");
+            assert!(!staged_path(f).exists());
+        }
+        assert_eq!(recover_commit(&journal, &finals).unwrap(), CommitRecovery::Clean);
+
+        // Crash after the journal + one rename: roll forward.
+        fs::write(staged_path(&finals[1]), b"v2").unwrap();
+        fs::write(
+            &journal,
+            format!(
+                "{JOURNAL_MAGIC}\npublish {}\npublish {}\n",
+                finals[0].display(),
+                finals[1].display()
+            ),
+        )
+        .unwrap();
+        assert_eq!(
+            recover_commit(&journal, &finals).unwrap(),
+            CommitRecovery::RolledForward(1)
+        );
+        assert!(!journal.exists());
+        assert_eq!(fs::read(&finals[1]).unwrap(), b"v2");
+
+        // Crash before the journal: staged orphans are discarded.
+        fs::write(staged_path(&finals[0]), b"half").unwrap();
+        assert_eq!(
+            recover_commit(&journal, &finals).unwrap(),
+            CommitRecovery::RolledBack(1)
+        );
+        assert!(!staged_path(&finals[0]).exists());
+        assert_eq!(fs::read(&finals[0]).unwrap(), b"new", "final untouched by rollback");
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn injected_journal_io_faults_surface_as_errors() {
+        use crate::fault::{install_io_faults, FaultInjector};
+        use std::sync::Arc;
+        let d = tmpdir("faults");
+        let p = d.join("migration.journal");
+        // Every journal IO probe fails.
+        let inj =
+            Arc::new(FaultInjector::new("io:journal:1.0,seed=3".parse().unwrap()));
+        install_io_faults(Some(inj));
+        let err = MigrationJournal::begin(vec!["x".into()], Some(&p)).unwrap_err();
+        assert!(format!("{err:#}").contains("journal"), "{err:#}");
+        install_io_faults(None);
+        // Without the injector the same call succeeds.
+        MigrationJournal::begin(vec!["x".into()], Some(&p)).unwrap();
+        let _ = fs::remove_dir_all(&d);
+    }
+}

@@ -10,9 +10,12 @@
 //! live under [`incremental::TripleBatch`] deltas, and [`query`] answers
 //! lineage requests over it. Scale-out path: [`shard`] carves the
 //! component space into independent shards (components never reference
-//! each other), served by `harness::ShardedSession`.
+//! each other), served by `harness::ShardedSession`. Crash safety:
+//! [`journal`] write-ahead-journals multi-step shard migrations and
+//! two-phase-commits store publishes.
 
 pub mod incremental;
+pub mod journal;
 pub mod model;
 pub mod partition;
 pub mod pipeline;
@@ -23,6 +26,7 @@ pub mod store;
 pub mod wcc;
 
 pub use incremental::{AppliedDelta, DeltaStats, IncrementalIndex, TripleBatch};
+pub use journal::{commit_files, recover_commit, CommitRecovery, MigrationJournal};
 pub use model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 pub use pipeline::{preprocess, Preprocessed};
 pub use shard::{merge_shards, ShardAssignment, ShardPlan};

@@ -104,8 +104,11 @@ impl ProvenanceEngine for CcProvEngine {
         let tau = req.tau_override.unwrap_or(self.tau);
         let mut stats = QueryStats::new("ccprov");
 
-        // Find-Connected-Component: one partition scan.
+        // Find-Connected-Component: one partition scan. The deadline clock
+        // starts here, so resolve/assemble time counts against the budget
+        // even though only the recursion phase is cut.
         let t0 = Instant::now();
+        let deadline = req.deadline.map(|d| t0 + d);
         let (rows, cost) = self.prov.lookup_counted(q);
         stats.partitions_scanned += cost.partitions;
         stats.rows_examined += cost.rows;
@@ -131,11 +134,12 @@ impl ProvenanceEngine for CcProvEngine {
             // RQ on the cluster over the component's triples.
             stats.path = ExecPath::Cluster;
             let (lineage, bfs) =
-                rq_bfs(&c_prov, |t| t.triple, q, req.max_depth, req.max_triples);
+                rq_bfs(&c_prov, |t| t.triple, q, req.max_depth, req.max_triples, deadline);
             stats.partitions_scanned += bfs.partitions;
             stats.rows_examined += bfs.rows;
             stats.bfs_rounds = bfs.rounds;
             stats.truncated = bfs.truncated;
+            stats.completeness = bfs.completeness();
             lineage
         } else {
             // Collect to the driver and recurse locally.
@@ -143,15 +147,17 @@ impl ProvenanceEngine for CcProvEngine {
             let triples: Vec<ProvTriple> =
                 c_prov.collect().into_iter().map(|t| t.triple).collect();
             stats.rows_collected = triples.len() as u64;
-            if req.max_depth.is_none() && req.max_triples.is_none() {
+            if req.max_depth.is_none() && req.max_triples.is_none() && deadline.is_none() {
                 self.closure.closure(&triples, q)
             } else {
-                // Caps require level-order expansion, which the pluggable
-                // fixpoint closures can't provide (see QueryRequest docs).
-                let (lineage, rounds, truncated) =
-                    bounded_closure(&triples, q, req.max_depth, req.max_triples);
-                stats.bfs_rounds = rounds;
-                stats.truncated = truncated;
+                // Caps and deadlines require level-order expansion, which
+                // the pluggable fixpoint closures can't provide (see
+                // QueryRequest docs).
+                let (lineage, bfs) =
+                    bounded_closure(&triples, q, req.max_depth, req.max_triples, deadline);
+                stats.bfs_rounds = bfs.rounds;
+                stats.truncated = bfs.truncated;
+                stats.completeness = bfs.completeness();
                 lineage
             }
         };

@@ -241,8 +241,12 @@ impl ProvenanceEngine for CsProvEngine {
         let mut stats = QueryStats::new("csprov");
 
         // Find-Connected-Set: one partition scan on the node index, then
-        // the set-lineage walk over the set-dependency dataset.
+        // the set-lineage walk over the set-dependency dataset. The
+        // deadline clock starts here: resolve/assemble time counts against
+        // the budget, but only the recursion phase is cut (the set-lineage
+        // walk and assembly are small by construction — §2.3).
         let t0 = Instant::now();
+        let deadline = req.deadline.map(|d| t0 + d);
         let (rows, cost) = self.node_set.lookup_counted(q);
         stats.partitions_scanned += cost.partitions;
         stats.rows_examined += cost.rows;
@@ -279,26 +283,29 @@ impl ProvenanceEngine for CsProvEngine {
                 |t: &CsTriple| t.triple.dst.raw(),
             );
             let (lineage, bfs) =
-                rq_bfs(&by_dst, |t| t.triple, q, req.max_depth, req.max_triples);
+                rq_bfs(&by_dst, |t| t.triple, q, req.max_depth, req.max_triples, deadline);
             stats.partitions_scanned += bfs.partitions;
             stats.rows_examined += bfs.rows;
             stats.bfs_rounds = bfs.rounds;
             stats.truncated = bfs.truncated;
+            stats.completeness = bfs.completeness();
             lineage
         } else {
             stats.path = ExecPath::Driver;
             let triples: Vec<ProvTriple> =
                 cs_prov.collect().into_iter().map(|t| t.triple).collect();
             stats.rows_collected = triples.len() as u64;
-            if req.max_depth.is_none() && req.max_triples.is_none() {
+            if req.max_depth.is_none() && req.max_triples.is_none() && deadline.is_none() {
                 self.closure.closure(&triples, q)
             } else {
-                // Caps require level-order expansion, which the pluggable
-                // fixpoint closures can't provide (see QueryRequest docs).
-                let (lineage, rounds, truncated) =
-                    bounded_closure(&triples, q, req.max_depth, req.max_triples);
-                stats.bfs_rounds = rounds;
-                stats.truncated = truncated;
+                // Caps and deadlines require level-order expansion, which
+                // the pluggable fixpoint closures can't provide (see
+                // QueryRequest docs).
+                let (lineage, bfs) =
+                    bounded_closure(&triples, q, req.max_depth, req.max_triples, deadline);
+                stats.bfs_rounds = bfs.rounds;
+                stats.truncated = bfs.truncated;
+                stats.completeness = bfs.completeness();
                 lineage
             }
         };

@@ -7,8 +7,10 @@
 //! reachability kernel (see `python/compile/model.py::reach_fixpoint`).
 
 use super::result::Lineage;
+use super::rq::BfsStats;
 use crate::provenance::model::ProvTriple;
 use rustc_hash::FxHashMap;
+use std::time::Instant;
 
 /// Strategy for computing the ancestor closure of a collected triple pile.
 pub trait AncestorClosure: Send + Sync {
@@ -27,7 +29,7 @@ impl AncestorClosure for NativeClosure {
     fn closure(&self, triples: &[ProvTriple], q: u64) -> Lineage {
         // The uncapped case of the bounded traversal below; the lineage is
         // canonicalized, so the traversal order cannot show through.
-        bounded_closure(triples, q, None, None).0
+        bounded_closure(triples, q, None, None, None).0
     }
 
     fn name(&self) -> &'static str {
@@ -36,16 +38,21 @@ impl AncestorClosure for NativeClosure {
 }
 
 /// Driver-side closure honoring [`QueryRequest`](super::QueryRequest)
-/// depth/triple caps: a strict level-by-level reverse BFS whose rounds
-/// mirror the cluster engines' lookup rounds exactly, so a *capped*
-/// lineage is identical whichever engine (and whichever τ branch)
-/// answers it. Returns `(lineage, rounds_expanded, truncated)`.
+/// depth/triple caps and the absolute deadline: a strict level-by-level
+/// reverse BFS whose rounds mirror the cluster engines' lookup rounds
+/// exactly, so a *capped or deadline-cut* lineage is identical whichever
+/// engine (and whichever τ branch) answers it. The deadline is checked at
+/// the top of each round, exactly like `rq_bfs` — a run cut after `k`
+/// rounds equals a `max_depth = k` query. Returns the lineage plus the
+/// same [`BfsStats`] the cluster path reports (its `partitions` / `rows`
+/// stay zero: there are no lookup jobs on the driver).
 pub fn bounded_closure(
     triples: &[ProvTriple],
     q: u64,
     max_depth: Option<u32>,
     max_triples: Option<usize>,
-) -> (Lineage, u32, bool) {
+    deadline: Option<Instant>,
+) -> (Lineage, BfsStats) {
     let mut by_dst: FxHashMap<u64, Vec<u32>> =
         FxHashMap::with_capacity_and_hasher(triples.len(), Default::default());
     for (i, t) in triples.iter().enumerate() {
@@ -55,12 +62,18 @@ pub fn bounded_closure(
     let mut visited: rustc_hash::FxHashSet<u64> = rustc_hash::FxHashSet::default();
     visited.insert(q);
     let mut frontier = vec![q];
-    let mut rounds = 0u32;
-    let mut truncated = false;
+    let mut stats = BfsStats::default();
     while !frontier.is_empty() {
+        if let Some(t) = deadline {
+            if Instant::now() >= t {
+                stats.deadline_hit = true;
+                stats.frontier_remaining = frontier.len();
+                break;
+            }
+        }
         if let Some(d) = max_depth {
-            if rounds >= d {
-                truncated = true;
+            if stats.rounds >= d {
+                stats.truncated = true;
                 break;
             }
         }
@@ -74,16 +87,16 @@ pub fn bounded_closure(
                 }
             }
         }
-        rounds += 1;
+        stats.rounds += 1;
         if let Some(m) = max_triples {
             if out.len() >= m {
-                truncated = !next.is_empty();
+                stats.truncated = !next.is_empty();
                 break;
             }
         }
         frontier = next;
     }
-    (Lineage::from_triples(q, out), rounds, truncated)
+    (Lineage::from_triples(q, out), stats)
 }
 
 #[cfg(test)]
@@ -139,37 +152,55 @@ mod tests {
     #[test]
     fn bounded_closure_unbounded_matches_native() {
         let triples = vec![t(1, 2), t(2, 4), t(3, 4), t(4, 5), t(7, 8)];
-        let (l, rounds, truncated) = bounded_closure(&triples, raw(5), None, None);
+        let (l, stats) = bounded_closure(&triples, raw(5), None, None, None);
         assert_eq!(l, NativeClosure.closure(&triples, raw(5)));
-        assert!(!truncated);
+        assert!(!stats.truncated);
+        assert!(stats.completeness().exhausted);
         // 5 ← 4 ← {2,3} ← 1, plus one empty-frontier-detecting round.
-        assert_eq!(rounds, 4);
+        assert_eq!(stats.rounds, 4);
     }
 
     #[test]
     fn bounded_closure_depth_cap() {
         // Chain 1 → 2 → 3 → 4 → 5.
         let triples = vec![t(1, 2), t(2, 3), t(3, 4), t(4, 5)];
-        let (l, rounds, truncated) = bounded_closure(&triples, raw(5), Some(2), None);
-        assert_eq!(rounds, 2);
-        assert!(truncated);
+        let (l, stats) = bounded_closure(&triples, raw(5), Some(2), None, None);
+        assert_eq!(stats.rounds, 2);
+        assert!(stats.truncated);
         assert_eq!(l.ancestors, vec![raw(3), raw(4)]);
         // Depth 0: nothing expanded, flagged truncated.
-        let (l0, r0, t0) = bounded_closure(&triples, raw(5), Some(0), None);
+        let (l0, s0) = bounded_closure(&triples, raw(5), Some(0), None, None);
         assert!(l0.is_empty());
-        assert_eq!(r0, 0);
-        assert!(t0);
+        assert_eq!(s0.rounds, 0);
+        assert!(s0.truncated);
     }
 
     #[test]
     fn bounded_closure_triple_cap() {
         let triples = vec![t(1, 2), t(2, 3), t(3, 4), t(4, 5)];
-        let (l, _, truncated) = bounded_closure(&triples, raw(5), None, Some(2));
-        assert!(truncated);
+        let (l, stats) = bounded_closure(&triples, raw(5), None, Some(2), None);
+        assert!(stats.truncated);
         assert_eq!(l.triples.len(), 2);
         // A cap the lineage never reaches is not a truncation.
-        let (full, _, truncated) = bounded_closure(&triples, raw(5), None, Some(5));
-        assert!(!truncated);
+        let (full, stats) = bounded_closure(&triples, raw(5), None, Some(5), None);
+        assert!(!stats.truncated);
         assert_eq!(full.triples.len(), 4);
+    }
+
+    #[test]
+    fn bounded_closure_deadline_cut_is_a_depth_prefix() {
+        let triples = vec![t(1, 2), t(2, 3), t(3, 4), t(4, 5)];
+        let expired = Instant::now();
+        let (l, stats) = bounded_closure(&triples, raw(5), None, None, Some(expired));
+        assert!(l.is_empty());
+        assert!(stats.deadline_hit);
+        assert!(!stats.truncated);
+        let c = stats.completeness();
+        assert!(!c.exhausted);
+        assert_eq!(c.rounds_done, 0);
+        assert_eq!(c.frontier_remaining, 1);
+        // Equal to the max_depth = rounds_done query by construction.
+        let (prefix, _) = bounded_closure(&triples, raw(5), Some(0), None, None);
+        assert_eq!(l, prefix);
     }
 }

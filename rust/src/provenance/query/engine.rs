@@ -26,9 +26,17 @@ use std::time::Duration;
 ///   the cap by up to one round's rows).
 /// * `tau_override` — per-query override of the engine's τ driver-collect
 ///   threshold (ignored by RQ, which has no driver path).
+/// * `deadline` — wall-time budget. The BFS loops check it at every round
+///   boundary and return the partial lineage built so far plus a
+///   [`Completeness`] bound instead of an error; the partial answer is
+///   always a *prefix* of the full lineage (identical to a `max_depth`
+///   query at the round where time ran out).
+/// * `retries` — how many times the harness re-runs this query after an
+///   execution failure (a task that exhausted its in-job retry budget)
+///   before reporting [`QueryOutcome::Failed`].
 ///
-/// Note: when either cap is set and the recursion runs on the driver, the
-/// engines use the built-in level-by-level traversal
+/// Note: when a cap or deadline is set and the recursion runs on the
+/// driver, the engines use the built-in level-by-level traversal
 /// (`driver_rq::bounded_closure`) instead of the configured
 /// [`AncestorClosure`](super::AncestorClosure) backend — the pluggable
 /// closures compute full fixpoints and cannot stop at a level boundary. A
@@ -36,12 +44,19 @@ use std::time::Duration;
 ///
 /// ```
 /// use provspark::provenance::query::QueryRequest;
+/// use std::time::Duration;
 ///
 /// let req = QueryRequest::new(42).with_max_depth(3).with_tau(0);
 /// assert_eq!(req.item, 42);
 /// assert_eq!(req.max_depth, Some(3));
 /// assert_eq!(req.tau_override, Some(0));
 /// assert_eq!(req.max_triples, None); // unset options keep engine defaults
+///
+/// let bounded = QueryRequest::new(42)
+///     .with_deadline(Duration::from_millis(50))
+///     .with_retries(2);
+/// assert_eq!(bounded.deadline, Some(Duration::from_millis(50)));
+/// assert_eq!(bounded.retries, 2);
 /// ```
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct QueryRequest {
@@ -53,6 +68,12 @@ pub struct QueryRequest {
     pub max_triples: Option<usize>,
     /// Per-query τ override (driver-collect threshold).
     pub tau_override: Option<usize>,
+    /// Wall-time budget: stop at the first BFS round boundary past it and
+    /// return the partial answer with its [`Completeness`] bound.
+    pub deadline: Option<Duration>,
+    /// Whole-query retry budget on execution failure (harness-level; on
+    /// top of the per-task retries inside each job).
+    pub retries: u32,
 }
 
 impl QueryRequest {
@@ -77,6 +98,82 @@ impl QueryRequest {
     pub fn with_tau(mut self, tau: usize) -> Self {
         self.tau_override = Some(tau);
         self
+    }
+
+    /// Bound the query's wall time; past it, a partial (prefix) lineage
+    /// and its [`Completeness`] come back instead of an error.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Re-run the whole query up to `retries` times on execution failure.
+    pub fn with_retries(mut self, retries: u32) -> Self {
+        self.retries = retries;
+        self
+    }
+}
+
+/// How much of the full answer a (possibly degraded) response covers.
+///
+/// The default is the *complete* bound — engines only report otherwise
+/// when a deadline stopped the recursion with work left:
+/// `rounds_done` BFS rounds were fully expanded, `frontier_remaining`
+/// items were still waiting at the cut, and `exhausted` says whether the
+/// traversal ran to its natural fixpoint. Because every engine expands
+/// level-by-level, a deadline cut at round *k* returns exactly the lineage
+/// a `max_depth = k` query would — the partial answer is a well-defined
+/// prefix, not an arbitrary subset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completeness {
+    /// BFS rounds fully expanded before the cut.
+    pub rounds_done: u32,
+    /// Frontier items not yet expanded when the deadline hit (0 when
+    /// `exhausted`).
+    pub frontier_remaining: usize,
+    /// True when the recursion reached its fixpoint (no deadline cut).
+    pub exhausted: bool,
+}
+
+impl Default for Completeness {
+    fn default() -> Self {
+        Self { rounds_done: 0, frontier_remaining: 0, exhausted: true }
+    }
+}
+
+/// Per-request disposition in a batch report: did the query answer in
+/// full, degrade (deadline/cap cut), or fail outright after retries?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryOutcome {
+    /// Complete answer.
+    Full,
+    /// Partial answer: a request cap or the deadline stopped the
+    /// recursion early; the lineage is a prefix of the full one.
+    Partial,
+    /// Execution failed even after the request's retry budget; the
+    /// response carries an empty lineage.
+    Failed,
+}
+
+impl QueryOutcome {
+    /// Classify a response from its stats (the supervisor reports
+    /// [`QueryOutcome::Failed`] directly, never via stats).
+    pub fn of(stats: &QueryStats) -> Self {
+        if stats.truncated || !stats.completeness.exhausted {
+            QueryOutcome::Partial
+        } else {
+            QueryOutcome::Full
+        }
+    }
+}
+
+impl std::fmt::Display for QueryOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            QueryOutcome::Full => "full",
+            QueryOutcome::Partial => "partial",
+            QueryOutcome::Failed => "failed",
+        })
     }
 }
 
@@ -133,6 +230,9 @@ pub struct QueryStats {
     pub bfs_rounds: u32,
     /// True when `max_depth` / `max_triples` stopped the recursion early.
     pub truncated: bool,
+    /// Deadline bound: how much of the full traversal this answer covers
+    /// (the complete bound unless a deadline cut the recursion).
+    pub completeness: Completeness,
     /// Wall time locating the component / connected set (+ set-lineage).
     pub resolve: Duration,
     /// Wall time assembling the recursion volume (filter / pruned fetch).
@@ -153,6 +253,7 @@ impl QueryStats {
             rows_collected: 0,
             bfs_rounds: 0,
             truncated: false,
+            completeness: Completeness::default(),
             resolve: Duration::ZERO,
             assemble: Duration::ZERO,
             recurse: Duration::ZERO,
@@ -167,9 +268,17 @@ impl QueryStats {
     /// One-line rendering for CLI / bench output.
     pub fn summary(&self) -> String {
         use crate::util::fmt::{human_count, human_duration};
+        let deadline_cut = if self.completeness.exhausted {
+            String::new()
+        } else {
+            format!(
+                " deadline-cut(rounds_done={} frontier={})",
+                self.completeness.rounds_done, self.completeness.frontier_remaining
+            )
+        };
         format!(
             "engine={} path={} parts_scanned={} rows_examined={} shuffled={} collected={} \
-             rounds={}{} resolve={} assemble={} recurse={}",
+             rounds={}{}{} resolve={} assemble={} recurse={}",
             self.engine,
             self.path,
             self.partitions_scanned,
@@ -178,6 +287,7 @@ impl QueryStats {
             human_count(self.rows_collected),
             self.bfs_rounds,
             if self.truncated { " truncated" } else { "" },
+            deadline_cut,
             human_duration(self.resolve),
             human_duration(self.assemble),
             human_duration(self.recurse),
@@ -265,5 +375,27 @@ mod tests {
         assert!(!line.contains("truncated"));
         s.truncated = true;
         assert!(s.summary().contains("truncated"));
+    }
+
+    #[test]
+    fn completeness_default_is_the_complete_bound() {
+        let c = Completeness::default();
+        assert!(c.exhausted);
+        assert_eq!(c.rounds_done, 0);
+        assert_eq!(c.frontier_remaining, 0);
+    }
+
+    #[test]
+    fn outcome_classification_and_summary_marker() {
+        let mut s = QueryStats::new("rq");
+        assert_eq!(QueryOutcome::of(&s), QueryOutcome::Full);
+        s.truncated = true;
+        assert_eq!(QueryOutcome::of(&s), QueryOutcome::Partial);
+        s.truncated = false;
+        s.completeness = Completeness { rounds_done: 2, frontier_remaining: 7, exhausted: false };
+        assert_eq!(QueryOutcome::of(&s), QueryOutcome::Partial);
+        let line = s.summary();
+        assert!(line.contains("deadline-cut(rounds_done=2 frontier=7)"), "{line}");
+        assert_eq!(QueryOutcome::Failed.to_string(), "failed");
     }
 }

@@ -58,6 +58,9 @@ pub mod rq;
 pub use ccprov::CcProvEngine;
 pub use csprov::{CsDelta, CsProvEngine};
 pub use driver_rq::{AncestorClosure, NativeClosure};
-pub use engine::{ExecPath, ProvenanceEngine, QueryRequest, QueryResponse, QueryStats};
+pub use engine::{
+    Completeness, ExecPath, ProvenanceEngine, QueryOutcome, QueryRequest, QueryResponse,
+    QueryStats,
+};
 pub use result::Lineage;
 pub use rq::RqEngine;

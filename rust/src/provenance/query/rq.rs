@@ -7,7 +7,9 @@
 //! the *whole dataset's* partition sizes — which is why RQ degrades as the
 //! trace scales (Tables 10–12) and why CCProv/CSProv shrink the data first.
 
-use super::engine::{ExecPath, ProvenanceEngine, QueryRequest, QueryResponse, QueryStats};
+use super::engine::{
+    Completeness, ExecPath, ProvenanceEngine, QueryRequest, QueryResponse, QueryStats,
+};
 use super::result::Lineage;
 use crate::minispark::{Dataset, MiniSpark};
 use crate::provenance::model::ProvTriple;
@@ -15,24 +17,54 @@ use rustc_hash::FxHashSet;
 use std::time::Instant;
 
 /// Cost of one recursive-querying run: rounds executed, partitions and rows
-/// scanned by the lookup jobs, and whether a request cap stopped it early.
+/// scanned by the lookup jobs, whether a request cap stopped it early, and
+/// the deadline bound (how much frontier was left when time ran out).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BfsStats {
     pub rounds: u32,
     pub partitions: u64,
     pub rows: u64,
     pub truncated: bool,
+    /// Frontier items still unexpanded when the deadline stopped the
+    /// traversal (meaningful only with `deadline_hit`).
+    pub frontier_remaining: usize,
+    /// True when the deadline — not a cap or the fixpoint — ended the run.
+    pub deadline_hit: bool,
+}
+
+impl BfsStats {
+    /// The [`Completeness`] bound this run supports: the complete bound
+    /// unless the deadline cut the traversal, in which case the answer
+    /// covers exactly `rounds` fully-expanded levels.
+    pub fn completeness(&self) -> Completeness {
+        if self.deadline_hit {
+            Completeness {
+                rounds_done: self.rounds,
+                frontier_remaining: self.frontier_remaining,
+                exhausted: false,
+            }
+        } else {
+            Completeness::default()
+        }
+    }
 }
 
 /// Recursive querying over any dst-partitioned row type, with per-query
-/// cost accounting and the [`QueryRequest`] depth / triple caps.
-/// `to_triple` projects a row to its provenance triple.
+/// cost accounting, the [`QueryRequest`] depth / triple caps, and an
+/// optional absolute deadline.
+///
+/// The deadline is checked at the same place as the depth cap — the top of
+/// each round — so a run cut after `k` rounds returns *exactly* the
+/// lineage of a `max_depth = k` query: the degraded answer is a
+/// well-defined prefix. `to_triple` projects a row to its provenance
+/// triple.
 pub fn rq_bfs<T: Send + Sync + Clone + 'static>(
     ds: &Dataset<T>,
     to_triple: impl Fn(&T) -> ProvTriple + Send + Sync,
     q: u64,
     max_depth: Option<u32>,
     max_triples: Option<usize>,
+    deadline: Option<Instant>,
 ) -> (Lineage, BfsStats) {
     let mut stats = BfsStats::default();
     let mut collected: Vec<ProvTriple> = Vec::new();
@@ -40,6 +72,13 @@ pub fn rq_bfs<T: Send + Sync + Clone + 'static>(
     visited.insert(q);
     let mut frontier = vec![q];
     while !frontier.is_empty() {
+        if let Some(t) = deadline {
+            if Instant::now() >= t {
+                stats.deadline_hit = true;
+                stats.frontier_remaining = frontier.len();
+                break;
+            }
+        }
         if let Some(d) = max_depth {
             if stats.rounds >= d {
                 stats.truncated = true;
@@ -76,7 +115,7 @@ pub fn rq_on_spark_generic<T: Send + Sync + Clone + 'static>(
     to_triple: impl Fn(&T) -> ProvTriple + Send + Sync,
     q: u64,
 ) -> Lineage {
-    rq_bfs(ds, to_triple, q, None, None).0
+    rq_bfs(ds, to_triple, q, None, None, None).0
 }
 
 /// The RQ baseline engine: recursive querying over the full trace.
@@ -129,12 +168,14 @@ impl ProvenanceEngine for RqEngine {
         let mut stats = QueryStats::new("rq");
         stats.path = ExecPath::Cluster;
         let t0 = Instant::now();
+        let deadline = req.deadline.map(|d| t0 + d);
         let (lineage, bfs) =
-            rq_bfs(&self.prov, |t| *t, req.item, req.max_depth, req.max_triples);
+            rq_bfs(&self.prov, |t| *t, req.item, req.max_depth, req.max_triples, deadline);
         stats.partitions_scanned = bfs.partitions;
         stats.rows_examined = bfs.rows;
         stats.bfs_rounds = bfs.rounds;
         stats.truncated = bfs.truncated;
+        stats.completeness = bfs.completeness();
         stats.recurse = t0.elapsed();
         QueryResponse { lineage, stats }
     }
@@ -246,6 +287,47 @@ mod tests {
 
         let full = engine.execute(&QueryRequest::new(q));
         assert!(!full.stats.truncated);
+        assert_eq!(full.lineage.triples.len(), 6);
+    }
+
+    #[test]
+    fn rq_deadline_yields_a_prefix_with_a_completeness_bound() {
+        use std::time::Duration;
+        let e = EntityId(0);
+        let triples: Vec<ProvTriple> = (0..6)
+            .map(|i| {
+                ProvTriple::new(
+                    AttrValueId::new(e, i + 1),
+                    AttrValueId::new(e, i),
+                    OpId(0),
+                )
+            })
+            .collect();
+        let trace = Trace::new(triples);
+        let engine = RqEngine::new(&sc(), &trace.triples, 4);
+        let q = AttrValueId::new(e, 0).raw();
+
+        // A zero deadline is already expired at the first round check: the
+        // answer is empty but well-formed, and the bound says so.
+        let cut = engine.execute(&QueryRequest::new(q).with_deadline(Duration::ZERO));
+        assert!(cut.lineage.is_empty());
+        let c = cut.stats.completeness;
+        assert!(!c.exhausted);
+        assert_eq!(c.rounds_done, 0);
+        assert_eq!(c.frontier_remaining, 1);
+        // Deadline cuts are reported via the bound, not the cap flag.
+        assert!(!cut.stats.truncated);
+        assert!(cut.stats.summary().contains("deadline-cut"));
+
+        // The degraded answer is exactly the max_depth=rounds_done prefix.
+        let prefix = engine.execute(&QueryRequest::new(q).with_max_depth(c.rounds_done));
+        assert_eq!(cut.lineage, prefix.lineage);
+
+        // A generous deadline changes nothing.
+        let full = engine.execute(
+            &QueryRequest::new(q).with_deadline(Duration::from_secs(3600)),
+        );
+        assert!(full.stats.completeness.exhausted);
         assert_eq!(full.lineage.triples.len(), 6);
     }
 }

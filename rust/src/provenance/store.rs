@@ -16,6 +16,7 @@
 //! until re-preprocessed, and a v2 index ingests without workflow
 //! validation (fingerprint unrecorded).
 
+use crate::fault::{io_probe, FaultSite};
 use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 use crate::provenance::pipeline::Preprocessed;
 use crate::util::ids::{AttrValueId, ComponentId, OpId, SetId};
@@ -51,6 +52,23 @@ fn r_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+/// Validate an on-disk record count against the file's actual size before
+/// any allocation sized by it. A flipped bit (or a file truncated mid-
+/// header) can make a count field claim, say, `u64::MAX` records; feeding
+/// that into `Vec::with_capacity` aborts the process on allocation failure
+/// instead of returning an error. `record_bytes` is the fixed on-disk size
+/// of one record, so `n` records can never be genuine unless
+/// `n * record_bytes` fits in the file.
+fn checked_count(n: u64, record_bytes: u64, file_len: u64, what: &str) -> Result<usize> {
+    match n.checked_mul(record_bytes) {
+        Some(bytes) if bytes <= file_len => Ok(n as usize),
+        _ => bail!(
+            "{what} count {n} is implausible for a {file_len}-byte file \
+             ({record_bytes} bytes per record): corrupt or truncated header"
+        ),
+    }
+}
+
 fn w_triple(w: &mut impl Write, t: &ProvTriple) -> Result<()> {
     w_u64(w, t.src.raw())?;
     w_u64(w, t.dst.raw())?;
@@ -67,6 +85,7 @@ fn r_triple(r: &mut impl Read) -> Result<ProvTriple> {
 
 /// Save a raw trace.
 pub fn save_trace(path: &Path, trace: &Trace) -> Result<()> {
+    io_probe(FaultSite::StoreIo)?;
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC_TRACE)?;
@@ -84,14 +103,17 @@ pub fn load_trace(path: &Path) -> Result<Trace> {
 }
 
 fn load_trace_inner(path: &Path) -> Result<Trace> {
+    io_probe(FaultSite::StoreIo)?;
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file_len = f.metadata().with_context(|| format!("stat {path:?}"))?.len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("read magic")?;
     if &magic != MAGIC_TRACE {
         bail!("not a provspark trace file (bad magic)");
     }
-    let n = r_u64(&mut r)? as usize;
+    let n = r_u64(&mut r).context("read triple count")?;
+    let n = checked_count(n, 20, file_len, "triple")?;
     let mut triples = Vec::with_capacity(n);
     for _ in 0..n {
         triples.push(r_triple(&mut r)?);
@@ -103,6 +125,7 @@ fn load_trace_inner(path: &Path) -> Result<Trace> {
 /// including the incremental-epoch header (θ / big-set bound / epoch), the
 /// workflow fingerprint and the shard assignment.
 pub fn save_preprocessed(path: &Path, pre: &Preprocessed) -> Result<()> {
+    io_probe(FaultSite::StoreIo)?;
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC_PRE)?;
@@ -170,7 +193,9 @@ pub fn load_preprocessed(path: &Path) -> Result<Preprocessed> {
 }
 
 fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
+    io_probe(FaultSite::StoreIo)?;
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file_len = f.metadata().with_context(|| format!("stat {path:?}"))?.len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("read magic")?;
@@ -192,13 +217,15 @@ fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
         pre.shard_count = r_u64(&mut r).context("read shard_count")?;
     }
 
-    let n = r_u64(&mut r)? as usize;
+    let n = r_u64(&mut r).context("read cc_triples count")?;
+    let n = checked_count(n, 28, file_len, "cc_triples")?;
     pre.cc_triples.reserve(n);
     for _ in 0..n {
         let triple = r_triple(&mut r)?;
         pre.cc_triples.push(CcTriple { triple, ccid: ComponentId(r_u64(&mut r)?) });
     }
-    let n = r_u64(&mut r)? as usize;
+    let n = r_u64(&mut r).context("read cs_triples count")?;
+    let n = checked_count(n, 36, file_len, "cs_triples")?;
     pre.cs_triples.reserve(n);
     for _ in 0..n {
         let triple = r_triple(&mut r)?;
@@ -208,36 +235,42 @@ fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
             dst_csid: SetId(r_u64(&mut r)?),
         });
     }
-    let n = r_u64(&mut r)? as usize;
+    let n = r_u64(&mut r).context("read set_deps count")?;
+    let n = checked_count(n, 16, file_len, "set_deps")?;
+    pre.set_deps.reserve(n);
     for _ in 0..n {
         pre.set_deps.push(SetDep {
             src_csid: SetId(r_u64(&mut r)?),
             dst_csid: SetId(r_u64(&mut r)?),
         });
     }
-    let n = r_u64(&mut r)? as usize;
+    let n = r_u64(&mut r).context("read cc_of count")?;
+    let n = checked_count(n, 16, file_len, "cc_of")?;
     pre.cc_of = FxHashMap::with_capacity_and_hasher(n, Default::default());
     for _ in 0..n {
         let k = r_u64(&mut r)?;
         let v = r_u64(&mut r)?;
         pre.cc_of.insert(k, v);
     }
-    let n = r_u64(&mut r)? as usize;
+    let n = r_u64(&mut r).context("read cs_of count")?;
+    let n = checked_count(n, 16, file_len, "cs_of")?;
     pre.cs_of = FxHashMap::with_capacity_and_hasher(n, Default::default());
     for _ in 0..n {
         let k = r_u64(&mut r)?;
         let v = r_u64(&mut r)?;
         pre.cs_of.insert(k, v);
     }
-    let n = r_u64(&mut r)? as usize;
+    let n = r_u64(&mut r).context("read large_components count")?;
+    let n = checked_count(n, 24, file_len, "large_components")?;
+    pre.large_components.reserve(n);
     for _ in 0..n {
         let cc = r_u64(&mut r)?;
         let nodes = r_u64(&mut r)? as usize;
         let edges = r_u64(&mut r)? as usize;
         pre.large_components.push((cc, nodes, edges));
     }
-    pre.component_count = r_u64(&mut r)? as usize;
-    pre.set_count = r_u64(&mut r)? as usize;
+    pre.component_count = r_u64(&mut r).context("read component_count")? as usize;
+    pre.set_count = r_u64(&mut r).context("read set_count")? as usize;
     Ok(pre)
 }
 
@@ -494,6 +527,91 @@ mod tests {
         std::fs::write(&p, b"PSPKPRE2").unwrap();
         let err = format!("{:#}", load_preprocessed(&p).unwrap_err());
         assert!(err.contains("truncated.bin"), "error must name the path: {err}");
+    }
+
+    /// A flipped bit in a count field must come back as a named error, not
+    /// an allocation-failure abort: every count is validated against the
+    /// file's actual size before it sizes a `Vec`/map.
+    #[test]
+    fn implausible_counts_are_errors_not_aborts() {
+        // Trace whose header claims u64::MAX triples in a 16-byte body.
+        let p = tmp("huge_trace_count.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKTRC1");
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let err = format!("{:#}", load_trace(&p).unwrap_err());
+        assert!(
+            err.contains("huge_trace_count.bin") && err.contains("implausible"),
+            "expected a named implausible-count error: {err}"
+        );
+
+        // Preprocessed v3 whose first section count is u64::MAX.
+        let p = tmp("huge_pre_count.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKPRE3");
+        bytes.extend_from_slice(&[0u8; 6 * 8]); // zeroed v3 header
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let err = format!("{:#}", load_preprocessed(&p).unwrap_err());
+        assert!(
+            err.contains("huge_pre_count.bin")
+                && err.contains("cc_triples")
+                && err.contains("implausible"),
+            "expected a named implausible-count error: {err}"
+        );
+    }
+
+    #[test]
+    fn short_header_and_truncated_body_name_the_path() {
+        // v3 header cut off after two of the six fields.
+        let p = tmp("short_header.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKPRE3");
+        bytes.extend_from_slice(&[0u8; 2 * 8]);
+        std::fs::write(&p, bytes).unwrap();
+        let err = format!("{:#}", load_preprocessed(&p).unwrap_err());
+        assert!(
+            err.contains("short_header.bin") && err.contains("epoch"),
+            "expected the missing header field to be named: {err}"
+        );
+
+        // Plausible count (2 cc_triples would fit in the file if the header
+        // were honest about the rest) but the records themselves are absent.
+        let p = tmp("truncated_body.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKPRE3");
+        bytes.extend_from_slice(&[0u8; 6 * 8]);
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let err = format!("{:#}", load_preprocessed(&p).unwrap_err());
+        assert!(err.contains("truncated_body.bin"), "error must name the path: {err}");
+
+        // Trace truncated mid-record.
+        let p = tmp("truncated_trace.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKTRC1");
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 10]); // half a 20-byte triple record
+        std::fs::write(&p, bytes).unwrap();
+        let err = format!("{:#}", load_trace(&p).unwrap_err());
+        assert!(err.contains("truncated_trace.bin"), "error must name the path: {err}");
+    }
+
+    #[test]
+    fn injected_store_io_faults_surface_as_errors() {
+        use crate::fault::{install_io_faults, FaultInjector, FaultPlan};
+        use std::sync::Arc;
+        let (trace, _, _) =
+            generate(&GeneratorConfig { scale_divisor: 5000, ..Default::default() });
+        let p = tmp("faulted_store.bin");
+        save_trace(&p, &trace).unwrap();
+        let plan: FaultPlan = "io:store:1.0,seed=4".parse().unwrap();
+        install_io_faults(Some(Arc::new(FaultInjector::new(plan))));
+        let err = format!("{:#}", load_trace(&p).unwrap_err());
+        install_io_faults(None);
+        assert!(err.contains("injected"), "expected the injected fault: {err}");
+        assert_eq!(load_trace(&p).unwrap().triples, trace.triples);
     }
 
     #[test]

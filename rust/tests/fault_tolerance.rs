@@ -1,0 +1,138 @@
+//! Integration tests for the fault-tolerance layer: deadline-bounded
+//! degraded answers (the partial answer is a well-defined *prefix* of the
+//! full lineage, with an honest completeness bound) and end-to-end
+//! supervised execution (injected task faults are absorbed by retries
+//! without changing any answer).
+
+use provspark::config::EngineConfig;
+use provspark::harness::{EngineRouter, ProvSession};
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::query::{QueryOutcome, QueryRequest};
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use rustc_hash::FxHashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn session(tau: usize) -> ProvSession {
+    let (trace, graph, splits) =
+        generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+    let pre = preprocess(&trace, &graph, &splits, 150, 100, WccImpl::Driver);
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.prov.tau = tau;
+    ProvSession::new(&cfg, Arc::new(trace), Arc::new(pre)).expect("session")
+}
+
+fn sample_items(session: &ProvSession, n: usize) -> Vec<u64> {
+    let trace = session.trace();
+    trace
+        .triples
+        .iter()
+        .step_by(trace.len() / n + 1)
+        .take(n)
+        .map(|t| t.dst.raw())
+        .collect()
+}
+
+/// The deadline contract, on every engine and both τ branches (driver and
+/// cluster): an expired deadline yields a **prefix** — the exact lineage a
+/// `max_depth = rounds_done` query returns, and a subset of the full
+/// answer — classified `Partial` with `exhausted == false`; a generous
+/// deadline yields the full answer, classified `Full`.
+#[test]
+fn deadline_partial_answers_are_prefixes_with_honest_bounds() {
+    for tau in [0usize, usize::MAX] {
+        let session = session(tau);
+        let items = sample_items(&session, 5);
+        for router in [EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv] {
+            for &q in &items {
+                let full = session.execute_on(router, &QueryRequest::new(q));
+                assert!(full.stats.completeness.exhausted, "tau={tau} q={q}");
+                assert_eq!(QueryOutcome::of(&full.stats), QueryOutcome::Full);
+
+                let part = session.execute_on(
+                    router,
+                    &QueryRequest::new(q).with_deadline(Duration::ZERO),
+                );
+                let c = part.stats.completeness;
+                assert!(!c.exhausted, "router={router} tau={tau} q={q}: zero deadline");
+                assert_eq!(QueryOutcome::of(&part.stats), QueryOutcome::Partial);
+
+                // Prefix, not arbitrary subset: identical to a rerun capped
+                // at the reported bound…
+                let prefix = session.execute_on(
+                    router,
+                    &QueryRequest::new(q).with_max_depth(c.rounds_done),
+                );
+                assert_eq!(
+                    part.lineage, prefix.lineage,
+                    "router={router} tau={tau} q={q}: deadline cut at {} rounds \
+                     must equal the max_depth={} query",
+                    c.rounds_done, c.rounds_done,
+                );
+                // …and contained in the full answer.
+                let all: FxHashSet<_> = full.lineage.triples.iter().collect();
+                assert!(
+                    part.lineage.triples.iter().all(|t| all.contains(t)),
+                    "router={router} tau={tau} q={q}: partial not a subset of full"
+                );
+
+                let generous = session.execute_on(
+                    router,
+                    &QueryRequest::new(q).with_deadline(Duration::from_secs(120)),
+                );
+                assert_eq!(generous.lineage, full.lineage);
+                assert!(generous.stats.completeness.exhausted);
+                assert_eq!(QueryOutcome::of(&generous.stats), QueryOutcome::Full);
+            }
+        }
+    }
+}
+
+/// End-to-end supervision: a session whose cluster panics probabilistically
+/// inside tasks answers every query identically to a clean session — the
+/// retrying supervisor absorbs every injected fault, and the metrics show
+/// it actually happened.
+#[test]
+fn supervised_queries_absorb_injected_task_faults() {
+    let (trace, graph, splits) =
+        generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+    let pre = preprocess(&trace, &graph, &splits, 150, 100, WccImpl::Driver);
+    let (trace, pre) = (Arc::new(trace), Arc::new(pre));
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.prov.tau = 0; // every query takes the cluster path: probes run hot
+    let clean = ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+
+    let mut fcfg = cfg.clone();
+    // p=0.05 per task with 10 attempts: a task exhausting its budget has
+    // probability 0.05^10 ≈ 1e-13 — deterministic in practice.
+    fcfg.cluster.fault_plan = Some("panic:task:0.05,seed=6".parse().unwrap());
+    fcfg.cluster.task_retries = 9;
+    let faulty = ProvSession::new(&fcfg, trace, pre).unwrap();
+
+    let reqs: Vec<QueryRequest> = sample_items(&clean, 6)
+        .into_iter()
+        .map(QueryRequest::new)
+        .collect();
+    let want = clean.query_many_on(EngineRouter::Auto, &reqs);
+    let got = faulty.query_many_outcomes_on(EngineRouter::Auto, &reqs);
+    for ((req, a), (b, outcome)) in reqs.iter().zip(&want).zip(&got) {
+        assert_eq!(
+            a.lineage, b.lineage,
+            "item {}: injected faults changed the answer",
+            req.item
+        );
+        assert_eq!(*outcome, QueryOutcome::Full, "item {}", req.item);
+    }
+    let inj = faulty.context().fault().expect("injector configured");
+    assert!(inj.fired() > 0, "the probabilistic plan never fired");
+    let m = faulty.context().metrics().snapshot();
+    assert!(m.tasks_retried > 0, "faults fired but nothing was retried");
+    assert!(
+        m.tasks_retried >= inj.fired(),
+        "every fired panic ({}) must surface as a retried task ({})",
+        inj.fired(),
+        m.tasks_retried,
+    );
+}
