@@ -16,7 +16,11 @@
 //! (e.g. `panic:shuffle:0.05,seed=6`) deterministic faults are injected
 //! into the cluster's tasks and absorbed by the retrying supervisor
 //! (budget: `--task-retries`) — every assertion still holds, which is the
-//! CI fault-injection smoke test.
+//! CI fault-injection smoke test. With `--memory-budget` (e.g. `4k`) the
+//! engines spill their datasets to segment files and page partitions back
+//! through the byte-budgeted cache — the out-of-core CI smoke test runs
+//! this with a budget far below the working set and every equivalence
+//! assertion must still hold.
 //!
 //! [`ShardedSession`]: provspark::harness::ShardedSession
 
@@ -38,6 +42,11 @@ fn main() -> anyhow::Result<()> {
         .map(|s| s.parse::<provspark::fault::FaultPlan>())
         .transpose()?;
     let task_retries: u32 = args.get_parsed_or("task-retries", 2)?;
+    let memory_budget = args
+        .get("memory-budget")
+        .map(provspark::config::parse_bytes)
+        .transpose()?
+        .unwrap_or(0);
 
     // 1. Generate a small trace (default ~1/500 of the paper's base).
     let gen = GeneratorConfig { scale_divisor: divisor, ..Default::default() };
@@ -68,6 +77,7 @@ fn main() -> anyhow::Result<()> {
     cfg.prov.tau = 5_000; // collect-to-driver threshold
     cfg.cluster.fault_plan = fault_plan;
     cfg.cluster.task_retries = task_retries;
+    cfg.cluster.memory_budget = memory_budget;
     let (trace, pre) = (Arc::new(trace), Arc::new(pre));
     let session = ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre))?;
 
@@ -164,6 +174,19 @@ fn main() -> anyhow::Result<()> {
             inj.plan(),
             inj.fired(),
             m.tasks_retried,
+        );
+    }
+
+    // 8. Out-of-core report: with --memory-budget, every answer above was
+    //    served through the spill-and-page path — the same assertions
+    //    prove paging is invisible to queries.
+    if memory_budget > 0 {
+        let m = session.context().metrics().snapshot();
+        assert!(m.bytes_spilled > 0, "a budgeted session must spill its engine datasets");
+        println!(
+            "out-of-core (budget {}): {}",
+            provspark::util::fmt::human_bytes(memory_budget),
+            m.summary(),
         );
     }
     Ok(())

@@ -75,6 +75,13 @@ pub struct ClusterConfig {
     /// Base backoff between task retry attempts, in microseconds; doubles
     /// per failure, capped at 32× (see [`crate::exec::RetryPolicy`]).
     pub retry_backoff_us: u64,
+    /// Byte budget for resident (decoded) dataset partitions. `0` means
+    /// unbounded: datasets stay fully in memory and nothing spills. Any
+    /// other value makes engine datasets spill to segment files and page
+    /// partitions through the byte-budgeted cache
+    /// (see [`crate::storage`]). Accepts `k`/`m`/`g` suffixes on the CLI
+    /// and in config files.
+    pub memory_budget: u64,
 }
 
 impl Default for ClusterConfig {
@@ -87,6 +94,7 @@ impl Default for ClusterConfig {
             fault_plan: None,
             task_retries: 2,
             retry_backoff_us: 200,
+            memory_budget: 0,
         }
     }
 }
@@ -151,6 +159,7 @@ impl EngineConfig {
                 "cluster.fault_plan" => self.cluster.fault_plan = Some(v.parse()?),
                 "cluster.task_retries" => self.cluster.task_retries = v.parse()?,
                 "cluster.retry_backoff_us" => self.cluster.retry_backoff_us = v.parse()?,
+                "cluster.memory_budget" => self.cluster.memory_budget = parse_bytes(v)?,
                 "prov.tau" => self.prov.tau = v.parse()?,
                 "prov.theta" => self.prov.theta = v.parse()?,
                 "prov.wcc_backend" => self.prov.wcc_backend = v.parse()?,
@@ -178,6 +187,9 @@ impl EngineConfig {
             args.get_parsed_or("task-retries", self.cluster.task_retries)?;
         self.cluster.retry_backoff_us =
             args.get_parsed_or("retry-backoff-us", self.cluster.retry_backoff_us)?;
+        if let Some(spec) = args.get("memory-budget") {
+            self.cluster.memory_budget = parse_bytes(spec)?;
+        }
         self.prov.tau = args.get_parsed_or("tau", self.prov.tau)?;
         self.prov.theta = args.get_parsed_or("theta", self.prov.theta)?;
         self.prov.wcc_backend = args.get_parsed_or("wcc-backend", self.prov.wcc_backend)?;
@@ -201,6 +213,24 @@ impl EngineConfig {
         }
         Ok(())
     }
+}
+
+/// Parse a byte count with an optional `k`/`m`/`g` (KiB/MiB/GiB) suffix,
+/// case-insensitive: `"65536"`, `"64k"`, `"4m"`, `"2G"`.
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let t = s.trim();
+    let (digits, mult) = match t.chars().last() {
+        Some('k') | Some('K') => (&t[..t.len() - 1], 1u64 << 10),
+        Some('m') | Some('M') => (&t[..t.len() - 1], 1u64 << 20),
+        Some('g') | Some('G') => (&t[..t.len() - 1], 1u64 << 30),
+        _ => (t, 1),
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .with_context(|| format!("byte count {s:?} (expected digits with optional k/m/g)"))?;
+    n.checked_mul(mult)
+        .with_context(|| format!("byte count {s:?} overflows u64"))
 }
 
 /// Parse a TOML-subset file: `[section]` headers plus `key = value` lines;
@@ -296,6 +326,18 @@ mod tests {
         assert!(cfg
             .apply_kv(&parse_kv_str("[cluster]\nfault_plan = bogus\n").unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn memory_budget_parses_with_suffixes() {
+        assert_eq!(parse_bytes("65536").unwrap(), 65_536);
+        assert_eq!(parse_bytes("64k").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("4M").unwrap(), 4 << 20);
+        assert_eq!(parse_bytes("2g").unwrap(), 2 << 30);
+        assert!(parse_bytes("lots").is_err());
+        let mut cfg = EngineConfig::default();
+        cfg.apply_kv(&parse_kv_str("[cluster]\nmemory_budget = \"1m\"\n").unwrap()).unwrap();
+        assert_eq!(cfg.cluster.memory_budget, 1 << 20);
     }
 
     #[test]

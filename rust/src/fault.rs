@@ -10,7 +10,8 @@
 //! ```
 //!
 //! Each clause is `kind:site:trigger` with kind ∈ {`panic`, `delay`, `io`},
-//! site ∈ {`task`, `shuffle`, `store`, `journal`}, and a trigger that is
+//! site ∈ {`task`, `shuffle`, `store`, `journal`, `segment`}, and a
+//! trigger that is
 //! either a firing probability in `[0, 1]` or `@N` (fire exactly on the
 //! N-th probe of that site, 0-based). A trailing `seed=N` fixes the
 //! probability draws.
@@ -68,11 +69,19 @@ pub enum FaultSite {
     StoreIo,
     /// Each step of a journaled shard-migration apply.
     Journal,
+    /// Segment-store IO: spill writes, segment-file opens and the
+    /// demand-paging reads of the partition cache.
+    SegmentIo,
 }
 
 /// All sites, in counter-index order.
-const SITES: [FaultSite; 4] =
-    [FaultSite::Task, FaultSite::Shuffle, FaultSite::StoreIo, FaultSite::Journal];
+const SITES: [FaultSite; 5] = [
+    FaultSite::Task,
+    FaultSite::Shuffle,
+    FaultSite::StoreIo,
+    FaultSite::Journal,
+    FaultSite::SegmentIo,
+];
 
 impl FaultSite {
     fn index(self) -> usize {
@@ -81,6 +90,7 @@ impl FaultSite {
             FaultSite::Shuffle => 1,
             FaultSite::StoreIo => 2,
             FaultSite::Journal => 3,
+            FaultSite::SegmentIo => 4,
         }
     }
 }
@@ -92,6 +102,7 @@ impl fmt::Display for FaultSite {
             FaultSite::Shuffle => "shuffle",
             FaultSite::StoreIo => "store",
             FaultSite::Journal => "journal",
+            FaultSite::SegmentIo => "segment",
         })
     }
 }
@@ -177,8 +188,12 @@ impl FromStr for FaultPlan {
                 "shuffle" => FaultSite::Shuffle,
                 "store" => FaultSite::StoreIo,
                 "journal" => FaultSite::Journal,
+                "segment" => FaultSite::SegmentIo,
                 other => {
-                    bail!("fault plan: unknown site {other:?} (task|shuffle|store|journal)")
+                    bail!(
+                        "fault plan: unknown site {other:?} \
+                         (task|shuffle|store|journal|segment)"
+                    )
                 }
             };
             let trigger = if let Some(n) = trig.strip_prefix('@') {
@@ -217,7 +232,7 @@ impl fmt::Display for FaultPlan {
 #[derive(Debug)]
 pub struct FaultInjector {
     plan: FaultPlan,
-    counters: [AtomicU64; 4],
+    counters: [AtomicU64; 5],
     fired: AtomicU64,
 }
 

@@ -73,13 +73,18 @@ impl EngineSet {
         let np = cfg.cluster.default_partitions;
         let tau = cfg.prov.tau;
         let closure = make_closure(cfg)?;
-        let rq = RqEngine::new(sc, &trace.triples, np);
-        let ccprov =
-            CcProvEngine::new(sc, &pre.cc_triples, np, tau).with_closure(Arc::clone(&closure));
+        // `spilled()` writes each engine's datasets to segment files when
+        // the context carries a memory budget (demand-paged thereafter),
+        // and is a no-op clone when it doesn't.
+        let rq = RqEngine::new(sc, &trace.triples, np).spilled()?;
+        let ccprov = CcProvEngine::new(sc, &pre.cc_triples, np, tau)
+            .with_closure(Arc::clone(&closure))
+            .spilled()?;
         // The (node, csid) index is derived from `cs_of` once, here.
         let node_set: Vec<(u64, u64)> = pre.cs_of.iter().map(|(&n, &c)| (n, c)).collect();
         let csprov = CsProvEngine::new(sc, &pre.cs_triples, node_set, &pre.set_deps, np, tau)
-            .with_closure(closure);
+            .with_closure(closure)
+            .spilled()?;
         let large = large_of(&pre);
         Ok(Self { trace, pre, large, rq, ccprov, csprov })
     }
@@ -114,7 +119,10 @@ impl EngineSet {
         );
         let first = delta.first_new_triple;
 
-        let rq = prev.rq.with_appended(&trace.triples[first..]);
+        // Absorption leaves the touched partitions resident; a budgeted
+        // context re-spills each engine so the next epoch is fully paged
+        // again (no-op without a budget).
+        let rq = prev.rq.with_appended(&trace.triples[first..]).spilled()?;
 
         // CCProv: dst keys never change, so retagging is an in-place patch.
         let mut retag_cc: FxHashMap<ProvTriple, ComponentId> = FxHashMap::default();
@@ -122,7 +130,7 @@ impl EngineSet {
             let row = pre.cc_triples[i as usize];
             retag_cc.insert(row.triple, row.ccid);
         }
-        let ccprov = prev.ccprov.with_delta(&retag_cc, &pre.cc_triples[first..]);
+        let ccprov = prev.ccprov.with_delta(&retag_cc, &pre.cc_triples[first..]).spilled()?;
 
         // CSProv: dst_csid (the partitioning key) can change, so retagged
         // rows are dropped from their old partitions and re-routed.
@@ -156,6 +164,7 @@ impl EngineSet {
             removed_dep_keys: &removed_dep_keys,
             added_deps: &delta.added_deps,
         });
+        let csprov = csprov.spilled()?;
 
         let large = large_of(&pre);
         Ok(Self { trace, pre, large, rq, ccprov, csprov })

@@ -131,12 +131,23 @@ impl std::fmt::Display for EngineRouter {
 /// assert_eq!(resp.lineage.query, item);
 /// assert!(resp.stats.engine == "ccprov" || resp.stats.engine == "csprov");
 /// ```
+/// The session's engine state: raw data awaiting the first use (lazy
+/// open), or the built engines. Lazy sessions let a sharded front hold
+/// many shards open while only the queried ones pay construction (and,
+/// under a memory budget, spill) costs.
+enum SessionState {
+    /// Registered but unbuilt: the first [`ProvSession::engines`] call
+    /// builds the engine set from this data.
+    Pending { trace: Arc<Trace>, pre: Arc<Preprocessed> },
+    /// Current engine epoch; `Arc`-cloned per query, swapped per ingest.
+    Built(Arc<EngineSet>),
+}
+
 pub struct ProvSession {
     sc: MiniSpark,
     cfg: EngineConfig,
     router: EngineRouter,
-    /// Current engine epoch; `Arc`-cloned per query, swapped per ingest.
-    state: RwLock<Arc<EngineSet>>,
+    state: RwLock<SessionState>,
     /// The incrementally maintained index (lazily cloned from the current
     /// epoch on first ingest; serializes ingestion).
     index: Mutex<Option<IncrementalIndex>>,
@@ -164,10 +175,41 @@ impl ProvSession {
             sc: sc.clone(),
             cfg: cfg.clone(),
             router: EngineRouter::Auto,
-            state: RwLock::new(Arc::new(engines)),
+            state: RwLock::new(SessionState::Built(Arc::new(engines))),
             index: Mutex::new(None),
             workflow: text_curation_workflow(),
         })
+    }
+
+    /// Open a session *lazily*: register the data but defer engine
+    /// construction (partitioning, and spilling under a memory budget)
+    /// until the first call that needs the engines. Accessors that only
+    /// need the data ([`trace`](Self::trace), [`pre`](Self::pre),
+    /// [`epoch`](Self::epoch)) never trigger the build.
+    ///
+    /// A deferred build that fails (e.g. spill IO) panics at the
+    /// triggering call; under the supervised query paths that panic is
+    /// caught and surfaces as a per-item [`QueryOutcome::Failed`].
+    pub fn with_context_lazy(
+        sc: &MiniSpark,
+        cfg: &EngineConfig,
+        trace: Arc<Trace>,
+        pre: Arc<Preprocessed>,
+    ) -> Self {
+        Self {
+            sc: sc.clone(),
+            cfg: cfg.clone(),
+            router: EngineRouter::Auto,
+            state: RwLock::new(SessionState::Pending { trace, pre }),
+            index: Mutex::new(None),
+            workflow: text_curation_workflow(),
+        }
+    }
+
+    /// Whether the engines have been built yet (always true after an eager
+    /// open; flips on first use after [`with_context_lazy`]).
+    pub fn is_built(&self) -> bool {
+        matches!(&*self.state.read().expect("session state lock poisoned"), SessionState::Built(_))
     }
 
     /// Set the default routing policy (builder-style).
@@ -217,11 +259,31 @@ impl ProvSession {
         &self.cfg
     }
 
-    /// Snapshot the current engine epoch. The returned `Arc` stays valid —
-    /// and internally consistent — for as long as the caller holds it, even
-    /// across concurrent [`ingest`](Self::ingest) calls.
+    /// Snapshot the current engine epoch, building it first if the session
+    /// was opened lazily. The returned `Arc` stays valid — and internally
+    /// consistent — for as long as the caller holds it, even across
+    /// concurrent [`ingest`](Self::ingest) calls.
     pub fn engines(&self) -> Arc<EngineSet> {
-        Arc::clone(&self.state.read().expect("session state lock poisoned"))
+        if let SessionState::Built(set) = &*self.state.read().expect("session state lock poisoned")
+        {
+            return Arc::clone(set);
+        }
+        let mut guard = self.state.write().expect("session state lock poisoned");
+        // Double-checked: another thread may have built while we waited.
+        if let SessionState::Built(set) = &*guard {
+            return Arc::clone(set);
+        }
+        let SessionState::Pending { trace, pre } = &*guard else {
+            unreachable!("state is Pending when not Built")
+        };
+        let set = match EngineSet::build(&self.sc, Arc::clone(trace), Arc::clone(pre), &self.cfg) {
+            Ok(set) => Arc::new(set),
+            // Panic at the triggering call; the supervised query paths
+            // catch this and fail the item, not the process.
+            Err(e) => panic!("building engines lazily: {e:#}"),
+        };
+        *guard = SessionState::Built(Arc::clone(&set));
+        set
     }
 
     /// The current epoch's trace.
@@ -230,20 +292,26 @@ impl ProvSession {
     /// [`ingest`](Self::ingest) may land between two accessor calls. When
     /// trace, index, and engines must describe **one** ingestion state,
     /// snapshot once via [`engines`](Self::engines) and read all three off
-    /// that [`EngineSet`].
+    /// that [`EngineSet`]. Never triggers a lazy build.
     pub fn trace(&self) -> Arc<Trace> {
-        Arc::clone(self.engines().trace())
+        match &*self.state.read().expect("session state lock poisoned") {
+            SessionState::Pending { trace, .. } => Arc::clone(trace),
+            SessionState::Built(set) => Arc::clone(set.trace()),
+        }
     }
 
     /// The current epoch's preprocessed data (same single-accessor snapshot
-    /// semantics as [`trace`](Self::trace)).
+    /// semantics as [`trace`](Self::trace)). Never triggers a lazy build.
     pub fn pre(&self) -> Arc<Preprocessed> {
-        Arc::clone(self.engines().pre())
+        match &*self.state.read().expect("session state lock poisoned") {
+            SessionState::Pending { pre, .. } => Arc::clone(pre),
+            SessionState::Built(set) => Arc::clone(set.pre()),
+        }
     }
 
     /// Batches ingested since the session's underlying full preprocess.
     pub fn epoch(&self) -> u64 {
-        self.engines().pre().epoch
+        self.pre().epoch
     }
 
     /// Name of the engine a routing policy resolves to for one item
@@ -375,7 +443,8 @@ impl ProvSession {
             let (trace, pre) = index.snapshot();
             let prev = self.engines();
             let next = EngineSet::absorb(&prev, trace, pre, &delta)?;
-            *self.state.write().expect("session state lock poisoned") = Arc::new(next);
+            *self.state.write().expect("session state lock poisoned") =
+                SessionState::Built(Arc::new(next));
             Ok(delta.stats)
         }));
         match outcome {
@@ -416,7 +485,8 @@ impl ProvSession {
             catch_unwind(AssertUnwindSafe(|| EngineSet::build(&self.sc, trace, pre, &self.cfg)));
         match outcome {
             Ok(Ok(next)) => {
-                *self.state.write().expect("session state lock poisoned") = Arc::new(next);
+                *self.state.write().expect("session state lock poisoned") =
+                    SessionState::Built(Arc::new(next));
                 *guard = None;
                 Ok(())
             }
@@ -588,6 +658,31 @@ mod tests {
             let full_set: FxHashSet<_> = full.lineage.triples.iter().collect();
             assert!(resp.lineage.triples.iter().all(|t| full_set.contains(t)));
         }
+    }
+
+    #[test]
+    fn lazy_sessions_build_on_first_use() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let mut cfg = EngineConfig::default();
+        cfg.cluster.job_overhead_us = 0;
+        let sc = MiniSpark::new(cfg.cluster.clone());
+        let trace = Arc::new(trace);
+        let pre = Arc::new(pre);
+        let s = ProvSession::with_context_lazy(&sc, &cfg, Arc::clone(&trace), Arc::clone(&pre));
+        assert!(!s.is_built());
+        // Data accessors answer without triggering the build.
+        assert_eq!(s.trace().len(), trace.len());
+        assert_eq!(s.epoch(), 0);
+        assert!(!s.is_built());
+        // The first query builds; answers match an eager session.
+        let q = trace.triples[0].dst.raw();
+        let resp = s.execute(&QueryRequest::new(q));
+        assert!(s.is_built());
+        let eager =
+            ProvSession::with_context(&sc, &cfg, Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+        assert_eq!(resp.lineage, eager.execute(&QueryRequest::new(q)).lineage);
     }
 
     #[test]

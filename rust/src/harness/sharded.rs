@@ -83,19 +83,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Resolves items to owning shards against a fixed set of per-shard epoch
-/// snapshots: probe each shard's `cc_of` (one hash lookup per shard);
-/// unknown items fall back to the plan's deterministic hash — every shard
-/// answers an unknown item identically (empty lineage via CSProv's index
-/// miss), so any deterministic choice preserves equivalence.
+/// Resolves items to owning shards against a fixed set of per-shard
+/// preprocessed snapshots: probe each shard's `cc_of` (one hash lookup per
+/// shard); unknown items fall back to the plan's deterministic hash — every
+/// shard answers an unknown item identically (empty lineage via CSProv's
+/// index miss), so any deterministic choice preserves equivalence. Routing
+/// needs only the data, so it never builds a lazily opened shard's engines.
 pub struct ShardRouter<'a> {
     plan: &'a ShardPlan,
-    epochs: &'a [Arc<EngineSet>],
+    pres: &'a [Arc<Preprocessed>],
 }
 
 impl<'a> ShardRouter<'a> {
-    pub fn new(plan: &'a ShardPlan, epochs: &'a [Arc<EngineSet>]) -> Self {
-        Self { plan, epochs }
+    pub fn new(plan: &'a ShardPlan, pres: &'a [Arc<Preprocessed>]) -> Self {
+        Self { plan, pres }
     }
 
     /// Shard that answers queries for `item`.
@@ -105,7 +106,7 @@ impl<'a> ShardRouter<'a> {
 
     /// Shard whose component space contains `item`, if any.
     pub fn known_owner(&self, item: u64) -> Option<usize> {
-        self.epochs.iter().position(|e| e.pre().cc_of.contains_key(&item))
+        self.pres.iter().position(|p| p.cc_of.contains_key(&item))
     }
 }
 
@@ -368,9 +369,12 @@ impl ShardedSession {
         let asg = plan.assignment(&pre.cc_of);
         let traces = trace.split_by_plan(&pre.cc_of, &asg)?;
         let pres = pre.split_by_plan(&asg)?;
+        // Shards open lazily: each builds its engines (and, under a memory
+        // budget, spills its datasets) only when first queried or ingested
+        // into, so a wide front pays construction for hot shards only.
         let mut sessions = Vec::with_capacity(shards);
         for (t, p) in traces.into_iter().zip(pres) {
-            sessions.push(ProvSession::with_context(sc, cfg, Arc::new(t), Arc::new(p))?);
+            sessions.push(ProvSession::with_context_lazy(sc, cfg, Arc::new(t), Arc::new(p)));
         }
         Ok(Self {
             sc: sc.clone(),
@@ -446,18 +450,19 @@ impl ShardedSession {
     }
 
     /// Shard whose component space currently contains `item` (`None` for
-    /// unknown items, which any shard rejects identically).
+    /// unknown items, which any shard rejects identically). Never builds a
+    /// lazy shard's engines.
     pub fn shard_of(&self, item: u64) -> Option<usize> {
-        let epochs = self.epoch_snapshot();
-        ShardRouter::new(&self.plan, &epochs).known_owner(item)
+        let pres = self.pre_snapshot();
+        ShardRouter::new(&self.plan, &pres).known_owner(item)
     }
 
     /// Name of the engine a routing policy resolves to for one item on its
     /// owning shard (same contract as [`ProvSession::route`]).
     pub fn route(&self, router: EngineRouter, item: u64) -> &'static str {
-        let epochs = self.epoch_snapshot();
-        let owner = ShardRouter::new(&self.plan, &epochs).owner(item);
-        epochs[owner].route(router, item).name()
+        let pres = self.pre_snapshot();
+        let owner = ShardRouter::new(&self.plan, &pres).owner(item);
+        self.shards[owner].route(router, item)
     }
 
     /// Answer one request with the session's default router.
@@ -466,11 +471,11 @@ impl ShardedSession {
     }
 
     /// Answer one request with an explicit routing policy on the owning
-    /// shard.
+    /// shard (building that shard's engines if it was still lazy).
     pub fn execute_on(&self, router: EngineRouter, req: &QueryRequest) -> QueryResponse {
-        let epochs = self.epoch_snapshot();
-        let owner = ShardRouter::new(&self.plan, &epochs).owner(req.item);
-        epochs[owner].route(router, req.item).execute(req)
+        let pres = self.pre_snapshot();
+        let owner = ShardRouter::new(&self.plan, &pres).owner(req.item);
+        self.shards[owner].execute_on(router, req)
     }
 
     /// Scatter a batch across the shards and gather the responses in
@@ -508,15 +513,24 @@ impl ShardedSession {
         router: EngineRouter,
         reqs: &[QueryRequest],
     ) -> (Vec<QueryResponse>, ShardedBatchReport) {
-        let epochs = self.epoch_snapshot();
-        let front = ShardRouter::new(&self.plan, &epochs);
+        let pres = self.pre_snapshot();
+        let front = ShardRouter::new(&self.plan, &pres);
         let owners: Vec<usize> = reqs.iter().map(|r| front.owner(r.item)).collect();
+        // Snapshot — and lazily build — only the shards this batch
+        // touches; the whole batch runs against one epoch per shard.
+        let mut epochs: Vec<Option<Arc<EngineSet>>> = vec![None; self.shards.len()];
+        for &o in &owners {
+            if epochs[o].is_none() {
+                epochs[o] = Some(self.shards[o].engines());
+            }
+        }
         let parallelism = self.sc.config().executors.max(1);
         // Supervised per item: a crash on one shard's engine yields a
         // `Failed` outcome for that item alone; the rest of the batch is
         // unaffected.
         let answered = par_map_indexed(reqs, parallelism, |i, req| {
-            execute_supervised(epochs[owners[i]].route(router, req.item), req)
+            let epoch = epochs[owners[i]].as_ref().expect("owner snapshotted above");
+            execute_supervised(epoch.route(router, req.item), req)
         });
         let mut report = ShardedBatchReport {
             per_shard: vec![ShardBatchStats::default(); self.shards.len()],
@@ -551,7 +565,11 @@ impl ShardedSession {
             stats.batch = self.batches.fetch_add(1, Ordering::SeqCst) + 1;
             return Ok(stats);
         }
-        let epochs = self.epoch_snapshot();
+        // Per-shard data snapshots: routing, sizing and extraction only
+        // need trace + pre, so a shard that neither receives rows nor
+        // loses a component never builds its engines.
+        let datas: Vec<(Arc<Trace>, Arc<Preprocessed>)> =
+            self.shards.iter().map(|s| (s.trace(), s.pre())).collect();
 
         // ---- Resolve merge groups --------------------------------------
         // Union batch endpoints with the component labels they drag in: a
@@ -567,8 +585,8 @@ impl ShardedSession {
                 if known.contains_key(&x) {
                     continue;
                 }
-                for (si, e) in epochs.iter().enumerate() {
-                    if let Some(&l) = e.pre().cc_of.get(&x) {
+                for (si, (_, p)) in datas.iter().enumerate() {
+                    if let Some(&l) = p.cc_of.get(&x) {
                         known.insert(x, (si, l));
                         known.entry(l).or_insert((si, l));
                         uf.union(x, l);
@@ -606,7 +624,7 @@ impl ShardedSession {
         }
         let mut size_of: FxHashMap<(usize, u64), usize> = FxHashMap::default();
         for (&s, labels) in &need {
-            for l in epochs[s].pre().cc_of.values() {
+            for l in datas[s].1.cc_of.values() {
                 if labels.contains(l) {
                     *size_of.entry((s, *l)).or_insert(0) += 1;
                 }
@@ -678,22 +696,22 @@ impl ShardedSession {
             winners.sort_unstable();
             let bucket_of: FxHashMap<usize, usize> =
                 winners.iter().enumerate().map(|(i, &w)| (w, i + 1)).collect();
-            let e = &epochs[s];
+            let (shard_trace, shard_pre) = &datas[s];
             let mut of_label: FxHashMap<u64, usize> = FxHashMap::default();
-            for &l in e.pre().cc_of.values() {
+            for &l in shard_pre.cc_of.values() {
                 of_label
                     .entry(l)
                     .or_insert_with(|| moving.get(&l).map(|w| bucket_of[w]).unwrap_or(0));
             }
             let asg = ShardAssignment::new(1 + winners.len(), of_label);
-            let mut parts_t = e.trace().split_by_plan(&e.pre().cc_of, &asg)?;
-            let parts_p = e.pre().split_by_plan(&asg)?;
+            let mut parts_t = shard_trace.split_by_plan(&shard_pre.cc_of, &asg)?;
+            let parts_p = shard_pre.split_by_plan(&asg)?;
             let kept_t = parts_t.remove(0);
             let mut kept_p = parts_p.into_iter().next().expect("keep bucket");
             // The keep bucket stays at this shard's position in the
             // *session's* plan — not position 0 of the extraction split.
-            kept_p.shard_index = e.pre().shard_index;
-            kept_p.shard_count = e.pre().shard_count;
+            kept_p.shard_index = shard_pre.shard_index;
+            kept_p.shard_count = shard_pre.shard_count;
             kept[s] = Some((kept_t, kept_p));
             for (bi, &w) in winners.iter().enumerate() {
                 stats.migrated_triples += parts_t[bi].len();
@@ -712,12 +730,12 @@ impl ShardedSession {
             if extra[s].is_empty() && subs[s].is_empty() {
                 continue;
             }
-            let after = epochs[s].trace().len() + extra[s].len() + subs[s].len();
+            let after = datas[s].0.len() + extra[s].len() + subs[s].len();
             ensure!(
                 after <= u32::MAX as usize,
                 "shard {s} would exceed the u32 triple index ({after} rows)"
             );
-            let pre = epochs[s].pre();
+            let pre = &datas[s].1;
             ensure!(
                 pre.theta != 0,
                 "shard {s} has θ = 0 (pre-epoch index): re-run preprocess with θ ≥ 1 \
@@ -776,12 +794,30 @@ impl ShardedSession {
         self.run_steps(PendingMigration { journal, steps, stats })
     }
 
-    /// Execute a staged migration plan from its journal cursor. On a step
-    /// failure the remaining plan is parked (with its journal) for
-    /// [`recover`](Self::recover); completed steps stay committed — each is
-    /// all-or-nothing at the shard-session layer, so the observable state
-    /// is always "plan applied up to the cursor".
-    fn run_steps(&self, mut p: PendingMigration) -> Result<ShardedDeltaStats> {
+    /// Execute a staged migration plan. On a step failure the remaining
+    /// plan is parked (with its journal) for [`recover`](Self::recover);
+    /// completed steps stay committed — each is all-or-nothing at the
+    /// shard-session layer, so the observable state is always "plan applied
+    /// up to the cursor".
+    fn run_steps(&self, p: PendingMigration) -> Result<ShardedDeltaStats> {
+        // A fresh plan of only Ingest steps touches each shard at most
+        // once and its steps are independent, so they fan across the
+        // worker pool. Plans with Replace steps (cross-shard migrations)
+        // keep the sequential path: their winner-before-loser ordering is
+        // what keeps concurrent queries correct.
+        let pure_ingest = p.journal.cursor() == 0
+            && p.steps.len() > 1
+            && p.steps.iter().all(|s| matches!(s, PlannedStep::Ingest { .. }));
+        if pure_ingest {
+            self.run_steps_parallel(p)
+        } else {
+            self.run_steps_sequential(p)
+        }
+    }
+
+    /// The one-step-at-a-time plan executor, resumable from any journal
+    /// cursor.
+    fn run_steps_sequential(&self, mut p: PendingMigration) -> Result<ShardedDeltaStats> {
         while !p.journal.is_complete() {
             let i = p.journal.cursor();
             // The per-step fault probe (FaultSite::Journal): the injection
@@ -821,6 +857,87 @@ impl ShardedSession {
                 )));
             }
         }
+        self.retire(p)
+    }
+
+    /// Execute a pure-ingest plan concurrently: the per-step journal fault
+    /// probes are drawn sequentially up front (so an `io:journal:@k` plan
+    /// targets the same step it would sequentially), then every un-faulted
+    /// step runs in parallel — each shard's ingest is independent and
+    /// all-or-nothing. Failed steps are re-journaled as a fresh remainder
+    /// plan and parked for [`recover`](Self::recover); completed steps are
+    /// committed in their shards, so the remainder journal is exactly the
+    /// uncommitted set.
+    fn run_steps_parallel(&self, mut p: PendingMigration) -> Result<ShardedDeltaStats> {
+        let probe_errs: Vec<Option<String>> = p
+            .steps
+            .iter()
+            .map(|_| match self.sc.fault() {
+                Some(inj) => inj.fire_io(FaultSite::Journal).err().map(|e| format!("{e:#}")),
+                None => None,
+            })
+            .collect();
+        let parallelism = self.sc.config().executors.max(1);
+        let results: Vec<Result<(usize, DeltaStats)>> =
+            par_map_indexed(&p.steps, parallelism, |i, step| {
+                if let Some(msg) = &probe_errs[i] {
+                    anyhow::bail!("{msg}");
+                }
+                let PlannedStep::Ingest { shard, batch } = step else {
+                    unreachable!("pure-ingest plan holds only Ingest steps")
+                };
+                self.shards[*shard].ingest(batch).map(|d| (*shard, d))
+            });
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Ok((s, d)) => p.stats.per_shard[s] = Some(d),
+                Err(e) => failed.push((i, format!("{e:#}"))),
+            }
+        }
+        if failed.is_empty() {
+            while !p.journal.is_complete() {
+                if let Err(e) = p.journal.mark_done() {
+                    // The step landed and the cursor advanced; a failed
+                    // durable append only under-counts the journal file
+                    // (see `MigrationJournal::mark_done`).
+                    eprintln!("provspark: warning: journal commit append failed: {e:#}");
+                }
+            }
+            return self.retire(p);
+        }
+        let total = p.steps.len();
+        let keep: FxHashSet<usize> = failed.iter().map(|&(i, _)| i).collect();
+        let steps: Vec<PlannedStep> = p
+            .steps
+            .into_iter()
+            .enumerate()
+            .filter_map(|(i, s)| keep.contains(&i).then_some(s))
+            .collect();
+        let descriptions: Vec<String> = steps.iter().map(PlannedStep::describe).collect();
+        let path = self.journal_path.as_deref();
+        let journal = match MigrationJournal::begin(descriptions.clone(), path) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("provspark: warning: remainder journal not durably recorded: {e:#}");
+                MigrationJournal::begin(descriptions, None)
+                    .expect("memory-only journal cannot fail")
+            }
+        };
+        let (first_i, first_msg) = &failed[0];
+        let n_failed = failed.len();
+        let msg = format!(
+            "sharded ingest: {n_failed}/{total} parallel ingest step(s) failed (first: \
+             step {first_i}: {first_msg}); every completed step landed atomically and \
+             shard state is consistent — call recover() to resume"
+        );
+        *self.pending.lock().expect("pending migration lock poisoned") =
+            Some(PendingMigration { journal, steps, stats: p.stats });
+        anyhow::bail!("{msg}")
+    }
+
+    /// All steps committed: retire the journal and stamp the batch number.
+    fn retire(&self, p: PendingMigration) -> Result<ShardedDeltaStats> {
         let PendingMigration { journal, stats: mut done, .. } = p;
         if let Err(e) = journal.finish() {
             // All steps landed; a stale journal file only costs a spurious
@@ -859,19 +976,15 @@ impl ShardedSession {
     /// mid-migration window where a moving component exists on two shards.
     pub fn merged_state(&self) -> Result<(Trace, Preprocessed)> {
         let _serial = self.ingest_lock.lock().expect("sharded ingest lock poisoned");
-        let parts: Vec<(Arc<Trace>, Arc<Preprocessed>)> = self
-            .shards
-            .iter()
-            .map(|s| {
-                let e = s.engines();
-                (Arc::clone(e.trace()), Arc::clone(e.pre()))
-            })
-            .collect();
+        let parts: Vec<(Arc<Trace>, Arc<Preprocessed>)> =
+            self.shards.iter().map(|s| (s.trace(), s.pre())).collect();
         merge_shards(&parts)
     }
 
-    fn epoch_snapshot(&self) -> Vec<Arc<EngineSet>> {
-        self.shards.iter().map(|s| s.engines()).collect()
+    /// Per-shard preprocessed snapshots for routing (data only — never
+    /// builds a lazy shard's engines).
+    fn pre_snapshot(&self) -> Vec<Arc<Preprocessed>> {
+        self.shards.iter().map(|s| s.pre()).collect()
     }
 }
 
@@ -1070,6 +1183,96 @@ mod tests {
         let total: usize =
             sharded.shard_sessions().iter().map(|s| s.trace().len()).sum();
         assert_eq!(total, trace.len() + 1, "no rows lost or duplicated by recovery");
+    }
+
+    #[test]
+    fn disjoint_shard_ingests_fan_out_in_parallel() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2500, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let cfg = cfg(300);
+        let (trace_arc, pre_arc) = (Arc::new(trace.clone()), Arc::new(pre));
+        let single =
+            ProvSession::new(&cfg, Arc::clone(&trace_arc), Arc::clone(&pre_arc)).unwrap();
+        let sharded =
+            ShardedSession::new(&cfg, Arc::clone(&trace_arc), Arc::clone(&pre_arc), 4).unwrap();
+
+        // Two sub-batches extending components on *different* shards: a
+        // pure-ingest plan with no migrations — the parallel fan-out path.
+        let items = sample_items(&trace, 50);
+        let a = items[0];
+        let sa = sharded.shard_of(a).expect("known item");
+        let b = *items
+            .iter()
+            .find(|&&x| sharded.shard_of(x).expect("known item") != sa)
+            .expect("an item on another shard");
+        let batch = TripleBatch::new(vec![
+            ProvTriple::new(AttrValueId(u64::MAX - 11), AttrValueId(a), OpId(0)),
+            ProvTriple::new(AttrValueId(u64::MAX - 12), AttrValueId(b), OpId(0)),
+        ]);
+        let d = sharded.ingest(&batch).unwrap();
+        assert_eq!(d.cross_shard_merges, 0);
+        assert_eq!(d.journal_steps, 2, "one ingest step per touched shard");
+        assert_eq!(d.per_shard.iter().filter(|x| x.is_some()).count(), 2);
+        assert!(d.rebuilt_shards.is_empty());
+
+        let _ = single.ingest(&batch).unwrap();
+        let reqs: Vec<QueryRequest> =
+            items.iter().copied().map(QueryRequest::new).collect();
+        let x = single.query_many_on(EngineRouter::Auto, &reqs);
+        let y = sharded.query_many_on(EngineRouter::Auto, &reqs);
+        for ((req, rx), ry) in reqs.iter().zip(&x).zip(&y) {
+            assert_eq!(rx.lineage, ry.lineage, "item={}", req.item);
+        }
+        let total: usize =
+            sharded.shard_sessions().iter().map(|s| s.trace().len()).sum();
+        assert_eq!(total, trace.len() + 2);
+    }
+
+    #[test]
+    fn interrupted_parallel_ingest_parks_and_recovers() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2500, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        // The *first* journal probe fails exactly once: on the parallel
+        // path all probes are drawn up front, so step 0 is re-journaled as
+        // the remainder while step 1 lands.
+        let mut cfg_faulty = cfg(300);
+        cfg_faulty.cluster.fault_plan = Some("io:journal:@0,seed=7".parse().unwrap());
+        let (trace_arc, pre_arc) = (Arc::new(trace.clone()), Arc::new(pre));
+        let sharded = ShardedSession::new(
+            &cfg_faulty,
+            Arc::clone(&trace_arc),
+            Arc::clone(&pre_arc),
+            4,
+        )
+        .unwrap();
+
+        let items = sample_items(&trace, 50);
+        let a = items[0];
+        let sa = sharded.shard_of(a).expect("known item");
+        let b = *items
+            .iter()
+            .find(|&&x| sharded.shard_of(x).expect("known item") != sa)
+            .expect("an item on another shard");
+        let batch = TripleBatch::new(vec![
+            ProvTriple::new(AttrValueId(u64::MAX - 21), AttrValueId(a), OpId(0)),
+            ProvTriple::new(AttrValueId(u64::MAX - 22), AttrValueId(b), OpId(0)),
+        ]);
+
+        let err = sharded.ingest(&batch).unwrap_err();
+        assert!(format!("{err:#}").contains("call recover()"), "{err:#}");
+        assert!(sharded.has_pending());
+        assert_eq!(sharded.batches_ingested(), 0);
+
+        // The @0 probe cannot re-fire; recovery lands the parked step.
+        let d = sharded.recover().unwrap();
+        assert!(!sharded.has_pending());
+        assert_eq!(d.batch, 1);
+        assert_eq!(d.per_shard.iter().filter(|x| x.is_some()).count(), 2);
+        let total: usize =
+            sharded.shard_sessions().iter().map(|s| s.trace().len()).sum();
+        assert_eq!(total, trace.len() + 2, "no rows lost or duplicated by recovery");
     }
 
     #[test]

@@ -44,5 +44,6 @@ pub mod minispark;
 pub mod proptest_lite;
 pub mod provenance;
 pub mod runtime;
+pub mod storage;
 pub mod util;
 pub mod workflow;

@@ -73,6 +73,11 @@ fn print_help() {
          common opts: --executors N --partitions N --job-overhead-us N --tau N --theta N\n\
                       --shuffle-elision true|false --wcc-backend native|xla\n\
                       --closure-backend native|xla --config FILE\n\
+         memory:      --memory-budget BYTES (k/m/g suffixes; 0 = unbounded, the default) —\n\
+                      engine datasets spill to segment files and partitions page back\n\
+                      through a byte-budgeted LRU cache on demand; answers are identical\n\
+                      under any budget. preprocess --pre-partitions N sets the v4 index\n\
+                      file's per-partition segmentation (default 64)\n\
          query opts:  --engine rq|ccprov|csprov|auto  --item ID (repeatable — batches fan\n\
                       out across the worker pool)  --max-depth N --max-triples N\n\
                       --tau-override N (per-query driver-collect threshold)\n\
@@ -85,7 +90,7 @@ fn print_help() {
                       shards and persists the gathered state)\n\
          resilience:  --fault-plan SPEC (deterministic injection, e.g.\n\
                       panic:shuffle:0.05,seed=6 or io:journal:@1 — sites\n\
-                      task|shuffle|store|journal)  --task-retries N\n\
+                      task|shuffle|store|journal|segment)  --task-retries N\n\
                       --retry-backoff-us N (supervised in-job task retries)\n\
                       ingest --retries N resumes an interrupted sharded migration\n\
                       from its write-ahead journal; ingest publishes trace+index\n\
@@ -198,7 +203,9 @@ fn run(args: &Args) -> Result<()> {
                 }
             };
             let pre = preprocess(&trace, &g, &splits, theta, big, wcc);
-            store::save_preprocessed(Path::new(&out), &pre)?;
+            let pre_partitions: usize =
+                args.get_parsed_or("pre-partitions", store::DEFAULT_PRE_PARTITIONS)?;
+            store::save_preprocessed_with_partitions(Path::new(&out), &pre, pre_partitions)?;
             println!(
                 "preprocessed: {} components ({} large), {} sets, {} set-deps",
                 human_count(pre.component_count as u64),
@@ -382,14 +389,15 @@ fn run(args: &Args) -> Result<()> {
                 reqs.push(req);
             }
             let shards: usize = args.get_parsed_or("shards", 1)?;
-            let (responses, outcomes, shard_report, dur) = if shards > 1 {
+            let (responses, outcomes, shard_report, metrics, dur) = if shards > 1 {
                 let session =
                     ShardedSession::new(&ecfg, Arc::new(trace), Arc::new(pre), shards)?;
                 let ((responses, report), dur) = provspark::util::timer::time_it(|| {
                     session.query_many_report_on(router, &reqs)
                 });
                 let outcomes = report.outcomes.clone();
-                (responses, outcomes, Some(report), dur)
+                let metrics = session.context().metrics().snapshot();
+                (responses, outcomes, Some(report), metrics, dur)
             } else {
                 let session = ProvSession::new(&ecfg, Arc::new(trace), Arc::new(pre))?;
                 // Supervised execution: per-item retry budget, failures
@@ -399,7 +407,8 @@ fn run(args: &Args) -> Result<()> {
                     session.query_many_outcomes_on(router, &reqs)
                 });
                 let (responses, outcomes): (Vec<_>, Vec<_>) = pairs.into_iter().unzip();
-                (responses, outcomes, None, dur)
+                let metrics = session.context().metrics().snapshot();
+                (responses, outcomes, None, metrics, dur)
             };
             for ((req, resp), outcome) in reqs.iter().zip(&responses).zip(&outcomes) {
                 let lineage = &resp.lineage;
@@ -438,6 +447,16 @@ fn run(args: &Args) -> Result<()> {
             }
             if let Some(report) = shard_report {
                 print!("{}", report.summary());
+            }
+            if ecfg.cluster.memory_budget > 0 {
+                // Out-of-core sessions: show how the byte-budgeted cache
+                // behaved (hits/misses/evictions and spill/page-in volume
+                // are part of the engine-wide metrics summary).
+                println!(
+                    "memory budget {}: {}",
+                    provspark::util::fmt::human_bytes(ecfg.cluster.memory_budget),
+                    metrics.summary(),
+                );
             }
             Ok(())
         }

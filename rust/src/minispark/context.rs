@@ -6,8 +6,15 @@ use super::metrics::EngineMetrics;
 use crate::config::ClusterConfig;
 use crate::exec::{par_map_supervised, RetryPolicy};
 use crate::fault::{FaultInjector, FaultSite};
-use std::sync::Arc;
+use crate::storage::PartitionCache;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Distinguishes the spill directories of contexts sharing one process
+/// (the test harness runs many in parallel under one pid).
+static CONTEXT_IDS: AtomicU64 = AtomicU64::new(0);
 
 /// Handle to an embedded minispark "cluster" (analogous to `SparkContext`).
 ///
@@ -19,10 +26,24 @@ pub struct MiniSpark {
 
 struct Inner {
     cfg: ClusterConfig,
-    metrics: EngineMetrics,
+    metrics: Arc<EngineMetrics>,
     /// Armed from `cfg.fault_plan`; `None` on production configs.
     fault: Option<Arc<FaultInjector>>,
     retry: RetryPolicy,
+    /// Byte-budgeted residency for spilled partitions; shares `metrics`.
+    cache: Arc<PartitionCache>,
+    /// Lazily created directory for this context's segment files; removed
+    /// (best effort) when the last clone drops.
+    spill_dir: Mutex<Option<PathBuf>>,
+    next_spill: AtomicU64,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        if let Some(dir) = self.spill_dir.get_mut().ok().and_then(|d| d.take()) {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
 }
 
 impl MiniSpark {
@@ -30,7 +51,19 @@ impl MiniSpark {
         let fault = cfg.fault_plan.clone().map(|p| Arc::new(FaultInjector::new(p)));
         let retry =
             RetryPolicy::new(cfg.task_retries, Duration::from_micros(cfg.retry_backoff_us));
-        Self { inner: Arc::new(Inner { cfg, metrics: EngineMetrics::default(), fault, retry }) }
+        let metrics = Arc::new(EngineMetrics::default());
+        let cache = Arc::new(PartitionCache::with_metrics(cfg.memory_budget, Arc::clone(&metrics)));
+        Self {
+            inner: Arc::new(Inner {
+                cfg,
+                metrics,
+                fault,
+                retry,
+                cache,
+                spill_dir: Mutex::new(None),
+                next_spill: AtomicU64::new(0),
+            }),
+        }
     }
 
     /// Default-configured engine (used by tests and examples).
@@ -62,6 +95,35 @@ impl MiniSpark {
     /// tally for reports.
     pub fn fault(&self) -> Option<&Arc<FaultInjector>> {
         self.inner.fault.as_ref()
+    }
+
+    /// The partition cache datasets page spilled segments through. Always
+    /// present; with `memory_budget == 0` nothing spills, so it stays empty.
+    pub fn cache(&self) -> &Arc<PartitionCache> {
+        &self.inner.cache
+    }
+
+    /// Byte budget for resident partitions; `0` means unbounded
+    /// ([`ClusterConfig::memory_budget`]).
+    pub fn memory_budget(&self) -> u64 {
+        self.inner.cfg.memory_budget
+    }
+
+    /// A fresh path for a segment file under this context's (lazily
+    /// created) spill directory. `label` names the dataset for debugging;
+    /// a per-context counter keeps paths unique across respills.
+    pub fn spill_path(&self, label: &str) -> anyhow::Result<PathBuf> {
+        let mut dir = self.inner.spill_dir.lock().expect("spill dir lock");
+        if dir.is_none() {
+            let id = CONTEXT_IDS.fetch_add(1, Ordering::Relaxed);
+            let d = std::env::temp_dir()
+                .join(format!("provspark-spill-{}-{id}", std::process::id()));
+            std::fs::create_dir_all(&d)
+                .map_err(|e| anyhow::anyhow!("creating spill dir {d:?}: {e}"))?;
+            *dir = Some(d);
+        }
+        let n = self.inner.next_spill.fetch_add(1, Ordering::Relaxed);
+        Ok(dir.as_ref().expect("just created").join(format!("{label}-{n:03}.seg")))
     }
 
     /// Run one *job*: charge the simulated scheduling overhead, then execute

@@ -1,8 +1,17 @@
 //! Partitioned datasets and their operations.
+//!
+//! Partitions live in one of two states: resident (`Part::Mem`, an
+//! `Arc<Vec<T>>`) or spilled (`Part::Paged`, a segment of an on-disk
+//! segment file paged in on demand through the context's byte-budgeted
+//! [`PartitionCache`]). Every operation materializes exactly the
+//! partitions it touches, so a point lookup against a spilled dataset
+//! reads one segment — the out-of-core analogue of the paper's
+//! "|I| partitions at most" argument. See [`crate::storage`].
 
 use super::context::MiniSpark;
 use super::partitioner::{HashPartitioner, KeyTag};
-use crate::fault::FaultSite;
+use crate::fault::{FaultInjector, FaultSite};
+use crate::storage::{write_segments, PartitionCache, PinGuard, SegmentCodec, SegmentFile};
 use rustc_hash::FxHashMap;
 use std::sync::Arc;
 
@@ -17,6 +26,11 @@ pub struct ScanCost {
     pub partitions: u64,
     /// Rows examined across those partitions.
     pub rows: u64,
+    /// Partitions served warm from the partition cache (spilled datasets;
+    /// always 0 for fully resident ones).
+    pub cache_hits: u64,
+    /// Partitions paged in from a segment file for this scan.
+    pub cache_misses: u64,
 }
 
 impl ScanCost {
@@ -24,6 +38,22 @@ impl ScanCost {
     pub fn add(&mut self, other: ScanCost) {
         self.partitions += other.partitions;
         self.rows += other.rows;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+    }
+}
+
+/// Per-fetch cache traffic, folded into [`ScanCost`] by counted lookups.
+#[derive(Debug, Clone, Copy, Default)]
+struct Touch {
+    hits: u64,
+    misses: u64,
+}
+
+impl Touch {
+    fn add(&mut self, other: Touch) {
+        self.hits += other.hits;
+        self.misses += other.misses;
     }
 }
 
@@ -49,13 +79,97 @@ impl<T> Clone for Partitioning<T> {
     }
 }
 
+/// The shared disk half of one spilled dataset: the cache its segments
+/// page through, the file id they are keyed under, the context fault
+/// injector cold reads probe, and the decode closure (captures the open
+/// [`SegmentFile`] where the row type's [`SegmentCodec`] is in scope).
+struct PagedSource<T> {
+    cache: Arc<PartitionCache>,
+    file_id: u64,
+    /// Probed inside the cache-miss loader only: warm hits never consume a
+    /// fault draw, so `io:segment` plans target real paging IO.
+    fault: Option<Arc<FaultInjector>>,
+    load: Box<dyn Fn(u32) -> anyhow::Result<Vec<T>> + Send + Sync>,
+}
+
+/// One partition: resident rows, or a segment paged in on demand.
+enum Part<T> {
+    Mem(Arc<Vec<T>>),
+    Paged { src: Arc<PagedSource<T>>, seg: u32, rows: usize },
+}
+
+impl<T> Clone for Part<T> {
+    fn clone(&self) -> Self {
+        match self {
+            Part::Mem(p) => Part::Mem(Arc::clone(p)),
+            Part::Paged { src, seg, rows } => {
+                Part::Paged { src: Arc::clone(src), seg: *seg, rows: *rows }
+            }
+        }
+    }
+}
+
+/// A materialized partition: the rows, the pin keeping a cached segment
+/// unevictable while the scan runs, and the cache traffic the fetch caused.
+struct Fetched<T> {
+    rows: Arc<Vec<T>>,
+    /// Held for the fetch's lifetime; dropping it releases the cache pin.
+    _pin: Option<PinGuard>,
+    touch: Touch,
+}
+
+impl<T> Part<T> {
+    /// Row count, from metadata — never triggers IO.
+    fn rows(&self) -> usize {
+        match self {
+            Part::Mem(p) => p.len(),
+            Part::Paged { rows, .. } => *rows,
+        }
+    }
+}
+
+impl<T: Send + Sync + 'static> Part<T> {
+    /// Materialize this partition: free for resident partitions; a cache
+    /// fetch — possibly paging the segment in — for spilled ones.
+    ///
+    /// A paging failure panics with the underlying error: tasks have no
+    /// error channel, and the harness's supervised execution boundary
+    /// converts the panic into a typed per-query failure.
+    fn fetch(&self) -> Fetched<T> {
+        match self {
+            Part::Mem(p) => {
+                Fetched { rows: Arc::clone(p), _pin: None, touch: Touch::default() }
+            }
+            Part::Paged { src, seg, .. } => {
+                let seg = *seg;
+                let loaded = src.cache.get_or_load(src.file_id, seg, || {
+                    if let Some(inj) = &src.fault {
+                        inj.fire_io(FaultSite::SegmentIo)?;
+                    }
+                    (src.load)(seg)
+                });
+                match loaded {
+                    Ok((rows, hit, pin)) => Fetched {
+                        rows,
+                        _pin: Some(pin),
+                        touch: Touch { hits: u64::from(hit), misses: u64::from(!hit) },
+                    },
+                    Err(e) => panic!("demand paging segment {seg}: {e:#}"),
+                }
+            }
+        }
+    }
+}
+
 /// An immutable, partitioned, materialized collection — the engine's RDD.
 ///
 /// Partitions are `Arc`-shared, so narrow transformations (filter) copy row
-/// data only for surviving rows and datasets clone cheaply.
+/// data only for surviving rows and datasets clone cheaply. Spilled
+/// partitions ([`Dataset::spilled`]) are shared as segment handles; clones
+/// page through the same cache entry.
 pub struct Dataset<T> {
     sc: MiniSpark,
-    partitions: Vec<Arc<Vec<T>>>,
+    parts: Vec<Part<T>>,
     partitioning: Option<Partitioning<T>>,
 }
 
@@ -63,7 +177,7 @@ impl<T> Clone for Dataset<T> {
     fn clone(&self) -> Self {
         Self {
             sc: self.sc.clone(),
-            partitions: self.partitions.clone(),
+            parts: self.parts.clone(),
             partitioning: self.partitioning.clone(),
         }
     }
@@ -76,13 +190,13 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         let num_partitions = num_partitions.max(1);
         let n = data.len();
         let chunk = n.div_ceil(num_partitions).max(1);
-        let mut partitions = Vec::with_capacity(num_partitions);
+        let mut parts = Vec::with_capacity(num_partitions);
         let mut it = data.into_iter();
         for _ in 0..num_partitions {
             let part: Vec<T> = it.by_ref().take(chunk).collect();
-            partitions.push(Arc::new(part));
+            parts.push(Part::Mem(Arc::new(part)));
         }
-        Self { sc: sc.clone(), partitions, partitioning: None }
+        Self { sc: sc.clone(), parts, partitioning: None }
     }
 
     /// Build a hash-partitioned dataset directly from a borrowed slice in a
@@ -142,9 +256,17 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         });
         Self {
             sc: sc.clone(),
-            partitions,
+            parts: partitions.into_iter().map(Part::Mem).collect(),
             partitioning: Some(Partitioning { partitioner, key_fn, key_tag }),
         }
+    }
+
+    /// Materialize every partition, pinning spilled ones for the caller's
+    /// lifetime — the full-scan entry point. The returned pins make a wide
+    /// scan's working set unevictable until the scan finishes, even when it
+    /// transiently overshoots the budget.
+    fn fetch_all(&self) -> Vec<Fetched<T>> {
+        self.parts.iter().map(|p| p.fetch()).collect()
     }
 
     /// Engine handle.
@@ -153,21 +275,23 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
     }
 
     pub fn num_partitions(&self) -> usize {
-        self.partitions.len()
+        self.parts.len()
     }
 
-    /// Total row count (metadata — datasets are materialized).
+    /// Total row count (metadata — never pages spilled partitions in).
     pub fn len(&self) -> usize {
-        self.partitions.iter().map(|p| p.len()).sum()
+        self.parts.iter().map(|p| p.rows()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.partitions.iter().all(|p| p.is_empty())
+        self.parts.iter().all(|p| p.rows() == 0)
     }
 
     /// Rows of one partition (used by tests and the driver-collect path).
-    pub fn partition(&self, i: usize) -> &Arc<Vec<T>> {
-        &self.partitions[i]
+    /// Pages a spilled partition in; the returned `Arc` stays valid even if
+    /// the cache later evicts its copy.
+    pub fn partition(&self, i: usize) -> Arc<Vec<T>> {
+        self.parts[i].fetch().rows
     }
 
     /// True if hash-partitioned (a subsequent [`lookup`](Self::lookup) scans
@@ -241,9 +365,11 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         let np = partitioner.num_partitions();
 
         // Map side: bucket each input partition's rows by target.
+        let fetched = self.fetch_all();
+        let inputs: Vec<Arc<Vec<T>>> = fetched.iter().map(|f| Arc::clone(&f.rows)).collect();
         let kf = Arc::clone(&key_fn);
         let fault = self.sc.fault().cloned();
-        let buckets: Vec<Vec<Vec<T>>> = self.sc.run_job(&self.partitions, |_, part| {
+        let buckets: Vec<Vec<Vec<T>>> = self.sc.run_job(&inputs, |_, part| {
             if let Some(inj) = &fault {
                 inj.fire_task(FaultSite::Shuffle);
             }
@@ -253,7 +379,8 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             }
             out
         });
-        let total: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+        let total: u64 = inputs.iter().map(|p| p.len() as u64).sum();
+        drop(fetched);
         self.sc.metrics().add_shuffled(total);
         Self::from_shuffle_buckets(&self.sc, buckets, partitioner, key_fn, key_tag)
     }
@@ -285,23 +412,46 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             buckets[p.partitioner.partition_of((p.key_fn)(r))].push(r.clone());
         }
         self.sc.metrics().add_shuffled(rows.len() as u64);
-        let work: Vec<(Arc<Vec<T>>, Vec<T>)> =
-            self.partitions.iter().cloned().zip(buckets).collect();
+        // Fetch (and pin) only the partitions that receive rows; the rest
+        // keep their handles — a spilled partition stays on disk.
+        let mut pins = Vec::new();
+        let work: Vec<(Option<Arc<Vec<T>>>, Vec<T>)> = self
+            .parts
+            .iter()
+            .zip(buckets)
+            .map(|(part, extra)| {
+                if extra.is_empty() {
+                    (None, extra)
+                } else {
+                    let f = part.fetch();
+                    let rows = Arc::clone(&f.rows);
+                    pins.push(f);
+                    (Some(rows), extra)
+                }
+            })
+            .collect();
         let fault = self.sc.fault().cloned();
-        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&work, |_, (part, extra)| {
+        let out: Vec<Option<Arc<Vec<T>>>> = self.sc.run_job(&work, |_, (part, extra)| {
             if let Some(inj) = &fault {
                 inj.fire_task(FaultSite::Shuffle);
             }
-            if extra.is_empty() {
-                Arc::clone(part)
-            } else {
+            part.as_ref().map(|part| {
                 let mut v = Vec::with_capacity(part.len() + extra.len());
                 v.extend_from_slice(part);
                 v.extend_from_slice(extra);
                 Arc::new(v)
-            }
+            })
         });
-        Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+        drop(pins);
+        let parts = out
+            .into_iter()
+            .zip(&self.parts)
+            .map(|(new, old)| match new {
+                Some(v) => Part::Mem(v),
+                None => old.clone(),
+            })
+            .collect();
+        Self { sc: self.sc.clone(), parts, partitioning: self.partitioning.clone() }
     }
 
     /// Delta maintenance: rewrite rows **in place** in the partitions that
@@ -328,49 +478,74 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         }
         let targets: rustc_hash::FxHashSet<usize> =
             keys.iter().map(|&k| p.partitioner.partition_of(k)).collect();
-        let work: Vec<(Arc<Vec<T>>, bool)> = self
-            .partitions
+        // Fetch (and pin) only the owned partitions; untouched ones keep
+        // their handles — spilled partitions stay on disk.
+        let mut pins = Vec::new();
+        let work: Vec<Option<Arc<Vec<T>>>> = self
+            .parts
             .iter()
             .enumerate()
-            .map(|(i, part)| (Arc::clone(part), targets.contains(&i)))
+            .map(|(i, part)| {
+                if !targets.contains(&i) {
+                    return None;
+                }
+                let fch = part.fetch();
+                let rows = Arc::clone(&fch.rows);
+                pins.push(fch);
+                Some(rows)
+            })
             .collect();
-        let scanned_rows: u64 =
-            work.iter().filter(|(_, hit)| *hit).map(|(part, _)| part.len() as u64).sum();
+        let scanned_rows: u64 = work.iter().flatten().map(|part| part.len() as u64).sum();
         self.sc.metrics().add_scan(targets.len() as u64, scanned_rows);
         let kf = Arc::clone(&p.key_fn);
-        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&work, |_, (part, hit)| {
-            if !*hit {
-                return Arc::clone(part);
-            }
-            Arc::new(
-                part.iter()
-                    .filter_map(|r| {
-                        let out = f(r);
-                        if let Some(nr) = &out {
-                            debug_assert_eq!(
-                                kf(nr),
-                                kf(r),
-                                "patch_partitions must not change a row's key"
-                            );
-                        }
-                        out
-                    })
-                    .collect::<Vec<T>>(),
-            )
+        let out: Vec<Option<Arc<Vec<T>>>> = self.sc.run_job(&work, |_, slot| {
+            slot.as_ref().map(|part| {
+                Arc::new(
+                    part.iter()
+                        .filter_map(|r| {
+                            let out = f(r);
+                            if let Some(nr) = &out {
+                                debug_assert_eq!(
+                                    kf(nr),
+                                    kf(r),
+                                    "patch_partitions must not change a row's key"
+                                );
+                            }
+                            out
+                        })
+                        .collect::<Vec<T>>(),
+                )
+            })
         });
-        Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+        drop(pins);
+        let parts = out
+            .into_iter()
+            .zip(&self.parts)
+            .map(|(new, old)| match new {
+                Some(v) => Part::Mem(v),
+                None => old.clone(),
+            })
+            .collect();
+        Self { sc: self.sc.clone(), parts, partitioning: self.partitioning.clone() }
     }
 
     /// Scan every partition, keeping rows satisfying `pred`. Preserves hash
     /// partitioning (filter never moves rows) — the property Algorithm 1
     /// relies on ("this preserves the hash-partitioning logic").
     pub fn filter(&self, pred: impl Fn(&T) -> bool + Send + Sync) -> Self {
-        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
-        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
-        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&self.partitions, |_, part| {
+        let fetched = self.fetch_all();
+        let inputs: Vec<Arc<Vec<T>>> = fetched.iter().map(|f| Arc::clone(&f.rows)).collect();
+        let rows: u64 = inputs.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(inputs.len() as u64, rows);
+        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&inputs, |_, part| {
             Arc::new(part.iter().filter(|r| pred(r)).cloned().collect::<Vec<T>>())
         });
-        Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+        drop(fetched);
+        Self {
+            sc: self.sc.clone(),
+            parts: partitions.into_iter().map(Part::Mem).collect(),
+            partitioning: self.partitioning.clone(),
+        }
     }
 
     /// Transform rows (drops partitioning — keys may change).
@@ -378,12 +553,19 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         &self,
         f: impl Fn(&T) -> U + Send + Sync,
     ) -> Dataset<U> {
-        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
-        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
-        let partitions: Vec<Arc<Vec<U>>> = self.sc.run_job(&self.partitions, |_, part| {
+        let fetched = self.fetch_all();
+        let inputs: Vec<Arc<Vec<T>>> = fetched.iter().map(|f| Arc::clone(&f.rows)).collect();
+        let rows: u64 = inputs.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(inputs.len() as u64, rows);
+        let partitions: Vec<Arc<Vec<U>>> = self.sc.run_job(&inputs, |_, part| {
             Arc::new(part.iter().map(&f).collect::<Vec<U>>())
         });
-        Dataset { sc: self.sc.clone(), partitions, partitioning: None }
+        drop(fetched);
+        Dataset {
+            sc: self.sc.clone(),
+            parts: partitions.into_iter().map(Part::Mem).collect(),
+            partitioning: None,
+        }
     }
 
     /// Transform each row into zero or more rows (drops partitioning).
@@ -391,12 +573,19 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         &self,
         f: impl Fn(&T) -> Vec<U> + Send + Sync,
     ) -> Dataset<U> {
-        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
-        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
-        let partitions: Vec<Arc<Vec<U>>> = self.sc.run_job(&self.partitions, |_, part| {
+        let fetched = self.fetch_all();
+        let inputs: Vec<Arc<Vec<T>>> = fetched.iter().map(|f| Arc::clone(&f.rows)).collect();
+        let rows: u64 = inputs.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(inputs.len() as u64, rows);
+        let partitions: Vec<Arc<Vec<U>>> = self.sc.run_job(&inputs, |_, part| {
             Arc::new(part.iter().flat_map(&f).collect::<Vec<U>>())
         });
-        Dataset { sc: self.sc.clone(), partitions, partitioning: None }
+        drop(fetched);
+        Dataset {
+            sc: self.sc.clone(),
+            parts: partitions.into_iter().map(Part::Mem).collect(),
+            partitioning: None,
+        }
     }
 
     /// Per-partition transformation (drops partitioning).
@@ -404,11 +593,18 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         &self,
         f: impl Fn(&[T]) -> Vec<U> + Send + Sync,
     ) -> Dataset<U> {
-        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
-        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
+        let fetched = self.fetch_all();
+        let inputs: Vec<Arc<Vec<T>>> = fetched.iter().map(|f| Arc::clone(&f.rows)).collect();
+        let rows: u64 = inputs.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(inputs.len() as u64, rows);
         let partitions: Vec<Arc<Vec<U>>> =
-            self.sc.run_job(&self.partitions, |_, part| Arc::new(f(part)));
-        Dataset { sc: self.sc.clone(), partitions, partitioning: None }
+            self.sc.run_job(&inputs, |_, part| Arc::new(f(part)));
+        drop(fetched);
+        Dataset {
+            sc: self.sc.clone(),
+            parts: partitions.into_iter().map(Part::Mem).collect(),
+            partitioning: None,
+        }
     }
 
     /// All rows whose key equals `key`.
@@ -427,13 +623,20 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         match &self.partitioning {
             Some(p) => {
                 let idx = p.partitioner.partition_of(key);
-                let part = Arc::clone(&self.partitions[idx]);
-                let cost = ScanCost { partitions: 1, rows: part.len() as u64 };
+                let fetched = self.parts[idx].fetch();
+                let cost = ScanCost {
+                    partitions: 1,
+                    rows: fetched.rows.len() as u64,
+                    cache_hits: fetched.touch.hits,
+                    cache_misses: fetched.touch.misses,
+                };
                 self.sc.metrics().add_scan(cost.partitions, cost.rows);
                 let kf = Arc::clone(&p.key_fn);
-                let mut out = self.sc.run_job(&[part], |_, part| {
+                let input = [Arc::clone(&fetched.rows)];
+                let mut out = self.sc.run_job(&input, |_, part| {
                     part.iter().filter(|r| kf(r) == key).cloned().collect::<Vec<T>>()
                 });
+                drop(fetched);
                 (out.pop().unwrap(), cost)
             }
             None => {
@@ -464,18 +667,34 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         for &k in keys {
             by_part.entry(p.partitioner.partition_of(k)).or_default().push(k);
         }
+        // Fetch (and pin) only the target partitions — one BFS round's
+        // working set stays resident for the round's whole scan.
+        let mut touch = Touch::default();
+        let mut pins = Vec::new();
         let work: Vec<(Arc<Vec<T>>, Vec<u64>)> = by_part
             .into_iter()
-            .map(|(idx, ks)| (Arc::clone(&self.partitions[idx]), ks))
+            .map(|(idx, ks)| {
+                let f = self.parts[idx].fetch();
+                touch.add(f.touch);
+                let rows = Arc::clone(&f.rows);
+                pins.push(f);
+                (rows, ks)
+            })
             .collect();
         let scanned_rows: u64 = work.iter().map(|(p, _)| p.len() as u64).sum();
-        let cost = ScanCost { partitions: work.len() as u64, rows: scanned_rows };
+        let cost = ScanCost {
+            partitions: work.len() as u64,
+            rows: scanned_rows,
+            cache_hits: touch.hits,
+            cache_misses: touch.misses,
+        };
         self.sc.metrics().add_scan(cost.partitions, cost.rows);
         let kf = Arc::clone(&p.key_fn);
         let found: Vec<Vec<T>> = self.sc.run_job(&work, |_, (part, ks)| {
             let keyset: rustc_hash::FxHashSet<u64> = ks.iter().copied().collect();
             part.iter().filter(|r| keyset.contains(&kf(r))).cloned().collect()
         });
+        drop(pins);
         (found.into_concat(), cost)
     }
 
@@ -501,31 +720,45 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         for &k in keys {
             by_part.entry(p.partitioner.partition_of(k)).or_default().insert(k);
         }
-        let work: Vec<(usize, Arc<Vec<T>>, Option<rustc_hash::FxHashSet<u64>>)> = self
-            .partitions
-            .iter()
-            .enumerate()
-            .map(|(i, part)| (i, Arc::clone(part), by_part.remove(&i)))
+        // Fetch (and pin) only the target partitions; non-targets come back
+        // empty without ever paging in.
+        let mut touch = Touch::default();
+        let mut pins = Vec::new();
+        let np = self.parts.len();
+        let work: Vec<Option<(Arc<Vec<T>>, rustc_hash::FxHashSet<u64>)>> = (0..np)
+            .map(|i| {
+                by_part.remove(&i).map(|ks| {
+                    let f = self.parts[i].fetch();
+                    touch.add(f.touch);
+                    let rows = Arc::clone(&f.rows);
+                    pins.push(f);
+                    (rows, ks)
+                })
+            })
             .collect();
-        let scanned: u64 = work
-            .iter()
-            .filter(|(_, _, ks)| ks.is_some())
-            .map(|(_, p, _)| p.len() as u64)
-            .sum();
-        let n_scanned = work.iter().filter(|(_, _, ks)| ks.is_some()).count() as u64;
-        let cost = ScanCost { partitions: n_scanned, rows: scanned };
+        let scanned: u64 = work.iter().flatten().map(|(p, _)| p.len() as u64).sum();
+        let n_scanned = work.iter().flatten().count() as u64;
+        let cost = ScanCost {
+            partitions: n_scanned,
+            rows: scanned,
+            cache_hits: touch.hits,
+            cache_misses: touch.misses,
+        };
         self.sc.metrics().add_scan(cost.partitions, cost.rows);
         let kf = Arc::clone(&p.key_fn);
-        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&work, |_, (_, part, ks)| {
-            match ks {
-                None => Arc::new(Vec::new()),
-                Some(keyset) => Arc::new(
-                    part.iter().filter(|r| keyset.contains(&kf(r))).cloned().collect::<Vec<T>>(),
-                ),
-            }
+        let partitions: Vec<Arc<Vec<T>>> = self.sc.run_job(&work, |_, slot| match slot {
+            None => Arc::new(Vec::new()),
+            Some((part, keyset)) => Arc::new(
+                part.iter().filter(|r| keyset.contains(&kf(r))).cloned().collect::<Vec<T>>(),
+            ),
         });
+        drop(pins);
         (
-            Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() },
+            Self {
+                sc: self.sc.clone(),
+                parts: partitions.into_iter().map(Part::Mem).collect(),
+                partitioning: self.partitioning.clone(),
+            },
             cost,
         )
     }
@@ -534,8 +767,8 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
     pub fn collect(&self) -> Vec<T> {
         self.sc.metrics().add_job();
         let mut out = Vec::with_capacity(self.len());
-        for p in &self.partitions {
-            out.extend_from_slice(p);
+        for p in &self.parts {
+            out.extend_from_slice(&p.fetch().rows);
         }
         self.sc.metrics().add_collected(out.len() as u64);
         out
@@ -561,29 +794,33 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
                     && (Arc::ptr_eq(&a.key_fn, &b.key_fn)
                         || (a.key_tag.is_some() && a.key_tag == b.key_tag)) =>
             {
-                let partitions: Vec<Arc<Vec<T>>> = self
-                    .partitions
+                let parts: Vec<Part<T>> = self
+                    .parts
                     .iter()
-                    .zip(&other.partitions)
+                    .zip(&other.parts)
                     .map(|(x, y)| {
-                        if y.is_empty() {
-                            Arc::clone(x)
-                        } else if x.is_empty() {
-                            Arc::clone(y)
+                        // Emptiness from metadata: a one-sided union keeps
+                        // the other side's handle (spilled stays on disk).
+                        if y.rows() == 0 {
+                            x.clone()
+                        } else if x.rows() == 0 {
+                            y.clone()
                         } else {
-                            let mut v = Vec::with_capacity(x.len() + y.len());
-                            v.extend_from_slice(x);
-                            v.extend_from_slice(y);
-                            Arc::new(v)
+                            let fx = x.fetch();
+                            let fy = y.fetch();
+                            let mut v = Vec::with_capacity(fx.rows.len() + fy.rows.len());
+                            v.extend_from_slice(&fx.rows);
+                            v.extend_from_slice(&fy.rows);
+                            Part::Mem(Arc::new(v))
                         }
                     })
                     .collect();
-                Self { sc: self.sc.clone(), partitions, partitioning: self.partitioning.clone() }
+                Self { sc: self.sc.clone(), parts, partitioning: self.partitioning.clone() }
             }
             _ => {
-                let mut partitions = self.partitions.clone();
-                partitions.extend(other.partitions.iter().cloned());
-                Self { sc: self.sc.clone(), partitions, partitioning: None }
+                let mut parts = self.parts.clone();
+                parts.extend(other.parts.iter().cloned());
+                Self { sc: self.sc.clone(), parts, partitioning: None }
             }
         }
     }
@@ -608,7 +845,9 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         let np = partitioner.num_partitions();
 
         // Map side with local (map-side combine) reduction.
-        let buckets: Vec<Vec<FxHashMap<u64, V>>> = self.sc.run_job(&self.partitions, |_, part| {
+        let fetched = self.fetch_all();
+        let inputs: Vec<Arc<Vec<T>>> = fetched.iter().map(|f| Arc::clone(&f.rows)).collect();
+        let buckets: Vec<Vec<FxHashMap<u64, V>>> = self.sc.run_job(&inputs, |_, part| {
             let mut out: Vec<FxHashMap<u64, V>> = (0..np).map(|_| FxHashMap::default()).collect();
             for row in part.iter() {
                 let (k, v) = kv(row);
@@ -616,7 +855,8 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             }
             out
         });
-        let total: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
+        let total: u64 = inputs.iter().map(|p| p.len() as u64).sum();
+        drop(fetched);
         let shuffled: u64 = buckets.iter().flatten().map(|m| m.len() as u64).sum();
         self.sc.metrics().add_shuffled(shuffled);
         self.sc.metrics().add_combined(total.saturating_sub(shuffled));
@@ -635,13 +875,68 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
 
         Dataset {
             sc: self.sc.clone(),
-            partitions,
+            parts: partitions.into_iter().map(Part::Mem).collect(),
             partitioning: Some(Partitioning {
                 partitioner,
                 key_fn: Arc::new(|row: &(u64, V)| row.0),
                 key_tag: Some(KeyTag::PAIR_KEY),
             }),
         }
+    }
+}
+
+/// Spilling — available for row types with an on-disk codec.
+impl<T: SegmentCodec + Send + Sync + Clone + 'static> Dataset<T> {
+    /// Write this dataset's partitions to a segment file and return a
+    /// dataset whose partitions page through the context's
+    /// [`PartitionCache`] on demand. A no-op clone when the context has no
+    /// memory budget ([`crate::config::ClusterConfig::memory_budget`]).
+    ///
+    /// The segment file is immutable — "spill once, page forever": eviction
+    /// only drops the cache's decoded copy. The still-decoded rows are
+    /// admitted warm (then immediately trimmed to the budget), so hot
+    /// partitions keep serving from memory. Partitioning is preserved, so
+    /// lookups against the spilled dataset still touch one segment.
+    ///
+    /// `label` names the segment file for debugging and error messages.
+    pub fn spilled(&self, label: &str) -> anyhow::Result<Self> {
+        if self.sc.memory_budget() == 0 {
+            return Ok(self.clone());
+        }
+        let path = self.sc.spill_path(label)?;
+        let fetched = self.fetch_all();
+        let views: Vec<&[T]> = fetched.iter().map(|f| f.rows.as_slice()).collect();
+        let payload = write_segments(&path, &views)?;
+        let cache = Arc::clone(self.sc.cache());
+        cache.note_spilled(payload);
+        let file = SegmentFile::open(&path)?;
+        let file_id = cache.register_file();
+        // Warm start: the rows are already decoded — admit them unpinned so
+        // the first queries hit before eviction trims residency to budget.
+        for (i, f) in fetched.iter().enumerate() {
+            cache.admit(file_id, i as u32, Arc::clone(&f.rows));
+        }
+        let src = Arc::new(PagedSource {
+            cache,
+            file_id,
+            fault: self.sc.fault().cloned(),
+            load: Box::new(move |seg| file.read_segment::<T>(seg as usize)),
+        });
+        let parts = fetched
+            .iter()
+            .enumerate()
+            .map(|(i, f)| Part::Paged {
+                src: Arc::clone(&src),
+                seg: i as u32,
+                rows: f.rows.len(),
+            })
+            .collect();
+        Ok(Self { sc: self.sc.clone(), parts, partitioning: self.partitioning.clone() })
+    }
+
+    /// Whether any partition is currently backed by a segment file.
+    pub fn is_spilled(&self) -> bool {
+        self.parts.iter().any(|p| matches!(p, Part::Paged { .. }))
     }
 }
 
@@ -664,12 +959,15 @@ impl<V: Send + Sync + Clone + 'static> Dataset<(u64, V)> {
         &self,
         f: impl Fn(&V) -> U + Send + Sync,
     ) -> Dataset<(u64, U)> {
-        let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
-        self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
-        let partitions: Vec<Arc<Vec<(u64, U)>>> =
-            self.sc.run_job(&self.partitions, |_, part| {
-                Arc::new(part.iter().map(|(k, v)| (*k, f(v))).collect::<Vec<_>>())
-            });
+        let fetched = self.fetch_all();
+        let inputs: Vec<Arc<Vec<(u64, V)>>> =
+            fetched.iter().map(|f| Arc::clone(&f.rows)).collect();
+        let rows: u64 = inputs.iter().map(|p| p.len() as u64).sum();
+        self.sc.metrics().add_scan(inputs.len() as u64, rows);
+        let partitions: Vec<Arc<Vec<(u64, U)>>> = self.sc.run_job(&inputs, |_, part| {
+            Arc::new(part.iter().map(|(k, v)| (*k, f(v))).collect::<Vec<_>>())
+        });
+        drop(fetched);
         let partitioning = match &self.partitioning {
             Some(p) if p.key_tag == Some(KeyTag::PAIR_KEY) => Some(Partitioning {
                 partitioner: p.partitioner,
@@ -678,7 +976,11 @@ impl<V: Send + Sync + Clone + 'static> Dataset<(u64, V)> {
             }),
             _ => None,
         };
-        Dataset { sc: self.sc.clone(), partitions, partitioning }
+        Dataset {
+            sc: self.sc.clone(),
+            parts: partitions.into_iter().map(Part::Mem).collect(),
+            partitioning,
+        }
     }
 
     /// [`reduce_by_key`](Self::reduce_by_key) on the pair key. When the
@@ -695,19 +997,22 @@ impl<V: Send + Sync + Clone + 'static> Dataset<(u64, V)> {
         let np = num_partitions.max(1);
         if self.partitioned_on(KeyTag::PAIR_KEY, np) {
             self.sc.metrics().add_elided();
-            let rows: u64 = self.partitions.iter().map(|p| p.len() as u64).sum();
-            self.sc.metrics().add_scan(self.partitions.len() as u64, rows);
-            let partitions: Vec<Arc<Vec<(u64, V)>>> =
-                self.sc.run_job(&self.partitions, |_, part| {
-                    let mut acc: FxHashMap<u64, V> = FxHashMap::default();
-                    for (k, v) in part.iter() {
-                        combine_into(&mut acc, *k, v.clone(), &red);
-                    }
-                    Arc::new(acc.into_iter().collect::<Vec<_>>())
-                });
+            let fetched = self.fetch_all();
+            let inputs: Vec<Arc<Vec<(u64, V)>>> =
+                fetched.iter().map(|f| Arc::clone(&f.rows)).collect();
+            let rows: u64 = inputs.iter().map(|p| p.len() as u64).sum();
+            self.sc.metrics().add_scan(inputs.len() as u64, rows);
+            let partitions: Vec<Arc<Vec<(u64, V)>>> = self.sc.run_job(&inputs, |_, part| {
+                let mut acc: FxHashMap<u64, V> = FxHashMap::default();
+                for (k, v) in part.iter() {
+                    combine_into(&mut acc, *k, v.clone(), &red);
+                }
+                Arc::new(acc.into_iter().collect::<Vec<_>>())
+            });
+            drop(fetched);
             return Dataset {
                 sc: self.sc.clone(),
-                partitions,
+                parts: partitions.into_iter().map(Part::Mem).collect(),
                 partitioning: Some(Partitioning {
                     partitioner: HashPartitioner::new(np),
                     key_fn: Arc::new(|row: &(u64, V)| row.0),
@@ -741,9 +1046,8 @@ where
     let l = left.partition_by_key(np);
     let r = right.partition_by_key(np);
     let sc = l.context().clone();
-    let pairs: Vec<(Arc<Vec<(u64, V1)>>, Arc<Vec<(u64, V2)>>)> = (0..np)
-        .map(|i| (Arc::clone(l.partition(i)), Arc::clone(r.partition(i))))
-        .collect();
+    let pairs: Vec<(Arc<Vec<(u64, V1)>>, Arc<Vec<(u64, V2)>>)> =
+        (0..np).map(|i| (l.partition(i), r.partition(i))).collect();
     let rows: u64 = pairs.iter().map(|(a, b)| (a.len() + b.len()) as u64).sum();
     sc.metrics().add_scan((2 * np) as u64, rows);
     let partitions: Vec<Arc<Vec<(u64, (V1, V2))>>> = sc.run_job(&pairs, |_, (lp, rp)| {
@@ -763,7 +1067,7 @@ where
     });
     Dataset {
         sc,
-        partitions,
+        parts: partitions.into_iter().map(Part::Mem).collect(),
         partitioning: Some(Partitioning {
             partitioner: HashPartitioner::new(np),
             key_fn: Arc::new(|row: &(u64, (V1, V2))| row.0),
@@ -1249,7 +1553,7 @@ mod tests {
         let d2 = d.append_partitioned(&[(target, 9999)]);
         let mut rebuilt = 0;
         for i in 0..d.num_partitions() {
-            if !Arc::ptr_eq(d.partition(i), d2.partition(i)) {
+            if !Arc::ptr_eq(&d.partition(i), &d2.partition(i)) {
                 rebuilt += 1;
             }
         }
@@ -1279,7 +1583,7 @@ mod tests {
         // Unrelated keys are untouched, and untouched partitions are shared.
         assert_eq!(d2.lookup(3), d.lookup(3));
         let shared = (0..d.num_partitions())
-            .filter(|&i| Arc::ptr_eq(d.partition(i), d2.partition(i)))
+            .filter(|&i| Arc::ptr_eq(&d.partition(i), &d2.partition(i)))
             .count();
         assert!(shared >= d.num_partitions() - 2);
         // Partitioning survives: a follow-up re-partition elides.
@@ -1315,5 +1619,116 @@ mod tests {
         assert_eq!(h.lookup(1).len(), 0);
         assert_eq!(h.filter(|_| true).len(), 0);
         assert!(h.collect().is_empty());
+    }
+
+    fn sc_budget(budget: u64) -> MiniSpark {
+        MiniSpark::new(ClusterConfig {
+            executors: 4,
+            default_partitions: 8,
+            job_overhead_us: 0,
+            memory_budget: budget,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn spilled_dataset_answers_match_resident() {
+        let s = sc();
+        let rows: Vec<(u64, u64)> = (0..500).map(|i| (i % 29, i)).collect();
+        let resident = Dataset::from_vec(&s, rows.clone(), 8).partition_by_key(8);
+        // A 16-byte budget (one row) is pathologically tiny: pure paging.
+        let sp = sc_budget(16);
+        let spilled =
+            Dataset::from_vec(&sp, rows, 8).partition_by_key(8).spilled("pairs").unwrap();
+        assert!(spilled.is_spilled());
+        assert_eq!(spilled.len(), resident.len());
+        for key in 0..29u64 {
+            let mut a = resident.lookup(key);
+            let mut b = spilled.lookup(key);
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "key {key}");
+        }
+        let mut a = resident.filter(|r| r.1 % 3 == 0).collect();
+        let mut b = spilled.filter(|r| r.1 % 3 == 0).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        let m = sp.metrics().snapshot();
+        assert_eq!(m.bytes_spilled, 500 * 16);
+        assert!(m.cache_misses > 0, "a tiny budget must page");
+        assert!(m.evictions > 0);
+        assert!(m.bytes_paged_in > 0);
+    }
+
+    #[test]
+    fn spill_is_a_noop_without_budget() {
+        let s = sc();
+        let d = Dataset::from_vec(&s, vec![(1u64, 2u64)], 2).partition_by_key(2);
+        let sp = d.spilled("noop").unwrap();
+        assert!(!sp.is_spilled());
+        assert!(Arc::ptr_eq(&d.partition(0), &sp.partition(0)));
+        assert_eq!(s.metrics().snapshot().bytes_spilled, 0);
+    }
+
+    #[test]
+    fn counted_lookups_report_cache_traffic() {
+        let rows: Vec<(u64, u64)> = (0..200).map(|i| (i % 13, i)).collect();
+        // Tiny budget: the warm admits evict, so a lookup pages in cold.
+        let cold_sc = sc_budget(16);
+        let cold = Dataset::from_vec(&cold_sc, rows.clone(), 4)
+            .partition_by_key(4)
+            .spilled("pairs")
+            .unwrap();
+        let (hits, cost) = cold.lookup_counted(3);
+        assert!(!hits.is_empty());
+        assert_eq!((cost.cache_hits, cost.cache_misses), (0, 1));
+        // Generous budget: the spill's warm admit serves the first lookup.
+        let warm_sc = sc_budget(1 << 20);
+        let warm = Dataset::from_vec(&warm_sc, rows, 4)
+            .partition_by_key(4)
+            .spilled("pairs")
+            .unwrap();
+        let (_, cost) = warm.lookup_counted(3);
+        assert_eq!((cost.cache_hits, cost.cache_misses), (1, 0));
+        // Fully resident datasets report zero cache traffic.
+        let s = sc();
+        let resident =
+            Dataset::from_vec(&s, vec![(1u64, 2u64)], 2).partition_by_key(2);
+        let (_, cost) = resident.lookup_counted(1);
+        assert_eq!((cost.cache_hits, cost.cache_misses), (0, 0));
+        // ScanCost folds the cache counters.
+        let mut acc = ScanCost::default();
+        acc.add(ScanCost { partitions: 1, rows: 5, cache_hits: 1, cache_misses: 0 });
+        acc.add(ScanCost { partitions: 2, rows: 7, cache_hits: 0, cache_misses: 2 });
+        assert_eq!((acc.cache_hits, acc.cache_misses), (1, 2));
+    }
+
+    #[test]
+    fn targeted_ops_leave_spilled_partitions_on_disk() {
+        let sp = sc_budget(16);
+        let rows: Vec<(u64, u64)> = (0..400).map(|i| (i % 40, i)).collect();
+        let d =
+            Dataset::from_vec(&sp, rows, 10).partition_by_key(10).spilled("pairs").unwrap();
+        // One-key prune pages exactly one partition in.
+        let before = sp.metrics().snapshot();
+        let pruned = d.prune_lookup(&[3]);
+        let delta = sp.metrics().snapshot().since(&before);
+        assert_eq!(delta.cache_misses, 1, "only the target partition pages in");
+        assert_eq!(pruned.lookup(3).len(), 10);
+        // Patching one key pages only its owner; the rest stay paged out.
+        let before = sp.metrics().snapshot();
+        let d2 = d.patch_partitions(&[7], |&(k, v)| Some((k, v)));
+        let delta = sp.metrics().snapshot().since(&before);
+        assert_eq!(delta.cache_misses, 1);
+        assert!(d2.is_spilled(), "untouched partitions keep their segments");
+        assert_eq!(d2.len(), d.len());
+        // Appending to one key pages only the receiving partition.
+        let before = sp.metrics().snapshot();
+        let d3 = d.append_partitioned(&[(5, 9_999)]);
+        let delta = sp.metrics().snapshot().since(&before);
+        assert_eq!(delta.cache_misses, 1);
+        assert_eq!(d3.lookup(5).len(), 11);
+        assert_eq!(d3.lookup(6).len(), 10, "other keys unchanged");
     }
 }

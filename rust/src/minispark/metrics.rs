@@ -22,6 +22,16 @@ pub struct EngineMetrics {
     /// Task attempts re-run by the supervisor after a caught panic (fault
     /// injection or a real bug; see `exec::par_map_supervised`).
     pub tasks_retried: AtomicU64,
+    /// Partition-cache fetches served from resident memory.
+    pub cache_hits: AtomicU64,
+    /// Partition-cache fetches that had to page a segment in from disk.
+    pub cache_misses: AtomicU64,
+    /// Cache entries dropped to bring residency back under the byte budget.
+    pub evictions: AtomicU64,
+    /// Payload bytes written to segment files when datasets spilled.
+    pub bytes_spilled: AtomicU64,
+    /// Payload bytes read back from segment files on cache misses.
+    pub bytes_paged_in: AtomicU64,
 }
 
 /// A point-in-time copy of the counters, with subtraction for deltas.
@@ -36,6 +46,11 @@ pub struct MetricsSnapshot {
     pub shuffles_elided: u64,
     pub rows_combined: u64,
     pub tasks_retried: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub evictions: u64,
+    pub bytes_spilled: u64,
+    pub bytes_paged_in: u64,
 }
 
 impl EngineMetrics {
@@ -50,6 +65,11 @@ impl EngineMetrics {
             shuffles_elided: self.shuffles_elided.load(Ordering::Relaxed),
             rows_combined: self.rows_combined.load(Ordering::Relaxed),
             tasks_retried: self.tasks_retried.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes_spilled: self.bytes_spilled.load(Ordering::Relaxed),
+            bytes_paged_in: self.bytes_paged_in.load(Ordering::Relaxed),
         }
     }
 
@@ -93,6 +113,31 @@ impl EngineMetrics {
     pub fn add_tasks_retried(&self, n: u64) {
         self.tasks_retried.fetch_add(n, Ordering::Relaxed);
     }
+
+    #[inline]
+    pub fn add_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_bytes_spilled(&self, bytes: u64) {
+        self.bytes_spilled.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_bytes_paged_in(&self, bytes: u64) {
+        self.bytes_paged_in.fetch_add(bytes, Ordering::Relaxed);
+    }
 }
 
 impl MetricsSnapshot {
@@ -108,13 +153,19 @@ impl MetricsSnapshot {
             shuffles_elided: self.shuffles_elided - earlier.shuffles_elided,
             rows_combined: self.rows_combined - earlier.rows_combined,
             tasks_retried: self.tasks_retried - earlier.tasks_retried,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            cache_misses: self.cache_misses - earlier.cache_misses,
+            evictions: self.evictions - earlier.evictions,
+            bytes_spilled: self.bytes_spilled - earlier.bytes_spilled,
+            bytes_paged_in: self.bytes_paged_in - earlier.bytes_paged_in,
         }
     }
 
     pub fn summary(&self) -> String {
         format!(
             "jobs={} tasks={} parts_scanned={} rows_scanned={} shuffled={} collected={} \
-             elided={} combined={} retried={}",
+             elided={} combined={} retried={} cache_hits={} cache_misses={} evictions={} \
+             spilled={} paged_in={}",
             self.jobs,
             self.tasks,
             self.partitions_scanned,
@@ -124,6 +175,11 @@ impl MetricsSnapshot {
             self.shuffles_elided,
             crate::util::fmt::human_count(self.rows_combined),
             self.tasks_retried,
+            self.cache_hits,
+            self.cache_misses,
+            self.evictions,
+            crate::util::fmt::human_bytes(self.bytes_spilled),
+            crate::util::fmt::human_bytes(self.bytes_paged_in),
         )
     }
 }

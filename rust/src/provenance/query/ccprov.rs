@@ -88,6 +88,16 @@ impl CcProvEngine {
         self.tau
     }
 
+    /// Spill the tagged-triple dataset to segment files
+    /// ([`Dataset::spilled`]); a no-op clone without a memory budget.
+    pub fn spilled(&self) -> anyhow::Result<Self> {
+        Ok(Self {
+            prov: self.prov.spilled("cc-prov")?,
+            tau: self.tau,
+            closure: Arc::clone(&self.closure),
+        })
+    }
+
     /// Algorithm 1: lineage of `q` (see [`ProvenanceEngine::query`]).
     pub fn query(&self, q: u64) -> Lineage {
         self.execute(&QueryRequest::new(q)).lineage
@@ -112,6 +122,8 @@ impl ProvenanceEngine for CcProvEngine {
         let (rows, cost) = self.prov.lookup_counted(q);
         stats.partitions_scanned += cost.partitions;
         stats.rows_examined += cost.rows;
+        stats.cache_hits += cost.cache_hits;
+        stats.cache_misses += cost.cache_misses;
         let Some(first) = rows.first() else {
             stats.resolve = t0.elapsed();
             // Input value or unknown: no lineage.
@@ -137,6 +149,8 @@ impl ProvenanceEngine for CcProvEngine {
                 rq_bfs(&c_prov, |t| t.triple, q, req.max_depth, req.max_triples, deadline);
             stats.partitions_scanned += bfs.partitions;
             stats.rows_examined += bfs.rows;
+            stats.cache_hits += bfs.cache_hits;
+            stats.cache_misses += bfs.cache_misses;
             stats.bfs_rounds = bfs.rounds;
             stats.truncated = bfs.truncated;
             stats.completeness = bfs.completeness();

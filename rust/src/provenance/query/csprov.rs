@@ -180,6 +180,21 @@ impl CsProvEngine {
         }
     }
 
+    /// Spill all three datasets to segment files ([`Dataset::spilled`]);
+    /// a no-op clone without a memory budget. The node index and set
+    /// dependencies spill too: they are small, but the budget's promise is
+    /// that *everything* pages, so a pathological budget still works.
+    pub fn spilled(&self) -> anyhow::Result<Self> {
+        Ok(Self {
+            prov_by_set: self.prov_by_set.spilled("cs-prov")?,
+            node_set: self.node_set.spilled("cs-nodeset")?,
+            set_deps: self.set_deps.spilled("cs-setdeps")?,
+            num_partitions: self.num_partitions,
+            tau: self.tau,
+            closure: Arc::clone(&self.closure),
+        })
+    }
+
     /// The set-lineage of set `cs`: every set contributing to its
     /// derivation, directly or indirectly (RQ over the set-dependency
     /// dataset — lightweight because both the dataset and the lineage are
@@ -200,6 +215,8 @@ impl CsProvEngine {
             stats.rounds += 1;
             stats.partitions += cost.partitions;
             stats.rows += cost.rows;
+            stats.cache_hits += cost.cache_hits;
+            stats.cache_misses += cost.cache_misses;
             let mut next = Vec::new();
             for d in deps {
                 if seen.insert(d.src_csid.0) {
@@ -250,6 +267,8 @@ impl ProvenanceEngine for CsProvEngine {
         let (rows, cost) = self.node_set.lookup_counted(q);
         stats.partitions_scanned += cost.partitions;
         stats.rows_examined += cost.rows;
+        stats.cache_hits += cost.cache_hits;
+        stats.cache_misses += cost.cache_misses;
         let Some(&(_, cs)) = rows.first() else {
             stats.resolve = t0.elapsed();
             return QueryResponse { lineage: Lineage::empty(q), stats };
@@ -257,6 +276,8 @@ impl ProvenanceEngine for CsProvEngine {
         let (mut s, walk) = self.set_lineage_counted(cs);
         stats.partitions_scanned += walk.partitions;
         stats.rows_examined += walk.rows;
+        stats.cache_hits += walk.cache_hits;
+        stats.cache_misses += walk.cache_misses;
         s.push(cs);
         stats.resolve = t0.elapsed();
 
@@ -266,6 +287,8 @@ impl ProvenanceEngine for CsProvEngine {
         let (cs_prov, cost) = self.prov_by_set.prune_lookup_counted(&s);
         stats.partitions_scanned += cost.partitions;
         stats.rows_examined += cost.rows;
+        stats.cache_hits += cost.cache_hits;
+        stats.cache_misses += cost.cache_misses;
         let volume = cs_prov.count();
         stats.assemble = t1.elapsed();
 
@@ -286,6 +309,8 @@ impl ProvenanceEngine for CsProvEngine {
                 rq_bfs(&by_dst, |t| t.triple, q, req.max_depth, req.max_triples, deadline);
             stats.partitions_scanned += bfs.partitions;
             stats.rows_examined += bfs.rows;
+            stats.cache_hits += bfs.cache_hits;
+            stats.cache_misses += bfs.cache_misses;
             stats.bfs_rounds = bfs.rounds;
             stats.truncated = bfs.truncated;
             stats.completeness = bfs.completeness();

@@ -222,6 +222,12 @@ pub struct QueryStats {
     pub rows_shuffled: u64,
     /// Rows collected to the driver (driver path only).
     pub rows_collected: u64,
+    /// Partition fetches this query served warm from the partition cache
+    /// (spilled engines only; always 0 when fully resident).
+    pub cache_hits: u64,
+    /// Segments this query paged in from disk — the out-of-core cost the
+    /// byte budget trades for memory.
+    pub cache_misses: u64,
     /// Recursion rounds: distributed BFS rounds on the cluster path, or
     /// levels expanded by the capped driver traversal. 0 only when the
     /// *uncapped* driver closure answered (it computes a fixpoint, not
@@ -251,6 +257,8 @@ impl QueryStats {
             rows_examined: 0,
             rows_shuffled: 0,
             rows_collected: 0,
+            cache_hits: 0,
+            cache_misses: 0,
             bfs_rounds: 0,
             truncated: false,
             completeness: Completeness::default(),
@@ -276,8 +284,13 @@ impl QueryStats {
                 self.completeness.rounds_done, self.completeness.frontier_remaining
             )
         };
+        let paging = if self.cache_hits == 0 && self.cache_misses == 0 {
+            String::new()
+        } else {
+            format!(" cache_hits={} cache_misses={}", self.cache_hits, self.cache_misses)
+        };
         format!(
-            "engine={} path={} parts_scanned={} rows_examined={} shuffled={} collected={} \
+            "engine={} path={} parts_scanned={} rows_examined={} shuffled={} collected={}{} \
              rounds={}{}{} resolve={} assemble={} recurse={}",
             self.engine,
             self.path,
@@ -285,6 +298,7 @@ impl QueryStats {
             human_count(self.rows_examined),
             human_count(self.rows_shuffled),
             human_count(self.rows_collected),
+            paging,
             self.bfs_rounds,
             if self.truncated { " truncated" } else { "" },
             deadline_cut,

@@ -24,6 +24,10 @@ pub struct BfsStats {
     pub rounds: u32,
     pub partitions: u64,
     pub rows: u64,
+    /// Partition fetches served warm from the cache (spilled datasets only).
+    pub cache_hits: u64,
+    /// Segments paged in from disk to answer the lookups.
+    pub cache_misses: u64,
     pub truncated: bool,
     /// Frontier items still unexpanded when the deadline stopped the
     /// traversal (meaningful only with `deadline_hit`).
@@ -89,6 +93,8 @@ pub fn rq_bfs<T: Send + Sync + Clone + 'static>(
         stats.rounds += 1;
         stats.partitions += cost.partitions;
         stats.rows += cost.rows;
+        stats.cache_hits += cost.cache_hits;
+        stats.cache_misses += cost.cache_misses;
         let mut next = Vec::new();
         for r in &rows {
             let t = to_triple(r);
@@ -146,6 +152,14 @@ impl RqEngine {
         Self { prov: self.prov.append_partitioned(appended) }
     }
 
+    /// Spill the triple dataset to segment files ([`Dataset::spilled`]);
+    /// queries then page partitions back through the context's
+    /// byte-budgeted cache. A no-op clone when the context has no
+    /// memory budget.
+    pub fn spilled(&self) -> anyhow::Result<Self> {
+        Ok(Self { prov: self.prov.spilled("rq-prov")? })
+    }
+
     /// Trace the full lineage of `q` (see [`ProvenanceEngine::query`]).
     pub fn query(&self, q: u64) -> Lineage {
         self.execute(&QueryRequest::new(q)).lineage
@@ -173,6 +187,8 @@ impl ProvenanceEngine for RqEngine {
             rq_bfs(&self.prov, |t| *t, req.item, req.max_depth, req.max_triples, deadline);
         stats.partitions_scanned = bfs.partitions;
         stats.rows_examined = bfs.rows;
+        stats.cache_hits = bfs.cache_hits;
+        stats.cache_misses = bfs.cache_misses;
         stats.bfs_rounds = bfs.rounds;
         stats.truncated = bfs.truncated;
         stats.completeness = bfs.completeness();

@@ -4,31 +4,45 @@
 //! once; we persist the same artifacts locally in a simple length-prefixed
 //! little-endian binary format (with a CSV export for inspection).
 //!
-//! Preprocessed files are written in the **v3** layout (`PSPKPRE3`), whose
-//! header records the incremental-epoch fields — θ, the big-set bound, and
-//! the epoch counter — plus the workflow fingerprint
+//! Preprocessed files are written in the **v4** layout (`PSPKPRE4`): the
+//! v3 header — the incremental-epoch fields (θ, the big-set bound, the
+//! epoch counter), the workflow fingerprint
 //! ([`crate::workflow::workflow_fingerprint`], so a reloaded index can
 //! refuse ingestion under a mismatched workflow) and the component-space
 //! shard assignment (`shard_index`/`shard_count`, 0/0 = unsharded — see
-//! [`crate::provenance::shard`]). v2 files (`PSPKPRE2`, pre-fingerprint)
-//! and v1 files (`PSPKPRE1`, pre-epoch) still load, with the missing
-//! header fields zeroed — a v1 index answers queries but refuses ingestion
-//! until re-preprocessed, and a v2 index ingests without workflow
-//! validation (fingerprint unrecorded).
+//! [`crate::provenance::shard`]) — followed by a **per-partition
+//! directory**. The cc/cs triple sections are split into hash-partitioned
+//! segments keyed exactly as the query engines partition them, so
+//! [`SegmentedPre`] serves any single partition with one seek: the
+//! out-of-core tier ([`crate::storage`]) can open a preprocessed index
+//! without deserializing the whole file.
+//!
+//! Older files still load, with missing header fields zeroed: v3
+//! (`PSPKPRE3`, monolithic sections), v2 (`PSPKPRE2`, pre-fingerprint —
+//! ingests without workflow validation) and v1 (`PSPKPRE1`, pre-epoch —
+//! answers queries but refuses ingestion until re-preprocessed).
 
 use crate::fault::{io_probe, FaultSite};
+use crate::minispark::HashPartitioner;
 use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 use crate::provenance::pipeline::Preprocessed;
+use crate::storage::SegmentCodec;
 use crate::util::ids::{AttrValueId, ComponentId, OpId, SetId};
 use anyhow::{bail, Context, Result};
 use rustc_hash::FxHashMap;
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
 const MAGIC_TRACE: &[u8; 8] = b"PSPKTRC1";
 const MAGIC_PRE_V1: &[u8; 8] = b"PSPKPRE1";
 const MAGIC_PRE_V2: &[u8; 8] = b"PSPKPRE2";
-const MAGIC_PRE: &[u8; 8] = b"PSPKPRE3";
+const MAGIC_PRE_V3: &[u8; 8] = b"PSPKPRE3";
+const MAGIC_PRE_V4: &[u8; 8] = b"PSPKPRE4";
+
+/// v4 fixed prefix: magic + 9 `u64` header fields (θ, big-set bound,
+/// epoch, workflow fingerprint, shard index, shard count, component
+/// count, set count, partition count). The directory follows.
+const V4_HEADER_BYTES: usize = 8 + 9 * 8;
 
 fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -121,72 +135,128 @@ fn load_trace_inner(path: &Path) -> Result<Trace> {
     Ok(Trace::new(triples))
 }
 
+/// Number of hash partitions [`save_preprocessed`] splits the cc/cs
+/// triple sections into. Matches the engines' default dataset
+/// partitioning, so a v4 segment maps one-to-one onto an engine
+/// partition.
+pub const DEFAULT_PRE_PARTITIONS: usize = 64;
+
 /// Save preprocessed provenance (everything the query engines need),
-/// including the incremental-epoch header (θ / big-set bound / epoch), the
-/// workflow fingerprint and the shard assignment.
+/// including the incremental-epoch header (θ / big-set bound / epoch),
+/// the workflow fingerprint and the shard assignment. Writes the
+/// segmented **v4** layout with [`DEFAULT_PRE_PARTITIONS`] partitions —
+/// see [`save_preprocessed_with_partitions`].
 pub fn save_preprocessed(path: &Path, pre: &Preprocessed) -> Result<()> {
+    save_preprocessed_with_partitions(path, pre, DEFAULT_PRE_PARTITIONS)
+}
+
+/// Save preprocessed provenance as a **v4** (`PSPKPRE4`) segmented file.
+///
+/// The cc/cs triple sections are split into `num_partitions`
+/// hash-partitioned segments — cc keyed by `dst`, cs keyed by
+/// `dst_csid`, through the same [`HashPartitioner`] the query engines
+/// use, so segment *i* holds exactly the rows engine partition *i*
+/// would. A directory of absolute `(offset, rows)` pairs precedes the
+/// payload; [`SegmentedPre`] serves any one section with a single seek,
+/// and [`load_preprocessed`] reassembles the whole index.
+pub fn save_preprocessed_with_partitions(
+    path: &Path,
+    pre: &Preprocessed,
+    num_partitions: usize,
+) -> Result<()> {
+    save_preprocessed_v4_inner(path, pre, num_partitions)
+        .with_context(|| format!("writing preprocessed file {path:?}"))
+}
+
+fn save_preprocessed_v4_inner(path: &Path, pre: &Preprocessed, np: usize) -> Result<()> {
     io_probe(FaultSite::StoreIo)?;
+    let np = np.max(1);
+    let parter = HashPartitioner::new(np);
+    let mut cc: Vec<Vec<CcTriple>> = vec![Vec::new(); np];
+    for t in &pre.cc_triples {
+        cc[parter.partition_of(t.triple.dst.raw())].push(*t);
+    }
+    let mut cs: Vec<Vec<CsTriple>> = vec![Vec::new(); np];
+    for t in &pre.cs_triples {
+        cs[parter.partition_of(t.dst_csid.0)].push(*t);
+    }
+
+    // Directory of absolute (offset, rows) pairs: np cc segments, np cs
+    // segments, then the four unsegmented sections.
+    let entries = 2 * np + 4;
+    let mut dir: Vec<(u64, u64)> = Vec::with_capacity(entries);
+    let mut at = (V4_HEADER_BYTES + entries * 16) as u64;
+    let mut section = |rows: usize, record_bytes: usize| {
+        dir.push((at, rows as u64));
+        at += (rows * record_bytes) as u64;
+    };
+    for p in &cc {
+        section(p.len(), CcTriple::RECORD_BYTES);
+    }
+    for p in &cs {
+        section(p.len(), CsTriple::RECORD_BYTES);
+    }
+    section(pre.set_deps.len(), SetDep::RECORD_BYTES);
+    section(pre.cc_of.len(), <(u64, u64)>::RECORD_BYTES);
+    section(pre.cs_of.len(), <(u64, u64)>::RECORD_BYTES);
+    section(pre.large_components.len(), <(u64, u64, u64)>::RECORD_BYTES);
+    drop(section);
+
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC_PRE)?;
-    // v3 header: the fields incremental ingestion and sharding need to
-    // keep going after a reload.
+    w.write_all(MAGIC_PRE_V4)?;
     w_u64(&mut w, pre.theta as u64)?;
     w_u64(&mut w, pre.big_threshold as u64)?;
     w_u64(&mut w, pre.epoch)?;
     w_u64(&mut w, pre.workflow_fingerprint)?;
     w_u64(&mut w, pre.shard_index)?;
     w_u64(&mut w, pre.shard_count)?;
-    write_sections(&mut w, pre)?;
-    w.flush()?;
-    Ok(())
-}
-
-/// The version-independent body shared by every preprocessed layout (the
-/// v1/v2/v3 formats differ only in the header fields after the magic).
-fn write_sections(w: &mut impl Write, pre: &Preprocessed) -> Result<()> {
-    w_u64(w, pre.cc_triples.len() as u64)?;
-    for t in &pre.cc_triples {
-        w_triple(w, &t.triple)?;
-        w_u64(w, t.ccid.0)?;
+    w_u64(&mut w, pre.component_count as u64)?;
+    w_u64(&mut w, pre.set_count as u64)?;
+    w_u64(&mut w, np as u64)?;
+    for &(offset, rows) in &dir {
+        w_u64(&mut w, offset)?;
+        w_u64(&mut w, rows)?;
     }
-    w_u64(w, pre.cs_triples.len() as u64)?;
-    for t in &pre.cs_triples {
-        w_triple(w, &t.triple)?;
-        w_u64(w, t.src_csid.0)?;
-        w_u64(w, t.dst_csid.0)?;
+    let mut buf = Vec::with_capacity(64 * 1024);
+    for p in &cc {
+        buf.clear();
+        for t in p {
+            t.encode(&mut buf);
+        }
+        w.write_all(&buf)?;
     }
-    w_u64(w, pre.set_deps.len() as u64)?;
+    for p in &cs {
+        buf.clear();
+        for t in p {
+            t.encode(&mut buf);
+        }
+        w.write_all(&buf)?;
+    }
+    buf.clear();
     for d in &pre.set_deps {
-        w_u64(w, d.src_csid.0)?;
-        w_u64(w, d.dst_csid.0)?;
+        d.encode(&mut buf);
     }
-    w_u64(w, pre.cc_of.len() as u64)?;
     for (&n, &c) in &pre.cc_of {
-        w_u64(w, n)?;
-        w_u64(w, c)?;
+        (n, c).encode(&mut buf);
     }
-    w_u64(w, pre.cs_of.len() as u64)?;
     for (&n, &c) in &pre.cs_of {
-        w_u64(w, n)?;
-        w_u64(w, c)?;
+        (n, c).encode(&mut buf);
     }
-    w_u64(w, pre.large_components.len() as u64)?;
-    for &(cc, nodes, edges) in &pre.large_components {
-        w_u64(w, cc)?;
-        w_u64(w, nodes as u64)?;
-        w_u64(w, edges as u64)?;
+    for &(ccid, nodes, edges) in &pre.large_components {
+        (ccid, nodes as u64, edges as u64).encode(&mut buf);
     }
-    w_u64(w, pre.component_count as u64)?;
-    w_u64(w, pre.set_count as u64)?;
+    w.write_all(&buf)?;
+    w.flush()?;
     Ok(())
 }
 
 /// Load preprocessed provenance. Pass-stats and timings are not persisted
 /// (they are preprocessing-run artifacts, reported at preprocessing time).
-/// Accepts v3 (`PSPKPRE3`), v2 (`PSPKPRE2`, workflow-fingerprint and shard
-/// fields zeroed) and legacy v1 (`PSPKPRE1`, epoch fields zeroed too)
-/// files; errors name the offending path.
+/// Accepts v4 (`PSPKPRE4`, segmented — reassembled in partition order),
+/// v3 (`PSPKPRE3`), v2 (`PSPKPRE2`, workflow-fingerprint and shard fields
+/// zeroed) and legacy v1 (`PSPKPRE1`, epoch fields zeroed too) files;
+/// errors name the offending path.
 pub fn load_preprocessed(path: &Path) -> Result<Preprocessed> {
     load_preprocessed_inner(path)
         .with_context(|| format!("loading preprocessed file {path:?}"))
@@ -199,7 +269,14 @@ fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("read magic")?;
-    if &magic != MAGIC_PRE && &magic != MAGIC_PRE_V2 && &magic != MAGIC_PRE_V1 {
+    if &magic == MAGIC_PRE_V4 {
+        // Segmented layout: reopen through the directory reader and pull
+        // every section (queries that want partitions on demand use
+        // `SegmentedPre` directly instead).
+        drop(r);
+        return load_preprocessed_v4(path);
+    }
+    if &magic != MAGIC_PRE_V3 && &magic != MAGIC_PRE_V2 && &magic != MAGIC_PRE_V1 {
         bail!("not a provspark preprocessed file (bad magic)");
     }
     let mut pre = Preprocessed::default();
@@ -209,7 +286,7 @@ fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
         pre.big_threshold = r_u64(&mut r).context("read big_threshold")? as usize;
         pre.epoch = r_u64(&mut r).context("read epoch")?;
     }
-    if &magic == MAGIC_PRE {
+    if &magic == MAGIC_PRE_V3 {
         // v3 additions.
         pre.workflow_fingerprint =
             r_u64(&mut r).context("read workflow_fingerprint")?;
@@ -272,6 +349,256 @@ fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
     pre.component_count = r_u64(&mut r).context("read component_count")? as usize;
     pre.set_count = r_u64(&mut r).context("read set_count")? as usize;
     Ok(pre)
+}
+
+fn load_preprocessed_v4(path: &Path) -> Result<Preprocessed> {
+    let seg = SegmentedPre::open(path)?;
+    let mut pre = Preprocessed {
+        theta: seg.theta(),
+        big_threshold: seg.big_threshold(),
+        epoch: seg.epoch(),
+        workflow_fingerprint: seg.workflow_fingerprint(),
+        shard_index: seg.shard_index(),
+        shard_count: seg.shard_count(),
+        component_count: seg.component_count(),
+        set_count: seg.set_count(),
+        ..Default::default()
+    };
+    for i in 0..seg.num_partitions() {
+        pre.cc_triples.extend(seg.cc_partition(i)?);
+        pre.cs_triples.extend(seg.cs_partition(i)?);
+    }
+    pre.set_deps = seg.set_deps()?;
+    pre.cc_of = seg.cc_of()?;
+    pre.cs_of = seg.cs_of()?;
+    pre.large_components = seg.large_components()?;
+    Ok(pre)
+}
+
+/// An open v4 (`PSPKPRE4`) preprocessed file: header and directory in
+/// memory, payload on disk. Any one section is readable with a single
+/// seek + sized read, so the out-of-core tier can open a preprocessed
+/// index and page in only the partitions a query touches. Every read
+/// opens the file independently (no shared handle), mirroring
+/// [`crate::storage::SegmentFile`].
+#[derive(Debug)]
+pub struct SegmentedPre {
+    path: PathBuf,
+    theta: usize,
+    big_threshold: usize,
+    epoch: u64,
+    workflow_fingerprint: u64,
+    shard_index: u64,
+    shard_count: u64,
+    component_count: usize,
+    set_count: usize,
+    num_partitions: usize,
+    /// Absolute (offset, rows) per section: `np` cc segments, `np` cs
+    /// segments, then set_deps / cc_of / cs_of / large_components.
+    dir: Vec<(u64, u64)>,
+}
+
+impl SegmentedPre {
+    /// Open and validate a v4 file: reads only the header and directory,
+    /// checks every section lies inside the file. Errors name the path.
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_inner(path)
+            .with_context(|| format!("opening segmented preprocessed file {path:?}"))
+    }
+
+    fn open_inner(path: &Path) -> Result<Self> {
+        io_probe(FaultSite::StoreIo)?;
+        let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = f.metadata().with_context(|| format!("stat {path:?}"))?.len();
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("read magic")?;
+        if &magic != MAGIC_PRE_V4 {
+            bail!("not a segmented (v4) preprocessed file (bad magic)");
+        }
+        let theta = r_u64(&mut r).context("read theta")? as usize;
+        let big_threshold = r_u64(&mut r).context("read big_threshold")? as usize;
+        let epoch = r_u64(&mut r).context("read epoch")?;
+        let workflow_fingerprint = r_u64(&mut r).context("read workflow_fingerprint")?;
+        let shard_index = r_u64(&mut r).context("read shard_index")?;
+        let shard_count = r_u64(&mut r).context("read shard_count")?;
+        let component_count = r_u64(&mut r).context("read component_count")? as usize;
+        let set_count = r_u64(&mut r).context("read set_count")? as usize;
+        let np = r_u64(&mut r).context("read partition count")?;
+        // The directory itself must fit before its size is trusted.
+        np.checked_mul(2)
+            .and_then(|e| e.checked_add(4))
+            .and_then(|e| e.checked_mul(16))
+            .filter(|&d| V4_HEADER_BYTES as u64 + d <= file_len)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "partition count {np} is implausible for a {file_len}-byte file: \
+                     corrupt or truncated header"
+                )
+            })?;
+        let np = np as usize;
+        let entries = 2 * np + 4;
+        let mut dir = Vec::with_capacity(entries);
+        for i in 0..entries {
+            let offset = r_u64(&mut r).with_context(|| format!("read directory entry {i}"))?;
+            let rows = r_u64(&mut r).with_context(|| format!("read directory entry {i}"))?;
+            dir.push((offset, rows));
+        }
+        let pre = Self {
+            path: path.to_path_buf(),
+            theta,
+            big_threshold,
+            epoch,
+            workflow_fingerprint,
+            shard_index,
+            shard_count,
+            component_count,
+            set_count,
+            num_partitions: np,
+            dir,
+        };
+        for (i, &(offset, rows)) in pre.dir.iter().enumerate() {
+            let rec = pre.record_bytes(i) as u64;
+            let fits = rows
+                .checked_mul(rec)
+                .and_then(|b| offset.checked_add(b))
+                .is_some_and(|end| end <= file_len);
+            if !fits {
+                bail!(
+                    "section {i} ({rows} rows × {rec} bytes at offset {offset}) exceeds \
+                     the {file_len}-byte file: corrupt or truncated"
+                );
+            }
+        }
+        Ok(pre)
+    }
+
+    /// On-disk record size of directory entry `idx` (cc 28, cs 36,
+    /// set_deps/cc_of/cs_of 16, large_components 24).
+    fn record_bytes(&self, idx: usize) -> usize {
+        let np = self.num_partitions;
+        if idx < np {
+            CcTriple::RECORD_BYTES
+        } else if idx < 2 * np {
+            CsTriple::RECORD_BYTES
+        } else if idx == 2 * np + 3 {
+            <(u64, u64, u64)>::RECORD_BYTES
+        } else {
+            <(u64, u64)>::RECORD_BYTES
+        }
+    }
+
+    fn read_section<T: SegmentCodec>(&self, idx: usize) -> Result<Vec<T>> {
+        io_probe(FaultSite::SegmentIo)?;
+        debug_assert_eq!(T::RECORD_BYTES, self.record_bytes(idx));
+        let (offset, rows) = self.dir[idx];
+        let mut f = std::fs::File::open(&self.path)?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; rows as usize * T::RECORD_BYTES];
+        f.read_exact(&mut buf).context("read section payload")?;
+        Ok(buf.chunks_exact(T::RECORD_BYTES).map(T::decode).collect())
+    }
+
+    pub fn theta(&self) -> usize {
+        self.theta
+    }
+
+    pub fn big_threshold(&self) -> usize {
+        self.big_threshold
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn workflow_fingerprint(&self) -> u64 {
+        self.workflow_fingerprint
+    }
+
+    pub fn shard_index(&self) -> u64 {
+        self.shard_index
+    }
+
+    pub fn shard_count(&self) -> u64 {
+        self.shard_count
+    }
+
+    pub fn component_count(&self) -> usize {
+        self.component_count
+    }
+
+    pub fn set_count(&self) -> usize {
+        self.set_count
+    }
+
+    /// Hash partitions per triple section (the writer's `num_partitions`).
+    pub fn num_partitions(&self) -> usize {
+        self.num_partitions
+    }
+
+    /// Row count of cc partition `i` (from the directory — no IO).
+    pub fn cc_rows(&self, i: usize) -> usize {
+        self.dir[i].1 as usize
+    }
+
+    /// Row count of cs partition `i` (from the directory — no IO).
+    pub fn cs_rows(&self, i: usize) -> usize {
+        self.dir[self.num_partitions + i].1 as usize
+    }
+
+    /// Component-tagged triples of partition `i` — the rows whose `dst`
+    /// hashes to engine partition `i`. One seek + one sized read; the
+    /// `io:segment` fault site is probed.
+    pub fn cc_partition(&self, i: usize) -> Result<Vec<CcTriple>> {
+        anyhow::ensure!(
+            i < self.num_partitions,
+            "cc partition {i} out of range ({} partitions)",
+            self.num_partitions
+        );
+        self.read_section(i)
+            .with_context(|| format!("reading cc partition {i} of {:?}", self.path))
+    }
+
+    /// Set-tagged triples of partition `i` (keyed by `dst_csid`).
+    pub fn cs_partition(&self, i: usize) -> Result<Vec<CsTriple>> {
+        anyhow::ensure!(
+            i < self.num_partitions,
+            "cs partition {i} out of range ({} partitions)",
+            self.num_partitions
+        );
+        self.read_section(self.num_partitions + i)
+            .with_context(|| format!("reading cs partition {i} of {:?}", self.path))
+    }
+
+    /// The set-dependency edges (one unsegmented section).
+    pub fn set_deps(&self) -> Result<Vec<SetDep>> {
+        self.read_section(2 * self.num_partitions)
+            .with_context(|| format!("reading set_deps of {:?}", self.path))
+    }
+
+    /// The node → component map.
+    pub fn cc_of(&self) -> Result<FxHashMap<u64, u64>> {
+        let pairs: Vec<(u64, u64)> = self
+            .read_section(2 * self.num_partitions + 1)
+            .with_context(|| format!("reading cc_of of {:?}", self.path))?;
+        Ok(pairs.into_iter().collect())
+    }
+
+    /// The node → set map.
+    pub fn cs_of(&self) -> Result<FxHashMap<u64, u64>> {
+        let pairs: Vec<(u64, u64)> = self
+            .read_section(2 * self.num_partitions + 2)
+            .with_context(|| format!("reading cs_of of {:?}", self.path))?;
+        Ok(pairs.into_iter().collect())
+    }
+
+    /// The large-component summaries `(ccid, nodes, edges)`.
+    pub fn large_components(&self) -> Result<Vec<(u64, usize, usize)>> {
+        let rows: Vec<(u64, u64, u64)> = self
+            .read_section(2 * self.num_partitions + 3)
+            .with_context(|| format!("reading large_components of {:?}", self.path))?;
+        Ok(rows.into_iter().map(|(c, n, e)| (c, n as usize, e as usize)).collect())
+    }
 }
 
 /// [`save_trace`] through a temp file + atomic rename: an interrupted
@@ -357,6 +684,74 @@ mod tests {
         dir.join(name)
     }
 
+    /// The version-independent monolithic body the v1–v3 layouts shared
+    /// (they differ only in the header fields after the magic) — a frozen
+    /// fixture writer, kept in sync with nothing: old files must keep
+    /// loading verbatim.
+    fn write_sections(w: &mut impl Write, pre: &Preprocessed) {
+        w_u64(w, pre.cc_triples.len() as u64).unwrap();
+        for t in &pre.cc_triples {
+            w_triple(w, &t.triple).unwrap();
+            w_u64(w, t.ccid.0).unwrap();
+        }
+        w_u64(w, pre.cs_triples.len() as u64).unwrap();
+        for t in &pre.cs_triples {
+            w_triple(w, &t.triple).unwrap();
+            w_u64(w, t.src_csid.0).unwrap();
+            w_u64(w, t.dst_csid.0).unwrap();
+        }
+        w_u64(w, pre.set_deps.len() as u64).unwrap();
+        for d in &pre.set_deps {
+            w_u64(w, d.src_csid.0).unwrap();
+            w_u64(w, d.dst_csid.0).unwrap();
+        }
+        w_u64(w, pre.cc_of.len() as u64).unwrap();
+        for (&n, &c) in &pre.cc_of {
+            w_u64(w, n).unwrap();
+            w_u64(w, c).unwrap();
+        }
+        w_u64(w, pre.cs_of.len() as u64).unwrap();
+        for (&n, &c) in &pre.cs_of {
+            w_u64(w, n).unwrap();
+            w_u64(w, c).unwrap();
+        }
+        w_u64(w, pre.large_components.len() as u64).unwrap();
+        for &(cc, nodes, edges) in &pre.large_components {
+            w_u64(w, cc).unwrap();
+            w_u64(w, nodes as u64).unwrap();
+            w_u64(w, edges as u64).unwrap();
+        }
+        w_u64(w, pre.component_count as u64).unwrap();
+        w_u64(w, pre.set_count as u64).unwrap();
+    }
+
+    /// The exact v3 (`PSPKPRE3`) layout as PRs 3–6 wrote it — a
+    /// regression fixture for backwards compatibility.
+    fn save_preprocessed_v3(path: &std::path::Path, pre: &Preprocessed) {
+        let f = std::fs::File::create(path).unwrap();
+        let mut w = BufWriter::new(f);
+        w.write_all(b"PSPKPRE3").unwrap();
+        w_u64(&mut w, pre.theta as u64).unwrap();
+        w_u64(&mut w, pre.big_threshold as u64).unwrap();
+        w_u64(&mut w, pre.epoch).unwrap();
+        w_u64(&mut w, pre.workflow_fingerprint).unwrap();
+        w_u64(&mut w, pre.shard_index).unwrap();
+        w_u64(&mut w, pre.shard_count).unwrap();
+        write_sections(&mut w, pre);
+        w.flush().unwrap();
+    }
+
+    /// v4 reassembles triples in partition order; compare as multisets.
+    fn sorted_cc(mut v: Vec<CcTriple>) -> Vec<CcTriple> {
+        v.sort_by_key(|t| (t.triple.src.raw(), t.triple.dst.raw(), t.triple.op.0, t.ccid.0));
+        v
+    }
+
+    fn sorted_cs(mut v: Vec<CsTriple>) -> Vec<CsTriple> {
+        v.sort_by_key(|t| (t.triple.src.raw(), t.triple.dst.raw(), t.src_csid.0, t.dst_csid.0));
+        v
+    }
+
     #[test]
     fn trace_roundtrip() {
         let (trace, _, _) =
@@ -375,8 +770,8 @@ mod tests {
         let p = tmp("pre.bin");
         save_preprocessed(&p, &pre).unwrap();
         let loaded = load_preprocessed(&p).unwrap();
-        assert_eq!(pre.cc_triples, loaded.cc_triples);
-        assert_eq!(pre.cs_triples, loaded.cs_triples);
+        assert_eq!(sorted_cc(pre.cc_triples.clone()), sorted_cc(loaded.cc_triples));
+        assert_eq!(sorted_cs(pre.cs_triples.clone()), sorted_cs(loaded.cs_triples));
         assert_eq!(pre.set_deps, loaded.set_deps);
         assert_eq!(pre.cc_of, loaded.cc_of);
         assert_eq!(pre.cs_of, loaded.cs_of);
@@ -428,26 +823,152 @@ mod tests {
         assert_eq!(loaded.big_threshold, 100);
         assert_eq!(loaded.epoch, 7);
         // …alongside everything the query engines need.
-        assert_eq!(pre.cc_triples, loaded.cc_triples);
+        assert_eq!(sorted_cc(pre.cc_triples.clone()), sorted_cc(loaded.cc_triples));
         assert_eq!(pre.cs_of, loaded.cs_of);
     }
 
     #[test]
-    fn v3_roundtrip_preserves_fingerprint_and_shard_fields() {
+    fn v4_roundtrip_preserves_fingerprint_and_shard_fields() {
         let (trace, g, splits) =
             generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
         let mut pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
         assert_ne!(pre.workflow_fingerprint, 0, "preprocess records the workflow");
         pre.shard_index = 2;
         pre.shard_count = 4;
-        let p = tmp("pre_v3.bin");
+        let p = tmp("pre_v4.bin");
         save_preprocessed(&p, &pre).unwrap();
         let loaded = load_preprocessed(&p).unwrap();
         assert_eq!(loaded.workflow_fingerprint, pre.workflow_fingerprint);
         assert_eq!(loaded.shard_index, 2);
         assert_eq!(loaded.shard_count, 4);
+        assert_eq!(sorted_cc(loaded.cc_triples), sorted_cc(pre.cc_triples.clone()));
+        assert_eq!(sorted_cs(loaded.cs_triples), sorted_cs(pre.cs_triples.clone()));
+    }
+
+    #[test]
+    fn v4_partitions_match_engine_partitioning() {
+        use crate::minispark::HashPartitioner;
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let p = tmp("pre_v4_parts.bin");
+        save_preprocessed_with_partitions(&p, &pre, 8).unwrap();
+        let seg = SegmentedPre::open(&p).unwrap();
+        assert_eq!(seg.num_partitions(), 8);
+        assert_eq!(seg.theta(), pre.theta);
+        assert_eq!(seg.epoch(), pre.epoch);
+        assert_eq!(seg.workflow_fingerprint(), pre.workflow_fingerprint);
+        assert_eq!(seg.component_count(), pre.component_count);
+        assert_eq!(seg.set_count(), pre.set_count);
+        let parter = HashPartitioner::new(8);
+        let mut cc_all = Vec::new();
+        let mut cs_all = Vec::new();
+        for i in 0..8 {
+            let cc = seg.cc_partition(i).unwrap();
+            assert_eq!(cc.len(), seg.cc_rows(i), "directory row count");
+            for t in &cc {
+                assert_eq!(
+                    parter.partition_of(t.triple.dst.raw()),
+                    i,
+                    "cc segment {i} must hold exactly engine partition {i}'s rows"
+                );
+            }
+            cc_all.extend(cc);
+            let cs = seg.cs_partition(i).unwrap();
+            assert_eq!(cs.len(), seg.cs_rows(i));
+            for t in &cs {
+                assert_eq!(parter.partition_of(t.dst_csid.0), i);
+            }
+            cs_all.extend(cs);
+        }
+        assert_eq!(sorted_cc(cc_all), sorted_cc(pre.cc_triples.clone()));
+        assert_eq!(sorted_cs(cs_all), sorted_cs(pre.cs_triples.clone()));
+        assert_eq!(seg.set_deps().unwrap(), pre.set_deps);
+        assert_eq!(seg.cc_of().unwrap(), pre.cc_of);
+        assert_eq!(seg.cs_of().unwrap(), pre.cs_of);
+        assert_eq!(seg.large_components().unwrap(), pre.large_components);
+    }
+
+    #[test]
+    fn v3_file_still_loads_identically() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let mut pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        pre.epoch = 5;
+        pre.shard_index = 1;
+        pre.shard_count = 2;
+        let p = tmp("pre_v3_frozen.bin");
+        save_preprocessed_v3(&p, &pre);
+        let loaded = load_preprocessed(&p).unwrap();
+        assert_eq!(loaded.theta, pre.theta);
+        assert_eq!(loaded.epoch, 5);
+        assert_eq!(loaded.workflow_fingerprint, pre.workflow_fingerprint);
+        assert_eq!(loaded.shard_index, 1);
+        assert_eq!(loaded.shard_count, 2);
+        // Monolithic sections load verbatim — original order preserved.
         assert_eq!(loaded.cc_triples, pre.cc_triples);
         assert_eq!(loaded.cs_triples, pre.cs_triples);
+        assert_eq!(loaded.set_deps, pre.set_deps);
+        assert_eq!(loaded.cc_of, pre.cc_of);
+        assert_eq!(loaded.cs_of, pre.cs_of);
+        assert_eq!(loaded.large_components, pre.large_components);
+        assert_eq!(loaded.component_count, pre.component_count);
+        assert_eq!(loaded.set_count, pre.set_count);
+    }
+
+    #[test]
+    fn v4_truncated_and_corrupt_files_name_the_path() {
+        // Implausible partition count: the directory could never fit.
+        let p = tmp("v4_huge_np.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKPRE4");
+        bytes.extend_from_slice(&[0u8; 8 * 8]); // 8 zero header fields
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // partition count
+        std::fs::write(&p, bytes).unwrap();
+        for err in [
+            format!("{:#}", SegmentedPre::open(&p).unwrap_err()),
+            format!("{:#}", load_preprocessed(&p).unwrap_err()),
+        ] {
+            assert!(
+                err.contains("v4_huge_np.bin") && err.contains("implausible"),
+                "expected a named implausible-count error: {err}"
+            );
+        }
+
+        // A directory whose one section overruns the file.
+        let p = tmp("v4_overrun.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKPRE4");
+        bytes.extend_from_slice(&[0u8; 8 * 8]);
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // np = 1
+        // 6 directory entries: cc0 claims 1000 rows with no payload.
+        bytes.extend_from_slice(&176u64.to_le_bytes()); // offset past directory
+        bytes.extend_from_slice(&1000u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 5 * 16]);
+        std::fs::write(&p, bytes).unwrap();
+        let err = format!("{:#}", SegmentedPre::open(&p).unwrap_err());
+        assert!(
+            err.contains("v4_overrun.bin") && err.contains("exceeds"),
+            "error must name the path and the overrun: {err}"
+        );
+
+        // Payload truncated after a successful open: the partition read
+        // fails with the path and the partition named.
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let p = tmp("v4_trunc_payload.bin");
+        save_preprocessed_with_partitions(&p, &pre, 4).unwrap();
+        let seg = SegmentedPre::open(&p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        // Keep only the header + directory (np = 4 → 80 + 12×16 bytes):
+        // every payload read must now come up short.
+        std::fs::write(&p, &full[..80 + 12 * 16]).unwrap();
+        let err = format!("{:#}", seg.cs_of().unwrap_err());
+        assert!(
+            err.contains("v4_trunc_payload.bin") && err.contains("cs_of"),
+            "error must name the path and the section: {err}"
+        );
     }
 
     /// The exact v2 (`PSPKPRE2`) layout as PR 3 wrote it — a regression
@@ -460,7 +981,7 @@ mod tests {
         w_u64(&mut w, pre.theta as u64).unwrap();
         w_u64(&mut w, pre.big_threshold as u64).unwrap();
         w_u64(&mut w, pre.epoch).unwrap();
-        write_sections(&mut w, pre).unwrap();
+        write_sections(&mut w, pre);
         w.flush().unwrap();
     }
 

@@ -1,0 +1,341 @@
+//! The byte-budgeted partition cache: LRU over decoded segments, with pin
+//! counts so in-flight scans are unevictable.
+//!
+//! One cache serves every paged dataset of a
+//! [`MiniSpark`](crate::minispark::MiniSpark) context. Entries are keyed
+//! `(file id, segment index)` — file ids are handed out by
+//! [`register_file`](PartitionCache::register_file) so two spilled
+//! datasets can never collide — and hold the decoded rows as
+//! `Arc<Vec<T>>` behind `dyn Any` (one key always maps to one row type,
+//! enforced by the issuing dataset).
+//!
+//! Eviction drops only the cache's own `Arc`; the segment file remains on
+//! disk and a later fetch decodes it again. That makes the cache purely a
+//! performance layer: with any budget, including one too small for a
+//! single partition, answers are identical to the unbounded path.
+
+use crate::minispark::EngineMetrics;
+use anyhow::Result;
+use rustc_hash::FxHashMap;
+use std::any::Any;
+use std::collections::hash_map::Entry as MapEntry;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A cached, decoded partition.
+struct Slot {
+    data: Arc<dyn Any + Send + Sync>,
+    bytes: u64,
+    /// Fetches in flight: entries with `pins > 0` are never evicted.
+    pins: u32,
+    /// LRU clock value of the last fetch.
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: FxHashMap<(u64, u32), Slot>,
+    /// Monotone fetch clock (recency order for eviction).
+    tick: u64,
+    resident_bytes: u64,
+}
+
+/// Byte-budgeted LRU cache of decoded partitions (see module docs).
+///
+/// `budget == 0` means unbounded: nothing is ever evicted.
+pub struct PartitionCache {
+    budget: u64,
+    metrics: Arc<EngineMetrics>,
+    next_file: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl PartitionCache {
+    /// A cache with its own private metrics (tests / standalone use).
+    pub fn new(budget: u64) -> Self {
+        Self::with_metrics(budget, Arc::new(EngineMetrics::default()))
+    }
+
+    /// A cache reporting hits/misses/evictions/paging volume into shared
+    /// engine metrics — how `MiniSpark` constructs its cache.
+    pub fn with_metrics(budget: u64, metrics: Arc<EngineMetrics>) -> Self {
+        Self {
+            budget,
+            metrics,
+            next_file: AtomicU64::new(0),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// The configured memory budget in bytes (0 = unbounded).
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// The metrics sink this cache reports into.
+    pub fn metrics(&self) -> &Arc<EngineMetrics> {
+        &self.metrics
+    }
+
+    /// Allocate a fresh file id: the namespace one spilled dataset's
+    /// segments live under.
+    pub fn register_file(&self) -> u64 {
+        self.next_file.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Bytes currently resident (decoded rows owned by the cache).
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// Number of partitions currently resident.
+    pub fn resident_partitions(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Record segment bytes written by a spill (observability only — the
+    /// spill itself happens in the dataset layer).
+    pub fn note_spilled(&self, bytes: u64) {
+        self.metrics.add_bytes_spilled(bytes);
+    }
+
+    /// Fetch `(file, seg)`, loading and decoding it via `load` on a miss.
+    /// Returns the rows, whether this was a hit, and a [`PinGuard`] that
+    /// keeps the entry unevictable until dropped.
+    ///
+    /// The loader runs *outside* the cache lock, so slow segment IO never
+    /// serializes unrelated lookups. Two threads racing on the same cold
+    /// segment may both decode it (both observe a miss); the first insert
+    /// wins the cache slot and both results are valid reads of the same
+    /// immutable segment.
+    pub fn get_or_load<T: Send + Sync + 'static>(
+        self: &Arc<Self>,
+        file: u64,
+        seg: u32,
+        load: impl FnOnce() -> Result<Vec<T>>,
+    ) -> Result<(Arc<Vec<T>>, bool, PinGuard)> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(e) = g.map.get_mut(&(file, seg)) {
+                e.pins += 1;
+                e.last_used = tick;
+                let data = Arc::clone(&e.data)
+                    .downcast::<Vec<T>>()
+                    .expect("partition cache key maps to a different row type");
+                drop(g);
+                self.metrics.add_cache_hit();
+                return Ok((data, true, PinGuard::new(self, file, seg)));
+            }
+        }
+        let data = Arc::new(load()?);
+        let bytes = (data.len() * std::mem::size_of::<T>()) as u64;
+        self.metrics.add_cache_miss();
+        self.metrics.add_bytes_paged_in(bytes);
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.map.entry((file, seg)) {
+            MapEntry::Occupied(mut o) => {
+                // Lost a load race; pin the winner's entry, serve our copy.
+                let e = o.get_mut();
+                e.pins += 1;
+                e.last_used = tick;
+            }
+            MapEntry::Vacant(v) => {
+                v.insert(Slot {
+                    data: Arc::clone(&data) as Arc<dyn Any + Send + Sync>,
+                    bytes,
+                    pins: 1,
+                    last_used: tick,
+                });
+                g.resident_bytes += bytes;
+                self.evict_locked(&mut g);
+            }
+        }
+        drop(g);
+        Ok((data, false, PinGuard::new(self, file, seg)))
+    }
+
+    /// Warm-insert a partition the caller already holds (a fresh spill):
+    /// unpinned, immediately subject to the budget. Neither a hit nor a
+    /// miss — no IO happened.
+    pub fn admit<T: Send + Sync + 'static>(&self, file: u64, seg: u32, data: Arc<Vec<T>>) {
+        let bytes = (data.len() * std::mem::size_of::<T>()) as u64;
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let MapEntry::Vacant(v) = g.map.entry((file, seg)) {
+            v.insert(Slot {
+                data: data as Arc<dyn Any + Send + Sync>,
+                bytes,
+                pins: 0,
+                last_used: tick,
+            });
+            g.resident_bytes += bytes;
+            self.evict_locked(&mut g);
+        }
+    }
+
+    fn unpin(&self, file: u64, seg: u32) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.map.get_mut(&(file, seg)) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+        // A wide scan can pin past the budget; trim as pins release.
+        self.evict_locked(&mut g);
+    }
+
+    /// Evict least-recently-used unpinned entries until the budget holds.
+    /// Entries still referenced by in-flight `Arc`s free their memory only
+    /// when those readers finish — the accounting tracks what the *cache*
+    /// owns, which is the quantity the budget governs.
+    fn evict_locked(&self, g: &mut Inner) {
+        if self.budget == 0 {
+            return;
+        }
+        while g.resident_bytes > self.budget {
+            let victim = g
+                .map
+                .iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k);
+            let Some(k) = victim else { break };
+            let e = g.map.remove(&k).expect("victim vanished under the lock");
+            g.resident_bytes -= e.bytes;
+            self.metrics.add_eviction();
+        }
+    }
+}
+
+impl std::fmt::Debug for PartitionCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.inner.lock().unwrap();
+        f.debug_struct("PartitionCache")
+            .field("budget", &self.budget)
+            .field("resident_bytes", &g.resident_bytes)
+            .field("resident_partitions", &g.map.len())
+            .finish()
+    }
+}
+
+/// Keeps one cache entry pinned (unevictable) until dropped — handed out
+/// by [`PartitionCache::get_or_load`] and held for the duration of a scan.
+pub struct PinGuard {
+    cache: Arc<PartitionCache>,
+    file: u64,
+    seg: u32,
+}
+
+impl PinGuard {
+    fn new(cache: &Arc<PartitionCache>, file: u64, seg: u32) -> Self {
+        Self { cache: Arc::clone(cache), file, seg }
+    }
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        self.cache.unpin(self.file, self.seg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize, tag: u64) -> Vec<u64> {
+        (0..n as u64).map(|i| i ^ tag).collect()
+    }
+
+    #[test]
+    fn hit_miss_and_paged_bytes_are_counted() {
+        let c = Arc::new(PartitionCache::new(0));
+        let f = c.register_file();
+        let (a, hit, _p) = c.get_or_load(f, 0, || Ok(rows(10, 1))).unwrap();
+        assert!(!hit);
+        let (b, hit, _p2) = c.get_or_load(f, 0, || panic!("must not reload")).unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&a, &b));
+        let m = c.metrics().snapshot();
+        assert_eq!((m.cache_hits, m.cache_misses), (1, 1));
+        assert_eq!(m.bytes_paged_in, 10 * 8);
+        assert_eq!(m.evictions, 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        // Budget fits exactly two 80-byte partitions.
+        let c = Arc::new(PartitionCache::new(160));
+        let f = c.register_file();
+        c.get_or_load(f, 0, || Ok(rows(10, 0))).unwrap();
+        c.get_or_load(f, 1, || Ok(rows(10, 1))).unwrap();
+        // Touch 0 so 1 becomes the LRU victim.
+        let (_, hit, _p) = c.get_or_load(f, 0, || unreachable!()).unwrap();
+        assert!(hit);
+        drop(_p);
+        c.get_or_load(f, 2, || Ok(rows(10, 2))).unwrap();
+        assert_eq!(c.resident_partitions(), 2);
+        // 1 was evicted; 0 survived.
+        let (_, hit, _p) = c.get_or_load(f, 0, || unreachable!()).unwrap();
+        assert!(hit, "recently-used entry must survive");
+        let (_, hit, _p) = c.get_or_load(f, 1, || Ok(rows(10, 1))).unwrap();
+        assert!(!hit, "LRU entry must have been evicted");
+        assert_eq!(c.metrics().snapshot().evictions, 2);
+    }
+
+    #[test]
+    fn pinned_entries_survive_a_budget_overshoot() {
+        // Budget of one partition; pin two at once (a 2-partition scan).
+        let c = Arc::new(PartitionCache::new(80));
+        let f = c.register_file();
+        let (_, _, pin0) = c.get_or_load(f, 0, || Ok(rows(10, 0))).unwrap();
+        let (_, _, pin1) = c.get_or_load(f, 1, || Ok(rows(10, 1))).unwrap();
+        // Both pinned: over budget but nothing evictable.
+        assert_eq!(c.resident_partitions(), 2);
+        assert!(c.resident_bytes() > c.budget());
+        drop(pin0);
+        drop(pin1);
+        // Pins released: trimmed back under budget.
+        assert_eq!(c.resident_partitions(), 1);
+        assert!(c.resident_bytes() <= c.budget());
+    }
+
+    #[test]
+    fn distinct_files_never_collide() {
+        let c = Arc::new(PartitionCache::new(0));
+        let (f1, f2) = (c.register_file(), c.register_file());
+        assert_ne!(f1, f2);
+        let (a, _, _p) = c.get_or_load(f1, 0, || Ok(rows(3, 7))).unwrap();
+        let (b, _, _q) = c.get_or_load(f2, 0, || Ok(rows(4, 9))).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn admit_is_warm_and_budgeted() {
+        let c = Arc::new(PartitionCache::new(80));
+        let f = c.register_file();
+        c.admit(f, 0, Arc::new(rows(10, 0)));
+        c.admit(f, 1, Arc::new(rows(10, 1)));
+        // Second admit evicted the first (budget = one partition).
+        assert_eq!(c.resident_partitions(), 1);
+        let m = c.metrics().snapshot();
+        assert_eq!((m.cache_hits, m.cache_misses), (0, 0), "admit is not a fetch");
+        assert_eq!(m.evictions, 1);
+        let (_, hit, _p) = c.get_or_load(f, 1, || unreachable!()).unwrap();
+        assert!(hit, "admitted entry serves the first fetch warm");
+    }
+
+    #[test]
+    fn loader_errors_propagate_and_cache_stays_clean() {
+        let c = Arc::new(PartitionCache::new(0));
+        let f = c.register_file();
+        let err = c
+            .get_or_load::<u64>(f, 0, || anyhow::bail!("segment rotted"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("segment rotted"));
+        assert_eq!(c.resident_partitions(), 0);
+    }
+}

@@ -1,0 +1,37 @@
+//! # storage — the out-of-core memory hierarchy
+//!
+//! Everything above this module computes over in-memory `Vec`s; everything
+//! below the paper's 500M-edge regime requires more rows than RAM holds.
+//! This module is the tier in between: a **segmented columnar store**
+//! ([`segment`]) whose files carry a per-partition directory so any single
+//! partition is readable with one seek (no whole-file deserialization),
+//! and a **byte-budgeted partition cache** ([`cache`]) through which
+//! [`Dataset`](crate::minispark::Dataset) lookups fault those segments in
+//! on demand.
+//!
+//! The contract mirrors OS demand paging:
+//!
+//! * **Spill once, page forever.** A spilled dataset's segment file is
+//!   immutable. Eviction merely drops the cache's `Arc` to the decoded
+//!   rows; any in-flight scan still holding that `Arc` keeps its data, so
+//!   eviction can never corrupt a running query.
+//! * **Pin while scanning.** Fetching a partition pins its cache entry
+//!   until the returned guard drops — a multi-partition BFS round never
+//!   loses its own working set to the eviction it causes.
+//! * **Budget is a target, not a ceiling.** Pinned entries are
+//!   unevictable, so a scan wider than the budget transiently overshoots
+//!   and the cache trims back down as pins release. Correctness is
+//!   therefore independent of the budget — a pathologically tiny budget
+//!   just thrashes.
+//!
+//! The cache reports `cache_hits` / `cache_misses` / `evictions` /
+//! `bytes_spilled` / `bytes_paged_in` through the engine-wide
+//! [`EngineMetrics`](crate::minispark::EngineMetrics), and per-query
+//! attribution flows through [`ScanCost`](crate::minispark::ScanCost).
+//! See `ARCHITECTURE.md` § "Memory hierarchy & segment store".
+
+pub mod cache;
+pub mod segment;
+
+pub use cache::{PartitionCache, PinGuard};
+pub use segment::{write_segments, SegmentCodec, SegmentFile};

@@ -1,0 +1,416 @@
+//! Fixed-record segment files (`PSPKSEG1`): the on-disk half of the
+//! out-of-core store.
+//!
+//! A segment file holds the partitions of one dataset back-to-back, each
+//! as a run of fixed-size little-endian records, behind a directory of
+//! per-segment row counts. Offsets are derivable from the directory, so
+//! [`SegmentFile::read_segment`] is one `seek` + one sized read — a single
+//! partition is loadable without touching the rest of the file, which is
+//! what makes demand paging proportional to the data a query touches.
+//!
+//! Layout:
+//!
+//! ```text
+//! "PSPKSEG1" | u64 record_bytes | u64 seg_count | seg_count × u64 rows | payload…
+//! ```
+//!
+//! Row types implement [`SegmentCodec`] (the same wire layout the
+//! preprocessed store uses: ids as `u64`, ops as `u32`). Corrupt or
+//! truncated files surface as errors naming the path; every read/write
+//! passes an `io:segment` fault probe so the deterministic fault plans
+//! cover this tier too.
+
+use crate::fault::{io_probe, FaultSite};
+use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep};
+use crate::util::ids::{AttrValueId, ComponentId, OpId, SetId};
+use anyhow::{bail, Context, Result};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MAGIC_SEG: &[u8; 8] = b"PSPKSEG1";
+
+/// Fixed-size binary row codec for segment files. `RECORD_BYTES` is the
+/// exact on-disk size of one record; `decode` receives exactly that many
+/// bytes.
+pub trait SegmentCodec: Sized {
+    const RECORD_BYTES: usize;
+    fn encode(&self, out: &mut Vec<u8>);
+    fn decode(b: &[u8]) -> Self;
+}
+
+#[inline]
+fn get_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().unwrap())
+}
+
+#[inline]
+fn get_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().unwrap())
+}
+
+impl SegmentCodec for ProvTriple {
+    const RECORD_BYTES: usize = 20;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.src.raw().to_le_bytes());
+        out.extend_from_slice(&self.dst.raw().to_le_bytes());
+        out.extend_from_slice(&self.op.0.to_le_bytes());
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        ProvTriple::new(
+            AttrValueId(get_u64(b, 0)),
+            AttrValueId(get_u64(b, 8)),
+            OpId(get_u32(b, 16)),
+        )
+    }
+}
+
+impl SegmentCodec for CcTriple {
+    const RECORD_BYTES: usize = 28;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.triple.encode(out);
+        out.extend_from_slice(&self.ccid.0.to_le_bytes());
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        CcTriple { triple: ProvTriple::decode(&b[..20]), ccid: ComponentId(get_u64(b, 20)) }
+    }
+}
+
+impl SegmentCodec for CsTriple {
+    const RECORD_BYTES: usize = 36;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.triple.encode(out);
+        out.extend_from_slice(&self.src_csid.0.to_le_bytes());
+        out.extend_from_slice(&self.dst_csid.0.to_le_bytes());
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        CsTriple {
+            triple: ProvTriple::decode(&b[..20]),
+            src_csid: SetId(get_u64(b, 20)),
+            dst_csid: SetId(get_u64(b, 28)),
+        }
+    }
+}
+
+impl SegmentCodec for SetDep {
+    const RECORD_BYTES: usize = 16;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.src_csid.0.to_le_bytes());
+        out.extend_from_slice(&self.dst_csid.0.to_le_bytes());
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        SetDep { src_csid: SetId(get_u64(b, 0)), dst_csid: SetId(get_u64(b, 8)) }
+    }
+}
+
+impl SegmentCodec for (u64, u64) {
+    const RECORD_BYTES: usize = 16;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.0.to_le_bytes());
+        out.extend_from_slice(&self.1.to_le_bytes());
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        (get_u64(b, 0), get_u64(b, 8))
+    }
+}
+
+impl SegmentCodec for (u64, u64, u64) {
+    const RECORD_BYTES: usize = 24;
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.0.to_le_bytes());
+        out.extend_from_slice(&self.1.to_le_bytes());
+        out.extend_from_slice(&self.2.to_le_bytes());
+    }
+
+    fn decode(b: &[u8]) -> Self {
+        (get_u64(b, 0), get_u64(b, 8), get_u64(b, 16))
+    }
+}
+
+/// Write `parts` as one segment file at `path` (one segment per
+/// partition, empty partitions included so indexes line up). Returns the
+/// payload bytes written — what a spill reports as `bytes_spilled`.
+pub fn write_segments<T: SegmentCodec>(path: &Path, parts: &[&[T]]) -> Result<u64> {
+    write_segments_inner(path, parts)
+        .with_context(|| format!("writing segment file {path:?}"))
+}
+
+fn write_segments_inner<T: SegmentCodec>(path: &Path, parts: &[&[T]]) -> Result<u64> {
+    io_probe(FaultSite::SegmentIo)?;
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC_SEG)?;
+    w.write_all(&(T::RECORD_BYTES as u64).to_le_bytes())?;
+    w.write_all(&(parts.len() as u64).to_le_bytes())?;
+    for p in parts {
+        w.write_all(&(p.len() as u64).to_le_bytes())?;
+    }
+    let mut buf = Vec::with_capacity(64 * 1024);
+    let mut payload = 0u64;
+    for p in parts {
+        buf.clear();
+        for r in *p {
+            r.encode(&mut buf);
+        }
+        payload += buf.len() as u64;
+        w.write_all(&buf)?;
+    }
+    w.flush()?;
+    Ok(payload)
+}
+
+/// An open segment file: header + directory in memory, payload on disk.
+/// Cheap to clone behind an `Arc`; every [`read_segment`] opens, seeks and
+/// reads independently, so concurrent readers never contend on a shared
+/// file handle.
+///
+/// [`read_segment`]: Self::read_segment
+#[derive(Debug)]
+pub struct SegmentFile {
+    path: PathBuf,
+    record_bytes: u64,
+    /// Absolute payload offset of each segment.
+    offsets: Vec<u64>,
+    /// Row count of each segment.
+    rows: Vec<u64>,
+}
+
+impl SegmentFile {
+    /// Open and validate a segment file: reads only the header/directory,
+    /// checks every segment lies inside the file. Errors name the path.
+    pub fn open(path: &Path) -> Result<Arc<Self>> {
+        Self::open_inner(path).with_context(|| format!("opening segment file {path:?}"))
+    }
+
+    fn open_inner(path: &Path) -> Result<Arc<Self>> {
+        io_probe(FaultSite::SegmentIo)?;
+        let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = f.metadata().with_context(|| format!("stat {path:?}"))?.len();
+        let mut head = [0u8; 24];
+        f.read_exact(&mut head).context("read header")?;
+        if &head[..8] != MAGIC_SEG {
+            bail!("not a provspark segment file (bad magic)");
+        }
+        let record_bytes = get_u64(&head, 8);
+        let seg_count = get_u64(&head, 16);
+        if record_bytes == 0 {
+            bail!("corrupt header: zero record size");
+        }
+        // The directory itself must fit before any count is trusted.
+        let dir_bytes = seg_count
+            .checked_mul(8)
+            .filter(|d| 24 + d <= file_len)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "segment count {seg_count} is implausible for a {file_len}-byte file: \
+                     corrupt or truncated header"
+                )
+            })?;
+        let mut dir = vec![0u8; dir_bytes as usize];
+        f.read_exact(&mut dir).context("read segment directory")?;
+        let mut offsets = Vec::with_capacity(seg_count as usize);
+        let mut rows = Vec::with_capacity(seg_count as usize);
+        let mut at = 24 + dir_bytes;
+        for i in 0..seg_count as usize {
+            let n = get_u64(&dir, i * 8);
+            let bytes = n.checked_mul(record_bytes).ok_or_else(|| {
+                anyhow::anyhow!("segment {i} row count {n} overflows: corrupt directory")
+            })?;
+            offsets.push(at);
+            rows.push(n);
+            at = at.checked_add(bytes).filter(|&end| end <= file_len).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "segment {i} ({n} rows × {record_bytes} bytes at offset {at}) \
+                     exceeds the {file_len}-byte file: corrupt or truncated"
+                )
+            })?;
+        }
+        Ok(Arc::new(Self { path: path.to_path_buf(), record_bytes, offsets, rows }))
+    }
+
+    pub fn segments(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Row count of segment `i` (from the directory — no IO).
+    pub fn rows(&self, i: usize) -> usize {
+        self.rows[i] as usize
+    }
+
+    /// Payload bytes of segment `i`.
+    pub fn bytes(&self, i: usize) -> u64 {
+        self.rows[i] * self.record_bytes
+    }
+
+    /// Read and decode segment `i`: one seek, one sized read. Errors name
+    /// the path and the segment.
+    pub fn read_segment<T: SegmentCodec>(&self, i: usize) -> Result<Vec<T>> {
+        self.read_segment_inner(i)
+            .with_context(|| format!("reading segment {i} of {:?}", self.path))
+    }
+
+    fn read_segment_inner<T: SegmentCodec>(&self, i: usize) -> Result<Vec<T>> {
+        io_probe(FaultSite::SegmentIo)?;
+        if i >= self.rows.len() {
+            bail!("segment index out of range ({} segments)", self.rows.len());
+        }
+        if T::RECORD_BYTES as u64 != self.record_bytes {
+            bail!(
+                "record size mismatch: file has {}-byte records, caller expects {}",
+                self.record_bytes,
+                T::RECORD_BYTES
+            );
+        }
+        let n = self.rows[i] as usize;
+        let mut f = std::fs::File::open(&self.path)?;
+        f.seek(SeekFrom::Start(self.offsets[i]))?;
+        let mut buf = vec![0u8; n * T::RECORD_BYTES];
+        f.read_exact(&mut buf).context("read segment payload")?;
+        Ok(buf.chunks_exact(T::RECORD_BYTES).map(T::decode).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::EntityId;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("provspark_segment_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn triples(n: u64, salt: u64) -> Vec<ProvTriple> {
+        (0..n)
+            .map(|i| {
+                ProvTriple::new(
+                    AttrValueId::new(EntityId(1), i + salt),
+                    AttrValueId::new(EntityId(2), i * 3 + salt),
+                    OpId((i % 5) as u32),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_per_segment_including_empty() {
+        let p = tmp("round.seg");
+        let parts = [triples(7, 0), vec![], triples(13, 100)];
+        let views: Vec<&[ProvTriple]> = parts.iter().map(|v| v.as_slice()).collect();
+        let payload = write_segments(&p, &views).unwrap();
+        assert_eq!(payload, 20 * (7 + 13));
+        let f = SegmentFile::open(&p).unwrap();
+        assert_eq!(f.segments(), 3);
+        for (i, part) in parts.iter().enumerate() {
+            assert_eq!(f.rows(i), part.len());
+            assert_eq!(f.read_segment::<ProvTriple>(i).unwrap(), *part);
+        }
+    }
+
+    #[test]
+    fn every_codec_roundtrips() {
+        let p = tmp("codecs.seg");
+        let cc: Vec<CcTriple> = triples(5, 0)
+            .into_iter()
+            .map(|t| CcTriple { triple: t, ccid: ComponentId(t.dst.raw() % 3) })
+            .collect();
+        write_segments(&p, &[cc.as_slice()]).unwrap();
+        assert_eq!(SegmentFile::open(&p).unwrap().read_segment::<CcTriple>(0).unwrap(), cc);
+
+        let cs: Vec<CsTriple> = triples(5, 9)
+            .into_iter()
+            .map(|t| CsTriple { triple: t, src_csid: SetId(1), dst_csid: SetId(2) })
+            .collect();
+        write_segments(&p, &[cs.as_slice()]).unwrap();
+        assert_eq!(SegmentFile::open(&p).unwrap().read_segment::<CsTriple>(0).unwrap(), cs);
+
+        let deps = vec![SetDep { src_csid: SetId(3), dst_csid: SetId(4) }];
+        write_segments(&p, &[deps.as_slice()]).unwrap();
+        assert_eq!(SegmentFile::open(&p).unwrap().read_segment::<SetDep>(0).unwrap(), deps);
+
+        let pairs = vec![(1u64, 2u64), (3, 4)];
+        write_segments(&p, &[pairs.as_slice()]).unwrap();
+        assert_eq!(
+            SegmentFile::open(&p).unwrap().read_segment::<(u64, u64)>(0).unwrap(),
+            pairs
+        );
+    }
+
+    #[test]
+    fn truncated_and_corrupt_files_name_the_path() {
+        // Directory promises more rows than the file holds.
+        let p = tmp("truncated.seg");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKSEG1");
+        bytes.extend_from_slice(&20u64.to_le_bytes()); // record_bytes
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // seg_count
+        bytes.extend_from_slice(&1000u64.to_le_bytes()); // rows, but no payload
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", SegmentFile::open(&p).unwrap_err());
+        assert!(
+            err.contains("truncated.seg") && err.contains("exceeds"),
+            "error must name the path and the overrun: {err}"
+        );
+
+        // Implausible segment count (u64::MAX would overflow the directory).
+        let p = tmp("huge_count.seg");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKSEG1");
+        bytes.extend_from_slice(&20u64.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", SegmentFile::open(&p).unwrap_err());
+        assert!(
+            err.contains("huge_count.seg") && err.contains("implausible"),
+            "error must name the path: {err}"
+        );
+
+        // Wrong magic.
+        let p = tmp("bad_magic.seg");
+        std::fs::write(&p, b"NOTSEG!!rest").unwrap();
+        let err = format!("{:#}", SegmentFile::open(&p).unwrap_err());
+        assert!(err.contains("bad_magic.seg") && err.contains("magic"));
+
+        // Record-size mismatch caught before any payload read.
+        let p = tmp("mismatch.seg");
+        let deps = vec![SetDep { src_csid: SetId(1), dst_csid: SetId(2) }];
+        write_segments(&p, &[deps.as_slice()]).unwrap();
+        let f = SegmentFile::open(&p).unwrap();
+        let err = format!("{:#}", f.read_segment::<ProvTriple>(0).unwrap_err());
+        assert!(err.contains("mismatch.seg") && err.contains("record size mismatch"));
+    }
+
+    #[test]
+    fn injected_segment_io_faults_surface_as_errors() {
+        use crate::fault::{install_io_faults, FaultInjector, FaultPlan};
+        let p = tmp("faulted.seg");
+        let rows = triples(4, 0);
+        write_segments(&p, &[rows.as_slice()]).unwrap();
+        let plan: FaultPlan = "io:segment:1.0,seed=4".parse().unwrap();
+        install_io_faults(Some(Arc::new(FaultInjector::new(plan))));
+        let open_err = format!("{:#}", SegmentFile::open(&p).unwrap_err());
+        install_io_faults(None);
+        assert!(open_err.contains("injected"), "expected the injected fault: {open_err}");
+        // With the plan removed the same file reads fine.
+        let f = SegmentFile::open(&p).unwrap();
+        assert_eq!(f.read_segment::<ProvTriple>(0).unwrap(), rows);
+        // And a read-side fault surfaces there too, naming the segment.
+        let plan: FaultPlan = "io:segment:1.0,seed=4".parse().unwrap();
+        install_io_faults(Some(Arc::new(FaultInjector::new(plan))));
+        let read_err = format!("{:#}", f.read_segment::<ProvTriple>(0).unwrap_err());
+        install_io_faults(None);
+        assert!(read_err.contains("faulted.seg") && read_err.contains("injected"));
+    }
+}

@@ -1,0 +1,235 @@
+//! Out-of-core storage properties: a session whose engines spill to
+//! segment files and page partitions back through the byte-budgeted cache
+//! must answer **byte-identically** to a fully-resident session — under
+//! any budget (including a pathologically tiny one), on every engine,
+//! under sharding, across ingest, and through a persisted v4 index. A
+//! failing segment read is a typed per-item failure, never a process
+//! crash.
+
+use provspark::config::EngineConfig;
+use provspark::harness::{EngineRouter, ProvSession, ShardedSession};
+use provspark::provenance::incremental::TripleBatch;
+use provspark::provenance::model::{ProvTriple, Trace};
+use provspark::provenance::pipeline::{preprocess, Preprocessed, WccImpl};
+use provspark::provenance::query::{QueryOutcome, QueryRequest};
+use provspark::provenance::store;
+use provspark::util::ids::{AttrValueId, OpId};
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::sync::Arc;
+
+fn data() -> (Arc<Trace>, Arc<Preprocessed>) {
+    let (trace, graph, splits) =
+        generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+    let pre = preprocess(&trace, &graph, &splits, 150, 100, WccImpl::Driver);
+    (Arc::new(trace), Arc::new(pre))
+}
+
+fn cfg(budget: u64) -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.cluster.memory_budget = budget;
+    cfg
+}
+
+fn sample_items(trace: &Trace, n: usize) -> Vec<u64> {
+    trace
+        .triples
+        .iter()
+        .step_by(trace.len() / n + 1)
+        .take(n)
+        .map(|t| t.dst.raw())
+        .collect()
+}
+
+/// The central correctness bar: for every engine and a budget sweep from
+/// "one byte" (everything misses, the cache thrashes) to "generous"
+/// (everything fits after warmup), answers and scan counts are identical
+/// to the unbounded in-memory session.
+#[test]
+fn any_budget_answers_identically_to_unbounded() {
+    let (trace, pre) = data();
+    let clean = ProvSession::new(&cfg(0), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let mut items = sample_items(&trace, 5);
+    items.push(AttrValueId::new(provspark::util::ids::EntityId(15), 9_999_999).raw());
+
+    for budget in [1u64, 64 * 1024, 64 * 1024 * 1024] {
+        let budgeted =
+            ProvSession::new(&cfg(budget), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+        let m = budgeted.context().metrics().snapshot();
+        assert!(m.bytes_spilled > 0, "budget={budget}: engines must spill at build");
+        for router in [EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv] {
+            for &q in &items {
+                let want = clean.execute_on(router, &QueryRequest::new(q));
+                let got = budgeted.execute_on(router, &QueryRequest::new(q));
+                assert_eq!(
+                    want.lineage, got.lineage,
+                    "router={router} budget={budget} q={q}: paging changed the answer"
+                );
+                // Paging must not change what the query *scans* — only
+                // where the partitions come from.
+                assert_eq!(want.stats.partitions_scanned, got.stats.partitions_scanned);
+                assert_eq!(want.stats.rows_examined, got.stats.rows_examined);
+            }
+        }
+    }
+}
+
+/// Cache observability, end to end: a thrashing budget shows misses and
+/// evictions in both the per-query stats and the engine-wide metrics; a
+/// generous budget serves a repeated query entirely warm.
+#[test]
+fn cache_traffic_is_observable_per_query_and_engine_wide() {
+    let (trace, pre) = data();
+    let q = sample_items(&trace, 1)[0];
+
+    // One byte: every partition fetch is a miss, every admit evicts.
+    let tiny = ProvSession::new(&cfg(1), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let resp = tiny.execute_on(EngineRouter::Rq, &QueryRequest::new(q));
+    assert!(
+        resp.stats.cache_misses > 0,
+        "a one-byte budget must page on every fetch: {}",
+        resp.stats.summary()
+    );
+    assert!(
+        resp.stats.summary().contains("cache_misses="),
+        "per-query summary must surface paging: {}",
+        resp.stats.summary()
+    );
+    let m = tiny.context().metrics().snapshot();
+    assert!(m.cache_misses > 0, "engine-wide misses: {}", m.summary());
+    assert!(m.evictions > 0, "engine-wide evictions: {}", m.summary());
+    assert!(m.bytes_spilled > 0, "spill volume: {}", m.summary());
+    assert!(m.bytes_paged_in > 0, "page-in volume: {}", m.summary());
+    assert!(m.summary().contains("evictions="), "metrics summary: {}", m.summary());
+
+    // Generous budget: the second identical query finds its whole working
+    // set resident — zero misses, all hits (the hot-component regime).
+    let warm = ProvSession::new(&cfg(1 << 30), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let first = warm.execute_on(EngineRouter::Rq, &QueryRequest::new(q));
+    assert!(first.stats.cache_misses > 0, "cold query must page in");
+    let second = warm.execute_on(EngineRouter::Rq, &QueryRequest::new(q));
+    assert_eq!(
+        second.stats.cache_misses, 0,
+        "warmed query must not touch disk: {}",
+        second.stats.summary()
+    );
+    assert!(second.stats.cache_hits > 0);
+    assert_eq!(first.lineage, second.lineage);
+}
+
+/// Budget-equivalence holds across the scatter-gather front too: a
+/// sharded session whose every shard spills answers like the unbounded
+/// single-shard session.
+#[test]
+fn sharded_budgeted_sessions_answer_identically() {
+    let (trace, pre) = data();
+    let clean = ProvSession::new(&cfg(0), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let reqs: Vec<QueryRequest> =
+        sample_items(&trace, 6).into_iter().map(QueryRequest::new).collect();
+    let want = clean.query_many_on(EngineRouter::Auto, &reqs);
+
+    for budget in [1u64, 256 * 1024] {
+        let sharded =
+            ShardedSession::new(&cfg(budget), Arc::clone(&trace), Arc::clone(&pre), 3)
+                .unwrap();
+        let (got, report) = sharded.query_many_report_on(EngineRouter::Auto, &reqs);
+        for ((req, a), b) in reqs.iter().zip(&want).zip(&got) {
+            assert_eq!(
+                a.lineage, b.lineage,
+                "budget={budget} item {}: sharded paging changed the answer",
+                req.item
+            );
+        }
+        assert!(report.outcomes.iter().all(|o| *o == QueryOutcome::Full));
+    }
+}
+
+/// Incremental ingest on a budgeted session: the delta is absorbed, the
+/// engines re-spill, and answers still match an unbounded session that
+/// ingested the same batch.
+#[test]
+fn ingest_into_budgeted_session_matches_unbounded() {
+    let (trace, pre) = data();
+    let batch = TripleBatch::new(vec![ProvTriple::new(
+        AttrValueId(u64::MAX - 21),
+        trace.triples[0].dst,
+        OpId(0),
+    )]);
+    let clean = ProvSession::new(&cfg(0), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    clean.ingest(&batch).unwrap();
+    let budgeted =
+        ProvSession::new(&cfg(4096), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    budgeted.ingest(&batch).unwrap();
+    assert_eq!(clean.epoch(), budgeted.epoch());
+
+    let mut items = sample_items(&trace, 4);
+    items.push(u64::MAX - 21);
+    items.push(trace.triples[0].dst.raw());
+    for &q in &items {
+        for router in [EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv] {
+            let want = clean.execute_on(router, &QueryRequest::new(q));
+            let got = budgeted.execute_on(router, &QueryRequest::new(q));
+            assert_eq!(want.lineage, got.lineage, "router={router} q={q} after ingest");
+        }
+    }
+}
+
+/// End-to-end out-of-core path: preprocess, persist as a segmented v4
+/// file, reload, and query under a budget a fraction of the index size —
+/// answers match the original in-memory state.
+#[test]
+fn v4_persisted_index_queried_under_budget() {
+    let (trace, pre) = data();
+    let dir = std::env::temp_dir().join("provspark_oocore_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pp = dir.join("pre_v4.bin");
+    store::save_preprocessed(&pp, &pre).unwrap();
+    let reloaded = Arc::new(store::load_preprocessed(&pp).unwrap());
+    assert_eq!(reloaded.epoch, pre.epoch);
+
+    // ~a quarter of what a fully-spilled session writes: big enough to be
+    // useful, far smaller than the working set.
+    let probe = ProvSession::new(&cfg(1), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let working_set = probe.context().metrics().snapshot().bytes_spilled;
+    let budget = (working_set / 4).max(1);
+
+    let clean = ProvSession::new(&cfg(0), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let ooc = ProvSession::new(&cfg(budget), Arc::clone(&trace), reloaded).unwrap();
+    for &q in &sample_items(&trace, 6) {
+        let want = clean.execute_on(EngineRouter::Auto, &QueryRequest::new(q));
+        let got = ooc.execute_on(EngineRouter::Auto, &QueryRequest::new(q));
+        assert_eq!(want.lineage, got.lineage, "q={q} via v4 + budget {budget}");
+    }
+}
+
+/// The `io:segment` fault site, end to end: a one-shot injected segment
+/// read error fails exactly that item with a typed [`QueryOutcome::Failed`]
+/// — no panic escapes, the batch is not poisoned, and the same query
+/// succeeds afterwards with the correct answer.
+#[test]
+fn segment_fault_is_a_typed_per_item_failure() {
+    let (trace, pre) = data();
+    let clean = ProvSession::new(&cfg(0), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let q = sample_items(&trace, 1)[0];
+    let want = clean.execute_on(EngineRouter::Rq, &QueryRequest::new(q));
+
+    let mut fcfg = cfg(1); // one byte: the query must page, so the probe runs hot
+    fcfg.cluster.fault_plan = Some("io:segment:@0,seed=3".parse().unwrap());
+    let faulty = ProvSession::new(&fcfg, Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+
+    let first = faulty.query_many_outcomes_on(EngineRouter::Rq, &[QueryRequest::new(q)]);
+    assert_eq!(
+        first[0].1,
+        QueryOutcome::Failed,
+        "the injected segment-read error must surface as a typed failure"
+    );
+    let inj = faulty.context().fault().expect("injector configured");
+    assert_eq!(inj.fired(), 1, "exactly the one-shot probe fired");
+
+    // The fault was transient (one-shot): the identical query now pages
+    // in cleanly and answers correctly — the failure was isolated to the
+    // one item, not the session.
+    let second = faulty.query_many_outcomes_on(EngineRouter::Rq, &[QueryRequest::new(q)]);
+    assert_eq!(second[0].1, QueryOutcome::Full);
+    assert_eq!(second[0].0.lineage, want.lineage);
+}
