@@ -1,0 +1,263 @@
+//! Lazy DAG scheduler bench — the stage-fusion PR's perf claims.
+//!
+//! Two claims are gated, both on the engine-wide metrics ledger (data
+//! volume, not wall clock — CI-stable):
+//!
+//! * **Fusion materializes strictly fewer intermediate rows.** A chain of
+//!   narrow operators run through `Dataset::lazy()` scans its source once
+//!   per stage instead of once per operator; the rows the eager path
+//!   materializes between operators are never produced. Gated:
+//!   `lazy_scanned < eager_scanned` and the planner's
+//!   `intermediates_avoided` counter accounts for (at least) the gap.
+//! * **A batched hot-component workload shares its assemble scan.**
+//!   `query_many` on CCProv over `k` items of one component runs the
+//!   component's Find-Prov-Triples stage once (memoized, lazily planned)
+//!   instead of `k` times: the batch's ledger scan volume is strictly
+//!   below `k ×` a cold single-query session's.
+//!
+//! Lazy answers are verified byte-identical to eager before anything is
+//! measured. Writes `BENCH_dag.json`.
+//!
+//! ```bash
+//! cargo bench --bench bench_dag -- --rows 200000 --divisor 400
+//! ```
+
+use provspark::benchkit::Table;
+use provspark::cli::Args;
+use provspark::config::{ClusterConfig, EngineConfig};
+use provspark::harness::{EngineRouter, ProvSession};
+use provspark::minispark::{Dataset, LazyDataset, MiniSpark};
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::query::QueryRequest;
+use provspark::util::fmt::{human_count, human_duration};
+use provspark::util::rng::Pcg64;
+use provspark::util::timer::time_it;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The measured chain: six narrow operators, all fusable into one stage.
+fn eager_chain(d: &Dataset<(u64, u64)>) -> Dataset<(u64, u64)> {
+    d.filter(|r| r.1 % 2 == 0)
+        .map_values(|v| v.wrapping_mul(3))
+        .filter(|r| r.1 % 4 != 0)
+        .map(|r| (r.0, r.1 ^ 5))
+        .filter(|r| r.1 % 3 != 0)
+        .map_values(|v| v.wrapping_add(7))
+}
+
+fn lazy_chain(d: &LazyDataset<(u64, u64)>) -> LazyDataset<(u64, u64)> {
+    d.filter(|r| r.1 % 2 == 0)
+        .map_values(|v| v.wrapping_mul(3))
+        .filter(|r| r.1 % 4 != 0)
+        .map(|r| (r.0, r.1 ^ 5))
+        .filter(|r| r.1 % 3 != 0)
+        .map_values(|v| v.wrapping_add(7))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(&["bench"])?;
+    let rows_n: usize = args.get_parsed_or("rows", 200_000)?;
+    let partitions: usize = args.get_parsed_or("partitions", 16)?;
+    let iters: usize = args.get_parsed_or("iters", 3)?;
+    let divisor: usize = args.get_parsed_or("divisor", 400)?;
+    let hot_n: usize = args.get_parsed_or("queries", 16)?;
+    let out_path = args.get_or("out", "BENCH_dag.json");
+
+    // -----------------------------------------------------------------
+    // Claim 1: stage fusion materializes strictly fewer intermediate rows.
+    // -----------------------------------------------------------------
+    let sc = MiniSpark::new(ClusterConfig {
+        job_overhead_us: 0,
+        default_partitions: partitions,
+        ..Default::default()
+    });
+    let mut rng = Pcg64::new(0xDA61);
+    let rows: Vec<(u64, u64)> =
+        (0..rows_n).map(|_| (rng.next_below(1000), rng.next_below(1_000_000))).collect();
+    let src = Dataset::from_vec(&sc, rows, partitions);
+
+    // Correctness first: the two paths must agree byte-for-byte.
+    let mut want = eager_chain(&src).collect();
+    want.sort_unstable();
+    let mut got = lazy_chain(&src.lazy()).collect();
+    got.sort_unstable();
+    anyhow::ensure!(got == want, "lazy chain diverges from eager — bench aborted");
+
+    let before = sc.metrics().snapshot();
+    let (eager_out, eager_s) = time_it(|| eager_chain(&src));
+    let m = sc.metrics().since(&before);
+    let eager_scanned = m.rows_scanned;
+    let eager_jobs = m.jobs;
+    drop(eager_out);
+
+    let before = sc.metrics().snapshot();
+    let (lazy_out, lazy_s) = time_it(|| lazy_chain(&src.lazy()).materialize());
+    let m = sc.metrics().since(&before);
+    let lazy_scanned = m.rows_scanned;
+    let lazy_jobs = m.jobs;
+    let stages_run = m.stages_run;
+    let ops_fused = m.ops_fused;
+    let intermediates_avoided = m.intermediates_avoided;
+    drop(lazy_out);
+
+    let eager_intermediates = eager_scanned.saturating_sub(rows_n as u64);
+    let lazy_intermediates = lazy_scanned.saturating_sub(rows_n as u64);
+    let eager_s = eager_s.as_secs_f64();
+    let lazy_s = lazy_s.as_secs_f64();
+
+    // -----------------------------------------------------------------
+    // Claim 2: a batched hot-component workload shares its assemble scan.
+    // -----------------------------------------------------------------
+    let (trace, graph, splits) =
+        generate(&GeneratorConfig { scale_divisor: divisor, ..Default::default() });
+    let theta = (25_000 / divisor).max(50);
+    let pre = preprocess(&trace, &graph, &splits, theta, 100, WccImpl::Driver);
+
+    // The hot batch: up to `hot_n` distinct queryable items inside the
+    // largest component (the memo is per component).
+    let mut by_comp: FxHashMap<u64, Vec<u64>> = FxHashMap::default();
+    for t in &trace.triples {
+        let q = t.dst.raw();
+        if let Some(&c) = pre.cc_of.get(&q) {
+            by_comp.entry(c).or_default().push(q);
+        }
+    }
+    let mut comps: Vec<(u64, Vec<u64>)> = by_comp.into_iter().collect();
+    for (_, v) in comps.iter_mut() {
+        v.sort_unstable();
+        v.dedup();
+    }
+    comps.sort_by_key(|(c, v)| (std::cmp::Reverse(v.len()), *c));
+    anyhow::ensure!(!comps.is_empty(), "no queryable components");
+    let hot: Vec<QueryRequest> =
+        comps[0].1.iter().take(hot_n).map(|&q| QueryRequest::new(q)).collect();
+    let k = hot.len() as u64;
+    anyhow::ensure!(k >= 2, "need at least 2 hot items to show scan sharing (got {k})");
+
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.cluster.default_partitions = partitions;
+    cfg.prov.tau = usize::MAX; // driver recursion: the assemble scan dominates
+    let (trace, pre) = (Arc::new(trace), Arc::new(pre));
+
+    // Cold single query, fresh session: what one assemble costs.
+    let one = ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre))?;
+    let before = one.context().metrics().snapshot();
+    let single_resp = one.execute_on(EngineRouter::CcProv, &hot[0]);
+    let single_scanned = one.context().metrics().snapshot().since(&before).rows_scanned;
+
+    // The batch, fresh session: k queries, one shared assemble.
+    let batch = ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre))?;
+    let before = batch.context().metrics().snapshot();
+    let mut batch_s = f64::MAX;
+    let (batch_resps, d) = time_it(|| batch.query_many_on(EngineRouter::CcProv, &hot));
+    batch_s = batch_s.min(d.as_secs_f64());
+    let batch_m = batch.context().metrics().snapshot().since(&before);
+    let batch_scanned = batch_m.rows_scanned;
+    let batch_stages = batch_m.stages_run;
+    for _ in 1..iters {
+        let fresh = ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre))?;
+        let (_, d) = time_it(|| fresh.query_many_on(EngineRouter::CcProv, &hot));
+        batch_s = batch_s.min(d.as_secs_f64());
+    }
+    anyhow::ensure!(
+        batch_resps[0].lineage == single_resp.lineage,
+        "batched answer diverges from the cold single query"
+    );
+    // Every per-query attribution still reports the full assemble scan —
+    // sharing shows up in the ledger, never in the stats contract.
+    for (req, r) in hot.iter().zip(&batch_resps) {
+        anyhow::ensure!(
+            r.stats.rows_examined > 0 && r.stats.stages_run > 0,
+            "item {}: batched query lost its replayed stage attribution",
+            req.item
+        );
+    }
+
+    let naive_scanned = k * single_scanned;
+    let share_ratio = batch_scanned as f64 / naive_scanned.max(1) as f64;
+    println!(
+        "RAW dag rows={rows_n} eager_scanned={eager_scanned} lazy_scanned={lazy_scanned} \
+         eager_intermediates={eager_intermediates} lazy_intermediates={lazy_intermediates} \
+         intermediates_avoided={intermediates_avoided} stages_run={stages_run} \
+         ops_fused={ops_fused} eager_jobs={eager_jobs} lazy_jobs={lazy_jobs} \
+         eager_s={eager_s:.5} lazy_s={lazy_s:.5} k={k} single_scanned={single_scanned} \
+         batch_scanned={batch_scanned} batch_stages={batch_stages} \
+         share_ratio={share_ratio:.4} batch_s={batch_s:.5}"
+    );
+
+    let mut t = Table::new(
+        &format!("Lazy DAG scheduler ({} source rows, 6-op chain)", human_count(rows_n as u64)),
+        &["path", "rows scanned", "intermediates", "jobs", "time"],
+    );
+    t.row(vec![
+        "eager (op per job)".into(),
+        human_count(eager_scanned),
+        human_count(eager_intermediates),
+        format!("{eager_jobs}"),
+        human_duration(Duration::from_secs_f64(eager_s)),
+    ]);
+    t.row(vec![
+        "lazy (fused stage)".into(),
+        human_count(lazy_scanned),
+        human_count(lazy_intermediates),
+        format!("{lazy_jobs}"),
+        human_duration(Duration::from_secs_f64(lazy_s)),
+    ]);
+    t.row(vec![
+        format!("hot batch (k={k})"),
+        human_count(batch_scanned),
+        format!("vs {} naive", human_count(naive_scanned)),
+        format!("{:.2}× shared", 1.0 / share_ratio.max(1e-9)),
+        human_duration(Duration::from_secs_f64(batch_s)),
+    ]);
+    t.print();
+
+    // Hand-rolled JSON (the offline build has no serde).
+    let json = format!(
+        "{{\n  \"bench\": \"dag\",\n  \"rows\": {rows_n},\n  \
+         \"eager_rows_scanned\": {eager_scanned},\n  \
+         \"lazy_rows_scanned\": {lazy_scanned},\n  \
+         \"eager_intermediate_rows\": {eager_intermediates},\n  \
+         \"lazy_intermediate_rows\": {lazy_intermediates},\n  \
+         \"intermediates_avoided\": {intermediates_avoided},\n  \
+         \"stages_run\": {stages_run},\n  \"ops_fused\": {ops_fused},\n  \
+         \"eager_jobs\": {eager_jobs},\n  \"lazy_jobs\": {lazy_jobs},\n  \
+         \"eager_chain_s\": {eager_s:.6},\n  \"lazy_chain_s\": {lazy_s:.6},\n  \
+         \"hot_batch_k\": {k},\n  \"single_rows_scanned\": {single_scanned},\n  \
+         \"batch_rows_scanned\": {batch_scanned},\n  \
+         \"naive_rows_scanned\": {naive_scanned},\n  \
+         \"batch_share_ratio\": {share_ratio:.6},\n  \"batch_s\": {batch_s:.6}\n}}\n",
+    );
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {out_path}");
+
+    // Gates.
+    anyhow::ensure!(
+        lazy_scanned < eager_scanned,
+        "fusion must scan strictly fewer rows: lazy {lazy_scanned} vs eager {eager_scanned}"
+    );
+    anyhow::ensure!(
+        lazy_intermediates < eager_intermediates,
+        "fusion must materialize strictly fewer intermediate rows: \
+         lazy {lazy_intermediates} vs eager {eager_intermediates}"
+    );
+    anyhow::ensure!(
+        intermediates_avoided >= eager_intermediates - lazy_intermediates,
+        "the planner's counter ({intermediates_avoided}) must account for the \
+         intermediates the eager path materialized ({eager_intermediates})"
+    );
+    anyhow::ensure!(
+        stages_run == 1 && ops_fused == 5,
+        "the 6-op narrow chain must fuse into one stage (ran {stages_run} stages, \
+         fused {ops_fused} ops)"
+    );
+    anyhow::ensure!(
+        batch_scanned < naive_scanned,
+        "a batched hot-component workload must share its assemble scan: \
+         batch {batch_scanned} vs {k} × {single_scanned} = {naive_scanned}"
+    );
+    Ok(())
+}

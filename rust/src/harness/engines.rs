@@ -14,7 +14,11 @@
 //! produced, it derives the next epoch's engines by routing appended rows
 //! into the existing datasets and patching only the partitions whose rows
 //! were retagged ([`Dataset::append_partitioned`] /
-//! [`Dataset::patch_partitions`]) — never a full rebuild.
+//! [`Dataset::patch_partitions`]) — never a full rebuild. Both paths hand
+//! out engines whose hot-component / hot-set assemble memos (the lazy
+//! planner's memoized stages; see `CcProvEngine::assemble`) start cold:
+//! `with_delta` and `spilled` reset them, so an epoch never serves a
+//! stale component and a spilled engine never pins pre-spill partitions.
 //!
 //! [`Dataset::append_partitioned`]: crate::minispark::Dataset::append_partitioned
 //! [`Dataset::patch_partitions`]: crate::minispark::Dataset::patch_partitions

@@ -121,6 +121,13 @@ pub struct ShardBatchStats {
     pub rows_examined: u64,
     pub rows_shuffled: u64,
     pub rows_collected: u64,
+    /// Fused lazy-planner stages the shard's engines ran (or replayed
+    /// from a hot-component memo) for this batch.
+    pub stages_run: u64,
+    /// Logical ops folded into those stages.
+    pub ops_fused: u64,
+    /// Intermediate rows stage fusion never materialized on this shard.
+    pub intermediates_avoided: u64,
     /// Requests answered completely ([`QueryOutcome::Full`]).
     pub full: usize,
     /// Degraded answers — cap- or deadline-bounded ([`QueryOutcome::Partial`]).
@@ -138,6 +145,9 @@ impl ShardBatchStats {
         self.rows_examined += resp.stats.rows_examined;
         self.rows_shuffled += resp.stats.rows_shuffled;
         self.rows_collected += resp.stats.rows_collected;
+        self.stages_run += resp.stats.stages_run;
+        self.ops_fused += resp.stats.ops_fused;
+        self.intermediates_avoided += resp.stats.intermediates_avoided;
         match outcome {
             QueryOutcome::Full => self.full += 1,
             QueryOutcome::Partial => self.partial += 1,
@@ -170,6 +180,9 @@ impl ShardedBatchReport {
             t.rows_examined += s.rows_examined;
             t.rows_shuffled += s.rows_shuffled;
             t.rows_collected += s.rows_collected;
+            t.stages_run += s.stages_run;
+            t.ops_fused += s.ops_fused;
+            t.intermediates_avoided += s.intermediates_avoided;
             t.full += s.full;
             t.partial += s.partial;
             t.failed += s.failed;

@@ -139,8 +139,11 @@ impl MiniSpark {
     /// [`TaskError`](crate::exec::TaskError) message, to be caught at the
     /// harness's supervised execution boundaries.
     ///
-    /// Every public `Dataset` operation funnels through here so the job /
-    /// task accounting (and the fault-injection task probe) is uniform.
+    /// Every public `Dataset` operation funnels through here — and so does
+    /// the lazy planner's stage scheduler, which submits one job per fused
+    /// stage (one task per partition, however many logical ops the stage
+    /// composed) — so the job / task accounting (and the fault-injection
+    /// task probe) is uniform across eager and lazy execution.
     pub fn run_job<T, U, F>(&self, inputs: &[T], f: F) -> Vec<U>
     where
         T: Sync,

@@ -63,10 +63,13 @@ impl Touch {
 /// present, elidable operations can prove "already partitioned on this key"
 /// and skip the shuffle entirely. Untagged partitionings still support
 /// `lookup`/`prune_lookup` but are never trusted for elision.
-struct Partitioning<T> {
-    partitioner: HashPartitioner,
-    key_fn: Arc<dyn Fn(&T) -> u64 + Send + Sync>,
-    key_tag: Option<KeyTag>,
+///
+/// Crate-visible so the lazy planner ([`super::LazyDataset`]) can track the
+/// partitioning a plan *would* produce without executing it.
+pub(crate) struct Partitioning<T> {
+    pub(crate) partitioner: HashPartitioner,
+    pub(crate) key_fn: Arc<dyn Fn(&T) -> u64 + Send + Sync>,
+    pub(crate) key_tag: Option<KeyTag>,
 }
 
 impl<T> Clone for Partitioning<T> {
@@ -125,6 +128,37 @@ impl<T> Part<T> {
             Part::Mem(p) => p.len(),
             Part::Paged { rows, .. } => *rows,
         }
+    }
+}
+
+/// Every partition of one dataset, materialized and pinned for the lifetime
+/// of a fused stage — the lazy scheduler's view of a stage's input. Spilled
+/// partitions are demand-paged exactly once per stage no matter how many
+/// logical ops the stage fused, and stay unevictable until the stage ends.
+pub(crate) struct StageInput<T> {
+    fetched: Vec<Fetched<T>>,
+}
+
+impl<T> StageInput<T> {
+    pub(crate) fn num_partitions(&self) -> usize {
+        self.fetched.len()
+    }
+
+    pub(crate) fn rows(&self, i: usize) -> &Arc<Vec<T>> {
+        &self.fetched[i].rows
+    }
+
+    pub(crate) fn total_rows(&self) -> u64 {
+        self.fetched.iter().map(|f| f.rows.len() as u64).sum()
+    }
+
+    /// Aggregate cache traffic this input's fetches caused: `(hits, misses)`.
+    pub(crate) fn cache_touch(&self) -> (u64, u64) {
+        let mut t = Touch::default();
+        for f in &self.fetched {
+            t.add(f.touch);
+        }
+        (t.hits, t.misses)
     }
 }
 
@@ -269,6 +303,33 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         self.parts.iter().map(|p| p.fetch()).collect()
     }
 
+    /// [`fetch_all`](Self::fetch_all) packaged for the lazy scheduler: a
+    /// fused stage materializes (and pins) its input once, then pipelines
+    /// every fused op over it.
+    pub(crate) fn stage_input(&self) -> StageInput<T> {
+        StageInput { fetched: self.fetch_all() }
+    }
+
+    /// Assemble a dataset from a fused stage's output partitions, carrying
+    /// the partitioning the planner proved the plan preserves. The lazy
+    /// scheduler's counterpart of the shuffle paths' reduce side.
+    pub(crate) fn from_stage(
+        sc: &MiniSpark,
+        partitions: Vec<Arc<Vec<T>>>,
+        partitioning: Option<Partitioning<T>>,
+    ) -> Self {
+        Self {
+            sc: sc.clone(),
+            parts: partitions.into_iter().map(Part::Mem).collect(),
+            partitioning,
+        }
+    }
+
+    /// The dataset's partitioning, for the planner's spec tracking.
+    pub(crate) fn partitioning(&self) -> Option<&Partitioning<T>> {
+        self.partitioning.as_ref()
+    }
+
     /// Engine handle.
     pub fn context(&self) -> &MiniSpark {
         &self.sc
@@ -344,7 +405,7 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
 
     /// True when elision is enabled and this dataset is hash-partitioned on
     /// `tag` into exactly `num_partitions` buckets.
-    fn partitioned_on(&self, tag: KeyTag, num_partitions: usize) -> bool {
+    pub(crate) fn partitioned_on(&self, tag: KeyTag, num_partitions: usize) -> bool {
         self.sc.elision_enabled()
             && matches!(
                 &self.partitioning,
@@ -354,8 +415,9 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
     }
 
     /// The unconditional map/reduce shuffle behind both partition entry
-    /// points.
-    fn shuffle_partition(
+    /// points (and the lazy planner's stage cuts, which decide elision at
+    /// plan time and so need the shuffle without the runtime re-check).
+    pub(crate) fn shuffle_partition(
         &self,
         num_partitions: usize,
         key_tag: Option<KeyTag>,
@@ -1077,9 +1139,15 @@ where
 }
 
 /// Reduce `v` into `acc[k]` with `red` — the combine step shared by
-/// `reduce_by_key`'s map and reduce sides and `reduce_values`' narrow path.
+/// `reduce_by_key`'s map and reduce sides, `reduce_values`' narrow path,
+/// and the lazy planner's fused reduce stage.
 #[inline]
-fn combine_into<V>(acc: &mut FxHashMap<u64, V>, k: u64, v: V, red: &impl Fn(V, V) -> V) {
+pub(crate) fn combine_into<V>(
+    acc: &mut FxHashMap<u64, V>,
+    k: u64,
+    v: V,
+    red: &impl Fn(V, V) -> V,
+) {
     match acc.remove(&k) {
         Some(prev) => {
             acc.insert(k, red(prev, v));

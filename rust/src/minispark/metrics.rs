@@ -32,6 +32,16 @@ pub struct EngineMetrics {
     pub bytes_spilled: AtomicU64,
     /// Payload bytes read back from segment files on cache misses.
     pub bytes_paged_in: AtomicU64,
+    /// Fused stages executed by the lazy planner (see
+    /// [`super::LazyDataset`]). Each stage is one pass over its input
+    /// partitions no matter how many logical ops it fused.
+    pub stages_run: AtomicU64,
+    /// Logical narrow ops folded into an already-pending stage instead of
+    /// running as their own pass (a 3-op fused chain counts 2).
+    pub ops_fused: AtomicU64,
+    /// Intermediate rows that eager execution would have materialized
+    /// between fused ops but the pipelined stage never allocated.
+    pub intermediates_avoided: AtomicU64,
 }
 
 /// A point-in-time copy of the counters, with subtraction for deltas.
@@ -51,6 +61,9 @@ pub struct MetricsSnapshot {
     pub evictions: u64,
     pub bytes_spilled: u64,
     pub bytes_paged_in: u64,
+    pub stages_run: u64,
+    pub ops_fused: u64,
+    pub intermediates_avoided: u64,
 }
 
 impl EngineMetrics {
@@ -70,6 +83,9 @@ impl EngineMetrics {
             evictions: self.evictions.load(Ordering::Relaxed),
             bytes_spilled: self.bytes_spilled.load(Ordering::Relaxed),
             bytes_paged_in: self.bytes_paged_in.load(Ordering::Relaxed),
+            stages_run: self.stages_run.load(Ordering::Relaxed),
+            ops_fused: self.ops_fused.load(Ordering::Relaxed),
+            intermediates_avoided: self.intermediates_avoided.load(Ordering::Relaxed),
         }
     }
 
@@ -138,6 +154,15 @@ impl EngineMetrics {
     pub fn add_bytes_paged_in(&self, bytes: u64) {
         self.bytes_paged_in.fetch_add(bytes, Ordering::Relaxed);
     }
+
+    /// One fused stage ran: `ops` logical ops in one pass, never allocating
+    /// `intermediates` rows an eager chain would have materialized.
+    #[inline]
+    pub fn add_stage(&self, ops: u64, intermediates: u64) {
+        self.stages_run.fetch_add(1, Ordering::Relaxed);
+        self.ops_fused.fetch_add(ops.saturating_sub(1), Ordering::Relaxed);
+        self.intermediates_avoided.fetch_add(intermediates, Ordering::Relaxed);
+    }
 }
 
 impl MetricsSnapshot {
@@ -158,6 +183,9 @@ impl MetricsSnapshot {
             evictions: self.evictions - earlier.evictions,
             bytes_spilled: self.bytes_spilled - earlier.bytes_spilled,
             bytes_paged_in: self.bytes_paged_in - earlier.bytes_paged_in,
+            stages_run: self.stages_run - earlier.stages_run,
+            ops_fused: self.ops_fused - earlier.ops_fused,
+            intermediates_avoided: self.intermediates_avoided - earlier.intermediates_avoided,
         }
     }
 
@@ -165,7 +193,7 @@ impl MetricsSnapshot {
         format!(
             "jobs={} tasks={} parts_scanned={} rows_scanned={} shuffled={} collected={} \
              elided={} combined={} retried={} cache_hits={} cache_misses={} evictions={} \
-             spilled={} paged_in={}",
+             spilled={} paged_in={} stages={} fused={} intermediates_avoided={}",
             self.jobs,
             self.tasks,
             self.partitions_scanned,
@@ -180,6 +208,9 @@ impl MetricsSnapshot {
             self.evictions,
             crate::util::fmt::human_bytes(self.bytes_spilled),
             crate::util::fmt::human_bytes(self.bytes_paged_in),
+            self.stages_run,
+            self.ops_fused,
+            crate::util::fmt::human_count(self.intermediates_avoided),
         )
     }
 }
@@ -203,5 +234,17 @@ mod tests {
         assert_eq!(d.rows_scanned, 50);
         assert_eq!(d.rows_collected, 7);
         assert!(d.summary().contains("jobs=1"));
+    }
+
+    #[test]
+    fn stage_counters_fold_ops_and_intermediates() {
+        let m = EngineMetrics::default();
+        m.add_stage(3, 40); // 3 fused ops → 2 folded beyond the first
+        m.add_stage(1, 0); // single-op stage fuses nothing
+        let s = m.snapshot();
+        assert_eq!(s.stages_run, 2);
+        assert_eq!(s.ops_fused, 2);
+        assert_eq!(s.intermediates_avoided, 40);
+        assert!(s.summary().contains("stages=2"));
     }
 }

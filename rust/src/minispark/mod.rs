@@ -38,18 +38,29 @@
 //!   rows scanned/shuffled/collected, so experiments can report *data-volume*
 //!   effects independently of wall-clock noise.
 //!
-//! Datasets are eager (materialized) — Spark's lazy DAG only matters for
-//! fault tolerance and multi-pass optimization, neither of which the
-//! paper's single-pass query algorithms exercise; caching is therefore
-//! implicit (a materialized dataset *is* its cache), and `cache()` exists
-//! as a documented no-op for API fidelity.
+//! Execution is **lazy at the plan layer and eager at the dataset layer**.
+//! A [`Dataset<T>`] is always materialized (so a dataset *is* its cache and
+//! `cache()` is a documented no-op kept for API fidelity), but
+//! [`Dataset::lazy`] lifts it into a [`LazyDataset`] logical plan: narrow
+//! ops (`filter`/`map`/`map_partitions`/`append_rows`) fuse into a single
+//! pass per stage, shuffles cut stages, and provably-elided re-partitions
+//! (the [`KeyTag`] machinery) fuse straight through. Nothing runs until an
+//! explicit `materialize()`/`collect()` boundary forces the plan through
+//! the ordinary job scheduler — same pool, fault probes, and demand-paged
+//! partition cache as the eager ops. [`EngineMetrics`] counts the stages
+//! (`stages_run`), the ops folded into them (`ops_fused`), and the
+//! intermediate rows fusion never materialized (`intermediates_avoided`);
+//! `rust/tests/dag_props.rs` holds the differential proof that lazy and
+//! eager execution agree on results and shuffle metrics.
 
 mod context;
 mod dataset;
 mod metrics;
 mod partitioner;
+mod plan;
 
 pub use context::MiniSpark;
 pub use dataset::{join_u64, Dataset, ScanCost};
 pub use metrics::{EngineMetrics, MetricsSnapshot};
 pub use partitioner::{HashPartitioner, KeyTag};
+pub use plan::{lazy_join_u64, LazyDataset, StageCost};

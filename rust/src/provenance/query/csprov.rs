@@ -21,10 +21,10 @@ use super::driver_rq::{bounded_closure, AncestorClosure, NativeClosure};
 use super::engine::{ExecPath, ProvenanceEngine, QueryRequest, QueryResponse, QueryStats};
 use super::result::Lineage;
 use super::rq::{rq_bfs, BfsStats};
-use crate::minispark::{Dataset, KeyTag, MiniSpark};
+use crate::minispark::{Dataset, KeyTag, MiniSpark, ScanCost};
 use crate::provenance::model::{CsTriple, ProvTriple, SetDep};
 use rustc_hash::{FxHashMap, FxHashSet};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// An incremental-preprocessing delta in the shape CSProv's three datasets
@@ -61,6 +61,20 @@ pub struct CsDelta<'a> {
     pub added_deps: &'a [SetDep],
 }
 
+/// The memoized `cs_provRDD` assemble for the most recently queried
+/// connected set. The set-lineage — and therefore the pruned fetch — is a
+/// pure function of the resolved set id, so hits replay the cold run's
+/// [`ScanCost`] and per-query attribution stays deterministic whether the
+/// hot set was shared or not. Only the *assemble* is memoized: the
+/// cluster branch's `by_dst` re-partition still runs per query, keeping
+/// the engine-wide `rows_shuffled` ledger faithful.
+struct AssembledCs {
+    cs: u64,
+    cs_prov: Dataset<CsTriple>,
+    volume: usize,
+    cost: ScanCost,
+}
+
 /// Algorithm 2 engine.
 pub struct CsProvEngine {
     /// Triples, hash-partitioned on `dst_csid` (the paper's layout).
@@ -74,6 +88,8 @@ pub struct CsProvEngine {
     num_partitions: usize,
     tau: usize,
     closure: Arc<dyn AncestorClosure>,
+    /// Single-slot hot-set memo (see [`AssembledCs`]).
+    assembled: Mutex<Option<AssembledCs>>,
 }
 
 impl CsProvEngine {
@@ -118,6 +134,7 @@ impl CsProvEngine {
             num_partitions: np,
             tau,
             closure: Arc::new(NativeClosure),
+            assembled: Mutex::new(None),
         }
     }
 
@@ -177,6 +194,8 @@ impl CsProvEngine {
             num_partitions: self.num_partitions,
             tau: self.tau,
             closure: Arc::clone(&self.closure),
+            // Any part of the hot set may have been retagged: start cold.
+            assembled: Mutex::new(None),
         }
     }
 
@@ -192,7 +211,26 @@ impl CsProvEngine {
             num_partitions: self.num_partitions,
             tau: self.tau,
             closure: Arc::clone(&self.closure),
+            // A memoized set would pin pre-spill partitions resident.
+            assembled: Mutex::new(None),
         })
+    }
+
+    /// Assemble `cs_provRDD` for set-lineage `s` (whose resolved root is
+    /// `cs`): a partition-pruned fetch, memoized per set. `s` is a pure
+    /// function of `cs`, so the memo key is just `cs`, and hits replay the
+    /// cold fetch's deterministic [`ScanCost`].
+    fn assemble(&self, cs: u64, s: &[u64]) -> (Dataset<CsTriple>, usize, ScanCost) {
+        if let Some(a) = self.assembled.lock().expect("cs memo lock").as_ref() {
+            if a.cs == cs {
+                return (a.cs_prov.clone(), a.volume, a.cost);
+            }
+        }
+        let (cs_prov, cost) = self.prov_by_set.prune_lookup_counted(s);
+        let volume = cs_prov.count();
+        *self.assembled.lock().expect("cs memo lock") =
+            Some(AssembledCs { cs, cs_prov: cs_prov.clone(), volume, cost });
+        (cs_prov, volume, cost)
     }
 
     /// The set-lineage of set `cs`: every set contributing to its
@@ -282,14 +320,14 @@ impl ProvenanceEngine for CsProvEngine {
         stats.resolve = t0.elapsed();
 
         // cs_provRDD: triples whose derived item is in a set of S.
-        // Partition-pruned: scans at most |S| distinct partitions.
+        // Partition-pruned (at most |S| distinct partitions), memoized per
+        // set with the cold cost replayed on hits.
         let t1 = Instant::now();
-        let (cs_prov, cost) = self.prov_by_set.prune_lookup_counted(&s);
+        let (cs_prov, volume, cost) = self.assemble(cs, &s);
         stats.partitions_scanned += cost.partitions;
         stats.rows_examined += cost.rows;
         stats.cache_hits += cost.cache_hits;
         stats.cache_misses += cost.cache_misses;
-        let volume = cs_prov.count();
         stats.assemble = t1.elapsed();
 
         let t2 = Instant::now();

@@ -228,6 +228,13 @@ pub struct QueryStats {
     /// Segments this query paged in from disk — the out-of-core cost the
     /// byte budget trades for memory.
     pub cache_misses: u64,
+    /// Fused stages the lazy planner ran (or replayed from a memoized
+    /// plan) for this query; 0 on purely eager paths.
+    pub stages_run: u64,
+    /// Logical ops folded into those stages beyond the first of each.
+    pub ops_fused: u64,
+    /// Intermediate rows stage fusion never materialized for this query.
+    pub intermediates_avoided: u64,
     /// Recursion rounds: distributed BFS rounds on the cluster path, or
     /// levels expanded by the capped driver traversal. 0 only when the
     /// *uncapped* driver closure answered (it computes a fixpoint, not
@@ -259,6 +266,9 @@ impl QueryStats {
             rows_collected: 0,
             cache_hits: 0,
             cache_misses: 0,
+            stages_run: 0,
+            ops_fused: 0,
+            intermediates_avoided: 0,
             bfs_rounds: 0,
             truncated: false,
             completeness: Completeness::default(),
@@ -289,8 +299,18 @@ impl QueryStats {
         } else {
             format!(" cache_hits={} cache_misses={}", self.cache_hits, self.cache_misses)
         };
+        let stages = if self.stages_run == 0 {
+            String::new()
+        } else {
+            format!(
+                " stages={} fused={} intermediates_avoided={}",
+                self.stages_run,
+                self.ops_fused,
+                human_count(self.intermediates_avoided)
+            )
+        };
         format!(
-            "engine={} path={} parts_scanned={} rows_examined={} shuffled={} collected={}{} \
+            "engine={} path={} parts_scanned={} rows_examined={} shuffled={} collected={}{}{} \
              rounds={}{}{} resolve={} assemble={} recurse={}",
             self.engine,
             self.path,
@@ -299,6 +319,7 @@ impl QueryStats {
             human_count(self.rows_shuffled),
             human_count(self.rows_collected),
             paging,
+            stages,
             self.bfs_rounds,
             if self.truncated { " truncated" } else { "" },
             deadline_cut,

@@ -144,6 +144,21 @@ impl RqEngine {
         Self { prov }
     }
 
+    /// Wrap an already dst-partitioned triple dataset — e.g. one built by
+    /// a lazy plan ([`crate::minispark::LazyDataset`]) — without
+    /// re-shuffling it. The differential DAG suite uses this to drive the
+    /// BFS over lazily assembled datasets.
+    ///
+    /// Panics if the dataset carries no hash partitioning (RQ's lookup
+    /// cost argument depends on dst co-location).
+    pub fn from_dataset(prov: Dataset<ProvTriple>) -> Self {
+        assert!(
+            prov.partitioning().is_some(),
+            "RqEngine::from_dataset requires a hash-partitioned dataset"
+        );
+        Self { prov }
+    }
+
     /// Delta ingest: a new engine over the old dataset plus `appended`
     /// triples, routed into their dst partitions in place
     /// ([`Dataset::append_partitioned`]) — RQ rows carry no preprocessing

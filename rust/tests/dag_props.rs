@@ -1,0 +1,559 @@
+//! Differential proof that the lazy DAG scheduler is **semantically
+//! invisible**: any random chain of dataset operators executed through
+//! `Dataset::lazy()` (fused stages, plan-time elision, explicit
+//! `collect()` boundary) returns byte-identical results and identical
+//! shuffle metrics (`rows_shuffled`, `shuffles_elided`) to the same chain
+//! executed eagerly — including under memory-budget spilling and an
+//! injected `panic:task` fault plan — and the provenance engines driven
+//! over lazily assembled datasets agree with eagerly built ones.
+//!
+//! What is deliberately **not** compared (see `minispark::plan`'s module
+//! doc): `jobs`, `tasks`, `rows_scanned` and `partitions_scanned` —
+//! laziness legitimately runs fewer jobs and scans fewer intermediate
+//! rows; that delta is the point of the scheduler, and the benches
+//! (`benches/bench_dag.rs`) gate on it being an improvement.
+//!
+//! CI runs this suite three ways: elision on (default), elision off
+//! (`PROVSPARK_DAG_ELISION=off` — every tagged re-partition becomes a
+//! real cut on both sides), and under a byte budget
+//! (`PROVSPARK_DAG_BUDGET=<bytes>` — sources spill and page back through
+//! the partition cache).
+
+use provspark::config::{ClusterConfig, EngineConfig};
+use provspark::harness::{EngineRouter, EngineSet, ProvSession, ShardedSession};
+use provspark::minispark::{lazy_join_u64, Dataset, LazyDataset, MiniSpark};
+use provspark::proptest_lite::{run_prop, PropCfg};
+use provspark::provenance::model::ProvTriple;
+use provspark::provenance::pipeline::{preprocess, WccImpl};
+use provspark::provenance::query::{QueryRequest, RqEngine, KEY_TRIPLE_DST};
+use provspark::util::rng::Pcg64;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Cluster config for the differential contexts, honouring the CI matrix
+/// overrides: `PROVSPARK_DAG_ELISION=off` disables shuffle elision on
+/// both sides, `PROVSPARK_DAG_BUDGET=<bytes>` runs everything under a
+/// byte budget (sources then spill and demand-page).
+fn base_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig {
+        executors: 4,
+        default_partitions: 8,
+        job_overhead_us: 0,
+        ..Default::default()
+    };
+    if std::env::var("PROVSPARK_DAG_ELISION").as_deref() == Ok("off") {
+        cfg.shuffle_elision = false;
+    }
+    if let Ok(b) = std::env::var("PROVSPARK_DAG_BUDGET") {
+        cfg.memory_budget = b.parse().expect("PROVSPARK_DAG_BUDGET must be bytes");
+    }
+    cfg
+}
+
+fn spill_requested() -> bool {
+    std::env::var("PROVSPARK_DAG_BUDGET").is_ok()
+}
+
+// ---------------------------------------------------------------------------
+// Random operator chains over (u64, u64) pair rows.
+// ---------------------------------------------------------------------------
+
+/// One dataset operator, parameterized so the same chain drives both the
+/// eager and the lazy path. Every op maps `(u64, u64)` to `(u64, u64)`, so
+/// arbitrary chains compose. Reductions use `wrapping_add` (commutative and
+/// associative — deterministic under any partition order).
+#[derive(Debug, Clone)]
+enum Op {
+    /// `filter`: keep rows whose value is not a multiple of `m`.
+    Filter(u64),
+    /// `map_values`: multiply the value by `c` (keeps key-partitioning
+    /// only when the input is provably key-partitioned, on both sides).
+    MapValues(u64),
+    /// `map`: rotate the key — drops partitioning on both sides.
+    Rekey(u64),
+    /// `flat_map`: emit a twin row for every third value.
+    Widen,
+    /// `map_partitions`: reverse each partition in place.
+    Reverse,
+    /// Tagged re-partition on the pair key — elided (fused) whenever the
+    /// input is already key-partitioned with this count.
+    PartitionByKey(usize),
+    /// Untagged re-partition — always a real shuffle / stage cut.
+    HashPartitionBy(usize),
+    /// Per-key reduction that elides its shuffle when co-partitioned.
+    ReduceValues(usize),
+    /// Unconditional shuffle-reduce with map-side combine.
+    ReduceByKey(usize),
+    /// Delta ingest into the existing partitioning (requires one).
+    Append(Vec<(u64, u64)>),
+    /// Concatenate with a fresh unpartitioned source (drops partitioning).
+    Union(Vec<(u64, u64)>),
+}
+
+/// Partitioning state a chain prefix provably leaves behind. The
+/// transition rules mirror the (identical) eager and lazy rules; the
+/// generator uses this only to keep `Append` legal — both
+/// `Dataset::append_partitioned` and `LazyDataset::append_rows` panic on
+/// an unpartitioned input.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum PState {
+    Unpartitioned,
+    Untagged,
+    Keyed,
+}
+
+fn next_state(state: PState, op: &Op) -> PState {
+    match op {
+        Op::Filter(_) | Op::Append(_) => state,
+        Op::MapValues(_) => match state {
+            PState::Keyed => PState::Keyed,
+            _ => PState::Unpartitioned,
+        },
+        Op::Rekey(_) | Op::Widen | Op::Reverse | Op::Union(_) => PState::Unpartitioned,
+        Op::PartitionByKey(_) | Op::ReduceValues(_) | Op::ReduceByKey(_) => PState::Keyed,
+        Op::HashPartitionBy(_) => PState::Untagged,
+    }
+}
+
+/// Insert a keyed re-partition in front of any `Append` that would land on
+/// an unpartitioned prefix.
+fn normalize(raw: Vec<Op>) -> Vec<Op> {
+    let mut out = Vec::with_capacity(raw.len() + 1);
+    let mut st = PState::Unpartitioned;
+    for op in raw {
+        if matches!(op, Op::Append(_)) && st == PState::Unpartitioned {
+            out.push(Op::PartitionByKey(4));
+            st = PState::Keyed;
+        }
+        st = next_state(st, &op);
+        out.push(op);
+    }
+    out
+}
+
+#[derive(Debug)]
+struct Chain {
+    rows: Vec<(u64, u64)>,
+    src_np: usize,
+    ops: Vec<Op>,
+}
+
+fn gen_rows(rng: &mut Pcg64, n: usize, key_space: u64) -> Vec<(u64, u64)> {
+    (0..n).map(|_| (rng.next_below(key_space), rng.next_below(1000))).collect()
+}
+
+fn gen_chain(rng: &mut Pcg64, shrink: u32) -> Chain {
+    let n = if shrink > 0 { rng.range(0, 30) } else { rng.range(0, 1200) };
+    let key_space = rng.range(1, 40) as u64;
+    let rows = gen_rows(rng, n, key_space);
+    let src_np = rng.range(1, 9);
+    let len = if shrink > 0 { rng.range(1, 4) } else { rng.range(1, 9) };
+    let mut ops = Vec::with_capacity(len);
+    for _ in 0..len {
+        ops.push(match rng.range(0, 11) {
+            0 => Op::Filter(rng.range(2, 7) as u64),
+            1 => Op::MapValues(rng.range(1, 9) as u64),
+            2 => Op::Rekey(rng.range(0, 17) as u64),
+            3 => Op::Widen,
+            4 => Op::Reverse,
+            5 => Op::PartitionByKey(rng.range(1, 9)),
+            6 => Op::HashPartitionBy(rng.range(1, 9)),
+            7 => Op::ReduceValues(rng.range(1, 9)),
+            8 => Op::ReduceByKey(rng.range(1, 9)),
+            9 => Op::Append(gen_rows(rng, rng.range(0, 40), key_space)),
+            _ => Op::Union(gen_rows(rng, rng.range(0, 40), key_space)),
+        });
+    }
+    Chain { rows, src_np, ops: normalize(ops) }
+}
+
+fn apply_eager(sc: &MiniSpark, d: Dataset<(u64, u64)>, op: &Op) -> Dataset<(u64, u64)> {
+    match op {
+        Op::Filter(m) => {
+            let m = *m;
+            d.filter(move |r| r.1 % m != 0)
+        }
+        Op::MapValues(c) => {
+            let c = *c;
+            d.map_values(move |v| v.wrapping_mul(c))
+        }
+        Op::Rekey(m) => {
+            let m = *m;
+            d.map(move |r| ((r.0 + m) % 17, r.1))
+        }
+        Op::Widen => d.flat_map(|r| {
+            if r.1 % 3 == 0 {
+                vec![*r, (r.0, r.1 ^ 1)]
+            } else {
+                vec![*r]
+            }
+        }),
+        Op::Reverse => d.map_partitions(|p| p.iter().rev().copied().collect()),
+        Op::PartitionByKey(np) => d.partition_by_key(*np),
+        Op::HashPartitionBy(np) => d.hash_partition_by(*np, |r| r.0),
+        Op::ReduceValues(np) => d.reduce_values(*np, |a, b| a.wrapping_add(b)),
+        Op::ReduceByKey(np) => {
+            d.reduce_by_key(*np, |r| (r.0, r.1), |a: u64, b| a.wrapping_add(b))
+        }
+        Op::Append(rows) => d.append_partitioned(rows),
+        Op::Union(rows) => d.union(&Dataset::from_vec(sc, rows.clone(), 3)),
+    }
+}
+
+fn apply_lazy(
+    sc: &MiniSpark,
+    d: LazyDataset<(u64, u64)>,
+    op: &Op,
+) -> LazyDataset<(u64, u64)> {
+    match op {
+        Op::Filter(m) => {
+            let m = *m;
+            d.filter(move |r| r.1 % m != 0)
+        }
+        Op::MapValues(c) => {
+            let c = *c;
+            d.map_values(move |v| v.wrapping_mul(c))
+        }
+        Op::Rekey(m) => {
+            let m = *m;
+            d.map(move |r| ((r.0 + m) % 17, r.1))
+        }
+        Op::Widen => d.flat_map(|r| {
+            if r.1 % 3 == 0 {
+                vec![*r, (r.0, r.1 ^ 1)]
+            } else {
+                vec![*r]
+            }
+        }),
+        Op::Reverse => d.map_partitions(|p| p.iter().rev().copied().collect()),
+        Op::PartitionByKey(np) => d.partition_by_key(*np),
+        Op::HashPartitionBy(np) => d.hash_partition_by(*np, |r| r.0),
+        Op::ReduceValues(np) => d.reduce_values(*np, |a, b| a.wrapping_add(b)),
+        Op::ReduceByKey(np) => {
+            d.reduce_by_key(*np, |r| (r.0, r.1), |a: u64, b| a.wrapping_add(b))
+        }
+        Op::Append(rows) => d.append_rows(rows),
+        Op::Union(rows) => d.union(&Dataset::from_vec(sc, rows.clone(), 3).lazy()),
+    }
+}
+
+/// Metric deltas the two paths must agree on exactly.
+#[derive(Debug, PartialEq)]
+struct ShuffleDelta {
+    rows_shuffled: u64,
+    shuffles_elided: u64,
+}
+
+struct RunOut {
+    rows: Vec<(u64, u64)>,
+    delta: ShuffleDelta,
+    /// Lazy plan rendering (empty on the eager path) — printed on mismatch.
+    plan: String,
+    /// Injected faults this context's injector fired (0 without a plan).
+    faults_fired: u64,
+}
+
+/// Run the chain eagerly in a fresh context. The metrics window opens
+/// *after* source construction (and optional spill), so the deltas cover
+/// exactly the chain's operators.
+fn run_eager(cfg: &ClusterConfig, c: &Chain, spill: bool) -> Result<RunOut, String> {
+    let sc = MiniSpark::new(cfg.clone());
+    let mut d = Dataset::from_vec(&sc, c.rows.clone(), c.src_np);
+    if spill {
+        d = d.spilled("dag-eager-src").map_err(|e| format!("spill: {e}"))?;
+    }
+    let before = sc.metrics().snapshot();
+    for op in &c.ops {
+        d = apply_eager(&sc, d, op);
+    }
+    let mut rows = d.collect();
+    rows.sort_unstable();
+    let m = sc.metrics().since(&before);
+    Ok(RunOut {
+        rows,
+        delta: ShuffleDelta {
+            rows_shuffled: m.rows_shuffled,
+            shuffles_elided: m.shuffles_elided,
+        },
+        plan: String::new(),
+        faults_fired: sc.fault().map_or(0, |f| f.fired()),
+    })
+}
+
+/// Run the same chain through the lazy planner: build the whole plan, then
+/// force it once at the `collect()` boundary.
+fn run_lazy(cfg: &ClusterConfig, c: &Chain, spill: bool) -> Result<RunOut, String> {
+    let sc = MiniSpark::new(cfg.clone());
+    let mut src = Dataset::from_vec(&sc, c.rows.clone(), c.src_np);
+    if spill {
+        src = src.spilled("dag-lazy-src").map_err(|e| format!("spill: {e}"))?;
+    }
+    let before = sc.metrics().snapshot();
+    let mut p = src.lazy();
+    for op in &c.ops {
+        p = apply_lazy(&sc, p, op);
+    }
+    let plan = p.explain();
+    let mut rows = p.collect();
+    rows.sort_unstable();
+    let m = sc.metrics().since(&before);
+    Ok(RunOut {
+        rows,
+        delta: ShuffleDelta {
+            rows_shuffled: m.rows_shuffled,
+            shuffles_elided: m.shuffles_elided,
+        },
+        plan,
+        faults_fired: sc.fault().map_or(0, |f| f.fired()),
+    })
+}
+
+fn check_chain(cfg: &ClusterConfig, c: &Chain, spill: bool) -> Result<u64, String> {
+    let eager = run_eager(cfg, c, spill)?;
+    let lazy = run_lazy(cfg, c, spill)?;
+    if lazy.rows != eager.rows {
+        return Err(format!(
+            "results diverge: lazy {} rows vs eager {} rows\nops: {:?}\nplan:\n{}",
+            lazy.rows.len(),
+            eager.rows.len(),
+            c.ops,
+            lazy.plan,
+        ));
+    }
+    if lazy.delta != eager.delta {
+        return Err(format!(
+            "shuffle metrics diverge: lazy {:?} vs eager {:?}\nops: {:?}\nplan:\n{}",
+            lazy.delta, eager.delta, c.ops, lazy.plan,
+        ));
+    }
+    Ok(lazy.faults_fired + eager.faults_fired)
+}
+
+/// The tentpole property: for arbitrary operator chains, lazy execution is
+/// indistinguishable from eager execution in results and shuffle volume.
+#[test]
+fn random_chains_agree_lazy_vs_eager() {
+    let cfg = base_cfg();
+    let spill = spill_requested();
+    run_prop(
+        "dag_lazy_eq_eager",
+        &PropCfg { cases: 32, ..Default::default() },
+        gen_chain,
+        |c| check_chain(&cfg, c, spill).map(|_| ()),
+    );
+}
+
+/// Same property under a byte budget: both sources spill to segment files
+/// and page back through the partition cache while the chain runs.
+#[test]
+fn random_chains_agree_under_memory_budget() {
+    let mut cfg = base_cfg();
+    cfg.memory_budget = 512; // far below any non-trivial source: real paging
+    run_prop(
+        "dag_lazy_eq_eager_budgeted",
+        &PropCfg { cases: 16, ..Default::default() },
+        gen_chain,
+        |c| check_chain(&cfg, c, true).map(|_| ()),
+    );
+}
+
+/// Same property with probabilistic task panics injected in *both*
+/// contexts: the retrying supervisor absorbs every fault, and because
+/// shuffle volume is metered once on the driver (never inside a retried
+/// task), even `rows_shuffled` stays exactly equal.
+#[test]
+fn random_chains_agree_under_injected_task_faults() {
+    let mut cfg = base_cfg();
+    // p=0.05 per task with 10 attempts: exhausting the budget has
+    // probability 0.05^10 ≈ 1e-13 — deterministic in practice.
+    cfg.fault_plan = Some("panic:task:0.05,seed=8".parse().unwrap());
+    cfg.task_retries = 9;
+    cfg.retry_backoff_us = 0;
+    let fired = AtomicU64::new(0);
+    run_prop(
+        "dag_lazy_eq_eager_faulty",
+        &PropCfg { cases: 12, ..Default::default() },
+        gen_chain,
+        |c| {
+            let n = check_chain(&cfg, c, false)?;
+            fired.fetch_add(n, Ordering::Relaxed);
+            Ok(())
+        },
+    );
+    assert!(
+        fired.load(Ordering::Relaxed) > 0,
+        "the fault plan never fired — the property ran unexercised"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Joins.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct JoinCase {
+    left: Vec<(u64, u64)>,
+    right: Vec<(u64, u64)>,
+    np: usize,
+    /// Pre-partition the left side by key so the join's left shuffle is
+    /// provably elidable (both paths must agree on the elision too).
+    prepart: bool,
+}
+
+fn gen_join(rng: &mut Pcg64, shrink: u32) -> JoinCase {
+    let scale = if shrink > 0 { 20 } else { 600 };
+    let key_space = rng.range(1, 30) as u64;
+    JoinCase {
+        left: gen_rows(rng, rng.range(0, scale), key_space),
+        right: gen_rows(rng, rng.range(0, scale), key_space),
+        np: rng.range(1, 9),
+        prepart: rng.chance(0.5),
+    }
+}
+
+/// `lazy_join_u64` (a barrier cut over both plans, with narrow ops fused
+/// on each side) agrees with the eager `join_u64` on results and shuffle
+/// metrics — including per-side shuffle elision for a pre-partitioned
+/// input.
+#[test]
+fn lazy_join_agrees_with_eager_join() {
+    let cfg = base_cfg();
+    run_prop(
+        "dag_lazy_join_eq_eager",
+        &PropCfg { cases: 24, ..Default::default() },
+        gen_join,
+        |case| {
+            let keep = |r: &(u64, u64)| r.1 % 5 != 0;
+
+            let sc_e = MiniSpark::new(cfg.clone());
+            let mut el = Dataset::from_vec(&sc_e, case.left.clone(), 4);
+            let er = Dataset::from_vec(&sc_e, case.right.clone(), 3);
+            let before_e = sc_e.metrics().snapshot();
+            if case.prepart {
+                el = el.partition_by_key(case.np);
+            }
+            let mut want =
+                provspark::minispark::join_u64(&el.filter(keep), &er.filter(keep), case.np)
+                    .collect();
+            want.sort_unstable();
+            let me = sc_e.metrics().since(&before_e);
+
+            let sc_l = MiniSpark::new(cfg.clone());
+            let ll = Dataset::from_vec(&sc_l, case.left.clone(), 4);
+            let lr = Dataset::from_vec(&sc_l, case.right.clone(), 3);
+            let before_l = sc_l.metrics().snapshot();
+            let mut lp = ll.lazy();
+            if case.prepart {
+                lp = lp.partition_by_key(case.np);
+            }
+            let joined = lazy_join_u64(&lp.filter(keep), &lr.lazy().filter(keep), case.np);
+            let mut got = joined.collect();
+            got.sort_unstable();
+            let ml = sc_l.metrics().since(&before_l);
+
+            if got != want {
+                return Err(format!(
+                    "join results diverge ({} vs {} rows)\nplan:\n{}",
+                    got.len(),
+                    want.len(),
+                    joined.explain(),
+                ));
+            }
+            if (ml.rows_shuffled, ml.shuffles_elided) != (me.rows_shuffled, me.shuffles_elided)
+            {
+                return Err(format!(
+                    "join shuffle metrics diverge: lazy ({}, {}) vs eager ({}, {}) \
+                     prepart={}\nplan:\n{}",
+                    ml.rows_shuffled,
+                    ml.shuffles_elided,
+                    me.rows_shuffled,
+                    me.shuffles_elided,
+                    case.prepart,
+                    joined.explain(),
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The provenance engines over lazily assembled datasets.
+// ---------------------------------------------------------------------------
+
+/// All three engines agree when the RQ baseline is driven over a dataset
+/// assembled by a lazy plan (`filter` fused into the source stage, then a
+/// tagged dst-partition cut) instead of the eager constructor — the
+/// scheduler is invisible one layer up, too.
+#[test]
+fn engines_agree_over_lazily_assembled_datasets() {
+    let (trace, g, splits) =
+        generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+    let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.prov.tau = 0; // every query takes the cluster path
+    let sc = MiniSpark::new(cfg.cluster.clone());
+    let trace = Arc::new(trace);
+    let engines =
+        EngineSet::build(&sc, Arc::clone(&trace), Arc::new(pre), &cfg).unwrap();
+
+    let np = cfg.cluster.default_partitions;
+    let plan = Dataset::from_vec(&sc, trace.triples.clone(), np)
+        .lazy()
+        .filter(|t: &ProvTriple| t.src.raw() != u64::MAX)
+        .hash_partition_by_tagged(np, KEY_TRIPLE_DST, |t| t.dst.raw());
+    assert_eq!(plan.num_stages(), 2, "source+filter stage, then the shuffle cut");
+    let lazy_rq = RqEngine::from_dataset(plan.materialize());
+
+    for t in trace.triples.iter().step_by(trace.len() / 10 + 1) {
+        let q = t.dst.raw();
+        let want = lazy_rq.query(q);
+        assert_eq!(want, engines.rq.query(q), "lazy rq != eager rq for q={q}");
+        assert_eq!(want, engines.ccprov.query(q), "lazy rq != ccprov for q={q}");
+        assert_eq!(want, engines.csprov.query(q), "lazy rq != csprov for q={q}");
+    }
+}
+
+/// Scatter-gather front: a sharded session (whose CCProv shards now run
+/// their assemble phase through the lazy planner, memoized per hot
+/// component) answers identically to an unsharded one, and the batch
+/// report surfaces the new stage counters.
+#[test]
+fn sharded_batches_agree_and_surface_stage_metrics() {
+    let (trace, g, splits) =
+        generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+    let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.prov.tau = 0;
+    let (trace, pre) = (Arc::new(trace), Arc::new(pre));
+    let single = ProvSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let sharded =
+        ShardedSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre), 3).unwrap();
+
+    let reqs: Vec<QueryRequest> = trace
+        .triples
+        .iter()
+        .step_by(trace.len() / 8 + 1)
+        .map(|t| QueryRequest::new(t.dst.raw()))
+        .collect();
+
+    let want = single.query_many_on(EngineRouter::CcProv, &reqs);
+    let (got, report) = sharded.query_many_report_on(EngineRouter::CcProv, &reqs);
+    for ((req, a), b) in reqs.iter().zip(&want).zip(&got) {
+        assert_eq!(a.lineage, b.lineage, "ccprov sharded diverges for item {}", req.item);
+    }
+    let total = report.total();
+    assert!(
+        total.stages_run > 0,
+        "ccprov batches must run (or replay) lazy assemble stages"
+    );
+
+    let want = single.query_many_on(EngineRouter::Auto, &reqs);
+    let (got, _) = sharded.query_many_report_on(EngineRouter::Auto, &reqs);
+    for ((req, a), b) in reqs.iter().zip(&want).zip(&got) {
+        assert_eq!(a.lineage, b.lineage, "auto-routed sharded diverges for item {}", req.item);
+    }
+}
