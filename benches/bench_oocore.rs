@@ -14,6 +14,15 @@
 //!   working set — touching one component must never fault in the whole
 //!   index — and no more than a sweep across many distinct components
 //!   pages.
+//! * **Readahead gets ahead of the fault.** On a cold pass over the
+//!   deepest-lineage items, frontier prefetch warms at least
+//!   `--min-prefetch-ratio` (default 0.5) of the pages an identical
+//!   demand-only session misses.
+//! * **Zero-copy open is O(header).** Opening a budgeted session straight
+//!   over a segmented v5 store demand-pages at most one partition per
+//!   paged dataset before the first query.
+//! * **v5 is measurably smaller than v4.** The compressed columnar file
+//!   is at most `--max-v5-ratio` (default 0.9) of the raw v4 size.
 //!
 //! Answers under the budget are verified identical to the unbounded
 //! session before anything is timed. Writes `BENCH_oocore.json`.
@@ -26,8 +35,11 @@ use provspark::benchkit::Table;
 use provspark::cli::Args;
 use provspark::config::EngineConfig;
 use provspark::harness::{EngineRouter, ProvSession};
+use provspark::minispark::MiniSpark;
 use provspark::provenance::pipeline::{preprocess, WccImpl};
 use provspark::provenance::query::QueryRequest;
+use provspark::provenance::store;
+use provspark::storage::prefetch_enabled;
 use provspark::util::fmt::{human_bytes, human_count, human_duration};
 use provspark::util::timer::time_it;
 use provspark::workflow::generator::{generate, GeneratorConfig};
@@ -53,6 +65,8 @@ fn main() -> anyhow::Result<()> {
     let partitions: usize = args.get_parsed_or("partitions", 32)?;
     let max_hot_ratio: f64 = args.get_parsed_or("max-hot-ratio", 2.0)?;
     let max_hot_fraction: f64 = args.get_parsed_or("max-hot-fraction", 0.6)?;
+    let min_prefetch_ratio: f64 = args.get_parsed_or("min-prefetch-ratio", 0.5)?;
+    let max_v5_ratio: f64 = args.get_parsed_or("max-v5-ratio", 0.9)?;
     let out_path = args.get_or("out", "BENCH_oocore.json");
     let theta = (25_000 / divisor).max(50);
     let big = (1000 / divisor).max(20);
@@ -136,12 +150,96 @@ fn main() -> anyhow::Result<()> {
     let _ = sweep.query_many_on(EngineRouter::Auto, &cold);
     let cold_paged = sweep.context().metrics().snapshot().since(&before).bytes_paged_in;
 
+    // ── Frontier prefetch: readahead vs demand-only ───────────────────
+    // Rank the hot component's items by BFS depth on the unbounded
+    // session and take the deepest few — more rounds mean more frontiers
+    // a prefetch can get ahead of. The budget is the whole working set so
+    // the comparison measures readahead, not eviction, and the job
+    // overhead models the scheduler latency readahead overlaps with.
+    let mut ranked: Vec<(u32, u64)> = comps[0]
+        .1
+        .iter()
+        .take(64)
+        .map(|&q| {
+            let r = mem.execute_on(EngineRouter::Rq, &QueryRequest::new(q));
+            (r.stats.completeness.rounds_done, q)
+        })
+        .collect();
+    ranked.sort_by_key(|&(rounds, q)| (std::cmp::Reverse(rounds), q));
+    let deep: Vec<QueryRequest> =
+        ranked.iter().take(8).map(|&(_, q)| QueryRequest::new(q)).collect();
+
+    let mut pf_cfg = cfg.clone();
+    pf_cfg.cluster.memory_budget = working_set.max(1);
+    pf_cfg.cluster.job_overhead_us = 2_000;
+    let mut nopf_cfg = pf_cfg.clone();
+    nopf_cfg.cluster.prefetch_depth = 0;
+
+    let nopf = ProvSession::new(&nopf_cfg, Arc::clone(&trace), Arc::clone(&pre))?;
+    let nopf_answers: Vec<_> =
+        deep.iter().map(|r| nopf.execute_on(EngineRouter::Rq, r)).collect();
+    let m = nopf.context().metrics().snapshot();
+    anyhow::ensure!(m.prefetch_issued == 0, "prefetch_depth=0 must not issue readahead");
+    let baseline_misses = m.cache_misses;
+    anyhow::ensure!(baseline_misses > 0, "the demand-only cold pass never paged");
+
+    let pf = ProvSession::new(&pf_cfg, Arc::clone(&trace), Arc::clone(&pre))?;
+    let pf_answers: Vec<_> = deep.iter().map(|r| pf.execute_on(EngineRouter::Rq, r)).collect();
+    for (i, (a, b)) in nopf_answers.iter().zip(&pf_answers).enumerate() {
+        anyhow::ensure!(
+            a.lineage == b.lineage,
+            "deep answer {i} diverges with prefetch on — readahead must not change results"
+        );
+    }
+    let pf_m = pf.context().metrics().snapshot();
+    let (prefetch_issued, prefetch_hits) = (pf_m.prefetch_issued, pf_m.prefetch_hits);
+    let prefetch_ratio = prefetch_hits as f64 / baseline_misses as f64;
+
+    // ── Zero-copy cold start + v5 vs v4 size ──────────────────────────
+    let dir = std::env::temp_dir().join("provspark_bench_oocore");
+    std::fs::create_dir_all(&dir)?;
+    let v5_path = dir.join("pre_v5.bin");
+    let v4_path = dir.join("pre_v4.bin");
+    store::save_preprocessed_with_partitions(&v5_path, &pre, partitions)?;
+    store::save_preprocessed_v4(&v4_path, &pre, partitions)?;
+    let v5_bytes = std::fs::metadata(&v5_path)?.len();
+    let v4_bytes = std::fs::metadata(&v4_path)?.len();
+    let v5_over_v4 = v5_bytes as f64 / v4_bytes as f64;
+
+    let seg = Arc::new(store::SegmentedPre::open(&v5_path)?);
+    let zc_sc = MiniSpark::new(ooc_cfg.cluster.clone());
+    let (zc, open_d) = time_it(|| {
+        ProvSession::with_context_segmented(&zc_sc, &ooc_cfg, Arc::clone(&trace), seg)
+    });
+    let zc = zc?;
+    let open_s = open_d.as_secs_f64();
+    let open_misses = zc.context().metrics().snapshot().cache_misses;
+    let first = zc.execute_on(EngineRouter::Auto, &hot[0]);
+    anyhow::ensure!(
+        first.lineage == mem_answers[0].lineage,
+        "zero-copy session's first answer diverges from the unbounded session"
+    );
+    anyhow::ensure!(
+        zc.context().metrics().snapshot().cache_misses > open_misses,
+        "the zero-copy session answered without paging anything"
+    );
+
     let ratio = ooc_hot_s / mem_hot_s.max(1e-9);
     let hot_fraction = hot_paged as f64 / working_set as f64;
     println!(
         "RAW oocore working_set={working_set} budget={budget} mem_hot_s={mem_hot_s:.5} \
          ooc_hot_s={ooc_hot_s:.5} ratio={ratio:.3} hot_paged={hot_paged} \
          cold_paged={cold_paged} hot_fraction={hot_fraction:.3}"
+    );
+    println!(
+        "RAW prefetch deep_queries={} baseline_misses={baseline_misses} \
+         prefetch_issued={prefetch_issued} prefetch_hits={prefetch_hits} \
+         hit_ratio={prefetch_ratio:.3}",
+        deep.len(),
+    );
+    println!(
+        "RAW segments v4_bytes={v4_bytes} v5_bytes={v5_bytes} v5_over_v4={v5_over_v4:.3} \
+         zero_copy_open_s={open_s:.5} open_misses={open_misses}"
     );
 
     let mut t = Table::new(
@@ -180,10 +278,20 @@ fn main() -> anyhow::Result<()> {
          \"ooc_hot_s\": {ooc_hot_s:.6},\n  \"hot_ratio\": {ratio:.4},\n  \
          \"hot_paged_in_bytes\": {hot_paged},\n  \
          \"cold_paged_in_bytes\": {cold_paged},\n  \
-         \"hot_working_set_fraction\": {hot_fraction:.4}\n}}\n",
+         \"hot_working_set_fraction\": {hot_fraction:.4},\n  \
+         \"deep_queries\": {},\n  \
+         \"prefetch_baseline_misses\": {baseline_misses},\n  \
+         \"prefetch_issued\": {prefetch_issued},\n  \
+         \"prefetch_hits\": {prefetch_hits},\n  \
+         \"prefetch_hit_ratio\": {prefetch_ratio:.4},\n  \
+         \"zero_copy_open_s\": {open_s:.6},\n  \
+         \"zero_copy_open_misses\": {open_misses},\n  \
+         \"v4_bytes\": {v4_bytes},\n  \"v5_bytes\": {v5_bytes},\n  \
+         \"v5_over_v4\": {v5_over_v4:.4}\n}}\n",
         trace.len(),
         hot.len(),
         cold.len(),
+        deep.len(),
     );
     std::fs::write(&out_path, &json)?;
     println!("wrote {out_path}");
@@ -209,6 +317,24 @@ fn main() -> anyhow::Result<()> {
         "one hot component paged more ({hot_paged}) than a {}-component sweep \
          ({cold_paged})",
         cold.len(),
+    );
+    if prefetch_enabled() {
+        anyhow::ensure!(
+            prefetch_ratio >= min_prefetch_ratio,
+            "readahead warmed too little: {prefetch_hits} prefetch hits < \
+             {min_prefetch_ratio} × the {baseline_misses} demand misses without prefetch"
+        );
+    } else {
+        println!("prefetch gate skipped: PROVSPARK_PREFETCH=off");
+    }
+    anyhow::ensure!(
+        open_misses <= 3,
+        "zero-copy open paged {open_misses} partitions (at most one per paged dataset)"
+    );
+    anyhow::ensure!(
+        v5_over_v4 <= max_v5_ratio,
+        "v5 compressed store not measurably smaller than v4: {v5_bytes} vs {v4_bytes} \
+         bytes (ratio {v5_over_v4:.3}, max {max_v5_ratio})"
     );
     Ok(())
 }

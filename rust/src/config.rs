@@ -82,6 +82,11 @@ pub struct ClusterConfig {
     /// (see [`crate::storage`]). Accepts `k`/`m`/`g` suffixes on the CLI
     /// and in config files.
     pub memory_budget: u64,
+    /// Maximum partitions the frontier-driven readahead warms per BFS
+    /// round (see [`crate::storage::prefetch`]). `0` disables prefetch.
+    /// Prefetch is also disabled process-wide by `PROVSPARK_PREFETCH=off`
+    /// and automatically whenever a fault plan is armed.
+    pub prefetch_depth: usize,
 }
 
 impl Default for ClusterConfig {
@@ -95,6 +100,7 @@ impl Default for ClusterConfig {
             task_retries: 2,
             retry_backoff_us: 200,
             memory_budget: 0,
+            prefetch_depth: 16,
         }
     }
 }
@@ -160,6 +166,7 @@ impl EngineConfig {
                 "cluster.task_retries" => self.cluster.task_retries = v.parse()?,
                 "cluster.retry_backoff_us" => self.cluster.retry_backoff_us = v.parse()?,
                 "cluster.memory_budget" => self.cluster.memory_budget = parse_bytes(v)?,
+                "cluster.prefetch_depth" => self.cluster.prefetch_depth = v.parse()?,
                 "prov.tau" => self.prov.tau = v.parse()?,
                 "prov.theta" => self.prov.theta = v.parse()?,
                 "prov.wcc_backend" => self.prov.wcc_backend = v.parse()?,
@@ -190,6 +197,8 @@ impl EngineConfig {
         if let Some(spec) = args.get("memory-budget") {
             self.cluster.memory_budget = parse_bytes(spec)?;
         }
+        self.cluster.prefetch_depth =
+            args.get_parsed_or("prefetch-depth", self.cluster.prefetch_depth)?;
         self.prov.tau = args.get_parsed_or("tau", self.prov.tau)?;
         self.prov.theta = args.get_parsed_or("theta", self.prov.theta)?;
         self.prov.wcc_backend = args.get_parsed_or("wcc-backend", self.prov.wcc_backend)?;
@@ -338,6 +347,14 @@ mod tests {
         let mut cfg = EngineConfig::default();
         cfg.apply_kv(&parse_kv_str("[cluster]\nmemory_budget = \"1m\"\n").unwrap()).unwrap();
         assert_eq!(cfg.cluster.memory_budget, 1 << 20);
+    }
+
+    #[test]
+    fn prefetch_depth_key_parses() {
+        let mut cfg = EngineConfig::default();
+        assert_eq!(cfg.cluster.prefetch_depth, 16, "prefetch is on by default");
+        cfg.apply_kv(&parse_kv_str("[cluster]\nprefetch_depth = 0\n").unwrap()).unwrap();
+        assert_eq!(cfg.cluster.prefetch_depth, 0);
     }
 
     #[test]

@@ -25,15 +25,17 @@
 
 use super::session::EngineRouter;
 use crate::config::{Backend, EngineConfig};
-use crate::minispark::MiniSpark;
+use crate::minispark::{Dataset, KeyTag, MiniSpark};
 use crate::provenance::incremental::AppliedDelta;
-use crate::provenance::model::{ProvTriple, SetDep, Trace};
+use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 use crate::provenance::pipeline::Preprocessed;
 use crate::provenance::query::driver_rq::{AncestorClosure, NativeClosure};
 use crate::provenance::query::{
-    CcProvEngine, CsDelta, CsProvEngine, ProvenanceEngine, RqEngine,
+    CcProvEngine, CsDelta, CsProvEngine, ProvenanceEngine, RqEngine, KEY_DST_CSID, KEY_TRIPLE_DST,
 };
+use crate::provenance::store::SegmentedPre;
 use crate::runtime::{XlaClosure, XlaRuntime};
+use crate::storage::SegmentCodec;
 use crate::util::ids::ComponentId;
 use anyhow::{ensure, Result};
 use rustc_hash::{FxHashMap, FxHashSet};
@@ -89,6 +91,123 @@ impl EngineSet {
         let csprov = CsProvEngine::new(sc, &pre.cs_triples, node_set, &pre.set_deps, np, tau)
             .with_closure(closure)
             .spilled()?;
+        let large = large_of(&pre);
+        Ok(Self { trace, pre, large, rq, ccprov, csprov })
+    }
+
+    /// Zero-copy cold start: build the engines directly over an open
+    /// [`SegmentedPre`], demand-loading triple partitions straight into
+    /// paged datasets instead of load-whole-then-re-spill. Opening a
+    /// session this way reads only the store's header-adjacent sections
+    /// (node/component maps, set dependencies, large-component summaries);
+    /// the two triple sections stay on disk until a query faults — or a
+    /// frontier prefetch warms — their partitions.
+    ///
+    /// Every paged load charges the engine ledger: `bytes_paged_in` counts
+    /// the on-disk (v5: compressed) bytes, `bytes_decoded` the decoded
+    /// rows, and `bytes_compressed` the savings against the raw v4 record
+    /// encoding (zero for an uncompressed v4 source).
+    ///
+    /// Falls back to [`build`](Self::build) (full load, then re-spill
+    /// under a budget) when the file's partition count differs from the
+    /// configured one — the paged partitions must *be* the engines'
+    /// partitions for lookups to prune.
+    pub fn build_from_segments(
+        sc: &MiniSpark,
+        trace: Arc<Trace>,
+        seg: Arc<SegmentedPre>,
+        cfg: &EngineConfig,
+    ) -> Result<Self> {
+        let np = cfg.cluster.default_partitions;
+        if seg.num_partitions() != np {
+            return Self::build(sc, trace, Arc::new(seg.load_all()?), cfg);
+        }
+        let tau = cfg.prov.tau;
+        let closure = make_closure(cfg)?;
+        // Everything except the triple sections, loaded eagerly (small).
+        let pre = Arc::new(seg.load_light()?);
+        let cc_rows: Vec<usize> = (0..np).map(|i| seg.cc_rows(i)).collect();
+        let cs_rows: Vec<usize> = (0..np).map(|i| seg.cs_rows(i)).collect();
+
+        // RQ pages the cc sections too (same dst keying and partition
+        // count), stripping the component tag as rows decode.
+        let rq_ds = {
+            let (seg, scc) = (Arc::clone(&seg), sc.clone());
+            Dataset::from_paged_store(
+                sc,
+                &cc_rows,
+                KEY_TRIPLE_DST,
+                |t: &ProvTriple| t.dst.raw(),
+                move |i| {
+                    let rows = seg.cc_partition(i as usize)?;
+                    let disk = seg.cc_bytes(i as usize);
+                    scc.metrics().add_bytes_compressed(
+                        (rows.len() as u64 * CcTriple::RECORD_BYTES as u64).saturating_sub(disk),
+                    );
+                    Ok((rows.into_iter().map(|t| t.triple).collect(), disk))
+                },
+            )
+        };
+        let rq = RqEngine::from_dataset(rq_ds);
+
+        let cc_ds = {
+            let (seg, scc) = (Arc::clone(&seg), sc.clone());
+            Dataset::from_paged_store(
+                sc,
+                &cc_rows,
+                KEY_TRIPLE_DST,
+                |t: &CcTriple| t.triple.dst.raw(),
+                move |i| {
+                    let rows = seg.cc_partition(i as usize)?;
+                    let disk = seg.cc_bytes(i as usize);
+                    scc.metrics().add_bytes_compressed(
+                        (rows.len() as u64 * CcTriple::RECORD_BYTES as u64).saturating_sub(disk),
+                    );
+                    Ok((rows, disk))
+                },
+            )
+        };
+        let ccprov = CcProvEngine::from_dataset(cc_ds, tau).with_closure(Arc::clone(&closure));
+
+        let cs_ds = {
+            let (seg, scc) = (Arc::clone(&seg), sc.clone());
+            Dataset::from_paged_store(
+                sc,
+                &cs_rows,
+                KEY_DST_CSID,
+                |t: &CsTriple| t.dst_csid.0,
+                move |i| {
+                    let rows = seg.cs_partition(i as usize)?;
+                    let disk = seg.cs_bytes(i as usize);
+                    scc.metrics().add_bytes_compressed(
+                        (rows.len() as u64 * CsTriple::RECORD_BYTES as u64).saturating_sub(disk),
+                    );
+                    Ok((rows, disk))
+                },
+            )
+        };
+        // The node index and set dependencies are small: build them from
+        // the light load and spill them normally (no-op without a budget).
+        let node_rows: Vec<(u64, u64)> = pre.cs_of.iter().map(|(&n, &c)| (n, c)).collect();
+        let node_set = Dataset::hash_partitioned_from_slice(
+            sc,
+            &node_rows,
+            np,
+            KeyTag::PAIR_KEY,
+            |r: &(u64, u64)| r.0,
+        )
+        .spilled("cs-nodeset")?;
+        let set_deps = Dataset::hash_partitioned_from_slice(
+            sc,
+            &pre.set_deps,
+            np,
+            KEY_DST_CSID,
+            |d: &SetDep| d.dst_csid.0,
+        )
+        .spilled("cs-setdeps")?;
+        let csprov =
+            CsProvEngine::from_datasets(cs_ds, node_set, set_deps, np, tau).with_closure(closure);
+
         let large = large_of(&pre);
         Ok(Self { trace, pre, large, rq, ccprov, csprov })
     }

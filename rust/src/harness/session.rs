@@ -27,6 +27,7 @@ use crate::provenance::query::{
     Completeness, Lineage, ProvenanceEngine, QueryOutcome, QueryRequest, QueryResponse,
     QueryStats,
 };
+use crate::provenance::store::SegmentedPre;
 use crate::workflow::curation::text_curation_workflow;
 use crate::workflow::graph::DependencyGraph;
 use crate::workflow::splits::SplitSet;
@@ -153,6 +154,10 @@ pub struct ProvSession {
     index: Mutex<Option<IncrementalIndex>>,
     /// Workflow the index re-partitions dirty components against.
     workflow: (DependencyGraph, SplitSet),
+    /// The segmented store a zero-copy session pages triples from
+    /// ([`with_context_segmented`](Self::with_context_segmented)); the
+    /// first ingest materializes the full index from it.
+    segmented: Option<Arc<SegmentedPre>>,
 }
 
 impl ProvSession {
@@ -178,6 +183,35 @@ impl ProvSession {
             state: RwLock::new(SessionState::Built(Arc::new(engines))),
             index: Mutex::new(None),
             workflow: text_curation_workflow(),
+            segmented: None,
+        })
+    }
+
+    /// Open a session *zero-copy* over a segmented preprocessed store
+    /// (v4/v5): the engines demand-page triple partitions straight from
+    /// the file ([`EngineSet::build_from_segments`]), so opening costs one
+    /// header + the small index sections, not the whole store. Intended
+    /// for budgeted contexts; without a memory budget the paged partitions
+    /// simply fault in on first touch and stay resident.
+    ///
+    /// The first [`ingest`](Self::ingest) materializes the full index from
+    /// the store (the incremental maintainer needs the whole snapshot);
+    /// queries before and after are unaffected.
+    pub fn with_context_segmented(
+        sc: &MiniSpark,
+        cfg: &EngineConfig,
+        trace: Arc<Trace>,
+        seg: Arc<SegmentedPre>,
+    ) -> Result<Self> {
+        let engines = EngineSet::build_from_segments(sc, trace, Arc::clone(&seg), cfg)?;
+        Ok(Self {
+            sc: sc.clone(),
+            cfg: cfg.clone(),
+            router: EngineRouter::Auto,
+            state: RwLock::new(SessionState::Built(Arc::new(engines))),
+            index: Mutex::new(None),
+            workflow: text_curation_workflow(),
+            segmented: Some(seg),
         })
     }
 
@@ -203,6 +237,7 @@ impl ProvSession {
             state: RwLock::new(SessionState::Pending { trace, pre }),
             index: Mutex::new(None),
             workflow: text_curation_workflow(),
+            segmented: None,
         }
     }
 
@@ -422,12 +457,15 @@ impl ProvSession {
         if guard.is_none() {
             let cur = self.engines();
             let (graph, splits) = self.workflow.clone();
-            *guard = Some(IncrementalIndex::new(
-                cur.trace().as_ref().clone(),
-                cur.pre().as_ref().clone(),
-                graph,
-                splits,
-            )?);
+            // A zero-copy (segmented) session's epoch holds only the light
+            // pre — the incremental maintainer needs the whole snapshot, so
+            // the first ingest pays the full segment read once.
+            let pre = match &self.segmented {
+                Some(seg) if cur.pre().cc_triples.len() != cur.trace().len() => seg.load_all()?,
+                _ => cur.pre().as_ref().clone(),
+            };
+            *guard =
+                Some(IncrementalIndex::new(cur.trace().as_ref().clone(), pre, graph, splits)?);
         }
         let index = guard.as_mut().expect("index initialized above");
         // Fault atomicity: the swap below is the *only* externally visible

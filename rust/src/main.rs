@@ -76,8 +76,13 @@ fn print_help() {
          memory:      --memory-budget BYTES (k/m/g suffixes; 0 = unbounded, the default) —\n\
                       engine datasets spill to segment files and partitions page back\n\
                       through a byte-budgeted LRU cache on demand; answers are identical\n\
-                      under any budget. preprocess --pre-partitions N sets the v4 index\n\
-                      file's per-partition segmentation (default 64)\n\
+                      under any budget. budgeted query sessions open segmented (v4/v5)\n\
+                      index files zero-copy and demand-page only touched partitions.\n\
+                      --prefetch-depth N caps the partitions each BFS round hands the\n\
+                      background readahead pool (default 16, 0 = off; env\n\
+                      PROVSPARK_PREFETCH=off is a global kill switch). preprocess\n\
+                      --pre-partitions N sets the segmented index file's partition\n\
+                      count (default 64; v5 = compressed columnar)\n\
          query opts:  --engine rq|ccprov|csprov|auto  --item ID (repeatable — batches fan\n\
                       out across the worker pool)  --max-depth N --max-triples N\n\
                       --tau-override N (per-query driver-collect threshold)\n\
@@ -365,7 +370,7 @@ fn run(args: &Args) -> Result<()> {
         }
         "query" => {
             let trace = store::load_trace(Path::new(&args.get_or("trace", "data/trace.bin")))?;
-            let pre = store::load_preprocessed(Path::new(&args.get_or("pre", "data/pre.bin")))?;
+            let pre_path = args.get_or("pre", "data/pre.bin");
             let ecfg = engine_config(args)?;
             let router: EngineRouter = args.get_or("engine", "auto").parse()?;
             let items = args.get_all("item");
@@ -390,6 +395,7 @@ fn run(args: &Args) -> Result<()> {
             }
             let shards: usize = args.get_parsed_or("shards", 1)?;
             let (responses, outcomes, shard_report, metrics, dur) = if shards > 1 {
+                let pre = store::load_preprocessed(Path::new(&pre_path))?;
                 let session =
                     ShardedSession::new(&ecfg, Arc::new(trace), Arc::new(pre), shards)?;
                 let ((responses, report), dur) = provspark::util::timer::time_it(|| {
@@ -399,7 +405,31 @@ fn run(args: &Args) -> Result<()> {
                 let metrics = session.context().metrics().snapshot();
                 (responses, outcomes, Some(report), metrics, dur)
             } else {
-                let session = ProvSession::new(&ecfg, Arc::new(trace), Arc::new(pre))?;
+                // Budgeted sessions open a segmented (v4/v5) store
+                // zero-copy: engines demand-page triple partitions through
+                // the byte-budgeted cache instead of loading the whole
+                // index up front. Older (v1–v3) files have no per-partition
+                // directory, so they fall back to the full load.
+                let session = if ecfg.cluster.memory_budget > 0 {
+                    match store::SegmentedPre::open(Path::new(&pre_path)) {
+                        Ok(seg) => {
+                            let sc = MiniSpark::new(ecfg.cluster.clone());
+                            ProvSession::with_context_segmented(
+                                &sc,
+                                &ecfg,
+                                Arc::new(trace),
+                                Arc::new(seg),
+                            )?
+                        }
+                        Err(_) => {
+                            let pre = store::load_preprocessed(Path::new(&pre_path))?;
+                            ProvSession::new(&ecfg, Arc::new(trace), Arc::new(pre))?
+                        }
+                    }
+                } else {
+                    let pre = store::load_preprocessed(Path::new(&pre_path))?;
+                    ProvSession::new(&ecfg, Arc::new(trace), Arc::new(pre))?
+                };
                 // Supervised execution: per-item retry budget, failures
                 // isolated (a failed item reports `failed`, the rest of the
                 // batch still answers).
@@ -451,11 +481,22 @@ fn run(args: &Args) -> Result<()> {
             if ecfg.cluster.memory_budget > 0 {
                 // Out-of-core sessions: show how the byte-budgeted cache
                 // behaved (hits/misses/evictions and spill/page-in volume
-                // are part of the engine-wide metrics summary).
+                // are part of the engine-wide metrics summary), and break
+                // the page-in volume into on-disk vs decoded bytes — the
+                // gap is what the v5 columnar encoding saved on the wire.
                 println!(
                     "memory budget {}: {}",
                     provspark::util::fmt::human_bytes(ecfg.cluster.memory_budget),
                     metrics.summary(),
+                );
+                println!(
+                    "  io: {} read from disk, {} decoded in memory ({} saved by the \
+                     columnar encoding); prefetch issued {}, hits {}",
+                    provspark::util::fmt::human_bytes(metrics.bytes_paged_in),
+                    provspark::util::fmt::human_bytes(metrics.bytes_decoded),
+                    provspark::util::fmt::human_bytes(metrics.bytes_compressed),
+                    metrics.prefetch_issued,
+                    metrics.prefetch_hits,
                 );
             }
             Ok(())

@@ -6,7 +6,7 @@ use super::metrics::EngineMetrics;
 use crate::config::ClusterConfig;
 use crate::exec::{par_map_supervised, RetryPolicy};
 use crate::fault::{FaultInjector, FaultSite};
-use crate::storage::PartitionCache;
+use crate::storage::{PartitionCache, Prefetcher};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -32,6 +32,9 @@ struct Inner {
     retry: RetryPolicy,
     /// Byte-budgeted residency for spilled partitions; shares `metrics`.
     cache: Arc<PartitionCache>,
+    /// Background readahead pool for frontier-driven prefetch; workers
+    /// spawn lazily, so contexts that never prefetch never pay for it.
+    prefetcher: Prefetcher,
     /// Lazily created directory for this context's segment files; removed
     /// (best effort) when the last clone drops.
     spill_dir: Mutex<Option<PathBuf>>,
@@ -60,6 +63,7 @@ impl MiniSpark {
                 fault,
                 retry,
                 cache,
+                prefetcher: Prefetcher::new(),
                 spill_dir: Mutex::new(None),
                 next_spill: AtomicU64::new(0),
             }),
@@ -107,6 +111,17 @@ impl MiniSpark {
     /// ([`ClusterConfig::memory_budget`]).
     pub fn memory_budget(&self) -> u64 {
         self.inner.cfg.memory_budget
+    }
+
+    /// The background readahead pool frontier prefetch submits jobs to.
+    pub fn prefetcher(&self) -> &Prefetcher {
+        &self.inner.prefetcher
+    }
+
+    /// Readahead width per BFS round ([`ClusterConfig::prefetch_depth`]);
+    /// `0` means prefetch is off for this context.
+    pub fn prefetch_depth(&self) -> usize {
+        self.inner.cfg.prefetch_depth
     }
 
     /// A fresh path for a segment file under this context's (lazily

@@ -11,7 +11,10 @@
 use super::context::MiniSpark;
 use super::partitioner::{HashPartitioner, KeyTag};
 use crate::fault::{FaultInjector, FaultSite};
-use crate::storage::{write_segments, PartitionCache, PinGuard, SegmentCodec, SegmentFile};
+use crate::storage::{
+    prefetch_enabled, write_segments, FetchKind, PartitionCache, PinGuard, PrefetchBatch,
+    SegmentCodec, SegmentFile,
+};
 use rustc_hash::FxHashMap;
 use std::sync::Arc;
 
@@ -86,13 +89,16 @@ impl<T> Clone for Partitioning<T> {
 /// page through, the file id they are keyed under, the context fault
 /// injector cold reads probe, and the decode closure (captures the open
 /// [`SegmentFile`] where the row type's [`SegmentCodec`] is in scope).
+/// The loader returns the decoded rows plus the **on-disk** bytes the read
+/// cost, so the cache can charge real IO and decoded residency separately
+/// (they differ for compressed v5 sections).
 struct PagedSource<T> {
     cache: Arc<PartitionCache>,
     file_id: u64,
     /// Probed inside the cache-miss loader only: warm hits never consume a
     /// fault draw, so `io:segment` plans target real paging IO.
     fault: Option<Arc<FaultInjector>>,
-    load: Box<dyn Fn(u32) -> anyhow::Result<Vec<T>> + Send + Sync>,
+    load: Box<dyn Fn(u32) -> anyhow::Result<(Vec<T>, u64)> + Send + Sync>,
 }
 
 /// One partition: resident rows, or a segment paged in on demand.
@@ -176,12 +182,13 @@ impl<T: Send + Sync + 'static> Part<T> {
             }
             Part::Paged { src, seg, .. } => {
                 let seg = *seg;
-                let loaded = src.cache.get_or_load(src.file_id, seg, || {
-                    if let Some(inj) = &src.fault {
-                        inj.fire_io(FaultSite::SegmentIo)?;
-                    }
-                    (src.load)(seg)
-                });
+                let loaded =
+                    src.cache.get_or_load_sized(src.file_id, seg, FetchKind::Demand, || {
+                        if let Some(inj) = &src.fault {
+                            inj.fire_io(FaultSite::SegmentIo)?;
+                        }
+                        (src.load)(seg)
+                    });
                 match loaded {
                     Ok((rows, hit, pin)) => Fetched {
                         rows,
@@ -292,6 +299,51 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
             sc: sc.clone(),
             parts: partitions.into_iter().map(Part::Mem).collect(),
             partitioning: Some(Partitioning { partitioner, key_fn, key_tag }),
+        }
+    }
+
+    /// Build a hash-partitioned dataset whose partitions demand-page from
+    /// an external partitioned store (e.g. a v5 preprocessed file) through
+    /// the context's [`PartitionCache`] — without ever materializing the
+    /// whole dataset in memory. This is the zero-copy cold-start path:
+    /// session open costs O(store header), and the first query faults in
+    /// only the partitions it touches.
+    ///
+    /// `rows_per_partition` comes from the store's directory (metadata, no
+    /// IO); the store must be partitioned by `key_fn` under a
+    /// [`HashPartitioner`] with exactly `rows_per_partition.len()` buckets.
+    /// `load` returns partition `seg`'s decoded rows plus the on-disk bytes
+    /// the read cost.
+    pub fn from_paged_store(
+        sc: &MiniSpark,
+        rows_per_partition: &[usize],
+        tag: KeyTag,
+        key_fn: impl Fn(&T) -> u64 + Send + Sync + 'static,
+        load: impl Fn(u32) -> anyhow::Result<(Vec<T>, u64)> + Send + Sync + 'static,
+    ) -> Self {
+        assert!(!rows_per_partition.is_empty(), "a paged store has at least one partition");
+        let cache = Arc::clone(sc.cache());
+        let file_id = cache.register_file();
+        let src = Arc::new(PagedSource {
+            cache,
+            file_id,
+            fault: sc.fault().cloned(),
+            load: Box::new(load),
+        });
+        let partitioner = HashPartitioner::new(rows_per_partition.len());
+        let parts = rows_per_partition
+            .iter()
+            .enumerate()
+            .map(|(i, &rows)| Part::Paged { src: Arc::clone(&src), seg: i as u32, rows })
+            .collect();
+        Self {
+            sc: sc.clone(),
+            parts,
+            partitioning: Some(Partitioning {
+                partitioner,
+                key_fn: Arc::new(key_fn),
+                key_tag: Some(tag),
+            }),
         }
     }
 
@@ -760,6 +812,76 @@ impl<T: Send + Sync + Clone + 'static> Dataset<T> {
         (found.into_concat(), cost)
     }
 
+    /// Frontier-driven readahead: warm (and pin) the partitions a coming
+    /// `multi_lookup(keys)` will fault, off the critical path. Engines call
+    /// this at the end of a BFS round with the *next* round's frontier and
+    /// hold the returned batch across that round — the background pool
+    /// overlaps the paging IO with whatever runs in between, and the pins
+    /// keep warmed pages unevictable until the batch drops.
+    ///
+    /// Purely a performance hint: answers never depend on it. Returns
+    /// `None` — and does nothing — when there is nothing to warm: prefetch
+    /// disabled ([`prefetch_depth == 0`](crate::config::ClusterConfig) or
+    /// `PROVSPARK_PREFETCH=off`), a fault plan armed (deterministic fault
+    /// draws are defined over the demand IO order), the dataset
+    /// unpartitioned or fully resident, or every target partition already
+    /// cached. Issues at most `prefetch_depth` partitions per call, and
+    /// stops planning once the estimated decoded bytes reach the cache
+    /// budget (a round wider than memory warms only its head).
+    pub fn prefetch(&self, keys: &[u64]) -> Option<PrefetchBatch> {
+        let depth = self.sc.prefetch_depth();
+        if depth == 0 || keys.is_empty() || !prefetch_enabled() || self.sc.fault().is_some() {
+            return None;
+        }
+        let p = self.partitioning.as_ref()?;
+        // Dedup the frontier down to its distinct target partitions,
+        // preserving first-touch order.
+        let mut seen = rustc_hash::FxHashSet::default();
+        let mut targets = Vec::new();
+        for &k in keys {
+            let idx = p.partitioner.partition_of(k);
+            if seen.insert(idx) {
+                targets.push(idx);
+            }
+        }
+        let byte_cap = match self.sc.memory_budget() {
+            0 => u64::MAX,
+            b => b,
+        };
+        let batch = PrefetchBatch::new();
+        let mut planned: u64 = 0; // estimated decoded bytes this round pins
+        let mut issued: u64 = 0;
+        for idx in targets {
+            if issued >= depth as u64 || planned >= byte_cap {
+                break;
+            }
+            let Part::Paged { src, seg, rows } = &self.parts[idx] else { continue };
+            if src.cache.contains(src.file_id, *seg) {
+                continue;
+            }
+            planned += (*rows * std::mem::size_of::<T>()) as u64;
+            issued += 1;
+            let src = Arc::clone(src);
+            let seg = *seg;
+            let sink = batch.pin_sink();
+            self.sc.prefetcher().submit(Box::new(move || {
+                let loaded = src
+                    .cache
+                    .get_or_load_sized(src.file_id, seg, FetchKind::Prefetch, || (src.load)(seg));
+                // Errors are left for the demand path, which retries the IO
+                // and reports them with full query context.
+                if let Ok((_, _, pin)) = loaded {
+                    sink.lock().unwrap().push(pin);
+                }
+            }));
+        }
+        if issued == 0 {
+            return None;
+        }
+        self.sc.metrics().add_prefetch_issued(issued);
+        Some(batch)
+    }
+
     /// Partition-pruned lookup: a *dataset* containing exactly the rows
     /// whose key is in `keys`, produced by scanning only the target
     /// partitions (Spark's `PartitionPruningRDD`; non-target partitions
@@ -982,7 +1104,10 @@ impl<T: SegmentCodec + Send + Sync + Clone + 'static> Dataset<T> {
             cache,
             file_id,
             fault: self.sc.fault().cloned(),
-            load: Box::new(move |seg| file.read_segment::<T>(seg as usize)),
+            load: Box::new(move |seg| {
+                let rows = file.read_segment::<T>(seg as usize)?;
+                Ok((rows, file.bytes(seg as usize)))
+            }),
         });
         let parts = fetched
             .iter()
@@ -1770,6 +1895,108 @@ mod tests {
         acc.add(ScanCost { partitions: 1, rows: 5, cache_hits: 1, cache_misses: 0 });
         acc.add(ScanCost { partitions: 2, rows: 7, cache_hits: 0, cache_misses: 2 });
         assert_eq!((acc.cache_hits, acc.cache_misses), (1, 2));
+    }
+
+    #[test]
+    fn prefetch_warms_a_cold_partition_and_pays_out_one_hit() {
+        let sp = sc_budget(16); // tiny: the spill's warm admits evict, pages start cold
+        let rows: Vec<(u64, u64)> = (0..400).map(|i| (i % 40, i)).collect();
+        let d = Dataset::from_vec(&sp, rows, 8).partition_by_key(8).spilled("pairs").unwrap();
+        assert_eq!(sp.cache().resident_partitions(), 0, "warm admits evicted");
+        let before = sp.metrics().snapshot();
+        let batch = d.prefetch(&[3]).expect("one cold partition to warm");
+        assert_eq!(sp.metrics().snapshot().since(&before).prefetch_issued, 1);
+        // The job runs in the background; its insert is pinned by the
+        // batch, so once resident it stays resident.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        while sp.cache().resident_partitions() == 0 {
+            assert!(std::time::Instant::now() < deadline, "prefetch job never landed");
+            std::thread::yield_now();
+        }
+        let (hits, cost) = d.lookup_counted(3);
+        assert_eq!(hits.len(), 10);
+        assert_eq!((cost.cache_hits, cost.cache_misses), (1, 0), "demand hits the warm page");
+        let delta = sp.metrics().snapshot().since(&before);
+        assert_eq!(delta.prefetch_hits, 1);
+        assert_eq!(delta.cache_misses, 0, "the prefetch load is not a demand miss");
+        assert!(delta.bytes_paged_in > 0, "the readahead IO is still charged");
+        // While the batch pins the page, a second call has nothing to do.
+        assert!(d.prefetch(&[3]).is_none());
+        drop(batch);
+    }
+
+    #[test]
+    fn prefetch_declines_when_disabled_unsafe_or_useless() {
+        // prefetch_depth == 0 turns it off.
+        let off = MiniSpark::new(ClusterConfig {
+            executors: 4,
+            job_overhead_us: 0,
+            memory_budget: 16,
+            prefetch_depth: 0,
+            ..Default::default()
+        });
+        let rows: Vec<(u64, u64)> = (0..100).map(|i| (i % 10, i)).collect();
+        let d =
+            Dataset::from_vec(&off, rows.clone(), 4).partition_by_key(4).spilled("p").unwrap();
+        assert!(d.prefetch(&[1]).is_none());
+        // An armed fault plan disables it: fault draws are defined over
+        // the demand IO order.
+        let faulty = MiniSpark::new(ClusterConfig {
+            executors: 4,
+            job_overhead_us: 0,
+            memory_budget: 16,
+            fault_plan: Some("io:segment:@9999,seed=3".parse().unwrap()),
+            ..Default::default()
+        });
+        let d = Dataset::from_vec(&faulty, rows.clone(), 4)
+            .partition_by_key(4)
+            .spilled("p")
+            .unwrap();
+        assert!(d.prefetch(&[1]).is_none());
+        // A fully resident dataset has nothing to warm.
+        let s = sc();
+        let d = Dataset::from_vec(&s, rows, 4).partition_by_key(4);
+        assert!(d.prefetch(&[1]).is_none());
+        assert!(d.prefetch(&[]).is_none());
+    }
+
+    #[test]
+    fn from_paged_store_demand_pages_one_partition_per_lookup() {
+        let sp = sc_budget(1 << 20);
+        // A fake store: 4 buckets pre-partitioned by the pair key.
+        let partitioner = HashPartitioner::new(4);
+        let mut buckets: Vec<Vec<(u64, u64)>> = vec![Vec::new(); 4];
+        for i in 0..200u64 {
+            let row = (i % 20, i);
+            buckets[partitioner.partition_of(row.0)].push(row);
+        }
+        let rows_per: Vec<usize> = buckets.iter().map(Vec::len).collect();
+        let store = Arc::new(buckets);
+        let st = Arc::clone(&store);
+        let d =
+            Dataset::from_paged_store(&sp, &rows_per, KeyTag::PAIR_KEY, |r| r.0, move |seg| {
+                let rows = st[seg as usize].clone();
+                let disk = (rows.len() * 16) as u64;
+                Ok((rows, disk))
+            });
+        assert_eq!(d.len(), 200, "row counts come from directory metadata");
+        assert!(d.is_spilled(), "every partition starts on 'disk'");
+        assert_eq!(sp.metrics().snapshot().bytes_paged_in, 0, "construction reads nothing");
+        let before = sp.metrics().snapshot();
+        let hits = d.lookup(7);
+        assert_eq!(hits.len(), 10);
+        let delta = sp.metrics().snapshot().since(&before);
+        assert_eq!(delta.cache_misses, 1, "one partition faults in");
+        // The partitioning is tagged, so co-partitioned ops elide.
+        let before = sp.metrics().snapshot();
+        let _ = d.partition_by_key(4);
+        assert_eq!(sp.metrics().snapshot().since(&before).shuffles_elided, 1);
+        // Full scans agree with the store's contents.
+        let mut got = d.collect();
+        got.sort_unstable();
+        let mut want: Vec<(u64, u64)> = (0..200u64).map(|i| (i % 20, i)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
     }
 
     #[test]

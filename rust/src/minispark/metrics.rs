@@ -30,8 +30,22 @@ pub struct EngineMetrics {
     pub evictions: AtomicU64,
     /// Payload bytes written to segment files when datasets spilled.
     pub bytes_spilled: AtomicU64,
-    /// Payload bytes read back from segment files on cache misses.
+    /// Payload bytes read back from segment files on cache misses. For
+    /// compressed (v5) sources this is the *on-disk* size — the real IO.
     pub bytes_paged_in: AtomicU64,
+    /// Decoded in-memory bytes produced by cache misses. Equals
+    /// `bytes_paged_in` for raw segments; the gap between the two is what
+    /// the columnar encoding saved on the wire.
+    pub bytes_decoded: AtomicU64,
+    /// Disk bytes the columnar encoding avoided reading: decoded size minus
+    /// on-disk size, accumulated across every compressed section loaded.
+    pub bytes_compressed: AtomicU64,
+    /// Partitions handed to the background readahead pool by frontier
+    /// prefetch (whether or not the fetch won its race with demand).
+    pub prefetch_issued: AtomicU64,
+    /// Demand fetches served by a page a prefetch warmed. Each warmed page
+    /// pays out at most once.
+    pub prefetch_hits: AtomicU64,
     /// Fused stages executed by the lazy planner (see
     /// [`super::LazyDataset`]). Each stage is one pass over its input
     /// partitions no matter how many logical ops it fused.
@@ -61,6 +75,10 @@ pub struct MetricsSnapshot {
     pub evictions: u64,
     pub bytes_spilled: u64,
     pub bytes_paged_in: u64,
+    pub bytes_decoded: u64,
+    pub bytes_compressed: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
     pub stages_run: u64,
     pub ops_fused: u64,
     pub intermediates_avoided: u64,
@@ -83,6 +101,10 @@ impl EngineMetrics {
             evictions: self.evictions.load(Ordering::Relaxed),
             bytes_spilled: self.bytes_spilled.load(Ordering::Relaxed),
             bytes_paged_in: self.bytes_paged_in.load(Ordering::Relaxed),
+            bytes_decoded: self.bytes_decoded.load(Ordering::Relaxed),
+            bytes_compressed: self.bytes_compressed.load(Ordering::Relaxed),
+            prefetch_issued: self.prefetch_issued.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
             stages_run: self.stages_run.load(Ordering::Relaxed),
             ops_fused: self.ops_fused.load(Ordering::Relaxed),
             intermediates_avoided: self.intermediates_avoided.load(Ordering::Relaxed),
@@ -155,6 +177,26 @@ impl EngineMetrics {
         self.bytes_paged_in.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    #[inline]
+    pub fn add_bytes_decoded(&self, bytes: u64) {
+        self.bytes_decoded.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_bytes_compressed(&self, bytes: u64) {
+        self.bytes_compressed.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_prefetch_issued(&self, n: u64) {
+        self.prefetch_issued.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_prefetch_hit(&self) {
+        self.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One fused stage ran: `ops` logical ops in one pass, never allocating
     /// `intermediates` rows an eager chain would have materialized.
     #[inline]
@@ -183,6 +225,10 @@ impl MetricsSnapshot {
             evictions: self.evictions - earlier.evictions,
             bytes_spilled: self.bytes_spilled - earlier.bytes_spilled,
             bytes_paged_in: self.bytes_paged_in - earlier.bytes_paged_in,
+            bytes_decoded: self.bytes_decoded - earlier.bytes_decoded,
+            bytes_compressed: self.bytes_compressed - earlier.bytes_compressed,
+            prefetch_issued: self.prefetch_issued - earlier.prefetch_issued,
+            prefetch_hits: self.prefetch_hits - earlier.prefetch_hits,
             stages_run: self.stages_run - earlier.stages_run,
             ops_fused: self.ops_fused - earlier.ops_fused,
             intermediates_avoided: self.intermediates_avoided - earlier.intermediates_avoided,
@@ -193,7 +239,8 @@ impl MetricsSnapshot {
         format!(
             "jobs={} tasks={} parts_scanned={} rows_scanned={} shuffled={} collected={} \
              elided={} combined={} retried={} cache_hits={} cache_misses={} evictions={} \
-             spilled={} paged_in={} stages={} fused={} intermediates_avoided={}",
+             spilled={} paged_in={} decoded={} saved={} prefetch_issued={} prefetch_hits={} \
+             stages={} fused={} intermediates_avoided={}",
             self.jobs,
             self.tasks,
             self.partitions_scanned,
@@ -208,6 +255,10 @@ impl MetricsSnapshot {
             self.evictions,
             crate::util::fmt::human_bytes(self.bytes_spilled),
             crate::util::fmt::human_bytes(self.bytes_paged_in),
+            crate::util::fmt::human_bytes(self.bytes_decoded),
+            crate::util::fmt::human_bytes(self.bytes_compressed),
+            self.prefetch_issued,
+            self.prefetch_hits,
             self.stages_run,
             self.ops_fused,
             crate::util::fmt::human_count(self.intermediates_avoided),
@@ -234,6 +285,22 @@ mod tests {
         assert_eq!(d.rows_scanned, 50);
         assert_eq!(d.rows_collected, 7);
         assert!(d.summary().contains("jobs=1"));
+    }
+
+    #[test]
+    fn io_pipeline_counters_snapshot_and_summarize() {
+        let m = EngineMetrics::default();
+        m.add_bytes_paged_in(100);
+        m.add_bytes_decoded(400);
+        m.add_bytes_compressed(300);
+        m.add_prefetch_issued(5);
+        m.add_prefetch_hit();
+        let s = m.snapshot();
+        assert_eq!(s.bytes_decoded, 400);
+        assert_eq!(s.bytes_compressed, 300);
+        assert_eq!((s.prefetch_issued, s.prefetch_hits), (5, 1));
+        assert!(s.summary().contains("prefetch_issued=5"));
+        assert!(s.summary().contains("prefetch_hits=1"));
     }
 
     #[test]

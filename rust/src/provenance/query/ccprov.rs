@@ -19,14 +19,13 @@ use rustc_hash::FxHashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// The memoized Find-Prov-Triples-In-Component output for the most
-/// recently queried component, plus the deterministic [`StageCost`] its
-/// cold assemble charged. Hits replay that cost, so a query's stats are
-/// identical whether it assembled the component itself or found it hot
-/// (the batched-equals-sequential property the harness tests pin); the
-/// engine-wide metrics ledger still shows the scans actually saved.
+/// One memoized Find-Prov-Triples-In-Component output, plus the
+/// deterministic [`StageCost`] its cold assemble charged. Hits replay that
+/// cost, so a query's stats are identical whether it assembled the
+/// component itself or found it hot (the batched-equals-sequential
+/// property the harness tests pin); the engine-wide metrics ledger still
+/// shows the scans actually saved.
 struct AssembledCc {
-    ccid: ComponentId,
     c_prov: Dataset<CcTriple>,
     volume: usize,
     cost: StageCost,
@@ -37,8 +36,9 @@ pub struct CcProvEngine {
     prov: Dataset<CcTriple>,
     tau: usize,
     closure: Arc<dyn AncestorClosure>,
-    /// Single-slot hot-component memo (see [`AssembledCc`]).
-    assembled: Mutex<Option<AssembledCc>>,
+    /// Hot-component memo: a small epoch-keyed LRU of assembles (see
+    /// [`AssembledCc`] and [`AssembleMemo`](super::AssembleMemo)).
+    assembled: Mutex<super::AssembleMemo<ComponentId, AssembledCc>>,
 }
 
 impl CcProvEngine {
@@ -58,7 +58,31 @@ impl CcProvEngine {
             super::KEY_TRIPLE_DST,
             |t: &CcTriple| t.triple.dst.raw(),
         );
-        Self { prov, tau, closure: Arc::new(NativeClosure), assembled: Mutex::new(None) }
+        Self {
+            prov,
+            tau,
+            closure: Arc::new(NativeClosure),
+            assembled: Mutex::new(super::AssembleMemo::new(super::ASSEMBLE_MEMO_WAYS)),
+        }
+    }
+
+    /// Wrap an already dst-partitioned component-tagged dataset — e.g. the
+    /// demand-paged partitions of a segmented preprocessed store — without
+    /// re-shuffling or copying it.
+    ///
+    /// Panics if the dataset carries no hash partitioning (the lookup cost
+    /// argument depends on dst co-location).
+    pub fn from_dataset(prov: Dataset<CcTriple>, tau: usize) -> Self {
+        assert!(
+            prov.partitioning().is_some(),
+            "CcProvEngine::from_dataset requires a hash-partitioned dataset"
+        );
+        Self {
+            prov,
+            tau,
+            closure: Arc::new(NativeClosure),
+            assembled: Mutex::new(super::AssembleMemo::new(super::ASSEMBLE_MEMO_WAYS)),
+        }
     }
 
     /// Swap the driver-side closure implementation (native / XLA).
@@ -97,8 +121,9 @@ impl CcProvEngine {
             prov: prov.append_partitioned(appended),
             tau: self.tau,
             closure: Arc::clone(&self.closure),
-            // The delta may retag or extend any component: start cold.
-            assembled: Mutex::new(None),
+            // The delta may retag or extend any component: the successor
+            // memo is one epoch later, so nothing stale can replay.
+            assembled: Mutex::new(self.assembled.lock().expect("cc memo lock").successor()),
         }
     }
 
@@ -113,26 +138,28 @@ impl CcProvEngine {
             prov: self.prov.spilled("cc-prov")?,
             tau: self.tau,
             closure: Arc::clone(&self.closure),
-            // A memoized component would pin pre-spill partitions resident.
-            assembled: Mutex::new(None),
+            // A memoized component would pin pre-spill partitions resident:
+            // the successor memo starts empty one epoch later.
+            assembled: Mutex::new(self.assembled.lock().expect("cc memo lock").successor()),
         })
     }
 
     /// Find-Prov-Triples-In-Component, planned lazily: one fused stage
     /// (filter over the tagged dataset, dst-partitioning preserved) forced
-    /// through the stage scheduler, memoized per component. The returned
-    /// [`StageCost`] is the cold assemble's — replayed on hits.
+    /// through the stage scheduler, memoized per component in a small LRU.
+    /// The returned [`StageCost`] is the cold assemble's — replayed on
+    /// hits.
     fn assemble(&self, ccid: ComponentId) -> (Dataset<CcTriple>, usize, StageCost) {
-        if let Some(a) = self.assembled.lock().expect("cc memo lock").as_ref() {
-            if a.ccid == ccid {
-                return (a.c_prov.clone(), a.volume, a.cost);
-            }
+        if let Some(a) = self.assembled.lock().expect("cc memo lock").get(ccid) {
+            return (a.c_prov.clone(), a.volume, a.cost);
         }
         let (c_prov, cost) =
             self.prov.lazy().filter(move |t| t.ccid == ccid).materialize_counted();
         let volume = c_prov.count();
-        *self.assembled.lock().expect("cc memo lock") =
-            Some(AssembledCc { ccid, c_prov: c_prov.clone(), volume, cost });
+        self.assembled
+            .lock()
+            .expect("cc memo lock")
+            .put(ccid, AssembledCc { c_prov: c_prov.clone(), volume, cost });
         (c_prov, volume, cost)
     }
 
@@ -298,6 +325,70 @@ mod tests {
         assert!(warm.stats.summary().contains("stages=1"), "{}", warm.stats.summary());
         // ... while the engine-wide ledger shows the assemble never re-ran.
         assert_eq!(s.metrics().snapshot().since(&before).stages_run, 0);
+    }
+
+    #[test]
+    fn memo_retains_multiple_hot_components() {
+        // Interleaving a second component must not evict the first: the
+        // single-slot memo this LRU replaced would re-assemble A after B.
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let s = sc();
+        let cc = CcProvEngine::new(&s, &pre.cc_triples, 16, 0);
+        let qa = trace.triples[trace.len() / 3].dst.raw();
+        let qb = trace
+            .triples
+            .iter()
+            .map(|t| t.dst.raw())
+            .find(|n| pre.cc_of[n] != pre.cc_of[&qa])
+            .expect("an item in a second component");
+        let a_cold = cc.execute(&QueryRequest::new(qa));
+        let _ = cc.execute(&QueryRequest::new(qb));
+        let before = s.metrics().snapshot();
+        let a_warm = cc.execute(&QueryRequest::new(qa));
+        assert_eq!(a_cold.lineage, a_warm.lineage);
+        assert_eq!(a_cold.stats.rows_examined, a_warm.stats.rows_examined);
+        assert_eq!(
+            s.metrics().snapshot().since(&before).stages_run,
+            0,
+            "warm component re-assembled after an interleaved query"
+        );
+    }
+
+    #[test]
+    fn ingest_invalidates_the_memo() {
+        // A delta-ingested engine must re-assemble even a hot component —
+        // its memo is one epoch later — so new rows show up immediately.
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let s = sc();
+        let cc = CcProvEngine::new(&s, &pre.cc_triples, 16, 0);
+        let t0 = trace.triples[trace.len() / 3];
+        let q = t0.dst.raw();
+        let cold = cc.execute(&QueryRequest::new(q));
+        // Append one new parent of the queried item, tagged with its
+        // existing component id.
+        let ccid = pre
+            .cc_triples
+            .iter()
+            .find(|t| t.triple.dst == t0.dst)
+            .expect("queried item is tagged")
+            .ccid;
+        let extra = CcTriple {
+            triple: ProvTriple::new(AttrValueId::new(EntityId(999_999), 1), t0.dst, OpId(77)),
+            ccid,
+        };
+        let cc2 = cc.with_delta(&FxHashMap::default(), &[extra]);
+        let before = s.metrics().snapshot();
+        let fresh = cc2.execute(&QueryRequest::new(q));
+        assert!(
+            s.metrics().snapshot().since(&before).stages_run > 0,
+            "the post-ingest engine must re-assemble, not replay the stale memo"
+        );
+        assert!(fresh.lineage.triples.contains(&extra.triple));
+        assert_eq!(fresh.lineage.triples.len(), cold.lineage.triples.len() + 1);
     }
 
     #[test]

@@ -61,15 +61,14 @@ pub struct CsDelta<'a> {
     pub added_deps: &'a [SetDep],
 }
 
-/// The memoized `cs_provRDD` assemble for the most recently queried
-/// connected set. The set-lineage — and therefore the pruned fetch — is a
-/// pure function of the resolved set id, so hits replay the cold run's
-/// [`ScanCost`] and per-query attribution stays deterministic whether the
-/// hot set was shared or not. Only the *assemble* is memoized: the
-/// cluster branch's `by_dst` re-partition still runs per query, keeping
-/// the engine-wide `rows_shuffled` ledger faithful.
+/// One memoized `cs_provRDD` assemble. The set-lineage — and therefore
+/// the pruned fetch — is a pure function of the resolved set id, so hits
+/// replay the cold run's [`ScanCost`] and per-query attribution stays
+/// deterministic whether the hot set was shared or not. Only the
+/// *assemble* is memoized: the cluster branch's `by_dst` re-partition
+/// still runs per query, keeping the engine-wide `rows_shuffled` ledger
+/// faithful.
 struct AssembledCs {
-    cs: u64,
     cs_prov: Dataset<CsTriple>,
     volume: usize,
     cost: ScanCost,
@@ -88,8 +87,9 @@ pub struct CsProvEngine {
     num_partitions: usize,
     tau: usize,
     closure: Arc<dyn AncestorClosure>,
-    /// Single-slot hot-set memo (see [`AssembledCs`]).
-    assembled: Mutex<Option<AssembledCs>>,
+    /// Hot-set memo: a small epoch-keyed LRU of assembles (see
+    /// [`AssembledCs`] and [`AssembleMemo`](super::AssembleMemo)).
+    assembled: Mutex<super::AssembleMemo<u64, AssembledCs>>,
 }
 
 impl CsProvEngine {
@@ -134,7 +134,35 @@ impl CsProvEngine {
             num_partitions: np,
             tau,
             closure: Arc::new(NativeClosure),
-            assembled: Mutex::new(None),
+            assembled: Mutex::new(super::AssembleMemo::new(super::ASSEMBLE_MEMO_WAYS)),
+        }
+    }
+
+    /// Wrap three already-partitioned datasets — e.g. demand-paged triple
+    /// partitions of a segmented preprocessed store plus freshly spilled
+    /// node / set-dependency indexes — without re-shuffling or copying
+    /// them. `num_partitions` must match the datasets' partition count.
+    ///
+    /// Panics if the triple dataset carries no hash partitioning.
+    pub fn from_datasets(
+        prov_by_set: Dataset<CsTriple>,
+        node_set: Dataset<(u64, u64)>,
+        set_deps: Dataset<SetDep>,
+        num_partitions: usize,
+        tau: usize,
+    ) -> Self {
+        assert!(
+            prov_by_set.partitioning().is_some(),
+            "CsProvEngine::from_datasets requires hash-partitioned datasets"
+        );
+        Self {
+            prov_by_set,
+            node_set,
+            set_deps,
+            num_partitions,
+            tau,
+            closure: Arc::new(NativeClosure),
+            assembled: Mutex::new(super::AssembleMemo::new(super::ASSEMBLE_MEMO_WAYS)),
         }
     }
 
@@ -194,8 +222,9 @@ impl CsProvEngine {
             num_partitions: self.num_partitions,
             tau: self.tau,
             closure: Arc::clone(&self.closure),
-            // Any part of the hot set may have been retagged: start cold.
-            assembled: Mutex::new(None),
+            // Any memoized set may have been retagged: the successor memo
+            // is one epoch later, so nothing stale can replay.
+            assembled: Mutex::new(self.assembled.lock().expect("cs memo lock").successor()),
         }
     }
 
@@ -211,25 +240,26 @@ impl CsProvEngine {
             num_partitions: self.num_partitions,
             tau: self.tau,
             closure: Arc::clone(&self.closure),
-            // A memoized set would pin pre-spill partitions resident.
-            assembled: Mutex::new(None),
+            // A memoized set would pin pre-spill partitions resident: the
+            // successor memo starts empty one epoch later.
+            assembled: Mutex::new(self.assembled.lock().expect("cs memo lock").successor()),
         })
     }
 
     /// Assemble `cs_provRDD` for set-lineage `s` (whose resolved root is
-    /// `cs`): a partition-pruned fetch, memoized per set. `s` is a pure
-    /// function of `cs`, so the memo key is just `cs`, and hits replay the
-    /// cold fetch's deterministic [`ScanCost`].
+    /// `cs`): a partition-pruned fetch, memoized per set in a small LRU.
+    /// `s` is a pure function of `cs`, so the memo key is just `cs`, and
+    /// hits replay the cold fetch's deterministic [`ScanCost`].
     fn assemble(&self, cs: u64, s: &[u64]) -> (Dataset<CsTriple>, usize, ScanCost) {
-        if let Some(a) = self.assembled.lock().expect("cs memo lock").as_ref() {
-            if a.cs == cs {
-                return (a.cs_prov.clone(), a.volume, a.cost);
-            }
+        if let Some(a) = self.assembled.lock().expect("cs memo lock").get(cs) {
+            return (a.cs_prov.clone(), a.volume, a.cost);
         }
         let (cs_prov, cost) = self.prov_by_set.prune_lookup_counted(s);
         let volume = cs_prov.count();
-        *self.assembled.lock().expect("cs memo lock") =
-            Some(AssembledCs { cs, cs_prov: cs_prov.clone(), volume, cost });
+        self.assembled
+            .lock()
+            .expect("cs memo lock")
+            .put(cs, AssembledCs { cs_prov: cs_prov.clone(), volume, cost });
         (cs_prov, volume, cost)
     }
 
@@ -248,8 +278,13 @@ impl CsProvEngine {
         seen.insert(cs);
         let mut frontier = vec![cs];
         let mut out = Vec::new();
+        // Frontier-driven readahead over the set-dependency dataset: the
+        // batch pins its pages until the round that consumes them.
+        let mut readahead: Option<crate::storage::PrefetchBatch> = None;
         while !frontier.is_empty() {
             let (deps, cost) = self.set_deps.multi_lookup_counted(&frontier);
+            // This round consumed its readahead; release the pins.
+            drop(readahead.take());
             stats.rounds += 1;
             stats.partitions += cost.partitions;
             stats.rows += cost.rows;
@@ -262,6 +297,10 @@ impl CsProvEngine {
                     out.push(d.src_csid.0);
                 }
             }
+            // The next frontier is known a full round early: warm its
+            // partitions in the background while the driver bookkeeping
+            // (and the next job's launch overhead) runs.
+            readahead = self.set_deps.prefetch(&next);
             frontier = next;
         }
         (out, stats)
@@ -497,5 +536,38 @@ mod tests {
             avg * 2 < lc1_edges,
             "avg volume {avg} not ≪ component edges {lc1_edges}"
         );
+    }
+
+    #[test]
+    fn memo_retains_multiple_hot_sets() {
+        // Interleaving a second connected set must not evict the first:
+        // the single-slot memo this LRU replaced would re-assemble A's
+        // pruned fetch after B.
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 150, 100, WccImpl::Driver);
+        let s = sc();
+        let engine = build(&pre, &s, usize::MAX);
+        let qa = trace.triples[trace.len() / 3].dst.raw();
+        let qb = trace
+            .triples
+            .iter()
+            .map(|t| t.dst.raw())
+            .find(|n| pre.cs_of[n] != pre.cs_of[&qa])
+            .expect("an item in a second set");
+        let a_cold = engine.execute(&QueryRequest::new(qa));
+        let _ = engine.execute(&QueryRequest::new(qb));
+        let before = s.metrics().snapshot();
+        let a_warm = engine.execute(&QueryRequest::new(qa));
+        let warm_jobs = s.metrics().snapshot().since(&before).jobs;
+        assert_eq!(a_cold.lineage, a_warm.lineage);
+        assert_eq!(a_cold.stats.rows_examined, a_warm.stats.rows_examined);
+        // A fresh engine answering the same query shows what the cold
+        // assemble costs in jobs; the warm replay must run strictly fewer.
+        let fresh = build(&pre, &s, usize::MAX);
+        let before = s.metrics().snapshot();
+        let _ = fresh.execute(&QueryRequest::new(qa));
+        let cold_jobs = s.metrics().snapshot().since(&before).jobs;
+        assert!(warm_jobs < cold_jobs, "warm ran {warm_jobs} jobs, cold {cold_jobs}");
     }
 }

@@ -48,6 +48,58 @@ pub const KEY_TRIPLE_DST: KeyTag = KeyTag::named("prov.triple.dst");
 /// storage layout for triples and set dependencies.
 pub const KEY_DST_CSID: KeyTag = KeyTag::named("prov.dst_csid");
 
+/// Number of hot assembles each engine retains ([`AssembleMemo`]).
+pub(crate) const ASSEMBLE_MEMO_WAYS: usize = 8;
+
+/// A small epoch-keyed LRU of hot assembles.
+///
+/// CCProv memoizes Find-Prov-Triples-In-Component and CSProv the pruned
+/// `cs_provRDD` fetch. A single hot slot thrashes under interleaved
+/// workloads (querying components A, B, A re-assembles A), so each engine
+/// keeps up to [`ASSEMBLE_MEMO_WAYS`] entries in LRU order. Every entry is
+/// stamped with the epoch it was memoized at and lookups only match the
+/// current epoch: delta ingest hands the successor engine a memo one epoch
+/// later ([`AssembleMemo::successor`]), so nothing assembled against the
+/// pre-ingest datasets can ever replay after an ingest.
+pub(crate) struct AssembleMemo<K, V> {
+    cap: usize,
+    epoch: u64,
+    /// `(epoch, key, value)`, least-recently used first.
+    entries: Vec<(u64, K, V)>,
+}
+
+impl<K: PartialEq + Copy, V> AssembleMemo<K, V> {
+    pub(crate) fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), epoch: 0, entries: Vec::new() }
+    }
+
+    /// The memo for the engine a delta ingest (or a spill) produces: one
+    /// epoch later and empty, so every previously memoized assemble is
+    /// stale by construction.
+    pub(crate) fn successor(&self) -> Self {
+        Self { cap: self.cap, epoch: self.epoch + 1, entries: Vec::new() }
+    }
+
+    /// Current-epoch lookup; a hit is promoted to most-recently used.
+    pub(crate) fn get(&mut self, key: K) -> Option<&V> {
+        let i = self.entries.iter().position(|(e, k, _)| *e == self.epoch && *k == key)?;
+        let hit = self.entries.remove(i);
+        self.entries.push(hit);
+        self.entries.last().map(|(_, _, v)| v)
+    }
+
+    /// Insert at most-recently used, evicting the least-recently used
+    /// entry beyond capacity (stale-epoch entries and any previous copy of
+    /// the key are dropped first).
+    pub(crate) fn put(&mut self, key: K, value: V) {
+        self.entries.retain(|(e, k, _)| *e == self.epoch && *k != key);
+        if self.entries.len() >= self.cap {
+            self.entries.remove(0);
+        }
+        self.entries.push((self.epoch, key, value));
+    }
+}
+
 pub mod ccprov;
 pub mod csprov;
 pub mod driver_rq;
@@ -64,3 +116,31 @@ pub use engine::{
 };
 pub use result::Lineage;
 pub use rq::RqEngine;
+
+#[cfg(test)]
+mod tests {
+    use super::AssembleMemo;
+
+    #[test]
+    fn memo_is_lru_with_capacity() {
+        let mut m: AssembleMemo<u64, &'static str> = AssembleMemo::new(2);
+        m.put(1, "a");
+        m.put(2, "b");
+        assert_eq!(m.get(1).copied(), Some("a")); // promotes 1 to MRU
+        m.put(3, "c"); // evicts 2, the LRU
+        assert!(m.get(2).is_none());
+        assert_eq!(m.get(1).copied(), Some("a"));
+        assert_eq!(m.get(3).copied(), Some("c"));
+    }
+
+    #[test]
+    fn successor_epoch_invalidates_everything() {
+        let mut m: AssembleMemo<u64, u32> = AssembleMemo::new(4);
+        m.put(7, 70);
+        assert_eq!(m.get(7).copied(), Some(70));
+        let mut next = m.successor();
+        assert!(next.get(7).is_none(), "pre-ingest entries must be stale");
+        next.put(7, 71);
+        assert_eq!(next.get(7).copied(), Some(71));
+    }
+}

@@ -75,6 +75,10 @@ pub fn rq_bfs<T: Send + Sync + Clone + 'static>(
     let mut visited: FxHashSet<u64> = FxHashSet::default();
     visited.insert(q);
     let mut frontier = vec![q];
+    // Pins held by the previous round's readahead (see Dataset::prefetch):
+    // warmed partitions stay unevictable until the round that asked for
+    // them has run its lookup.
+    let mut readahead: Option<crate::storage::PrefetchBatch> = None;
     while !frontier.is_empty() {
         if let Some(t) = deadline {
             if Instant::now() >= t {
@@ -90,6 +94,8 @@ pub fn rq_bfs<T: Send + Sync + Clone + 'static>(
             }
         }
         let (rows, cost) = ds.multi_lookup_counted(&frontier);
+        // This round consumed its readahead; release the pins.
+        drop(readahead.take());
         stats.rounds += 1;
         stats.partitions += cost.partitions;
         stats.rows += cost.rows;
@@ -109,6 +115,10 @@ pub fn rq_bfs<T: Send + Sync + Clone + 'static>(
                 break;
             }
         }
+        // The next frontier is known a full round early: hand it to the
+        // background pool so its partitions warm while this loop's driver
+        // work (and the next job's launch overhead) runs.
+        readahead = ds.prefetch(&next);
         frontier = next;
     }
     (Lineage::from_triples(q, collected), stats)

@@ -4,7 +4,7 @@
 //! once; we persist the same artifacts locally in a simple length-prefixed
 //! little-endian binary format (with a CSV export for inspection).
 //!
-//! Preprocessed files are written in the **v4** layout (`PSPKPRE4`): the
+//! Preprocessed files are written in the **v5** layout (`PSPKPRE5`): the
 //! v3 header — the incremental-epoch fields (θ, the big-set bound, the
 //! epoch counter), the workflow fingerprint
 //! ([`crate::workflow::workflow_fingerprint`], so a reloaded index can
@@ -15,18 +15,25 @@
 //! segments keyed exactly as the query engines partition them, so
 //! [`SegmentedPre`] serves any single partition with one seek: the
 //! out-of-core tier ([`crate::storage`]) can open a preprocessed index
-//! without deserializing the whole file.
+//! without deserializing the whole file. v5 stores every section as a
+//! delta+varint **compressed columnar block**
+//! ([`crate::storage::compress_columnar`]) with rows sorted within each
+//! partition, trading decode CPU for the disk bytes that dominate demand
+//! paging; the directory carries `(offset, rows, bytes)` per section so
+//! readers size one exact read.
 //!
-//! Older files still load, with missing header fields zeroed: v3
-//! (`PSPKPRE3`, monolithic sections), v2 (`PSPKPRE2`, pre-fingerprint —
-//! ingests without workflow validation) and v1 (`PSPKPRE1`, pre-epoch —
-//! answers queries but refuses ingestion until re-preprocessed).
+//! Older files still load, with missing header fields zeroed: v4
+//! (`PSPKPRE4`, segmented but uncompressed — still writable via
+//! [`save_preprocessed_v4`]), v3 (`PSPKPRE3`, monolithic sections), v2
+//! (`PSPKPRE2`, pre-fingerprint — ingests without workflow validation)
+//! and v1 (`PSPKPRE1`, pre-epoch — answers queries but refuses ingestion
+//! until re-preprocessed).
 
 use crate::fault::{io_probe, FaultSite};
 use crate::minispark::HashPartitioner;
 use crate::provenance::model::{CcTriple, CsTriple, ProvTriple, SetDep, Trace};
 use crate::provenance::pipeline::Preprocessed;
-use crate::storage::SegmentCodec;
+use crate::storage::{compress_columnar, decompress_columnar, ColumnarCodec, SegmentCodec};
 use crate::util::ids::{AttrValueId, ComponentId, OpId, SetId};
 use anyhow::{bail, Context, Result};
 use rustc_hash::FxHashMap;
@@ -38,10 +45,13 @@ const MAGIC_PRE_V1: &[u8; 8] = b"PSPKPRE1";
 const MAGIC_PRE_V2: &[u8; 8] = b"PSPKPRE2";
 const MAGIC_PRE_V3: &[u8; 8] = b"PSPKPRE3";
 const MAGIC_PRE_V4: &[u8; 8] = b"PSPKPRE4";
+const MAGIC_PRE_V5: &[u8; 8] = b"PSPKPRE5";
 
-/// v4 fixed prefix: magic + 9 `u64` header fields (θ, big-set bound,
+/// v4/v5 fixed prefix: magic + 9 `u64` header fields (θ, big-set bound,
 /// epoch, workflow fingerprint, shard index, shard count, component
-/// count, set count, partition count). The directory follows.
+/// count, set count, partition count). The directory follows — `(offset,
+/// rows)` pairs in v4, `(offset, rows, bytes)` triples in v5 (compressed
+/// block sizes are not derivable from row counts).
 const V4_HEADER_BYTES: usize = 8 + 9 * 8;
 
 fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
@@ -144,33 +154,20 @@ pub const DEFAULT_PRE_PARTITIONS: usize = 64;
 /// Save preprocessed provenance (everything the query engines need),
 /// including the incremental-epoch header (θ / big-set bound / epoch),
 /// the workflow fingerprint and the shard assignment. Writes the
-/// segmented **v4** layout with [`DEFAULT_PRE_PARTITIONS`] partitions —
-/// see [`save_preprocessed_with_partitions`].
+/// compressed segmented **v5** layout with [`DEFAULT_PRE_PARTITIONS`]
+/// partitions — see [`save_preprocessed_with_partitions`].
 pub fn save_preprocessed(path: &Path, pre: &Preprocessed) -> Result<()> {
     save_preprocessed_with_partitions(path, pre, DEFAULT_PRE_PARTITIONS)
 }
 
-/// Save preprocessed provenance as a **v4** (`PSPKPRE4`) segmented file.
-///
-/// The cc/cs triple sections are split into `num_partitions`
-/// hash-partitioned segments — cc keyed by `dst`, cs keyed by
-/// `dst_csid`, through the same [`HashPartitioner`] the query engines
-/// use, so segment *i* holds exactly the rows engine partition *i*
-/// would. A directory of absolute `(offset, rows)` pairs precedes the
-/// payload; [`SegmentedPre`] serves any one section with a single seek,
-/// and [`load_preprocessed`] reassembles the whole index.
-pub fn save_preprocessed_with_partitions(
-    path: &Path,
+/// Hash-split the cc/cs triple sections exactly as the query engines
+/// partition their datasets — cc keyed by `dst`, cs keyed by `dst_csid`,
+/// through the same [`HashPartitioner`] — so segment *i* holds exactly
+/// the rows engine partition *i* would.
+fn partition_triples(
     pre: &Preprocessed,
-    num_partitions: usize,
-) -> Result<()> {
-    save_preprocessed_v4_inner(path, pre, num_partitions)
-        .with_context(|| format!("writing preprocessed file {path:?}"))
-}
-
-fn save_preprocessed_v4_inner(path: &Path, pre: &Preprocessed, np: usize) -> Result<()> {
-    io_probe(FaultSite::StoreIo)?;
-    let np = np.max(1);
+    np: usize,
+) -> (Vec<Vec<CcTriple>>, Vec<Vec<CsTriple>>) {
     let parter = HashPartitioner::new(np);
     let mut cc: Vec<Vec<CcTriple>> = vec![Vec::new(); np];
     for t in &pre.cc_triples {
@@ -180,6 +177,108 @@ fn save_preprocessed_v4_inner(path: &Path, pre: &Preprocessed, np: usize) -> Res
     for t in &pre.cs_triples {
         cs[parter.partition_of(t.dst_csid.0)].push(*t);
     }
+    (cc, cs)
+}
+
+/// Save preprocessed provenance as a **v5** (`PSPKPRE5`) compressed
+/// segmented file.
+///
+/// The cc/cs triple sections are split into `num_partitions` segments
+/// keyed as the engines key them (see [`partition_triples`]); every
+/// section is written as a delta+varint columnar block
+/// ([`crate::storage::compress_columnar`]), with triple rows sorted
+/// within their partition so the deltas stay small. A directory of
+/// absolute `(offset, rows, bytes)` triples precedes the payload;
+/// [`SegmentedPre`] serves any one section with a single sized read, and
+/// [`load_preprocessed`] reassembles the whole index.
+pub fn save_preprocessed_with_partitions(
+    path: &Path,
+    pre: &Preprocessed,
+    num_partitions: usize,
+) -> Result<()> {
+    save_preprocessed_v5_inner(path, pre, num_partitions)
+        .with_context(|| format!("writing preprocessed file {path:?}"))
+}
+
+fn save_preprocessed_v5_inner(path: &Path, pre: &Preprocessed, np: usize) -> Result<()> {
+    io_probe(FaultSite::StoreIo)?;
+    let np = np.max(1);
+    let (mut cc, mut cs) = partition_triples(pre, np);
+    // Sort rows within each partition: delta compression feeds on runs of
+    // nearby ids, and partition contents are order-free for every consumer
+    // (the segmented layouts already reorder rows across partitions).
+    for p in &mut cc {
+        p.sort_unstable_by_key(|t| {
+            (t.triple.dst.raw(), t.triple.src.raw(), t.triple.op.0, t.ccid.0)
+        });
+    }
+    for p in &mut cs {
+        p.sort_unstable_by_key(|t| {
+            (t.dst_csid.0, t.triple.dst.raw(), t.triple.src.raw(), t.src_csid.0)
+        });
+    }
+    // cc_of/cs_of round-trip through hash maps, so their order is free
+    // too: sorted pairs delta-compress to almost nothing. set_deps and
+    // large_components keep their original order (callers observe it).
+    let mut cc_of: Vec<(u64, u64)> = pre.cc_of.iter().map(|(&n, &c)| (n, c)).collect();
+    cc_of.sort_unstable();
+    let mut cs_of: Vec<(u64, u64)> = pre.cs_of.iter().map(|(&n, &c)| (n, c)).collect();
+    cs_of.sort_unstable();
+    let large: Vec<(u64, u64, u64)> =
+        pre.large_components.iter().map(|&(c, n, e)| (c, n as u64, e as u64)).collect();
+
+    let mut blocks: Vec<(Vec<u8>, u64)> = Vec::with_capacity(2 * np + 4);
+    for p in &cc {
+        blocks.push((compress_columnar(p), p.len() as u64));
+    }
+    for p in &cs {
+        blocks.push((compress_columnar(p), p.len() as u64));
+    }
+    blocks.push((compress_columnar(&pre.set_deps), pre.set_deps.len() as u64));
+    blocks.push((compress_columnar(&cc_of), cc_of.len() as u64));
+    blocks.push((compress_columnar(&cs_of), cs_of.len() as u64));
+    blocks.push((compress_columnar(&large), large.len() as u64));
+
+    let entries = 2 * np + 4;
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC_PRE_V5)?;
+    w_u64(&mut w, pre.theta as u64)?;
+    w_u64(&mut w, pre.big_threshold as u64)?;
+    w_u64(&mut w, pre.epoch)?;
+    w_u64(&mut w, pre.workflow_fingerprint)?;
+    w_u64(&mut w, pre.shard_index)?;
+    w_u64(&mut w, pre.shard_count)?;
+    w_u64(&mut w, pre.component_count as u64)?;
+    w_u64(&mut w, pre.set_count as u64)?;
+    w_u64(&mut w, np as u64)?;
+    let mut at = (V4_HEADER_BYTES + entries * 24) as u64;
+    for (block, rows) in &blocks {
+        w_u64(&mut w, at)?;
+        w_u64(&mut w, *rows)?;
+        w_u64(&mut w, block.len() as u64)?;
+        at += block.len() as u64;
+    }
+    for (block, _) in &blocks {
+        w.write_all(block)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Save in the previous **v4** (`PSPKPRE4`) uncompressed segmented
+/// layout. Kept callable so format comparisons (the `bench_oocore` size
+/// gate) and mixed-version fleets can still produce files every reader
+/// since PR 6 accepts.
+pub fn save_preprocessed_v4(path: &Path, pre: &Preprocessed, num_partitions: usize) -> Result<()> {
+    save_preprocessed_v4_inner(path, pre, num_partitions)
+        .with_context(|| format!("writing preprocessed file {path:?}"))
+}
+
+fn save_preprocessed_v4_inner(path: &Path, pre: &Preprocessed, np: usize) -> Result<()> {
+    io_probe(FaultSite::StoreIo)?;
+    let np = np.max(1);
+    let (cc, cs) = partition_triples(pre, np);
 
     // Directory of absolute (offset, rows) pairs: np cc segments, np cs
     // segments, then the four unsegmented sections.
@@ -253,10 +352,11 @@ fn save_preprocessed_v4_inner(path: &Path, pre: &Preprocessed, np: usize) -> Res
 
 /// Load preprocessed provenance. Pass-stats and timings are not persisted
 /// (they are preprocessing-run artifacts, reported at preprocessing time).
-/// Accepts v4 (`PSPKPRE4`, segmented — reassembled in partition order),
-/// v3 (`PSPKPRE3`), v2 (`PSPKPRE2`, workflow-fingerprint and shard fields
-/// zeroed) and legacy v1 (`PSPKPRE1`, epoch fields zeroed too) files;
-/// errors name the offending path.
+/// Accepts v5 (`PSPKPRE5`, compressed segmented) and v4 (`PSPKPRE4`,
+/// segmented — both reassembled in partition order), v3 (`PSPKPRE3`), v2
+/// (`PSPKPRE2`, workflow-fingerprint and shard fields zeroed) and legacy
+/// v1 (`PSPKPRE1`, epoch fields zeroed too) files; errors name the
+/// offending path.
 pub fn load_preprocessed(path: &Path) -> Result<Preprocessed> {
     load_preprocessed_inner(path)
         .with_context(|| format!("loading preprocessed file {path:?}"))
@@ -269,12 +369,12 @@ fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("read magic")?;
-    if &magic == MAGIC_PRE_V4 {
-        // Segmented layout: reopen through the directory reader and pull
+    if &magic == MAGIC_PRE_V4 || &magic == MAGIC_PRE_V5 {
+        // Segmented layouts: reopen through the directory reader and pull
         // every section (queries that want partitions on demand use
         // `SegmentedPre` directly instead).
         drop(r);
-        return load_preprocessed_v4(path);
+        return SegmentedPre::open(path)?.load_all();
     }
     if &magic != MAGIC_PRE_V3 && &magic != MAGIC_PRE_V2 && &magic != MAGIC_PRE_V1 {
         bail!("not a provspark preprocessed file (bad magic)");
@@ -351,39 +451,18 @@ fn load_preprocessed_inner(path: &Path) -> Result<Preprocessed> {
     Ok(pre)
 }
 
-fn load_preprocessed_v4(path: &Path) -> Result<Preprocessed> {
-    let seg = SegmentedPre::open(path)?;
-    let mut pre = Preprocessed {
-        theta: seg.theta(),
-        big_threshold: seg.big_threshold(),
-        epoch: seg.epoch(),
-        workflow_fingerprint: seg.workflow_fingerprint(),
-        shard_index: seg.shard_index(),
-        shard_count: seg.shard_count(),
-        component_count: seg.component_count(),
-        set_count: seg.set_count(),
-        ..Default::default()
-    };
-    for i in 0..seg.num_partitions() {
-        pre.cc_triples.extend(seg.cc_partition(i)?);
-        pre.cs_triples.extend(seg.cs_partition(i)?);
-    }
-    pre.set_deps = seg.set_deps()?;
-    pre.cc_of = seg.cc_of()?;
-    pre.cs_of = seg.cs_of()?;
-    pre.large_components = seg.large_components()?;
-    Ok(pre)
-}
-
-/// An open v4 (`PSPKPRE4`) preprocessed file: header and directory in
-/// memory, payload on disk. Any one section is readable with a single
-/// seek + sized read, so the out-of-core tier can open a preprocessed
-/// index and page in only the partitions a query touches. Every read
-/// opens the file independently (no shared handle), mirroring
-/// [`crate::storage::SegmentFile`].
+/// An open v4 (`PSPKPRE4`) or v5 (`PSPKPRE5`, compressed) preprocessed
+/// file: header and directory in memory, payload on disk. Any one section
+/// is readable with a single seek + sized read, so the out-of-core tier
+/// can open a preprocessed index and page in only the partitions a query
+/// touches. Every read opens the file independently (no shared handle),
+/// mirroring [`crate::storage::SegmentFile`].
 #[derive(Debug)]
 pub struct SegmentedPre {
     path: PathBuf,
+    /// v5 sections are delta+varint columnar blocks; v4 sections are raw
+    /// fixed-width records.
+    compressed: bool,
     theta: usize,
     big_threshold: usize,
     epoch: u64,
@@ -393,14 +472,30 @@ pub struct SegmentedPre {
     component_count: usize,
     set_count: usize,
     num_partitions: usize,
-    /// Absolute (offset, rows) per section: `np` cc segments, `np` cs
-    /// segments, then set_deps / cc_of / cs_of / large_components.
-    dir: Vec<(u64, u64)>,
+    /// Absolute (offset, rows, on-disk bytes) per section: `np` cc
+    /// segments, `np` cs segments, then set_deps / cc_of / cs_of /
+    /// large_components.
+    dir: Vec<(u64, u64, u64)>,
+}
+
+/// On-disk record size of directory entry `idx` for an `np`-partition
+/// file (cc 28, cs 36, set_deps/cc_of/cs_of 16, large_components 24).
+fn section_record_bytes(np: usize, idx: usize) -> usize {
+    if idx < np {
+        CcTriple::RECORD_BYTES
+    } else if idx < 2 * np {
+        CsTriple::RECORD_BYTES
+    } else if idx == 2 * np + 3 {
+        <(u64, u64, u64)>::RECORD_BYTES
+    } else {
+        <(u64, u64)>::RECORD_BYTES
+    }
 }
 
 impl SegmentedPre {
-    /// Open and validate a v4 file: reads only the header and directory,
-    /// checks every section lies inside the file. Errors name the path.
+    /// Open and validate a v4/v5 file: reads only the header and
+    /// directory, checks every section lies inside the file. Errors name
+    /// the path.
     pub fn open(path: &Path) -> Result<Self> {
         Self::open_inner(path)
             .with_context(|| format!("opening segmented preprocessed file {path:?}"))
@@ -413,9 +508,14 @@ impl SegmentedPre {
         let mut r = BufReader::new(f);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic).context("read magic")?;
-        if &magic != MAGIC_PRE_V4 {
-            bail!("not a segmented (v4) preprocessed file (bad magic)");
-        }
+        let compressed = if &magic == MAGIC_PRE_V5 {
+            true
+        } else if &magic == MAGIC_PRE_V4 {
+            false
+        } else {
+            bail!("not a segmented (v4/v5) preprocessed file (bad magic)");
+        };
+        let entry_bytes: u64 = if compressed { 24 } else { 16 };
         let theta = r_u64(&mut r).context("read theta")? as usize;
         let big_threshold = r_u64(&mut r).context("read big_threshold")? as usize;
         let epoch = r_u64(&mut r).context("read epoch")?;
@@ -428,7 +528,7 @@ impl SegmentedPre {
         // The directory itself must fit before its size is trusted.
         np.checked_mul(2)
             .and_then(|e| e.checked_add(4))
-            .and_then(|e| e.checked_mul(16))
+            .and_then(|e| e.checked_mul(entry_bytes))
             .filter(|&d| V4_HEADER_BYTES as u64 + d <= file_len)
             .ok_or_else(|| {
                 anyhow::anyhow!(
@@ -442,10 +542,36 @@ impl SegmentedPre {
         for i in 0..entries {
             let offset = r_u64(&mut r).with_context(|| format!("read directory entry {i}"))?;
             let rows = r_u64(&mut r).with_context(|| format!("read directory entry {i}"))?;
-            dir.push((offset, rows));
+            let bytes = if compressed {
+                r_u64(&mut r).with_context(|| format!("read directory entry {i}"))?
+            } else {
+                rows.checked_mul(section_record_bytes(np, i) as u64).ok_or_else(|| {
+                    anyhow::anyhow!("section {i} row count {rows} overflows: corrupt directory")
+                })?
+            };
+            dir.push((offset, rows, bytes));
         }
-        let pre = Self {
+        for (i, &(offset, rows, bytes)) in dir.iter().enumerate() {
+            let fits = offset.checked_add(bytes).is_some_and(|end| end <= file_len);
+            if !fits {
+                bail!(
+                    "section {i} ({rows} rows, {bytes} bytes at offset {offset}) exceeds \
+                     the {file_len}-byte file: corrupt or truncated"
+                );
+            }
+            // Every compressed row is at least one varint byte per column
+            // (≥ 2 columns), so a row count beyond the block size can only
+            // be corruption — and it must never size an allocation.
+            if compressed && rows > bytes {
+                bail!(
+                    "section {i} claims {rows} rows in a {bytes}-byte compressed block: \
+                     corrupt or truncated directory"
+                );
+            }
+        }
+        Ok(Self {
             path: path.to_path_buf(),
+            compressed,
             theta,
             big_threshold,
             epoch,
@@ -456,47 +582,62 @@ impl SegmentedPre {
             set_count,
             num_partitions: np,
             dir,
+        })
+    }
+
+    fn read_section<T: ColumnarCodec>(&self, idx: usize) -> Result<Vec<T>> {
+        io_probe(FaultSite::SegmentIo)?;
+        debug_assert_eq!(T::RECORD_BYTES, section_record_bytes(self.num_partitions, idx));
+        let (offset, rows, bytes) = self.dir[idx];
+        let mut f = std::fs::File::open(&self.path)?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; bytes as usize];
+        f.read_exact(&mut buf).context("read section payload")?;
+        if self.compressed {
+            decompress_columnar(&buf, rows as usize).context("decompress section block")
+        } else {
+            Ok(buf.chunks_exact(T::RECORD_BYTES).map(T::decode).collect())
+        }
+    }
+
+    /// Everything except the two triple sections: the header-adjacent
+    /// maps and summaries a zero-copy session build needs eagerly
+    /// (`cc_triples`/`cs_triples` stay empty — they are what demand
+    /// paging serves per partition).
+    pub fn load_light(&self) -> Result<Preprocessed> {
+        let mut pre = Preprocessed {
+            theta: self.theta,
+            big_threshold: self.big_threshold,
+            epoch: self.epoch,
+            workflow_fingerprint: self.workflow_fingerprint,
+            shard_index: self.shard_index,
+            shard_count: self.shard_count,
+            component_count: self.component_count,
+            set_count: self.set_count,
+            ..Default::default()
         };
-        for (i, &(offset, rows)) in pre.dir.iter().enumerate() {
-            let rec = pre.record_bytes(i) as u64;
-            let fits = rows
-                .checked_mul(rec)
-                .and_then(|b| offset.checked_add(b))
-                .is_some_and(|end| end <= file_len);
-            if !fits {
-                bail!(
-                    "section {i} ({rows} rows × {rec} bytes at offset {offset}) exceeds \
-                     the {file_len}-byte file: corrupt or truncated"
-                );
-            }
+        pre.set_deps = self.set_deps()?;
+        pre.cc_of = self.cc_of()?;
+        pre.cs_of = self.cs_of()?;
+        pre.large_components = self.large_components()?;
+        Ok(pre)
+    }
+
+    /// The whole index, reassembled in partition order — what
+    /// [`load_preprocessed`] returns for a segmented file.
+    pub fn load_all(&self) -> Result<Preprocessed> {
+        let mut pre = self.load_light()?;
+        for i in 0..self.num_partitions {
+            pre.cc_triples.extend(self.cc_partition(i)?);
+            pre.cs_triples.extend(self.cs_partition(i)?);
         }
         Ok(pre)
     }
 
-    /// On-disk record size of directory entry `idx` (cc 28, cs 36,
-    /// set_deps/cc_of/cs_of 16, large_components 24).
-    fn record_bytes(&self, idx: usize) -> usize {
-        let np = self.num_partitions;
-        if idx < np {
-            CcTriple::RECORD_BYTES
-        } else if idx < 2 * np {
-            CsTriple::RECORD_BYTES
-        } else if idx == 2 * np + 3 {
-            <(u64, u64, u64)>::RECORD_BYTES
-        } else {
-            <(u64, u64)>::RECORD_BYTES
-        }
-    }
-
-    fn read_section<T: SegmentCodec>(&self, idx: usize) -> Result<Vec<T>> {
-        io_probe(FaultSite::SegmentIo)?;
-        debug_assert_eq!(T::RECORD_BYTES, self.record_bytes(idx));
-        let (offset, rows) = self.dir[idx];
-        let mut f = std::fs::File::open(&self.path)?;
-        f.seek(SeekFrom::Start(offset))?;
-        let mut buf = vec![0u8; rows as usize * T::RECORD_BYTES];
-        f.read_exact(&mut buf).context("read section payload")?;
-        Ok(buf.chunks_exact(T::RECORD_BYTES).map(T::decode).collect())
+    /// Whether sections are compressed columnar blocks (v5) or raw
+    /// fixed-width records (v4).
+    pub fn is_compressed(&self) -> bool {
+        self.compressed
     }
 
     pub fn theta(&self) -> usize {
@@ -544,6 +685,17 @@ impl SegmentedPre {
     /// Row count of cs partition `i` (from the directory — no IO).
     pub fn cs_rows(&self, i: usize) -> usize {
         self.dir[self.num_partitions + i].1 as usize
+    }
+
+    /// On-disk payload bytes of cc partition `i` — the compressed block
+    /// size in v5 (from the directory — no IO).
+    pub fn cc_bytes(&self, i: usize) -> u64 {
+        self.dir[i].2
+    }
+
+    /// On-disk payload bytes of cs partition `i` (see [`Self::cc_bytes`]).
+    pub fn cs_bytes(&self, i: usize) -> u64 {
+        self.dir[self.num_partitions + i].2
     }
 
     /// Component-tagged triples of partition `i` — the rows whose `dst`
@@ -828,14 +980,14 @@ mod tests {
     }
 
     #[test]
-    fn v4_roundtrip_preserves_fingerprint_and_shard_fields() {
+    fn segmented_roundtrip_preserves_fingerprint_and_shard_fields() {
         let (trace, g, splits) =
             generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
         let mut pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
         assert_ne!(pre.workflow_fingerprint, 0, "preprocess records the workflow");
         pre.shard_index = 2;
         pre.shard_count = 4;
-        let p = tmp("pre_v4.bin");
+        let p = tmp("pre_v5.bin");
         save_preprocessed(&p, &pre).unwrap();
         let loaded = load_preprocessed(&p).unwrap();
         assert_eq!(loaded.workflow_fingerprint, pre.workflow_fingerprint);
@@ -846,14 +998,15 @@ mod tests {
     }
 
     #[test]
-    fn v4_partitions_match_engine_partitioning() {
+    fn segmented_partitions_match_engine_partitioning() {
         use crate::minispark::HashPartitioner;
         let (trace, g, splits) =
             generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
         let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
-        let p = tmp("pre_v4_parts.bin");
+        let p = tmp("pre_v5_parts.bin");
         save_preprocessed_with_partitions(&p, &pre, 8).unwrap();
         let seg = SegmentedPre::open(&p).unwrap();
+        assert!(seg.is_compressed(), "the default writer produces v5 blocks");
         assert_eq!(seg.num_partitions(), 8);
         assert_eq!(seg.theta(), pre.theta);
         assert_eq!(seg.epoch(), pre.epoch);
@@ -916,6 +1069,121 @@ mod tests {
         assert_eq!(loaded.set_count, pre.set_count);
     }
 
+    /// The exact v4 (`PSPKPRE4`) layout as PRs 6–8 wrote it — a frozen
+    /// regression fixture for backwards compatibility, kept in sync with
+    /// nothing (that is the point: old files must keep loading verbatim).
+    fn save_preprocessed_v4_frozen(path: &std::path::Path, pre: &Preprocessed, np: usize) {
+        use crate::minispark::HashPartitioner;
+        let parter = HashPartitioner::new(np);
+        let mut cc: Vec<Vec<CcTriple>> = vec![Vec::new(); np];
+        for t in &pre.cc_triples {
+            cc[parter.partition_of(t.triple.dst.raw())].push(*t);
+        }
+        let mut cs: Vec<Vec<CsTriple>> = vec![Vec::new(); np];
+        for t in &pre.cs_triples {
+            cs[parter.partition_of(t.dst_csid.0)].push(*t);
+        }
+        let f = std::fs::File::create(path).unwrap();
+        let mut w = BufWriter::new(f);
+        w.write_all(b"PSPKPRE4").unwrap();
+        for v in [
+            pre.theta as u64,
+            pre.big_threshold as u64,
+            pre.epoch,
+            pre.workflow_fingerprint,
+            pre.shard_index,
+            pre.shard_count,
+            pre.component_count as u64,
+            pre.set_count as u64,
+            np as u64,
+        ] {
+            w_u64(&mut w, v).unwrap();
+        }
+        let entries = 2 * np + 4;
+        let mut at = (80 + entries * 16) as u64;
+        let mut dir: Vec<(u64, u64)> = Vec::new();
+        for p in &cc {
+            dir.push((at, p.len() as u64));
+            at += (p.len() * 28) as u64;
+        }
+        for p in &cs {
+            dir.push((at, p.len() as u64));
+            at += (p.len() * 36) as u64;
+        }
+        for rows in [pre.set_deps.len(), pre.cc_of.len(), pre.cs_of.len()] {
+            dir.push((at, rows as u64));
+            at += (rows * 16) as u64;
+        }
+        dir.push((at, pre.large_components.len() as u64));
+        for (offset, rows) in dir {
+            w_u64(&mut w, offset).unwrap();
+            w_u64(&mut w, rows).unwrap();
+        }
+        for p in &cc {
+            for t in p {
+                w_triple(&mut w, &t.triple).unwrap();
+                w_u64(&mut w, t.ccid.0).unwrap();
+            }
+        }
+        for p in &cs {
+            for t in p {
+                w_triple(&mut w, &t.triple).unwrap();
+                w_u64(&mut w, t.src_csid.0).unwrap();
+                w_u64(&mut w, t.dst_csid.0).unwrap();
+            }
+        }
+        for d in &pre.set_deps {
+            w_u64(&mut w, d.src_csid.0).unwrap();
+            w_u64(&mut w, d.dst_csid.0).unwrap();
+        }
+        for (&n, &c) in &pre.cc_of {
+            w_u64(&mut w, n).unwrap();
+            w_u64(&mut w, c).unwrap();
+        }
+        for (&n, &c) in &pre.cs_of {
+            w_u64(&mut w, n).unwrap();
+            w_u64(&mut w, c).unwrap();
+        }
+        for &(ccid, nodes, edges) in &pre.large_components {
+            w_u64(&mut w, ccid).unwrap();
+            w_u64(&mut w, nodes as u64).unwrap();
+            w_u64(&mut w, edges as u64).unwrap();
+        }
+        w.flush().unwrap();
+    }
+
+    #[test]
+    fn v4_file_still_loads_identically() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
+        let mut pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        pre.epoch = 9;
+        pre.shard_index = 1;
+        pre.shard_count = 2;
+        let p = tmp("pre_v4_frozen.bin");
+        save_preprocessed_v4_frozen(&p, &pre, 8);
+        let loaded = load_preprocessed(&p).unwrap();
+        assert_eq!(loaded.theta, pre.theta);
+        assert_eq!(loaded.epoch, 9);
+        assert_eq!(loaded.workflow_fingerprint, pre.workflow_fingerprint);
+        assert_eq!(loaded.shard_index, 1);
+        assert_eq!(loaded.shard_count, 2);
+        assert_eq!(sorted_cc(loaded.cc_triples), sorted_cc(pre.cc_triples.clone()));
+        assert_eq!(sorted_cs(loaded.cs_triples), sorted_cs(pre.cs_triples.clone()));
+        assert_eq!(loaded.set_deps, pre.set_deps);
+        assert_eq!(loaded.cc_of, pre.cc_of);
+        assert_eq!(loaded.cs_of, pre.cs_of);
+        assert_eq!(loaded.large_components, pre.large_components);
+        assert_eq!(loaded.component_count, pre.component_count);
+        assert_eq!(loaded.set_count, pre.set_count);
+        // The production v4 writer still emits the frozen layout, byte for
+        // byte, and readers classify it as uncompressed.
+        let p2 = tmp("pre_v4_prod.bin");
+        save_preprocessed_v4(&p2, &pre, 8).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), std::fs::read(&p2).unwrap());
+        assert!(!SegmentedPre::open(&p).unwrap().is_compressed());
+    }
+
     #[test]
     fn v4_truncated_and_corrupt_files_name_the_path() {
         // Implausible partition count: the directory could never fit.
@@ -951,24 +1219,131 @@ mod tests {
             err.contains("v4_overrun.bin") && err.contains("exceeds"),
             "error must name the path and the overrun: {err}"
         );
+    }
 
-        // Payload truncated after a successful open: the partition read
-        // fails with the path and the partition named.
+    #[test]
+    fn v5_truncated_and_corrupt_files_name_the_path() {
+        // Implausible partition count: the directory could never fit.
+        let p = tmp("v5_huge_np.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKPRE5");
+        bytes.extend_from_slice(&[0u8; 8 * 8]); // 8 zero header fields
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // partition count
+        std::fs::write(&p, bytes).unwrap();
+        for err in [
+            format!("{:#}", SegmentedPre::open(&p).unwrap_err()),
+            format!("{:#}", load_preprocessed(&p).unwrap_err()),
+        ] {
+            assert!(
+                err.contains("v5_huge_np.bin") && err.contains("implausible"),
+                "expected a named implausible-count error: {err}"
+            );
+        }
+
+        // A compressed block whose bytes overrun the file.
+        let p = tmp("v5_overrun.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKPRE5");
+        bytes.extend_from_slice(&[0u8; 8 * 8]);
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // np = 1
+        // 6 directory entries of 24 bytes: cc0 claims a 1000-byte block
+        // with no payload behind it.
+        bytes.extend_from_slice(&224u64.to_le_bytes()); // offset past directory
+        bytes.extend_from_slice(&10u64.to_le_bytes()); // rows
+        bytes.extend_from_slice(&1000u64.to_le_bytes()); // block bytes
+        bytes.extend_from_slice(&[0u8; 5 * 24]);
+        std::fs::write(&p, bytes).unwrap();
+        let err = format!("{:#}", SegmentedPre::open(&p).unwrap_err());
+        assert!(
+            err.contains("v5_overrun.bin") && err.contains("exceeds"),
+            "error must name the path and the overrun: {err}"
+        );
+
+        // A directory claiming more rows than the block has bytes: caught
+        // at open, before any row-count-sized allocation.
+        let p = tmp("v5_rows_gt_bytes.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PSPKPRE5");
+        bytes.extend_from_slice(&[0u8; 8 * 8]);
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&224u64.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // rows
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // block bytes
+        bytes.extend_from_slice(&[0u8; 5 * 24]);
+        bytes.extend_from_slice(&[0u8; 2]); // the 2-byte "block"
+        std::fs::write(&p, bytes).unwrap();
+        let err = format!("{:#}", SegmentedPre::open(&p).unwrap_err());
+        assert!(
+            err.contains("v5_rows_gt_bytes.bin") && err.contains("claims"),
+            "expected a named rows-vs-bytes error: {err}"
+        );
+
         let (trace, g, splits) =
             generate(&GeneratorConfig { scale_divisor: 3000, ..Default::default() });
         let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
-        let p = tmp("v4_trunc_payload.bin");
+
+        // Payload truncated after a successful open: the section read
+        // fails with the path and the section named.
+        let p = tmp("v5_trunc_payload.bin");
         save_preprocessed_with_partitions(&p, &pre, 4).unwrap();
         let seg = SegmentedPre::open(&p).unwrap();
         let full = std::fs::read(&p).unwrap();
-        // Keep only the header + directory (np = 4 → 80 + 12×16 bytes):
+        // Keep only the header + directory (np = 4 → 80 + 12×24 bytes):
         // every payload read must now come up short.
-        std::fs::write(&p, &full[..80 + 12 * 16]).unwrap();
+        std::fs::write(&p, &full[..80 + 12 * 24]).unwrap();
         let err = format!("{:#}", seg.cs_of().unwrap_err());
         assert!(
-            err.contains("v4_trunc_payload.bin") && err.contains("cs_of"),
+            err.contains("v5_trunc_payload.bin") && err.contains("cs_of"),
             "error must name the path and the section: {err}"
         );
+
+        // Garbage inside a block body: the varint decoder must error (never
+        // panic), naming the path and the partition.
+        let p = tmp("v5_garbage_block.bin");
+        save_preprocessed_with_partitions(&p, &pre, 4).unwrap();
+        let seg = SegmentedPre::open(&p).unwrap();
+        let mut full = std::fs::read(&p).unwrap();
+        let payload_at = 80 + 12 * 24;
+        for b in &mut full[payload_at..] {
+            *b = 0xff;
+        }
+        std::fs::write(&p, full).unwrap();
+        let mut failures = 0;
+        for i in 0..4 {
+            if seg.cc_rows(i) == 0 {
+                continue;
+            }
+            let err = format!("{:#}", seg.cc_partition(i).unwrap_err());
+            assert!(
+                err.contains("v5_garbage_block.bin") && err.contains(&format!("partition {i}")),
+                "expected a named decode error: {err}"
+            );
+            failures += 1;
+        }
+        assert!(failures > 0, "the generated trace must fill at least one cc partition");
+    }
+
+    #[test]
+    fn v5_is_measurably_smaller_than_v4() {
+        let (trace, g, splits) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let pre = preprocess(&trace, &g, &splits, 200, 100, WccImpl::Driver);
+        let p5 = tmp("size_v5.bin");
+        let p4 = tmp("size_v4.bin");
+        save_preprocessed_with_partitions(&p5, &pre, 16).unwrap();
+        save_preprocessed_v4(&p4, &pre, 16).unwrap();
+        let (s5, s4) =
+            (std::fs::metadata(&p5).unwrap().len(), std::fs::metadata(&p4).unwrap().len());
+        assert!(
+            s5 * 10 < s4 * 9,
+            "v5 must be ≥10% smaller than v4 on a generated trace: {s5} vs {s4}"
+        );
+        // And both load to the same index.
+        let (l5, l4) = (load_preprocessed(&p5).unwrap(), load_preprocessed(&p4).unwrap());
+        assert_eq!(sorted_cc(l5.cc_triples), sorted_cc(l4.cc_triples));
+        assert_eq!(sorted_cs(l5.cs_triples), sorted_cs(l4.cs_triples));
+        assert_eq!(l5.set_deps, l4.set_deps);
+        assert_eq!(l5.cc_of, l4.cc_of);
     }
 
     /// The exact v2 (`PSPKPRE2`) layout as PR 3 wrote it — a regression

@@ -30,6 +30,21 @@ struct Slot {
     pins: u32,
     /// LRU clock value of the last fetch.
     last_used: u64,
+    /// Loaded by readahead and not yet claimed by a demand fetch: the
+    /// first demand hit on this entry counts as a `prefetch_hit`.
+    prefetched: bool,
+}
+
+/// How a fetch is attributed in the metrics: a [`Demand`](Self::Demand)
+/// fetch sits on the query's critical path (hits and misses count, and a
+/// hit on a still-warm prefetched entry counts as a `prefetch_hit`); a
+/// [`Prefetch`](Self::Prefetch) fetch runs off the critical path (its IO
+/// volume counts, but it is neither a cache hit nor a cache miss, and the
+/// entry it loads is marked prefetched).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchKind {
+    Demand,
+    Prefetch,
 }
 
 #[derive(Default)]
@@ -103,16 +118,42 @@ impl PartitionCache {
     /// Returns the rows, whether this was a hit, and a [`PinGuard`] that
     /// keeps the entry unevictable until dropped.
     ///
-    /// The loader runs *outside* the cache lock, so slow segment IO never
-    /// serializes unrelated lookups. Two threads racing on the same cold
-    /// segment may both decode it (both observe a miss); the first insert
-    /// wins the cache slot and both results are valid reads of the same
-    /// immutable segment.
+    /// For sources whose on-disk size equals the decoded size — see
+    /// [`get_or_load_sized`](Self::get_or_load_sized) for the compressed
+    /// path and the exact accounting.
     pub fn get_or_load<T: Send + Sync + 'static>(
         self: &Arc<Self>,
         file: u64,
         seg: u32,
         load: impl FnOnce() -> Result<Vec<T>>,
+    ) -> Result<(Arc<Vec<T>>, bool, PinGuard)> {
+        self.get_or_load_sized(file, seg, FetchKind::Demand, || {
+            let rows = load()?;
+            let disk = (rows.len() * std::mem::size_of::<T>()) as u64;
+            Ok((rows, disk))
+        })
+    }
+
+    /// [`get_or_load`](Self::get_or_load) for sources whose on-disk size
+    /// differs from the decoded size (compressed v5 blocks): the loader
+    /// returns `(rows, disk_bytes)`. The budget and
+    /// [`resident_bytes`](Self::resident_bytes) charge the **decoded**
+    /// in-memory size — that is what competes for RAM — while
+    /// `bytes_paged_in` charges the on-disk bytes actually read and
+    /// `bytes_decoded` the decoded volume, so compression shows up as the
+    /// gap between the two.
+    ///
+    /// The loader runs *outside* the cache lock, so slow segment IO never
+    /// serializes unrelated lookups. Two threads racing on the same cold
+    /// segment may both decode it (both observe a miss); the first insert
+    /// wins the cache slot and both results are valid reads of the same
+    /// immutable segment.
+    pub fn get_or_load_sized<T: Send + Sync + 'static>(
+        self: &Arc<Self>,
+        file: u64,
+        seg: u32,
+        kind: FetchKind,
+        load: impl FnOnce() -> Result<(Vec<T>, u64)>,
     ) -> Result<(Arc<Vec<T>>, bool, PinGuard)> {
         {
             let mut g = self.inner.lock().unwrap();
@@ -121,18 +162,31 @@ impl PartitionCache {
             if let Some(e) = g.map.get_mut(&(file, seg)) {
                 e.pins += 1;
                 e.last_used = tick;
+                let served_prefetch = e.prefetched && kind == FetchKind::Demand;
+                if served_prefetch {
+                    e.prefetched = false; // a warmed page pays out once
+                }
                 let data = Arc::clone(&e.data)
                     .downcast::<Vec<T>>()
                     .expect("partition cache key maps to a different row type");
                 drop(g);
-                self.metrics.add_cache_hit();
+                if kind == FetchKind::Demand {
+                    self.metrics.add_cache_hit();
+                    if served_prefetch {
+                        self.metrics.add_prefetch_hit();
+                    }
+                }
                 return Ok((data, true, PinGuard::new(self, file, seg)));
             }
         }
-        let data = Arc::new(load()?);
+        let (rows, disk_bytes) = load()?;
+        let data = Arc::new(rows);
         let bytes = (data.len() * std::mem::size_of::<T>()) as u64;
-        self.metrics.add_cache_miss();
-        self.metrics.add_bytes_paged_in(bytes);
+        if kind == FetchKind::Demand {
+            self.metrics.add_cache_miss();
+        }
+        self.metrics.add_bytes_paged_in(disk_bytes);
+        self.metrics.add_bytes_decoded(bytes);
         let mut g = self.inner.lock().unwrap();
         g.tick += 1;
         let tick = g.tick;
@@ -149,6 +203,7 @@ impl PartitionCache {
                     bytes,
                     pins: 1,
                     last_used: tick,
+                    prefetched: kind == FetchKind::Prefetch,
                 });
                 g.resident_bytes += bytes;
                 self.evict_locked(&mut g);
@@ -156,6 +211,12 @@ impl PartitionCache {
         }
         drop(g);
         Ok((data, false, PinGuard::new(self, file, seg)))
+    }
+
+    /// Whether `(file, seg)` is resident right now — no pin taken, no
+    /// metrics touched. The readahead planner's cheap pre-check.
+    pub fn contains(&self, file: u64, seg: u32) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&(file, seg))
     }
 
     /// Warm-insert a partition the caller already holds (a fresh spill):
@@ -172,6 +233,7 @@ impl PartitionCache {
                 bytes,
                 pins: 0,
                 last_used: tick,
+                prefetched: false,
             });
             g.resident_bytes += bytes;
             self.evict_locked(&mut g);
@@ -326,6 +388,49 @@ mod tests {
         assert_eq!(m.evictions, 1);
         let (_, hit, _p) = c.get_or_load(f, 1, || unreachable!()).unwrap();
         assert!(hit, "admitted entry serves the first fetch warm");
+    }
+
+    #[test]
+    fn sized_loads_charge_disk_and_decoded_separately() {
+        let c = Arc::new(PartitionCache::new(0));
+        let f = c.register_file();
+        // 10 decoded u64 rows (80 bytes) from a 16-byte compressed read.
+        let (_, hit, _p) = c
+            .get_or_load_sized(f, 0, FetchKind::Demand, || Ok((rows(10, 1), 16)))
+            .unwrap();
+        assert!(!hit);
+        let m = c.metrics().snapshot();
+        assert_eq!(m.bytes_paged_in, 16, "paged-in charges the on-disk size");
+        assert_eq!(m.bytes_decoded, 80, "decoded charges the in-memory size");
+        assert_eq!(c.resident_bytes(), 80, "the budget governs decoded bytes");
+    }
+
+    #[test]
+    fn prefetch_loads_are_not_misses_and_pay_out_one_hit() {
+        let c = Arc::new(PartitionCache::new(0));
+        let f = c.register_file();
+        assert!(!c.contains(f, 0));
+        let (_, hit, _p) = c
+            .get_or_load_sized(f, 0, FetchKind::Prefetch, || Ok((rows(10, 1), 80)))
+            .unwrap();
+        assert!(!hit);
+        assert!(c.contains(f, 0));
+        let m = c.metrics().snapshot();
+        assert_eq!(
+            (m.cache_hits, m.cache_misses),
+            (0, 0),
+            "prefetch stays off the demand counters"
+        );
+        assert_eq!(m.bytes_paged_in, 80, "but its IO volume is real");
+        // First demand fetch: a hit, attributed to the prefetch.
+        let (_, hit, _q) = c.get_or_load::<u64>(f, 0, || unreachable!()).unwrap();
+        assert!(hit);
+        // Second demand fetch: a plain hit.
+        let (_, hit, _r) = c.get_or_load::<u64>(f, 0, || unreachable!()).unwrap();
+        assert!(hit);
+        let m = c.metrics().snapshot();
+        assert_eq!((m.cache_hits, m.cache_misses), (2, 0));
+        assert_eq!(m.prefetch_hits, 1, "a warmed page pays out exactly once");
     }
 
     #[test]

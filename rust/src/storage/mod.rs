@@ -24,14 +24,33 @@
 //!   therefore independent of the budget — a pathologically tiny budget
 //!   just thrashes.
 //!
+//! Two IO-shaping layers ride on that contract:
+//!
+//! * **Frontier-driven prefetch** ([`prefetch`]): a BFS frontier names the
+//!   partitions the *next* round will fault a full round early, so engines
+//!   hand that partition set to a background readahead pool that warms
+//!   (and pins) the cache off the critical path. Prefetch is purely a
+//!   performance layer — it is disabled under armed fault plans, by
+//!   `PROVSPARK_PREFETCH=off`, or with `prefetch_depth = 0`, and answers
+//!   never depend on it.
+//! * **Compressed columnar blocks** ([`segment::compress_columnar`]): the
+//!   v5 preprocessed store writes each partition as delta+varint column
+//!   streams, trading decode CPU for the disk bytes that dominate paging.
+//!
 //! The cache reports `cache_hits` / `cache_misses` / `evictions` /
-//! `bytes_spilled` / `bytes_paged_in` through the engine-wide
+//! `bytes_spilled` / `bytes_paged_in` / `bytes_decoded` — plus
+//! `prefetch_issued` / `prefetch_hits` — through the engine-wide
 //! [`EngineMetrics`](crate::minispark::EngineMetrics), and per-query
 //! attribution flows through [`ScanCost`](crate::minispark::ScanCost).
 //! See `ARCHITECTURE.md` § "Memory hierarchy & segment store".
 
 pub mod cache;
+pub mod prefetch;
 pub mod segment;
 
-pub use cache::{PartitionCache, PinGuard};
-pub use segment::{write_segments, SegmentCodec, SegmentFile};
+pub use cache::{FetchKind, PartitionCache, PinGuard};
+pub use prefetch::{prefetch_enabled, PrefetchBatch, Prefetcher};
+pub use segment::{
+    compress_columnar, decompress_columnar, write_segments, ColumnarCodec, SegmentCodec,
+    SegmentFile,
+};

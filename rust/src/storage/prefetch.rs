@@ -1,0 +1,185 @@
+//! Frontier-driven readahead: a tiny background pool that warms the
+//! [`PartitionCache`](crate::storage::PartitionCache) ahead of the fault.
+//!
+//! At the end of a BFS round the engines already know — from the
+//! [`HashPartitioner`](crate::minispark::HashPartitioner) keying — exactly
+//! which partitions the *next* round's `multi_lookup` will touch. A
+//! [`Prefetcher`] turns that free oracle into IO overlap: the dataset
+//! layer enqueues one job per cold partition, a worker loads and decodes
+//! it through the cache's prefetch path (counted as `prefetch_issued`,
+//! never as a `cache_miss`), and parks the pin in the round's
+//! [`PrefetchBatch`] so the page cannot be evicted before the round that
+//! asked for it runs. When the demand lookup later hits the warmed entry,
+//! the hit is attributed as a `prefetch_hit`.
+//!
+//! Prefetch is strictly a performance layer: answers are byte-identical
+//! with it on, off (`PROVSPARK_PREFETCH=off`, or `prefetch_depth = 0`),
+//! or racing — a job that loses its race simply finds the entry resident.
+//! It is disabled entirely while a fault plan is armed, because the
+//! deterministic fault sequences are defined over the *demand* IO order
+//! and a background probe would consume their draws.
+
+use crate::storage::cache::PinGuard;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Process-wide kill switch: `PROVSPARK_PREFETCH=off` disables every
+/// prefetcher in the process (read once, cached).
+pub fn prefetch_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        !std::env::var("PROVSPARK_PREFETCH").is_ok_and(|v| v.eq_ignore_ascii_case("off"))
+    })
+}
+
+/// One readahead unit: loads a partition through the cache and parks the
+/// pin. Errors are swallowed inside the job — the demand path will retry
+/// the IO and surface them with full context.
+pub type Job = Box<dyn FnOnce() + Send>;
+
+/// Readahead workers per context: enough to overlap decode with the
+/// round's compute without contending with the task pool for cores.
+const WORKER_THREADS: usize = 2;
+
+struct Workers {
+    tx: Sender<Job>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// A lazily-spawned background pool for readahead jobs. One per
+/// [`MiniSpark`](crate::minispark::MiniSpark) context; dropping it closes
+/// the queue and joins the workers, so no job outlives the context (or
+/// its spill directory).
+#[derive(Default)]
+pub struct Prefetcher {
+    workers: Mutex<Option<Workers>>,
+}
+
+impl Prefetcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue one readahead job. Worker threads spawn on first use, so
+    /// contexts that never prefetch never pay for the pool.
+    pub fn submit(&self, job: Job) {
+        let mut g = self.workers.lock().unwrap();
+        let w = g.get_or_insert_with(|| {
+            let (tx, rx) = channel::<Job>();
+            let rx = Arc::new(Mutex::new(rx));
+            let handles = (0..WORKER_THREADS)
+                .map(|i| {
+                    let rx = Arc::clone(&rx);
+                    std::thread::Builder::new()
+                        .name(format!("provspark-prefetch-{i}"))
+                        .spawn(move || worker_loop(&rx))
+                        .expect("spawning a prefetch worker")
+                })
+                .collect();
+            Workers { tx, handles }
+        });
+        // The receiver only disappears at shutdown; dropping the job then
+        // is exactly the right behavior.
+        let _ = w.tx.send(job);
+    }
+}
+
+fn worker_loop(rx: &Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        // Take the job with the lock released before running it, so one
+        // slow decode never serializes the other worker.
+        let job = rx.lock().unwrap().recv();
+        match job {
+            Ok(job) => job(),
+            Err(_) => break, // queue closed: the Prefetcher is dropping
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        if let Some(w) = self.workers.lock().unwrap().take() {
+            drop(w.tx); // close the queue; workers drain what's left and exit
+            for h in w.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Prefetcher {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let spawned = self.workers.lock().unwrap().is_some();
+        f.debug_struct("Prefetcher").field("spawned", &spawned).finish()
+    }
+}
+
+/// The pins one round of readahead acquired. Hold it across the BFS round
+/// the pages were fetched for, then drop (or overwrite) it: prefetched
+/// partitions stay unevictable until their round has consumed them, and
+/// release immediately after.
+///
+/// In-flight jobs share the sink through an `Arc`, so a pin pushed after
+/// the batch dropped is released when the last job's handle goes away —
+/// nothing leaks, nothing stays pinned past its round plus the job tail.
+pub struct PrefetchBatch {
+    pins: Arc<Mutex<Vec<PinGuard>>>,
+}
+
+impl PrefetchBatch {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self { pins: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    /// The shared sink readahead jobs push their pins into.
+    pub fn pin_sink(&self) -> Arc<Mutex<Vec<PinGuard>>> {
+        Arc::clone(&self.pins)
+    }
+}
+
+impl Drop for PrefetchBatch {
+    fn drop(&mut self) {
+        self.pins.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn jobs_run_and_shutdown_joins() {
+        let p = Prefetcher::new();
+        let n = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let n = Arc::clone(&n);
+            p.submit(Box::new(move || {
+                n.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        // Dropping joins the workers, so every queued job has run.
+        drop(p);
+        assert_eq!(n.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn batch_drop_releases_pins() {
+        use crate::storage::cache::{FetchKind, PartitionCache};
+        let c = Arc::new(PartitionCache::new(8)); // budget below one partition
+        let f = c.register_file();
+        let batch = PrefetchBatch::new();
+        let sink = batch.pin_sink();
+        let (_, _, pin) = c
+            .get_or_load_sized(f, 0, FetchKind::Prefetch, || Ok((vec![1u64, 2], 4)))
+            .unwrap();
+        sink.lock().unwrap().push(pin);
+        // Pinned by the batch: survives being over budget.
+        assert_eq!(c.resident_partitions(), 1);
+        drop(batch);
+        // Pin released with the batch: the entry is evictable again.
+        assert_eq!(c.resident_partitions(), 0);
+    }
+}

@@ -138,6 +138,218 @@ impl SegmentCodec for (u64, u64, u64) {
     }
 }
 
+/// Column view of a fixed-width record, for the delta+varint compressed
+/// blocks the v5 preprocessed store writes (see [`compress_columnar`]).
+/// Each record exposes `COLUMNS` `u64` columns; narrower fields (the
+/// `u32` op id) widen losslessly.
+pub trait ColumnarCodec: SegmentCodec {
+    const COLUMNS: usize;
+    /// Column `c` of this record as a `u64` (`c < COLUMNS`).
+    fn column(&self, c: usize) -> u64;
+    /// Rebuild a record from its `COLUMNS` column values.
+    fn from_columns(cols: &[u64]) -> Self;
+}
+
+impl ColumnarCodec for ProvTriple {
+    const COLUMNS: usize = 3;
+
+    fn column(&self, c: usize) -> u64 {
+        match c {
+            0 => self.src.raw(),
+            1 => self.dst.raw(),
+            _ => u64::from(self.op.0),
+        }
+    }
+
+    fn from_columns(cols: &[u64]) -> Self {
+        ProvTriple::new(AttrValueId(cols[0]), AttrValueId(cols[1]), OpId(cols[2] as u32))
+    }
+}
+
+impl ColumnarCodec for CcTriple {
+    const COLUMNS: usize = 4;
+
+    fn column(&self, c: usize) -> u64 {
+        if c < 3 {
+            self.triple.column(c)
+        } else {
+            self.ccid.0
+        }
+    }
+
+    fn from_columns(cols: &[u64]) -> Self {
+        CcTriple { triple: ProvTriple::from_columns(&cols[..3]), ccid: ComponentId(cols[3]) }
+    }
+}
+
+impl ColumnarCodec for CsTriple {
+    const COLUMNS: usize = 5;
+
+    fn column(&self, c: usize) -> u64 {
+        match c {
+            0..=2 => self.triple.column(c),
+            3 => self.src_csid.0,
+            _ => self.dst_csid.0,
+        }
+    }
+
+    fn from_columns(cols: &[u64]) -> Self {
+        CsTriple {
+            triple: ProvTriple::from_columns(&cols[..3]),
+            src_csid: SetId(cols[3]),
+            dst_csid: SetId(cols[4]),
+        }
+    }
+}
+
+impl ColumnarCodec for SetDep {
+    const COLUMNS: usize = 2;
+
+    fn column(&self, c: usize) -> u64 {
+        if c == 0 {
+            self.src_csid.0
+        } else {
+            self.dst_csid.0
+        }
+    }
+
+    fn from_columns(cols: &[u64]) -> Self {
+        SetDep { src_csid: SetId(cols[0]), dst_csid: SetId(cols[1]) }
+    }
+}
+
+impl ColumnarCodec for (u64, u64) {
+    const COLUMNS: usize = 2;
+
+    fn column(&self, c: usize) -> u64 {
+        if c == 0 {
+            self.0
+        } else {
+            self.1
+        }
+    }
+
+    fn from_columns(cols: &[u64]) -> Self {
+        (cols[0], cols[1])
+    }
+}
+
+impl ColumnarCodec for (u64, u64, u64) {
+    const COLUMNS: usize = 3;
+
+    fn column(&self, c: usize) -> u64 {
+        match c {
+            0 => self.0,
+            1 => self.1,
+            _ => self.2,
+        }
+    }
+
+    fn from_columns(cols: &[u64]) -> Self {
+        (cols[0], cols[1], cols[2])
+    }
+}
+
+#[inline]
+fn zigzag(d: i64) -> u64 {
+    ((d << 1) ^ (d >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+fn read_varint(b: &[u8], at: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&byte) = b.get(*at) else {
+            bail!("varint runs past the end of the block");
+        };
+        *at += 1;
+        if shift == 63 && byte & 0xfe != 0 {
+            bail!("varint overflows u64: corrupt block");
+        }
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Delta+varint compress `rows`, column by column: within each column,
+/// values are delta-encoded against the previous row (wrapping), zigzag-
+/// mapped and written as LEB128 varints, columns back-to-back. Runs of
+/// nearby ids — which is what a sorted partition holds — collapse to one
+/// byte per value. The block is self-delimiting given the row count.
+pub fn compress_columnar<T: ColumnarCodec>(rows: &[T]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(rows.len() * T::COLUMNS);
+    for c in 0..T::COLUMNS {
+        let mut prev = 0u64;
+        for r in rows {
+            let v = r.column(c);
+            write_varint(&mut out, zigzag(v.wrapping_sub(prev) as i64));
+            prev = v;
+        }
+    }
+    out
+}
+
+/// Decode a [`compress_columnar`] block of exactly `rows` records.
+/// Corrupt or truncated blocks come back as errors, never panics: the
+/// minimum plausible size is checked before any allocation, every varint
+/// is bounds-checked, and the block must be consumed exactly.
+pub fn decompress_columnar<T: ColumnarCodec>(bytes: &[u8], rows: usize) -> Result<Vec<T>> {
+    if bytes.len() < rows.saturating_mul(T::COLUMNS) {
+        bail!(
+            "compressed block of {} bytes cannot hold {rows} rows × {} columns: \
+             corrupt or truncated",
+            bytes.len(),
+            T::COLUMNS
+        );
+    }
+    let mut cols: Vec<Vec<u64>> = Vec::with_capacity(T::COLUMNS);
+    let mut at = 0usize;
+    for c in 0..T::COLUMNS {
+        let mut col = Vec::with_capacity(rows);
+        let mut prev = 0u64;
+        for r in 0..rows {
+            let z = read_varint(bytes, &mut at)
+                .with_context(|| format!("decoding row {r} of column {c}"))?;
+            let v = prev.wrapping_add(unzigzag(z) as u64);
+            col.push(v);
+            prev = v;
+        }
+        cols.push(col);
+    }
+    if at != bytes.len() {
+        bail!(
+            "{} trailing bytes after {rows} rows × {} columns: corrupt block",
+            bytes.len() - at,
+            T::COLUMNS
+        );
+    }
+    let mut scratch = vec![0u64; T::COLUMNS];
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        for (s, col) in scratch.iter_mut().zip(&cols) {
+            *s = col[r];
+        }
+        out.push(T::from_columns(&scratch));
+    }
+    Ok(out)
+}
+
 /// Write `parts` as one segment file at `path` (one segment per
 /// partition, empty partitions included so indexes line up). Returns the
 /// payload bytes written — what a spill reports as `bytes_spilled`.
@@ -390,6 +602,93 @@ mod tests {
         let f = SegmentFile::open(&p).unwrap();
         let err = format!("{:#}", f.read_segment::<ProvTriple>(0).unwrap_err());
         assert!(err.contains("mismatch.seg") && err.contains("record size mismatch"));
+    }
+
+    #[test]
+    fn columnar_roundtrips_every_type_including_empty_and_unsorted() {
+        let trip = triples(9, 3);
+        assert_eq!(
+            decompress_columnar::<ProvTriple>(&compress_columnar(&trip), trip.len()).unwrap(),
+            trip
+        );
+        let cc: Vec<CcTriple> = triples(7, 0)
+            .into_iter()
+            .rev() // deliberately unsorted
+            .map(|t| CcTriple { triple: t, ccid: ComponentId(t.dst.raw() % 3) })
+            .collect();
+        assert_eq!(decompress_columnar::<CcTriple>(&compress_columnar(&cc), cc.len()).unwrap(), cc);
+        let cs: Vec<CsTriple> = triples(7, 5)
+            .into_iter()
+            .map(|t| CsTriple { triple: t, src_csid: SetId(t.src.raw()), dst_csid: SetId(2) })
+            .collect();
+        assert_eq!(decompress_columnar::<CsTriple>(&compress_columnar(&cs), cs.len()).unwrap(), cs);
+        let deps = vec![SetDep { src_csid: SetId(u64::MAX), dst_csid: SetId(0) }];
+        assert_eq!(
+            decompress_columnar::<SetDep>(&compress_columnar(&deps), deps.len()).unwrap(),
+            deps
+        );
+        let pairs = vec![(u64::MAX, 0u64), (0, u64::MAX), (5, 5)];
+        assert_eq!(
+            decompress_columnar::<(u64, u64)>(&compress_columnar(&pairs), pairs.len()).unwrap(),
+            pairs
+        );
+        let wide = vec![(1u64, 2u64, 3u64), (4, 5, 6)];
+        assert_eq!(
+            decompress_columnar::<(u64, u64, u64)>(&compress_columnar(&wide), wide.len())
+                .unwrap(),
+            wide
+        );
+        // The empty block is the empty byte string.
+        let empty: Vec<ProvTriple> = Vec::new();
+        assert!(compress_columnar(&empty).is_empty());
+        assert!(decompress_columnar::<ProvTriple>(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn columnar_blocks_beat_raw_records_on_sorted_ids() {
+        let mut rows = triples(500, 0);
+        rows.sort_by_key(|t| (t.dst.raw(), t.src.raw()));
+        let block = compress_columnar(&rows);
+        let raw = rows.len() * ProvTriple::RECORD_BYTES;
+        assert!(
+            block.len() * 2 < raw,
+            "sorted ids must compress at least 2x: {} vs {raw}",
+            block.len()
+        );
+    }
+
+    #[test]
+    fn corrupt_columnar_blocks_are_errors_not_panics() {
+        let rows = triples(20, 0);
+        let block = compress_columnar(&rows);
+        // Truncated mid-column.
+        let err = format!(
+            "{:#}",
+            decompress_columnar::<ProvTriple>(&block[..block.len() - 1], rows.len())
+                .unwrap_err()
+        );
+        assert!(err.contains("column"), "truncation must name the column: {err}");
+        // Trailing garbage after a complete block.
+        let mut padded = block.clone();
+        padded.push(0);
+        let err = format!(
+            "{:#}",
+            decompress_columnar::<ProvTriple>(&padded, rows.len()).unwrap_err()
+        );
+        assert!(err.contains("trailing"), "expected a trailing-bytes error: {err}");
+        // A varint that never terminates within u64 range.
+        let err = format!(
+            "{:#}",
+            decompress_columnar::<SetDep>(&[0xff; 64], 2).unwrap_err()
+        );
+        assert!(err.contains("overflows"), "expected a varint-overflow error: {err}");
+        // A block far too small for the claimed row count must error before
+        // any row-count-sized allocation.
+        let err = format!(
+            "{:#}",
+            decompress_columnar::<ProvTriple>(&[0u8; 4], usize::MAX).unwrap_err()
+        );
+        assert!(err.contains("cannot hold"), "expected a plausibility error: {err}");
     }
 
     #[test]

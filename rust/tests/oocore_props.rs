@@ -2,12 +2,18 @@
 //! segment files and page partitions back through the byte-budgeted cache
 //! must answer **byte-identically** to a fully-resident session — under
 //! any budget (including a pathologically tiny one), on every engine,
-//! under sharding, across ingest, and through a persisted v4 index. A
-//! failing segment read is a typed per-item failure, never a process
-//! crash.
+//! with frontier prefetch on or off, under sharding, across ingest, and
+//! through a persisted segmented (v4/v5) index, whether reloaded whole or
+//! opened zero-copy. A failing segment read is a typed per-item failure,
+//! never a process crash.
+//!
+//! CI sweeps this whole suite twice more: once with the prefetch kill
+//! switch set (`PROVSPARK_PREFETCH=off`) and once with every budgeted
+//! session forced down to one byte (`PROVSPARK_OOCORE_BUDGET=1`).
 
 use provspark::config::EngineConfig;
 use provspark::harness::{EngineRouter, ProvSession, ShardedSession};
+use provspark::minispark::MiniSpark;
 use provspark::provenance::incremental::TripleBatch;
 use provspark::provenance::model::{ProvTriple, Trace};
 use provspark::provenance::pipeline::{preprocess, Preprocessed, WccImpl};
@@ -28,6 +34,16 @@ fn cfg(budget: u64) -> EngineConfig {
     let mut cfg = EngineConfig::default();
     cfg.cluster.job_overhead_us = 0;
     cfg.cluster.memory_budget = budget;
+    // `PROVSPARK_OOCORE_BUDGET` forces every *budgeted* session in the
+    // suite to the given byte budget (CI runs the sweep at 1). Unbounded
+    // (budget 0) baselines are never turned into budgeted ones — they are
+    // what the properties compare against.
+    if budget > 0 {
+        if let Ok(v) = std::env::var("PROVSPARK_OOCORE_BUDGET") {
+            cfg.cluster.memory_budget =
+                v.parse().expect("PROVSPARK_OOCORE_BUDGET must be a byte count");
+        }
+    }
     cfg
 }
 
@@ -174,15 +190,15 @@ fn ingest_into_budgeted_session_matches_unbounded() {
     }
 }
 
-/// End-to-end out-of-core path: preprocess, persist as a segmented v4
-/// file, reload, and query under a budget a fraction of the index size —
-/// answers match the original in-memory state.
+/// End-to-end out-of-core path: preprocess, persist as a segmented file
+/// (v5 by default), reload it whole, and query under a budget a fraction
+/// of the index size — answers match the original in-memory state.
 #[test]
-fn v4_persisted_index_queried_under_budget() {
+fn persisted_index_queried_under_budget() {
     let (trace, pre) = data();
     let dir = std::env::temp_dir().join("provspark_oocore_props");
     std::fs::create_dir_all(&dir).unwrap();
-    let pp = dir.join("pre_v4.bin");
+    let pp = dir.join("pre_default.bin");
     store::save_preprocessed(&pp, &pre).unwrap();
     let reloaded = Arc::new(store::load_preprocessed(&pp).unwrap());
     assert_eq!(reloaded.epoch, pre.epoch);
@@ -198,7 +214,147 @@ fn v4_persisted_index_queried_under_budget() {
     for &q in &sample_items(&trace, 6) {
         let want = clean.execute_on(EngineRouter::Auto, &QueryRequest::new(q));
         let got = ooc.execute_on(EngineRouter::Auto, &QueryRequest::new(q));
-        assert_eq!(want.lineage, got.lineage, "q={q} via v4 + budget {budget}");
+        assert_eq!(want.lineage, got.lineage, "q={q} via reloaded index + budget {budget}");
+    }
+}
+
+/// Prefetch is strictly a performance layer: with frontier readahead at
+/// the default depth and with it disabled (`prefetch_depth = 0`), every
+/// engine answers — and scans — byte-identically to the unbounded
+/// session; the enabled side actually issues readahead and the disabled
+/// side never does.
+#[test]
+fn prefetch_on_and_off_answer_identically() {
+    let (trace, pre) = data();
+    let clean = ProvSession::new(&cfg(0), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let items = sample_items(&trace, 5);
+
+    let mut off = cfg(64 * 1024);
+    off.cluster.prefetch_depth = 0;
+    let with = ProvSession::new(&cfg(64 * 1024), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let without = ProvSession::new(&off, Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    for router in [EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv] {
+        for &q in &items {
+            let want = clean.execute_on(router, &QueryRequest::new(q));
+            let a = with.execute_on(router, &QueryRequest::new(q));
+            let b = without.execute_on(router, &QueryRequest::new(q));
+            assert_eq!(
+                want.lineage, a.lineage,
+                "router={router} q={q}: prefetch changed the answer"
+            );
+            assert_eq!(
+                want.lineage, b.lineage,
+                "router={router} q={q}: prefetch_depth=0 changed the answer"
+            );
+            // Readahead only changes where partitions come from, never
+            // what the query scans.
+            assert_eq!(a.stats.partitions_scanned, b.stats.partitions_scanned);
+            assert_eq!(a.stats.rows_examined, b.stats.rows_examined);
+        }
+    }
+    let m_off = without.context().metrics().snapshot();
+    assert_eq!(m_off.prefetch_issued, 0, "depth 0 must never issue readahead");
+    // CI also runs this suite under the global kill switch; only demand
+    // issuance when it is not set.
+    let killed =
+        std::env::var("PROVSPARK_PREFETCH").is_ok_and(|v| v.eq_ignore_ascii_case("off"));
+    let m_on = with.context().metrics().snapshot();
+    if killed {
+        assert_eq!(m_on.prefetch_issued, 0, "the kill switch must win over the depth knob");
+    } else {
+        assert!(
+            m_on.prefetch_issued > 0,
+            "multi-round BFS under a budget must hand frontiers to readahead: {}",
+            m_on.summary()
+        );
+    }
+}
+
+/// Zero-copy cold start: a budgeted session opened *directly over* a
+/// segmented store — compressed v5 and uncompressed v4 — demand-pages
+/// triple partitions straight from the file and answers byte-identically
+/// to the fully-resident session, on every engine.
+#[test]
+fn segmented_v5_and_v4_sessions_answer_identically() {
+    let (trace, pre) = data();
+    let dir = std::env::temp_dir().join("provspark_oocore_props_seg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let v5 = dir.join("pre_v5.bin");
+    let v4 = dir.join("pre_v4.bin");
+    // Segment at the engines' partition count so the zero-copy build
+    // adopts the file layout instead of falling back to a full load.
+    let np = cfg(0).cluster.default_partitions;
+    store::save_preprocessed_with_partitions(&v5, &pre, np).unwrap();
+    store::save_preprocessed_v4(&v4, &pre, np).unwrap();
+
+    let clean = ProvSession::new(&cfg(0), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    let items = sample_items(&trace, 5);
+    for path in [&v5, &v4] {
+        let seg = Arc::new(store::SegmentedPre::open(path).unwrap());
+        let compressed = seg.is_compressed();
+        let ecfg = cfg(32 * 1024);
+        let sc = MiniSpark::new(ecfg.cluster.clone());
+        let s =
+            ProvSession::with_context_segmented(&sc, &ecfg, Arc::clone(&trace), seg).unwrap();
+        for router in [EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv] {
+            for &q in &items {
+                let want = clean.execute_on(router, &QueryRequest::new(q));
+                let got = s.execute_on(router, &QueryRequest::new(q));
+                assert_eq!(want.lineage, got.lineage, "router={router} q={q} via {path:?}");
+            }
+        }
+        let m = s.context().metrics().snapshot();
+        assert!(m.bytes_paged_in > 0, "queries must demand-page from {path:?}");
+        if compressed {
+            assert!(
+                m.bytes_compressed > 0,
+                "v5 page-ins must record bytes the encoding saved: {}",
+                m.summary()
+            );
+        }
+    }
+}
+
+/// The first ingest on a zero-copy session materializes the full index
+/// from the segmented store, absorbs the delta, and keeps answering like
+/// an unbounded session that ingested the same batch.
+#[test]
+fn ingest_into_segmented_session_matches_unbounded() {
+    let (trace, pre) = data();
+    let dir = std::env::temp_dir().join("provspark_oocore_props_seg_ingest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pp = dir.join("pre_v5.bin");
+    let np = cfg(0).cluster.default_partitions;
+    store::save_preprocessed_with_partitions(&pp, &pre, np).unwrap();
+    let batch = TripleBatch::new(vec![ProvTriple::new(
+        AttrValueId(u64::MAX - 33),
+        trace.triples[0].dst,
+        OpId(0),
+    )]);
+
+    let clean = ProvSession::new(&cfg(0), Arc::clone(&trace), Arc::clone(&pre)).unwrap();
+    clean.ingest(&batch).unwrap();
+
+    let ecfg = cfg(8192);
+    let sc = MiniSpark::new(ecfg.cluster.clone());
+    let seg = Arc::new(store::SegmentedPre::open(&pp).unwrap());
+    let s = ProvSession::with_context_segmented(&sc, &ecfg, Arc::clone(&trace), seg).unwrap();
+    // Query first, so the ingest runs against a session with warm paged
+    // state rather than a freshly opened one.
+    let q0 = sample_items(&trace, 1)[0];
+    let _ = s.execute_on(EngineRouter::Auto, &QueryRequest::new(q0));
+    s.ingest(&batch).unwrap();
+    assert_eq!(s.epoch(), clean.epoch());
+
+    let mut items = sample_items(&trace, 4);
+    items.push(u64::MAX - 33);
+    items.push(trace.triples[0].dst.raw());
+    for &q in &items {
+        for router in [EngineRouter::Rq, EngineRouter::CcProv, EngineRouter::CsProv] {
+            let want = clean.execute_on(router, &QueryRequest::new(q));
+            let got = s.execute_on(router, &QueryRequest::new(q));
+            assert_eq!(want.lineage, got.lineage, "router={router} q={q} after segmented ingest");
+        }
     }
 }
 
