@@ -87,6 +87,13 @@ pub struct ClusterConfig {
     /// Prefetch is also disabled process-wide by `PROVSPARK_PREFETCH=off`
     /// and automatically whenever a fault plan is armed.
     pub prefetch_depth: usize,
+    /// Adapt the readahead depth at runtime from the observed
+    /// `prefetch_hits / prefetch_issued` ratio: halve on a low hit rate,
+    /// grow back toward `prefetch_depth` (the cap) on a high one. On by
+    /// default; giving a depth explicitly (`--prefetch-depth` /
+    /// `cluster.prefetch_depth`) pins that fixed depth instead unless
+    /// adaptation is also requested explicitly.
+    pub prefetch_adaptive: bool,
 }
 
 impl Default for ClusterConfig {
@@ -101,6 +108,7 @@ impl Default for ClusterConfig {
             retry_backoff_us: 200,
             memory_budget: 0,
             prefetch_depth: 16,
+            prefetch_adaptive: true,
         }
     }
 }
@@ -166,7 +174,15 @@ impl EngineConfig {
                 "cluster.task_retries" => self.cluster.task_retries = v.parse()?,
                 "cluster.retry_backoff_us" => self.cluster.retry_backoff_us = v.parse()?,
                 "cluster.memory_budget" => self.cluster.memory_budget = parse_bytes(v)?,
-                "cluster.prefetch_depth" => self.cluster.prefetch_depth = v.parse()?,
+                "cluster.prefetch_depth" => {
+                    self.cluster.prefetch_depth = v.parse()?;
+                    // An explicit depth pins fixed-depth behavior — unless
+                    // the same config also asks for adaptation explicitly.
+                    if !kv.contains_key("cluster.prefetch_adaptive") {
+                        self.cluster.prefetch_adaptive = false;
+                    }
+                }
+                "cluster.prefetch_adaptive" => self.cluster.prefetch_adaptive = v.parse()?,
                 "prov.tau" => self.prov.tau = v.parse()?,
                 "prov.theta" => self.prov.theta = v.parse()?,
                 "prov.wcc_backend" => self.prov.wcc_backend = v.parse()?,
@@ -197,8 +213,16 @@ impl EngineConfig {
         if let Some(spec) = args.get("memory-budget") {
             self.cluster.memory_budget = parse_bytes(spec)?;
         }
-        self.cluster.prefetch_depth =
-            args.get_parsed_or("prefetch-depth", self.cluster.prefetch_depth)?;
+        if args.get("prefetch-depth").is_some() {
+            self.cluster.prefetch_depth =
+                args.get_parsed_or("prefetch-depth", self.cluster.prefetch_depth)?;
+            // An explicit depth on the CLI pins fixed-depth behavior
+            // unless adaptation is also requested explicitly.
+            self.cluster.prefetch_adaptive = args.get_parsed_or("prefetch-adaptive", false)?;
+        } else {
+            self.cluster.prefetch_adaptive =
+                args.get_parsed_or("prefetch-adaptive", self.cluster.prefetch_adaptive)?;
+        }
         self.prov.tau = args.get_parsed_or("tau", self.prov.tau)?;
         self.prov.theta = args.get_parsed_or("theta", self.prov.theta)?;
         self.prov.wcc_backend = args.get_parsed_or("wcc-backend", self.prov.wcc_backend)?;
@@ -353,8 +377,23 @@ mod tests {
     fn prefetch_depth_key_parses() {
         let mut cfg = EngineConfig::default();
         assert_eq!(cfg.cluster.prefetch_depth, 16, "prefetch is on by default");
+        assert!(cfg.cluster.prefetch_adaptive, "adaptive depth is on by default");
         cfg.apply_kv(&parse_kv_str("[cluster]\nprefetch_depth = 0\n").unwrap()).unwrap();
         assert_eq!(cfg.cluster.prefetch_depth, 0);
+        assert!(!cfg.cluster.prefetch_adaptive, "an explicit depth pins fixed behavior");
+    }
+
+    #[test]
+    fn explicit_adaptive_survives_an_explicit_depth() {
+        let mut cfg = EngineConfig::default();
+        cfg.apply_kv(
+            &parse_kv_str("[cluster]\nprefetch_depth = 8\nprefetch_adaptive = true\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.prefetch_depth, 8);
+        assert!(cfg.cluster.prefetch_adaptive, "explicit adaptive wins over the depth pin");
+        cfg.apply_kv(&parse_kv_str("[cluster]\nprefetch_adaptive = false\n").unwrap()).unwrap();
+        assert!(!cfg.cluster.prefetch_adaptive);
     }
 
     #[test]

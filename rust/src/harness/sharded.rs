@@ -134,12 +134,19 @@ pub struct ShardBatchStats {
     pub partial: usize,
     /// Requests whose every supervised attempt died ([`QueryOutcome::Failed`]).
     pub failed: usize,
+    /// Requests answered from the serving front's result cache without
+    /// touching an engine (their scan counters are all zero).
+    pub from_cache: usize,
     /// Sum of the per-query phase wall times attributed to this shard.
     pub wall: Duration,
 }
 
 impl ShardBatchStats {
-    fn absorb(&mut self, resp: &QueryResponse, outcome: QueryOutcome) {
+    /// Fold one response into the aggregate. Public so layers above the
+    /// sharded scatter (the serving front) can account answers they
+    /// produced without an engine call — e.g. cache hits — in the same
+    /// shape.
+    pub fn absorb(&mut self, resp: &QueryResponse, outcome: QueryOutcome) {
         self.requests += 1;
         self.partitions_scanned += resp.stats.partitions_scanned;
         self.rows_examined += resp.stats.rows_examined;
@@ -153,7 +160,42 @@ impl ShardBatchStats {
             QueryOutcome::Partial => self.partial += 1,
             QueryOutcome::Failed => self.failed += 1,
         }
+        if resp.stats.served_from_cache {
+            self.from_cache += 1;
+        }
         self.wall += resp.stats.total_time();
+    }
+
+    /// Fold another aggregate into this one (field-wise sum).
+    pub fn merge(&mut self, other: &ShardBatchStats) {
+        self.requests += other.requests;
+        self.partitions_scanned += other.partitions_scanned;
+        self.rows_examined += other.rows_examined;
+        self.rows_shuffled += other.rows_shuffled;
+        self.rows_collected += other.rows_collected;
+        self.stages_run += other.stages_run;
+        self.ops_fused += other.ops_fused;
+        self.intermediates_avoided += other.intermediates_avoided;
+        self.full += other.full;
+        self.partial += other.partial;
+        self.failed += other.failed;
+        self.from_cache += other.from_cache;
+        self.wall += other.wall;
+    }
+
+    /// One-line rendering for aggregate rows.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs ({} full, {} partial, {} failed, {} from cache), \
+             {} parts scanned, {} rows examined",
+            self.requests,
+            self.full,
+            self.partial,
+            self.failed,
+            self.from_cache,
+            self.partitions_scanned,
+            self.rows_examined,
+        )
     }
 }
 
@@ -175,18 +217,7 @@ impl ShardedBatchReport {
     pub fn total(&self) -> ShardBatchStats {
         let mut t = ShardBatchStats::default();
         for s in &self.per_shard {
-            t.requests += s.requests;
-            t.partitions_scanned += s.partitions_scanned;
-            t.rows_examined += s.rows_examined;
-            t.rows_shuffled += s.rows_shuffled;
-            t.rows_collected += s.rows_collected;
-            t.stages_run += s.stages_run;
-            t.ops_fused += s.ops_fused;
-            t.intermediates_avoided += s.intermediates_avoided;
-            t.full += s.full;
-            t.partial += s.partial;
-            t.failed += s.failed;
-            t.wall += s.wall;
+            t.merge(s);
         }
         t
     }

@@ -25,6 +25,11 @@
 //! * [`harness`] — the [`harness::ProvSession`] query service (routing,
 //!   batched execution, live ingestion with epoch swaps) and experiment
 //!   drivers that regenerate every table in the paper's evaluation section.
+//! * [`serve`] — the multi-tenant serving front over
+//!   [`harness::ShardedSession`]: per-tenant admission control, a
+//!   micro-batching scatter window, an epoch-keyed result cache with
+//!   dirty-component invalidation, and streaming deadline-bounded partial
+//!   answers.
 //!
 //! Start with the repository-level `README.md` (quickstart, engine menu)
 //! and `ARCHITECTURE.md` (paper-concept → module map, data-flow diagram).
@@ -44,6 +49,7 @@ pub mod minispark;
 pub mod proptest_lite;
 pub mod provenance;
 pub mod runtime;
+pub mod serve;
 pub mod storage;
 pub mod util;
 pub mod workflow;

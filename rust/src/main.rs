@@ -13,6 +13,12 @@
 //!                       [--item 3:43 ...] [--max-depth N] [--max-triples N] [--tau-override N]
 //!                       [--deadline-ms N] [--retries N]  (deadline-bounded degraded answers)
 //!                       [--shards N]  (scatter-gather across component-space shards)
+//! provspark serve       --trace data/trace.bin --pre data/pre.bin [--shards N]
+//!                       [--tenants N --requests N] [--window-ms N --window-max N]
+//!                       [--queue-capacity N --quota-qps F --quota-burst F]
+//!                       [--deadline-ms N] [--ingest-batches N]
+//!                       (mixed-tenant serving front: admission, coalescing windows,
+//!                        epoch-keyed result cache, streaming partial answers)
 //! provspark classes     --trace data/trace.bin --pre data/pre.bin --class lc-ll
 //! provspark table       --which 9|10|11|12 [--divisor 10] [--replications 1,9]
 //! provspark drilldown   --trace data/trace.bin --pre data/pre.bin --item 3:42
@@ -31,11 +37,13 @@ use provspark::minispark::MiniSpark;
 use provspark::provenance::incremental::{IncrementalIndex, TripleBatch};
 use provspark::provenance::journal::staged_path;
 use provspark::provenance::pipeline::{preprocess, WccImpl};
-use provspark::provenance::query::QueryRequest;
+use provspark::provenance::model::ProvTriple;
+use provspark::provenance::query::{QueryOutcome, QueryRequest};
 use provspark::provenance::store;
+use provspark::serve::{ServeConfig, ServeFront};
 use provspark::provenance::{commit_files, recover_commit, CommitRecovery, MigrationJournal};
 use provspark::util::fmt::{human_count, human_duration};
-use provspark::util::ids::AttrValueId;
+use provspark::util::ids::{AttrValueId, OpId};
 use provspark::workflow::curation::text_curation_workflow;
 use provspark::workflow::generator::{generate, GeneratorConfig, TraceStats};
 use std::path::{Path, PathBuf};
@@ -65,8 +73,8 @@ fn main() {
 fn print_help() {
     println!(
         "provspark — workflow provenance queries via weakly connected components/sets\n\
-         subcommands: generate | stats | preprocess | ingest | query | classes | table |\n\
-                      drilldown | workflow\n\
+         subcommands: generate | stats | preprocess | ingest | query | serve | classes |\n\
+                      table | drilldown | workflow\n\
          ingest opts: --trace FILE --pre FILE --batch FILE (a trace of new triples)\n\
                       [--out-trace FILE --out-pre FILE] — applies the delta incrementally\n\
                       (no full re-preprocess) and persists the updated index\n\
@@ -89,6 +97,13 @@ fn print_help() {
                       --deadline-ms N (degrade past the budget: partial prefix lineage +\n\
                       completeness bound)  --retries N (per-item re-execution budget;\n\
                       failures are isolated, never batch-fatal)\n\
+         serve opts:  --tenants N --requests N (per tenant; the last tenant runs\n\
+                      deadline-bounded when --deadline-ms is given: partial prefix\n\
+                      first, completed answer streamed second) --window-ms N\n\
+                      --window-max N (micro-batch coalescing) --queue-capacity N\n\
+                      --quota-qps F --quota-burst F (per-tenant token buckets; over-quota\n\
+                      submits get typed rejections) --ingest-batches N (concurrent\n\
+                      ingest; the result cache invalidates dirty components only)\n\
          sharding:    --shards N on preprocess/query/ingest — component-space shards\n\
                       behind a scatter-gather front (preprocess also writes per-shard\n\
                       files next to --out; ingest migrates components merged across\n\
@@ -499,6 +514,121 @@ fn run(args: &Args) -> Result<()> {
                     metrics.prefetch_hits,
                 );
             }
+            Ok(())
+        }
+        "serve" => {
+            let trace = store::load_trace(Path::new(&args.get_or("trace", "data/trace.bin")))?;
+            let pre = store::load_preprocessed(Path::new(&args.get_or("pre", "data/pre.bin")))?;
+            let ecfg = engine_config(args)?;
+            let router: EngineRouter = args.get_or("engine", "auto").parse()?;
+            let shards: usize = args.get_parsed_or("shards", 1)?;
+            let tenants: usize = args.get_parsed_or("tenants", 2)?;
+            let requests: usize = args.get_parsed_or("requests", 32)?;
+            let deadline = args
+                .get("deadline-ms")
+                .map(|ms| ms.parse::<u64>().context("--deadline-ms"))
+                .transpose()?
+                .map(Duration::from_millis);
+            let mut scfg = ServeConfig::default();
+            scfg.window = Duration::from_millis(args.get_parsed_or("window-ms", 2u64)?);
+            scfg.window_max = args.get_parsed_or("window-max", scfg.window_max)?;
+            scfg.queue_capacity = args.get_parsed_or("queue-capacity", scfg.queue_capacity)?;
+            scfg.quota_qps = args.get_parsed_or("quota-qps", scfg.quota_qps)?;
+            scfg.quota_burst = args.get_parsed_or("quota-burst", scfg.quota_burst)?;
+            // Tenants round-robin over a sampled item set, offset per
+            // tenant, so windows genuinely coalesce and later laps hit the
+            // cache.
+            let items: Vec<u64> = {
+                let n = (requests * 2).clamp(8, 256);
+                let step = (trace.len() / n).max(1);
+                trace.triples.iter().step_by(step).map(|t| t.dst.raw()).take(n).collect()
+            };
+            let session = Arc::new(
+                ShardedSession::new(&ecfg, Arc::new(trace), Arc::new(pre), shards)?
+                    .with_router(router),
+            );
+            let front = Arc::new(ServeFront::new(Arc::clone(&session), scfg));
+            let t0 = std::time::Instant::now();
+            let mut workers = Vec::new();
+            for tn in 0..tenants {
+                let front = Arc::clone(&front);
+                let items = items.clone();
+                // The last tenant is the "interactive" one: its requests
+                // carry the deadline and stream partial-then-full answers.
+                let tenant_deadline = if tn + 1 == tenants { deadline } else { None };
+                workers.push(std::thread::spawn(move || {
+                    let name = format!("tenant{tn}");
+                    let (mut full, mut partial, mut failed) = (0usize, 0usize, 0usize);
+                    let (mut cached, mut completed, mut rejected) = (0usize, 0usize, 0usize);
+                    for i in 0..requests {
+                        let mut req = QueryRequest::new(items[(i + tn * 3) % items.len()]);
+                        req.deadline = tenant_deadline;
+                        match front.submit(&name, req) {
+                            Ok(handle) => {
+                                let Some(first) =
+                                    handle.recv_timeout(Duration::from_secs(60))
+                                else {
+                                    failed += 1;
+                                    continue;
+                                };
+                                if first.from_cache {
+                                    cached += 1;
+                                }
+                                match first.outcome {
+                                    QueryOutcome::Full => full += 1,
+                                    QueryOutcome::Failed => failed += 1,
+                                    QueryOutcome::Partial => {
+                                        partial += 1;
+                                        // The background-completed answer
+                                        // streams in as a second response.
+                                        if handle
+                                            .recv_timeout(Duration::from_secs(60))
+                                            .is_some()
+                                        {
+                                            completed += 1;
+                                        }
+                                    }
+                                }
+                            }
+                            Err(_) => rejected += 1,
+                        }
+                    }
+                    (name, full, partial, failed, cached, completed, rejected)
+                }));
+            }
+            // Concurrent ingest load: bridge sampled items pairwise so
+            // merges really dirty components and sweep cache entries.
+            let batches: usize = args.get_parsed_or("ingest-batches", 0)?;
+            for b in 0..batches {
+                let a = items[b % items.len()];
+                let c = items[(b * 7 + 3) % items.len()];
+                let batch = TripleBatch::new(vec![ProvTriple::new(
+                    AttrValueId(a),
+                    AttrValueId(c),
+                    OpId(0),
+                )]);
+                let stats = front.ingest(&batch)?;
+                println!("ingest batch {b}: {}", stats.summary());
+            }
+            for w in workers {
+                let (name, full, partial, failed, cached, completed, rejected) =
+                    w.join().expect("tenant thread panicked");
+                println!(
+                    "{name}: {full} full, {partial} partial (+{completed} completed), \
+                     {failed} failed, {cached} from cache, {rejected} rejected",
+                );
+            }
+            front.wait_for_completions();
+            let dur = t0.elapsed();
+            let report = front.report();
+            println!("{}", report.summary());
+            let answered = report.admitted as f64;
+            println!(
+                "mixed-tenant workload: {tenants} tenants x {requests} requests over \
+                 {shards} shard(s) in {} ({:.0} answers/s)",
+                human_duration(dur),
+                answered / dur.as_secs_f64().max(1e-9),
+            );
             Ok(())
         }
         "classes" => {

@@ -39,6 +39,77 @@ struct Inner {
     /// (best effort) when the last clone drops.
     spill_dir: Mutex<Option<PathBuf>>,
     next_spill: AtomicU64,
+    /// Runtime readahead-width controller; `None` pins the configured
+    /// fixed depth ([`ClusterConfig::prefetch_adaptive`] off, or prefetch
+    /// disabled outright).
+    adaptive_prefetch: Option<AdaptiveDepth>,
+}
+
+/// Adapts the prefetch depth to the observed hit rate.
+///
+/// The controller starts at the configured depth (which doubles as the
+/// cap) and re-evaluates every [`AdaptiveDepth::WINDOW`] issued prefetches
+/// from the engine-wide `prefetch_issued` / `prefetch_hits` deltas: a hit
+/// rate below [`AdaptiveDepth::LOW`] halves the depth (readahead is
+/// warming pages the BFS never touches — shrink before it evicts useful
+/// residents), above [`AdaptiveDepth::HIGH`] doubles it back toward the
+/// cap. Lock-free; concurrent readers race benignly (one adjuster wins
+/// the window via `compare_exchange`, the rest read the current depth).
+struct AdaptiveDepth {
+    depth: AtomicU64,
+    cap: u64,
+    /// `prefetch_issued` at the last adjustment (window claim token).
+    last_issued: AtomicU64,
+    /// `prefetch_hits` at the last adjustment.
+    last_hits: AtomicU64,
+}
+
+impl AdaptiveDepth {
+    /// Issued prefetches per adjustment window.
+    const WINDOW: u64 = 64;
+    /// Hit-rate floor: below this the depth halves.
+    const LOW: f64 = 0.25;
+    /// Hit-rate ceiling: above this the depth doubles (up to the cap).
+    const HIGH: f64 = 0.75;
+
+    fn new(cap: usize) -> Self {
+        Self {
+            depth: AtomicU64::new(cap as u64),
+            cap: cap as u64,
+            last_issued: AtomicU64::new(0),
+            last_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Current depth, adjusting first if a full window of issued
+    /// prefetches has accumulated since the last adjustment.
+    fn current(&self, metrics: &EngineMetrics) -> usize {
+        let snap = metrics.snapshot();
+        let seen = self.last_issued.load(Ordering::Relaxed);
+        let issued = snap.prefetch_issued.saturating_sub(seen);
+        if issued >= Self::WINDOW
+            && self
+                .last_issued
+                .compare_exchange(seen, snap.prefetch_issued, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        {
+            let hits_seen = self.last_hits.swap(snap.prefetch_hits, Ordering::Relaxed);
+            let hits = snap.prefetch_hits.saturating_sub(hits_seen);
+            let ratio = hits as f64 / issued as f64;
+            let d = self.depth.load(Ordering::Relaxed);
+            let next = if ratio < Self::LOW {
+                (d / 2).max(1)
+            } else if ratio > Self::HIGH {
+                (d * 2).min(self.cap)
+            } else {
+                d
+            };
+            if next != d {
+                self.depth.store(next, Ordering::Relaxed);
+            }
+        }
+        self.depth.load(Ordering::Relaxed) as usize
+    }
 }
 
 impl Drop for Inner {
@@ -56,6 +127,8 @@ impl MiniSpark {
             RetryPolicy::new(cfg.task_retries, Duration::from_micros(cfg.retry_backoff_us));
         let metrics = Arc::new(EngineMetrics::default());
         let cache = Arc::new(PartitionCache::with_metrics(cfg.memory_budget, Arc::clone(&metrics)));
+        let adaptive_prefetch = (cfg.prefetch_adaptive && cfg.prefetch_depth > 0)
+            .then(|| AdaptiveDepth::new(cfg.prefetch_depth));
         Self {
             inner: Arc::new(Inner {
                 cfg,
@@ -66,6 +139,7 @@ impl MiniSpark {
                 prefetcher: Prefetcher::new(),
                 spill_dir: Mutex::new(None),
                 next_spill: AtomicU64::new(0),
+                adaptive_prefetch,
             }),
         }
     }
@@ -118,10 +192,16 @@ impl MiniSpark {
         &self.inner.prefetcher
     }
 
-    /// Readahead width per BFS round ([`ClusterConfig::prefetch_depth`]);
-    /// `0` means prefetch is off for this context.
+    /// Readahead width per BFS round: the configured
+    /// [`ClusterConfig::prefetch_depth`] when that was given explicitly,
+    /// otherwise the adaptive controller's current depth (hit-rate
+    /// driven, capped at the configured value). `0` means prefetch is off
+    /// for this context.
     pub fn prefetch_depth(&self) -> usize {
-        self.inner.cfg.prefetch_depth
+        match &self.inner.adaptive_prefetch {
+            Some(ctl) => ctl.current(&self.inner.metrics),
+            None => self.inner.cfg.prefetch_depth,
+        }
     }
 
     /// A fresh path for a segment file under this context's (lazily
@@ -257,5 +337,52 @@ mod tests {
         assert!(snap.tasks_retried > 0, "0.2 over 64+ probes must fire");
         assert_eq!(sc.fault().unwrap().fired(), snap.tasks_retried);
         assert!(snap.summary().contains("retried="));
+    }
+
+    #[test]
+    fn adaptive_prefetch_tracks_the_hit_rate() {
+        let sc = MiniSpark::new(ClusterConfig { prefetch_depth: 16, ..Default::default() });
+        assert_eq!(sc.prefetch_depth(), 16, "starts at the cap");
+
+        // A window of issued prefetches with zero hits: depth halves.
+        sc.metrics().add_prefetch_issued(64);
+        assert_eq!(sc.prefetch_depth(), 8);
+        // Each consecutive cold window halves again, floored at 1.
+        for _ in 0..8 {
+            sc.metrics().add_prefetch_issued(64);
+            sc.prefetch_depth();
+        }
+        assert_eq!(sc.prefetch_depth(), 1);
+
+        // Hot windows (every issue hits) double back toward the cap…
+        for _ in 0..8 {
+            sc.metrics().add_prefetch_issued(64);
+            for _ in 0..64 {
+                sc.metrics().add_prefetch_hit();
+            }
+            sc.prefetch_depth();
+        }
+        // …and never past it.
+        assert_eq!(sc.prefetch_depth(), 16);
+
+        // A lukewarm window (between the thresholds) holds steady.
+        sc.metrics().add_prefetch_issued(64);
+        for _ in 0..32 {
+            sc.metrics().add_prefetch_hit();
+        }
+        assert_eq!(sc.prefetch_depth(), 16);
+    }
+
+    #[test]
+    fn explicit_depth_stays_fixed() {
+        // `prefetch_adaptive: false` models an explicit `--prefetch-depth`
+        // (config parsing pins it; see `config::apply_args`).
+        let sc = MiniSpark::new(ClusterConfig {
+            prefetch_depth: 4,
+            prefetch_adaptive: false,
+            ..Default::default()
+        });
+        sc.metrics().add_prefetch_issued(1024); // all misses
+        assert_eq!(sc.prefetch_depth(), 4, "fixed depth never adapts");
     }
 }

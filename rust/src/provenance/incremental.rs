@@ -158,8 +158,10 @@ pub struct AppliedDelta {
 ///
 /// Construction is `O(n)` (one pass over the existing index — paid once,
 /// amortized over every subsequent batch); [`apply`](Self::apply) is
-/// `O(batch + dirty)` plus one linear split of the (much smaller) global
-/// set-dependency list.
+/// `O(batch + dirty)`: set-dependency classification reads only the dirty
+/// components' dep buckets, and the global sorted dep list is updated by
+/// a branch-light sorted-difference splice (linear in list length, but a
+/// copy — no per-dep lookups).
 pub struct IncrementalIndex {
     trace: Trace,
     pre: Preprocessed,
@@ -169,6 +171,12 @@ pub struct IncrementalIndex {
     tri_of: FxHashMap<u64, Vec<u32>>,
     /// Component label → number of connected sets it currently holds.
     set_count_of: FxHashMap<u64, usize>,
+    /// Component label → its current set dependencies. Both endpoint sets
+    /// of a dep lie in one component (the triple witnessing the dep
+    /// connects them), so deps partition cleanly by component. Folded
+    /// small-to-large through merges like `tri_of`; the phase-4 diff
+    /// consults only the dirty components' buckets.
+    deps_of: FxHashMap<u64, Vec<SetDep>>,
     graph: DependencyGraph,
     splits: SplitSet,
 }
@@ -253,7 +261,21 @@ impl IncrementalIndex {
         }
         let set_count_of: FxHashMap<u64, usize> =
             sets_of.into_iter().map(|(cc, s)| (cc, s.len())).collect();
-        Ok(Self { trace, pre, labels, tri_of, set_count_of, graph, splits })
+        let mut deps_of: FxHashMap<u64, Vec<SetDep>> = FxHashMap::default();
+        for d in &pre.set_deps {
+            // A set id is a member node, so its component label locates
+            // the dep's (single) component.
+            let Some(&l) = pre.cc_of.get(&d.src_csid.0) else {
+                bail!(
+                    "preprocessed index is internally inconsistent: set dependency \
+                     {} -> {} has an unlabelled source set",
+                    d.src_csid.0,
+                    d.dst_csid.0,
+                );
+            };
+            deps_of.entry(l).or_default().push(*d);
+        }
+        Ok(Self { trace, pre, labels, tri_of, set_count_of, deps_of, graph, splits })
     }
 
     /// Convenience: run the full [`preprocess`] pipeline on `trace` and wrap
@@ -336,10 +358,13 @@ impl IncrementalIndex {
                 for &n in &members[m.relabelled_from..] {
                     self.pre.cc_of.insert(n, m.winner);
                 }
-                // Fold the absorbed component's triple index and set count
-                // into the winner's.
+                // Fold the absorbed component's triple index, dep bucket
+                // and set count into the winner's.
                 if let Some(moved) = self.tri_of.remove(&loser) {
                     self.tri_of.entry(m.winner).or_default().extend(moved);
+                }
+                if let Some(moved) = self.deps_of.remove(&loser) {
+                    self.deps_of.entry(m.winner).or_default().extend(moved);
                 }
                 let loser_sets = self.set_count_of.remove(&loser).unwrap_or(0);
                 *self.set_count_of.entry(m.winner).or_insert(0) += loser_sets;
@@ -373,6 +398,7 @@ impl IncrementalIndex {
         stats.dirty_components = dirty.len();
 
         let mut added_deps: Vec<SetDep> = Vec::new();
+        let mut removed_deps: Vec<SetDep> = Vec::new();
         for &l in &dirty {
             let tris = self.tri_of.get(&l).cloned().unwrap_or_default();
             stats.dirty_triples += tris.len();
@@ -469,42 +495,60 @@ impl IncrementalIndex {
             }
 
             // Recompute this component's set dependencies (distinct
-            // cross-set pairs among its triples).
+            // cross-set pairs among its triples). The old bucket — which
+            // phase 1 already folded merged-away losers into — is exactly
+            // this component's share of the global list; it drains into
+            // `removed_deps` and the recomputed deps replace it.
+            if let Some(old) = self.deps_of.remove(&l) {
+                removed_deps.extend(old);
+            }
             let mut seen: FxHashSet<(u64, u64)> = FxHashSet::default();
+            let mut comp_deps: Vec<SetDep> = Vec::new();
             for &i in &tris {
                 let row = self.pre.cs_triples[i as usize];
                 if row.src_csid != row.dst_csid
                     && seen.insert((row.src_csid.0, row.dst_csid.0))
                 {
-                    added_deps.push(SetDep {
+                    comp_deps.push(SetDep {
                         src_csid: row.src_csid,
                         dst_csid: row.dst_csid,
                     });
                 }
+            }
+            if !comp_deps.is_empty() {
+                added_deps.extend_from_slice(&comp_deps);
+                self.deps_of.insert(l, comp_deps);
             }
         }
 
         // ---- Phase 4: set-dependency diff ----------------------------------
         // A dependency's two endpoint sets always lie in one component (the
         // triple witnessing it connects them), so deps of untouched
-        // components are retained verbatim. A set id is a member node, so
-        // `cc_of[sid]` — already updated above — locates its component even
-        // across merges. One pass splits the global (sorted) list into
-        // kept/removed, and the recomputed deps merge back in sorted order —
-        // no global re-sort. (The split is still one `O(|deps|)` scan per
-        // batch; per-component dep buckets are the ROADMAP follow-up if
-        // that ever shows at scale.)
-        let cc_of = &self.pre.cc_of;
-        let mut kept: Vec<SetDep> = Vec::with_capacity(self.pre.set_deps.len());
-        let mut removed: Vec<SetDep> = Vec::new();
-        for d in self.pre.set_deps.drain(..) {
-            if matches!(cc_of.get(&d.src_csid.0), Some(l) if dirty_set.contains(l)) {
-                removed.push(d);
+        // components are retained verbatim and the per-component buckets
+        // (`deps_of`, folded through merges in phase 1) named the dirty
+        // components' old deps exactly — classification cost `O(dirty
+        // deps)`, no per-dep label lookup over the global list. Set-dep
+        // pairs are globally unique (a set id is a member node, so a pair
+        // cannot recur in another component), which turns the global update
+        // into a sorted-difference splice: one branch-light linear pass
+        // skips the (sorted) removed entries, then a two-run merge folds
+        // the recomputed deps back in — still linear in `|deps|`, but a
+        // copy, not the old label-lookup + dirty-set probe per dep.
+        let mut removed = removed_deps;
+        removed.sort_unstable();
+        added_deps.sort_unstable();
+        let old_deps = std::mem::take(&mut self.pre.set_deps);
+        let mut kept: Vec<SetDep> =
+            Vec::with_capacity(old_deps.len().saturating_sub(removed.len()));
+        let mut r = 0;
+        for d in old_deps {
+            if r < removed.len() && removed[r] == d {
+                r += 1;
             } else {
                 kept.push(d);
             }
         }
-        added_deps.sort_unstable();
+        debug_assert_eq!(r, removed.len(), "every drained bucket dep was in the global list");
         // `kept` is a subsequence of the previously sorted list, so a
         // linear two-run merge restores the sorted invariant.
         let mut merged = Vec::with_capacity(kept.len() + added_deps.len());
@@ -717,6 +761,51 @@ mod tests {
         assert_eq!(delta.stats.new_triples, full.len() - cut);
         assert_eq!(idx.trace().len(), full.len());
         assert_equivalent(&idx, &scratch(&full, 150));
+    }
+
+    #[test]
+    fn dep_buckets_always_flatten_to_the_global_list() {
+        // The phase-4 diff trusts `deps_of` to partition `pre.set_deps`
+        // exactly; check the invariant through appends, a cross-component
+        // merge, and a θ-crossing repartition.
+        let (full, _, _) =
+            generate(&GeneratorConfig { scale_divisor: 2000, ..Default::default() });
+        let cut = full.len() * 8 / 10;
+        let base = Trace::new(full.triples[..cut].to_vec());
+        let mut idx = index(base, 150);
+        let check = |idx: &IncrementalIndex| {
+            let mut flat: Vec<SetDep> =
+                idx.deps_of.values().flat_map(|v| v.iter().copied()).collect();
+            flat.sort_unstable();
+            let mut global = idx.pre.set_deps.clone();
+            global.sort_unstable();
+            assert_eq!(flat, global, "buckets and global dep list diverged");
+            // Every bucket key is a live component label.
+            for (&l, deps) in &idx.deps_of {
+                assert!(!deps.is_empty(), "empty bucket for {l} left behind");
+                assert_eq!(idx.labels.label(l), Some(l), "bucket key {l} is stale");
+            }
+        };
+        check(&idx);
+        for chunk in full.triples[cut..].chunks(full.len() / 20 + 1) {
+            idx.apply(&TripleBatch::new(chunk.to_vec())).unwrap();
+            check(&idx);
+        }
+        // Bridge the two largest components (a merge that folds buckets).
+        let pre = idx.pre();
+        assert!(pre.large_components.len() >= 2, "need two large components");
+        let (a, _, _) = pre.large_components[0];
+        let (b, _, _) = pre.large_components[1];
+        let a_node = *idx.labels.members(a).iter().min().unwrap();
+        let b_node = *idx.labels.members(b).iter().min().unwrap();
+        let bridge = ProvTriple::new(
+            crate::util::ids::AttrValueId(a_node),
+            crate::util::ids::AttrValueId(b_node),
+            crate::util::ids::OpId(0),
+        );
+        idx.apply(&TripleBatch::new(vec![bridge])).unwrap();
+        check(&idx);
+        assert_equivalent(&idx, &scratch(idx.trace(), 150));
     }
 
     #[test]

@@ -243,6 +243,10 @@ pub struct QueryStats {
     pub bfs_rounds: u32,
     /// True when `max_depth` / `max_triples` stopped the recursion early.
     pub truncated: bool,
+    /// True when the serving front answered from its result cache: no
+    /// engine ran, so every scan counter above is zero. Engines never set
+    /// this; only `serve::ServeFront` does.
+    pub served_from_cache: bool,
     /// Deadline bound: how much of the full traversal this answer covers
     /// (the complete bound unless a deadline cut the recursion).
     pub completeness: Completeness,
@@ -271,6 +275,7 @@ impl QueryStats {
             intermediates_avoided: 0,
             bfs_rounds: 0,
             truncated: false,
+            served_from_cache: false,
             completeness: Completeness::default(),
             resolve: Duration::ZERO,
             assemble: Duration::ZERO,
@@ -311,7 +316,7 @@ impl QueryStats {
         };
         format!(
             "engine={} path={} parts_scanned={} rows_examined={} shuffled={} collected={}{}{} \
-             rounds={}{}{} resolve={} assemble={} recurse={}",
+             rounds={}{}{}{} resolve={} assemble={} recurse={}",
             self.engine,
             self.path,
             self.partitions_scanned,
@@ -322,6 +327,7 @@ impl QueryStats {
             stages,
             self.bfs_rounds,
             if self.truncated { " truncated" } else { "" },
+            if self.served_from_cache { " served_from_cache" } else { "" },
             deadline_cut,
             human_duration(self.resolve),
             human_duration(self.assemble),

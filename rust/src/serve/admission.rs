@@ -1,0 +1,191 @@
+//! Admission control for the serving front: per-tenant token-bucket
+//! quotas plus a bounded in-flight request count.
+//!
+//! Every request is either admitted or answered with a typed [`Rejected`]
+//! — never silently dropped. The in-flight bound counts requests between
+//! admission and their *first* answer (the backpressure signal a client
+//! can act on); background completions of partial answers ride free, they
+//! were already paid for at admission.
+
+use rustc_hash::FxHashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Typed admission refusal. The serving front returns these synchronously
+/// from `submit`, so a rejected tenant knows immediately — and knows
+/// *why* — instead of timing out on a dropped request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rejected {
+    /// The bounded request queue is at capacity; retry after in-flight
+    /// requests drain.
+    QueueFull { occupancy: usize, capacity: usize },
+    /// The tenant's token bucket is empty; `retry_after` is when the next
+    /// token accrues at the configured refill rate.
+    Quota { tenant: String, retry_after: Duration },
+    /// The front is shutting down and accepts no new work.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull { occupancy, capacity } => {
+                write!(f, "queue full ({occupancy}/{capacity} in flight)")
+            }
+            Rejected::Quota { tenant, retry_after } => {
+                write!(f, "tenant {tenant:?} over quota (retry after {retry_after:?})")
+            }
+            Rejected::ShuttingDown => f.write_str("front is shutting down"),
+        }
+    }
+}
+
+/// Lazy-refill token bucket: tokens accrue at `qps` per second up to
+/// `burst`, and each admission spends one.
+#[derive(Debug)]
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(burst: f64, now: Instant) -> Self {
+        Self { tokens: burst, last: now }
+    }
+
+    /// Spend one token, refilling for the elapsed time first. On refusal
+    /// returns how long until a whole token has accrued.
+    fn try_take(&mut self, qps: f64, burst: f64, now: Instant) -> Result<(), Duration> {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * qps).min(burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            return Ok(());
+        }
+        let retry_after = if qps > 0.0 {
+            Duration::from_secs_f64((1.0 - self.tokens) / qps)
+        } else {
+            // No refill configured: the burst is all this tenant ever gets.
+            Duration::MAX
+        };
+        Err(retry_after)
+    }
+}
+
+/// The front door: a bounded in-flight count shared by all tenants, plus
+/// one token bucket per tenant. Both checks are cheap (one atomic + one
+/// short-held map lock) — admission must never cost more than the work it
+/// is gating.
+pub struct AdmissionController {
+    /// Tokens per second per tenant; `f64::INFINITY` disables quotas.
+    qps: f64,
+    /// Bucket capacity (burst size), `>= 1` whenever quotas are on.
+    burst: f64,
+    /// In-flight bound (admitted, not yet first-answered).
+    capacity: usize,
+    in_flight: AtomicUsize,
+    buckets: Mutex<FxHashMap<String, TokenBucket>>,
+}
+
+impl AdmissionController {
+    pub fn new(qps: f64, burst: f64, capacity: usize) -> Self {
+        Self {
+            qps,
+            burst: burst.max(1.0),
+            capacity: capacity.max(1),
+            in_flight: AtomicUsize::new(0),
+            buckets: Mutex::new(FxHashMap::default()),
+        }
+    }
+
+    /// Admit one request for `tenant`, or say exactly why not. An admitted
+    /// request holds one in-flight slot until [`release`](Self::release).
+    pub fn try_admit(&self, tenant: &str) -> Result<(), Rejected> {
+        // Reserve the queue slot first; quotas refund it on refusal, so
+        // rejection paths never leak occupancy.
+        let reserved = self.in_flight.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+            (cur < self.capacity).then_some(cur + 1)
+        });
+        if let Err(occupancy) = reserved {
+            return Err(Rejected::QueueFull { occupancy, capacity: self.capacity });
+        }
+        if self.qps.is_finite() {
+            let now = Instant::now();
+            let mut buckets = self.buckets.lock().expect("admission bucket lock poisoned");
+            let bucket = buckets
+                .entry(tenant.to_string())
+                .or_insert_with(|| TokenBucket::new(self.burst, now));
+            if let Err(retry_after) = bucket.try_take(self.qps, self.burst, now) {
+                drop(buckets);
+                self.release();
+                return Err(Rejected::Quota { tenant: tenant.to_string(), retry_after });
+            }
+        }
+        Ok(())
+    }
+
+    /// Release one in-flight slot (the request got its first answer).
+    pub fn release(&self) {
+        let prev = self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev > 0, "release without a matching admit");
+    }
+
+    /// Requests currently between admission and their first answer.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_quota_only_bounds_the_queue() {
+        let adm = AdmissionController::new(f64::INFINITY, 1.0, 2);
+        adm.try_admit("a").unwrap();
+        adm.try_admit("b").unwrap();
+        match adm.try_admit("c") {
+            Err(Rejected::QueueFull { occupancy: 2, capacity: 2 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        adm.release();
+        adm.try_admit("c").unwrap();
+        assert_eq!(adm.in_flight(), 2);
+    }
+
+    #[test]
+    fn burst_exhaustion_is_a_typed_quota_rejection() {
+        // qps 0: the burst of 2 is all a tenant ever gets.
+        let adm = AdmissionController::new(0.0, 2.0, 100);
+        adm.try_admit("t").unwrap();
+        adm.try_admit("t").unwrap();
+        match adm.try_admit("t") {
+            Err(Rejected::Quota { tenant, retry_after }) => {
+                assert_eq!(tenant, "t");
+                assert_eq!(retry_after, Duration::MAX);
+            }
+            other => panic!("expected Quota, got {other:?}"),
+        }
+        // Quota refusal refunded the queue slot…
+        assert_eq!(adm.in_flight(), 2);
+        // …and other tenants have their own buckets.
+        adm.try_admit("u").unwrap();
+    }
+
+    #[test]
+    fn tokens_refill_over_time() {
+        let mut b = TokenBucket::new(1.0, Instant::now());
+        let t0 = Instant::now();
+        b.try_take(10.0, 1.0, t0).unwrap();
+        assert!(b.try_take(10.0, 1.0, t0).is_err());
+        // 200 ms at 10 tokens/s accrues 2 tokens, capped at burst 1.
+        b.try_take(10.0, 1.0, t0 + Duration::from_millis(200)).unwrap();
+        let Err(retry) = b.try_take(10.0, 1.0, t0 + Duration::from_millis(200)) else {
+            panic!("bucket must be empty again");
+        };
+        assert!(retry <= Duration::from_millis(100));
+    }
+}

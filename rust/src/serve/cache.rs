@@ -1,0 +1,244 @@
+//! Epoch-keyed result cache: `(epoch, item, normalized options) → Lineage`.
+//!
+//! The cache lives above the engines, so a warm hit costs one map lookup
+//! and zero engine scans. Correctness under ingest comes from two rules:
+//!
+//! * **Insert** is guarded by the epoch captured *before* the answer was
+//!   computed ([`ResultCache::insert_if_epoch`]): if an ingest bumped the
+//!   epoch while the query ran, the answer may predate the new triples
+//!   and is discarded instead of cached.
+//! * **Invalidation** is per dirty-component set, not wholesale: on
+//!   ingest the front snapshots the *pre-ingest* WCC label of every batch
+//!   endpoint and sweeps only entries tagged with one of those labels
+//!   (plus entries whose item was unknown at insert time but is itself a
+//!   batch endpoint). Everything else survives the epoch swap untouched.
+//!
+//! Why the pre-ingest labels suffice: a component is structurally touched
+//! by a batch only if it contains a batch endpoint, and in the
+//! small-to-large label union the merge *winner keeps its label* — so
+//! every post-ingest dirty component is labelled by the pre-ingest label
+//! of one of its endpoints, which is exactly the set we swept. A label
+//! read that races past a concurrent ingest therefore still tags the
+//! entry with a label the sweep will catch.
+
+use crate::harness::EngineRouter;
+use crate::provenance::query::{Lineage, QueryRequest};
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Normalized identity of a cacheable answer: the item plus every request
+/// option that changes the result. `retries` is execution policy, not
+/// identity; `deadline` makes the answer depend on wall time, so
+/// deadline-bounded requests are never cacheable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub item: u64,
+    pub max_depth: Option<u32>,
+    pub max_triples: Option<usize>,
+    pub tau_override: Option<usize>,
+    /// Router discriminant — `Auto` may pick a different engine than a
+    /// pinned router, and engines may differ in *stats*, so answers are
+    /// keyed per routing policy even though lineages agree.
+    pub router: u8,
+}
+
+impl CacheKey {
+    /// The key for a request, or `None` when the request is not cacheable
+    /// (any deadline-bounded request: its answer is a wall-time-dependent
+    /// prefix, not a function of the key).
+    pub fn of(router: EngineRouter, req: &QueryRequest) -> Option<Self> {
+        if req.deadline.is_some() {
+            return None;
+        }
+        let router = match router {
+            EngineRouter::Rq => 0,
+            EngineRouter::CcProv => 1,
+            EngineRouter::CsProv => 2,
+            EngineRouter::Auto => 3,
+        };
+        Some(Self {
+            item: req.item,
+            max_depth: req.max_depth,
+            max_triples: req.max_triples,
+            tau_override: req.tau_override,
+            router,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    lineage: Lineage,
+    engine: &'static str,
+    /// The item's WCC label when the answer was cached; `None` when the
+    /// item was unknown to every shard (empty lineage cached for a
+    /// nonexistent item). `None` entries are invalidated whenever their
+    /// item appears as a batch endpoint.
+    label: Option<u64>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// Monotonic cache epoch; bumped by every [`ResultCache::invalidate`].
+    epoch: u64,
+    map: FxHashMap<CacheKey, Entry>,
+}
+
+/// The shared cache. One mutex guards the map *and* the epoch so that
+/// "check epoch then insert" is a single atomic step; the counters are
+/// plain atomics readable without the lock.
+#[derive(Debug, Default)]
+pub struct ResultCache {
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    stale_inserts: AtomicU64,
+    invalidated: AtomicU64,
+}
+
+impl ResultCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current cache epoch. Capture it *before* computing an answer
+    /// you intend to [`insert_if_epoch`](Self::insert_if_epoch).
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().expect("result cache lock poisoned").epoch
+    }
+
+    /// Cached entries right now.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("result cache lock poisoned").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a cacheable answer; counts a hit or miss either way.
+    pub fn get(&self, key: &CacheKey) -> Option<(Lineage, &'static str)> {
+        let inner = self.inner.lock().expect("result cache lock poisoned");
+        match inner.map.get(key) {
+            Some(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some((e.lineage.clone(), e.engine))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert an answer computed while the cache was at `epoch`. Returns
+    /// `false` (and caches nothing) if an invalidation has since moved the
+    /// epoch on — the answer might predate triples the sweep accounted
+    /// for. Epochs only grow, so there is no ABA window.
+    pub fn insert_if_epoch(
+        &self,
+        epoch: u64,
+        key: CacheKey,
+        label: Option<u64>,
+        engine: &'static str,
+        lineage: Lineage,
+    ) -> bool {
+        let mut inner = self.inner.lock().expect("result cache lock poisoned");
+        if inner.epoch != epoch {
+            self.stale_inserts.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        inner.map.insert(key, Entry { lineage, engine, label });
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Sweep after an ingest: drop every entry whose component label is in
+    /// `dirty_labels`, plus label-less entries whose item is itself a
+    /// batch endpoint; bump the epoch so racing inserts die. Returns how
+    /// many entries were dropped.
+    pub fn invalidate(&self, dirty_labels: &FxHashSet<u64>, batch_items: &FxHashSet<u64>) -> usize {
+        let mut inner = self.inner.lock().expect("result cache lock poisoned");
+        inner.epoch += 1;
+        let before = inner.map.len();
+        inner.map.retain(|key, entry| match entry.label {
+            Some(l) => !dirty_labels.contains(&l),
+            None => !batch_items.contains(&key.item),
+        });
+        let dropped = before - inner.map.len();
+        self.invalidated.fetch_add(dropped as u64, Ordering::Relaxed);
+        dropped
+    }
+
+    /// Drop everything and bump the epoch — the recovery path, where the
+    /// affected component set is unknown.
+    pub fn clear(&self) -> usize {
+        let mut inner = self.inner.lock().expect("result cache lock poisoned");
+        inner.epoch += 1;
+        let dropped = inner.map.len();
+        inner.map.clear();
+        self.invalidated.fetch_add(dropped as u64, Ordering::Relaxed);
+        dropped
+    }
+
+    /// Counter snapshot: `(hits, misses, inserts, stale_inserts,
+    /// invalidated)`.
+    pub fn counters(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.inserts.load(Ordering::Relaxed),
+            self.stale_inserts.load(Ordering::Relaxed),
+            self.invalidated.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(item: u64) -> CacheKey {
+        CacheKey::of(EngineRouter::Auto, &QueryRequest::new(item)).unwrap()
+    }
+
+    #[test]
+    fn deadline_requests_are_never_cacheable() {
+        let req = QueryRequest::new(7).with_deadline(std::time::Duration::from_millis(1));
+        assert_eq!(CacheKey::of(EngineRouter::Auto, &req), None);
+        // …but every other option is part of the key, not a blocker.
+        let req = QueryRequest::new(7).with_max_depth(3).with_tau(10).with_retries(5);
+        let k = CacheKey::of(EngineRouter::CsProv, &req).unwrap();
+        assert_eq!(k.max_depth, Some(3));
+        assert_eq!(k.router, 2);
+    }
+
+    #[test]
+    fn stale_insert_is_refused_after_invalidation() {
+        let cache = ResultCache::new();
+        let epoch = cache.epoch();
+        cache.invalidate(&FxHashSet::default(), &FxHashSet::default());
+        assert!(!cache.insert_if_epoch(epoch, key(1), Some(1), "rq", Lineage::empty(1)));
+        assert!(cache.insert_if_epoch(cache.epoch(), key(1), Some(1), "rq", Lineage::empty(1)));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn invalidation_is_per_component() {
+        let cache = ResultCache::new();
+        let e = cache.epoch();
+        cache.insert_if_epoch(e, key(1), Some(10), "rq", Lineage::empty(1));
+        cache.insert_if_epoch(e, key(2), Some(20), "rq", Lineage::empty(2));
+        cache.insert_if_epoch(e, key(3), None, "rq", Lineage::empty(3));
+        let dirty: FxHashSet<u64> = [10u64].into_iter().collect();
+        let items: FxHashSet<u64> = [3u64].into_iter().collect();
+        // Dirty label 10 kills item 1; endpoint 3 kills the label-less
+        // entry; the untouched component (label 20) survives.
+        assert_eq!(cache.invalidate(&dirty, &items), 2);
+        assert!(cache.get(&key(2)).is_some());
+        assert!(cache.get(&key(1)).is_none());
+        assert!(cache.get(&key(3)).is_none());
+    }
+}

@@ -1,0 +1,475 @@
+//! The serving front: admission → micro-batch window → scatter → cache.
+//!
+//! A dedicated batcher thread owns the request queue. It blocks on the
+//! first ticket, then keeps collecting until the window closes (elapsed
+//! [`ServeConfig::window`] or [`ServeConfig::window_max`] tickets) and
+//! processes the whole window at once:
+//!
+//! 1. cache hits answer immediately — zero engine scans;
+//! 2. identical cacheable requests deduplicate to one execution;
+//! 3. the survivors run as **one** [`ShardedSession::query_many_report_on`]
+//!    scatter-gather, per-request `QueryStats` preserved;
+//! 4. deadline-cut partial answers stream out first, and the full answer
+//!    is completed on a small background pool and lands in the cache.
+//!
+//! Failures stay per-ticket: the sharded batch path supervises each item,
+//! so a panicking engine or a faulted segment read yields one `Failed`
+//! outcome on one reply channel — the window, the cache (`Failed` is
+//! never cached), and the other tenants never see it.
+
+use super::admission::{AdmissionController, Rejected};
+use super::cache::{CacheKey, ResultCache};
+use super::{ServeConfig, ServeMetrics, ServeReport};
+use crate::exec::ThreadPool;
+use crate::harness::{ShardBatchStats, ShardedBatchReport, ShardedDeltaStats, ShardedSession};
+use crate::harness::EngineRouter;
+use crate::provenance::query::{QueryOutcome, QueryRequest, QueryResponse, QueryStats};
+use crate::provenance::TripleBatch;
+use anyhow::Result;
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One answer on a ticket's reply channel. A request gets exactly one
+/// response — except a deadline-cut partial, which gets the partial first
+/// (`completed: false`) and the background-completed full answer second
+/// (`completed: true`).
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub tenant: String,
+    pub response: QueryResponse,
+    pub outcome: QueryOutcome,
+    /// Served straight from the result cache (zero engine scans; also
+    /// marked on `response.stats.served_from_cache`).
+    pub from_cache: bool,
+    /// How many requests shared this micro-batch window.
+    pub window_size: usize,
+    /// `true` only on the second, background-completed answer to a
+    /// deadline-cut request.
+    pub completed: bool,
+}
+
+/// Client-side handle for one admitted request.
+pub struct TicketHandle {
+    rx: Receiver<ServeResponse>,
+}
+
+impl TicketHandle {
+    /// Block for the next answer; `None` once the front has shut down and
+    /// every answer for this ticket is delivered.
+    pub fn recv(&self) -> Option<ServeResponse> {
+        self.rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<ServeResponse> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+}
+
+struct Ticket {
+    tenant: String,
+    req: QueryRequest,
+    reply: Sender<ServeResponse>,
+}
+
+/// Shared state between the public handle, the batcher thread, and the
+/// background completion workers.
+struct Core {
+    session: Arc<ShardedSession>,
+    router: EngineRouter,
+    cfg: ServeConfig,
+    admission: AdmissionController,
+    cache: ResultCache,
+    metrics: ServeMetrics,
+    /// Lifetime per-shard aggregate of everything the front executed or
+    /// served from cache (the sharded batch report, accumulated).
+    agg: Mutex<Vec<ShardBatchStats>>,
+    /// Serializes label-snapshot → session ingest → cache sweep. The
+    /// session serializes its own ingest too; this lock pins the label
+    /// snapshot to *this* ingest's pre-state.
+    ingest_lock: Mutex<()>,
+    /// Background pool finishing deadline-cut answers.
+    completions: ThreadPool,
+}
+
+/// The multi-tenant serving front over a [`ShardedSession`].
+///
+/// `submit` is non-blocking: it either admits the request (returning a
+/// [`TicketHandle`] the caller receives answers on) or rejects it with a
+/// typed [`Rejected`]. All engine work happens on the batcher thread, the
+/// shared `exec` pool underneath `query_many`, and the completion pool —
+/// no async runtime.
+pub struct ServeFront {
+    core: Arc<Core>,
+    tx: Mutex<Option<Sender<Ticket>>>,
+    batcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ServeFront {
+    pub fn new(session: Arc<ShardedSession>, cfg: ServeConfig) -> Self {
+        let router = session.router();
+        let shards = session.shard_count();
+        let core = Arc::new(Core {
+            session,
+            router,
+            admission: AdmissionController::new(cfg.quota_qps, cfg.quota_burst, cfg.queue_capacity),
+            completions: ThreadPool::new(cfg.completion_workers.max(1)),
+            cfg,
+            cache: ResultCache::new(),
+            metrics: ServeMetrics::default(),
+            agg: Mutex::new(vec![ShardBatchStats::default(); shards]),
+            ingest_lock: Mutex::new(()),
+        });
+        let (tx, rx) = channel::<Ticket>();
+        let batcher_core = Arc::clone(&core);
+        let batcher = std::thread::Builder::new()
+            .name("serve-batcher".into())
+            .spawn(move || run_batcher(batcher_core, rx))
+            .expect("spawn serve batcher");
+        Self {
+            core,
+            tx: Mutex::new(Some(tx)),
+            batcher: Mutex::new(Some(batcher)),
+        }
+    }
+
+    /// Submit one request for `tenant`: admitted (ticket handle) or a
+    /// typed rejection, never a silent drop.
+    pub fn submit(&self, tenant: &str, req: QueryRequest) -> Result<TicketHandle, Rejected> {
+        let tx = self.tx.lock().expect("serve tx lock poisoned");
+        let Some(tx) = tx.as_ref() else {
+            return Err(Rejected::ShuttingDown);
+        };
+        if let Err(rej) = self.core.admission.try_admit(tenant) {
+            match &rej {
+                Rejected::Quota { .. } => self.core.metrics.rejected_quota.fetch_add(1, Relaxed),
+                Rejected::QueueFull { .. } => {
+                    self.core.metrics.rejected_queue.fetch_add(1, Relaxed)
+                }
+                Rejected::ShuttingDown => 0,
+            };
+            return Err(rej);
+        }
+        self.core.metrics.admitted.fetch_add(1, Relaxed);
+        let (reply, rx) = channel();
+        let ticket = Ticket { tenant: tenant.to_string(), req, reply };
+        if tx.send(ticket).is_err() {
+            self.core.admission.release();
+            return Err(Rejected::ShuttingDown);
+        }
+        Ok(TicketHandle { rx })
+    }
+
+    /// Ingest through the front: snapshot the pre-ingest component labels
+    /// of the batch endpoints, apply the batch to the session, then sweep
+    /// exactly the dirty entries from the result cache (see `cache.rs`
+    /// for why the pre-ingest labels cover every dirty component).
+    pub fn ingest(&self, batch: &TripleBatch) -> Result<ShardedDeltaStats> {
+        let _serial = self.core.ingest_lock.lock().expect("serve ingest lock poisoned");
+        let mut items: FxHashSet<u64> = FxHashSet::default();
+        for t in &batch.triples {
+            items.insert(t.src.raw());
+            items.insert(t.dst.raw());
+        }
+        let mut dirty: FxHashSet<u64> = FxHashSet::default();
+        for s in self.core.session.shard_sessions() {
+            let pre = s.pre();
+            for &x in &items {
+                if let Some(&l) = pre.cc_of.get(&x) {
+                    dirty.insert(l);
+                }
+            }
+        }
+        let out = self.core.session.ingest(batch);
+        // Sweep even when ingest errored: a faulted ingest can have
+        // journaled some steps before failing, so affected entries (and
+        // racing inserts, via the epoch bump) must still die.
+        self.core.cache.invalidate(&dirty, &items);
+        out
+    }
+
+    /// Drop every cached result (admin/benchmark hook). Bumps the cache
+    /// epoch, so in-flight computations started before the clear cannot
+    /// re-insert stale entries. Returns how many entries died.
+    pub fn clear_cache(&self) -> usize {
+        self.core.cache.clear()
+    }
+
+    /// Recover an interrupted ingest. The affected component set is
+    /// unknown at this point, so the whole cache is dropped.
+    pub fn recover(&self) -> Result<ShardedDeltaStats> {
+        let _serial = self.core.ingest_lock.lock().expect("serve ingest lock poisoned");
+        let out = self.core.session.recover();
+        self.core.cache.clear();
+        out
+    }
+
+    /// Block until every queued background completion has run (answers
+    /// delivered, cacheable ones landed in the cache).
+    pub fn wait_for_completions(&self) {
+        self.core.completions.wait_idle();
+    }
+
+    /// The session underneath (read-only use by contract).
+    pub fn session(&self) -> &Arc<ShardedSession> {
+        &self.core.session
+    }
+
+    /// Requests admitted but not yet first-answered.
+    pub fn in_flight(&self) -> usize {
+        self.core.admission.in_flight()
+    }
+
+    /// Snapshot of every serving counter plus the accumulated per-shard
+    /// batch stats.
+    pub fn report(&self) -> ServeReport {
+        let m = &self.core.metrics;
+        let (cache_hits, cache_misses, cache_inserts, cache_stale_inserts, cache_invalidations) =
+            self.core.cache.counters();
+        ServeReport {
+            admitted: m.admitted.load(Relaxed),
+            rejected_quota: m.rejected_quota.load(Relaxed),
+            rejected_queue: m.rejected_queue.load(Relaxed),
+            windows: m.windows.load(Relaxed),
+            coalesced: m.coalesced.load(Relaxed),
+            deduped: m.deduped.load(Relaxed),
+            partials_served: m.partials_served.load(Relaxed),
+            completions: m.completions.load(Relaxed),
+            cache_hits,
+            cache_misses,
+            cache_inserts,
+            cache_stale_inserts,
+            cache_invalidations,
+            cache_entries: self.core.cache.len(),
+            in_flight: self.core.admission.in_flight(),
+            per_shard: self.core.agg.lock().expect("serve agg lock poisoned").clone(),
+        }
+    }
+
+    /// Stop accepting requests, drain the queue, finish background
+    /// completions. Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        let tx = self.tx.lock().expect("serve tx lock poisoned").take();
+        drop(tx); // batcher's recv() errors out once the queue drains
+        let handle = self.batcher.lock().expect("serve batcher lock poisoned").take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        self.core.completions.wait_idle();
+    }
+}
+
+impl Drop for ServeFront {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Batcher loop: block for the first ticket, then collect until the
+/// window closes, then process the window as one batch.
+fn run_batcher(core: Arc<Core>, rx: Receiver<Ticket>) {
+    loop {
+        let first = match rx.recv() {
+            Ok(t) => t,
+            Err(_) => return, // front dropped its sender: drained, done
+        };
+        let mut window = vec![first];
+        if !core.cfg.window.is_zero() && core.cfg.window_max > 1 {
+            let closes = Instant::now() + core.cfg.window;
+            while window.len() < core.cfg.window_max {
+                let remaining = closes.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(remaining) {
+                    Ok(t) => window.push(t),
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        core.process_window(window);
+    }
+}
+
+impl Core {
+    /// The item's current WCC label across shards, `None` if unknown.
+    fn label_of(&self, item: u64) -> Option<u64> {
+        for s in self.session.shard_sessions() {
+            if let Some(&l) = s.pre().cc_of.get(&item) {
+                return Some(l);
+            }
+        }
+        None
+    }
+
+    /// Fold one scatter-gather report into the lifetime aggregate.
+    fn merge_report(&self, report: &ShardedBatchReport) {
+        let mut agg = self.agg.lock().expect("serve agg lock poisoned");
+        if agg.len() < report.per_shard.len() {
+            agg.resize_with(report.per_shard.len(), ShardBatchStats::default);
+        }
+        for (slot, s) in agg.iter_mut().zip(&report.per_shard) {
+            slot.merge(s);
+        }
+    }
+
+    /// Account one cache-served answer to the item's owning shard.
+    fn absorb_one(&self, owner: usize, resp: &QueryResponse, outcome: QueryOutcome) {
+        let mut agg = self.agg.lock().expect("serve agg lock poisoned");
+        if agg.len() <= owner {
+            agg.resize_with(owner + 1, ShardBatchStats::default);
+        }
+        agg[owner].absorb(resp, outcome);
+    }
+
+    /// First (and for most requests only) answer: releases the ticket's
+    /// in-flight slot, then replies.
+    fn deliver(
+        &self,
+        t: &Ticket,
+        resp: QueryResponse,
+        outcome: QueryOutcome,
+        from_cache: bool,
+        window_size: usize,
+    ) {
+        self.admission.release();
+        let _ = t.reply.send(ServeResponse {
+            tenant: t.tenant.clone(),
+            response: resp,
+            outcome,
+            from_cache,
+            window_size,
+            completed: false,
+        });
+    }
+
+    fn process_window(self: &Arc<Self>, window: Vec<Ticket>) {
+        let n = window.len();
+        self.metrics.windows.fetch_add(1, Relaxed);
+        if n > 1 {
+            self.metrics.coalesced.fetch_add(n as u64, Relaxed);
+        }
+        // Everything executed out of this window was computed at (or
+        // after) this epoch; inserts are guarded on it.
+        let epoch = self.cache.epoch();
+
+        // 1) Cache hits answer without touching an engine.
+        let mut pending: Vec<Ticket> = Vec::with_capacity(n);
+        for t in window {
+            if let Some(key) = CacheKey::of(self.router, &t.req) {
+                if let Some((lineage, engine)) = self.cache.get(&key) {
+                    let mut stats = QueryStats::new(engine);
+                    stats.served_from_cache = true;
+                    let resp = QueryResponse { lineage, stats };
+                    let owner = self.session.shard_of(t.req.item).unwrap_or(0);
+                    self.absorb_one(owner, &resp, QueryOutcome::Full);
+                    self.deliver(&t, resp, QueryOutcome::Full, true, n);
+                    continue;
+                }
+            }
+            pending.push(t);
+        }
+        if pending.is_empty() {
+            return;
+        }
+
+        // 2) Identical cacheable requests in one window execute once.
+        let mut leaders: Vec<Ticket> = Vec::new();
+        let mut followers: Vec<Vec<Ticket>> = Vec::new();
+        let mut by_key: FxHashMap<CacheKey, usize> = FxHashMap::default();
+        for t in pending {
+            if let Some(key) = CacheKey::of(self.router, &t.req) {
+                if let Some(&i) = by_key.get(&key) {
+                    self.metrics.deduped.fetch_add(1, Relaxed);
+                    followers[i].push(t);
+                    continue;
+                }
+                by_key.insert(key, leaders.len());
+            }
+            leaders.push(t);
+            followers.push(Vec::new());
+        }
+
+        // 3) One scatter-gather for the whole window. Per-item supervision
+        // lives inside: a crashing request comes back `Failed` alone.
+        let reqs: Vec<QueryRequest> = leaders.iter().map(|t| t.req.clone()).collect();
+        let (resps, report) = self.session.query_many_report_on(self.router, &reqs);
+        self.merge_report(&report);
+
+        // 4) Cache, stream, and deliver.
+        for (i, resp) in resps.into_iter().enumerate() {
+            let t = &leaders[i];
+            let outcome = report.outcomes[i];
+            if outcome == QueryOutcome::Full {
+                if let Some(key) = CacheKey::of(self.router, &t.req) {
+                    let label = self.label_of(t.req.item);
+                    self.cache.insert_if_epoch(
+                        epoch,
+                        key,
+                        label,
+                        resp.stats.engine,
+                        resp.lineage.clone(),
+                    );
+                }
+            }
+            let deadline_cut = t.req.deadline.is_some()
+                && outcome == QueryOutcome::Partial
+                && !resp.stats.completeness.exhausted;
+            if deadline_cut {
+                self.metrics.partials_served.fetch_add(1, Relaxed);
+                if self.cfg.complete_partials {
+                    self.spawn_completion(t);
+                }
+            }
+            for f in &followers[i] {
+                self.deliver(f, resp.clone(), outcome, false, n);
+            }
+            self.deliver(t, resp, outcome, false, n);
+        }
+    }
+
+    /// Finish a deadline-cut answer in the background: re-run without the
+    /// deadline, cache a `Full` result (epoch-guarded), and stream the
+    /// completed answer as the ticket's second response.
+    fn spawn_completion(self: &Arc<Self>, t: &Ticket) {
+        let core = Arc::clone(self);
+        let mut full_req = t.req.clone();
+        full_req.deadline = None;
+        let reply = t.reply.clone();
+        let tenant = t.tenant.clone();
+        self.completions.submit(move || {
+            let epoch = core.cache.epoch();
+            // The supervised batch path again: a crash during completion
+            // is a `Failed` second answer, not a dead worker thread.
+            let (mut resps, report) =
+                core.session.query_many_report_on(core.router, std::slice::from_ref(&full_req));
+            core.merge_report(&report);
+            let resp = resps.remove(0);
+            let outcome = report.outcomes[0];
+            if outcome == QueryOutcome::Full {
+                if let Some(key) = CacheKey::of(core.router, &full_req) {
+                    let label = core.label_of(full_req.item);
+                    core.cache.insert_if_epoch(
+                        epoch,
+                        key,
+                        label,
+                        resp.stats.engine,
+                        resp.lineage.clone(),
+                    );
+                }
+            }
+            core.metrics.completions.fetch_add(1, Relaxed);
+            let _ = reply.send(ServeResponse {
+                tenant,
+                response: resp,
+                outcome,
+                from_cache: false,
+                window_size: 1,
+                completed: true,
+            });
+        });
+    }
+}

@@ -1,0 +1,157 @@
+//! The multi-tenant serving front: the paper's engines as a service.
+//!
+//! Everything below this module ends at a library call; this layer turns
+//! the sharded query/ingest surface into something many independent
+//! clients can hit concurrently with bounded latency:
+//!
+//! * **Admission control** ([`AdmissionController`]) — per-tenant
+//!   token-bucket quotas plus a bounded in-flight queue; refusals are
+//!   typed [`Rejected`] answers, never silent drops.
+//! * **Micro-batching** ([`ServeFront`]) — concurrent point queries
+//!   arriving within [`ServeConfig::window`] coalesce into one
+//!   `query_many` scatter-gather; per-request `QueryStats` attribution is
+//!   preserved, and identical requests in one window execute once.
+//! * **Epoch-keyed result cache** ([`ResultCache`]) — `(epoch, item,
+//!   normalized options) → Lineage`; ingest sweeps only the dirty
+//!   components' entries, so unrelated cached answers survive the epoch
+//!   swap and a warm hit does zero engine scans.
+//! * **Streaming partial answers** — a deadline-bounded request is
+//!   answered immediately with the provable lineage prefix plus its
+//!   honest `Completeness` bound; the full answer completes on a
+//!   background pool, streams as a second response, and lands in the
+//!   cache.
+//!
+//! Built entirely on the existing `exec` thread pool and std channels —
+//! no async runtime.
+
+mod admission;
+mod cache;
+mod front;
+
+pub use admission::{AdmissionController, Rejected};
+pub use cache::{CacheKey, ResultCache};
+pub use front::{ServeFront, ServeResponse, TicketHandle};
+
+use crate::harness::ShardBatchStats;
+use std::sync::atomic::AtomicU64;
+use std::time::Duration;
+
+/// Tuning for a [`ServeFront`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Micro-batch window: how long the batcher waits after the first
+    /// ticket for more to coalesce. Zero disables coalescing.
+    pub window: Duration,
+    /// Max tickets per window (the window closes early when reached).
+    pub window_max: usize,
+    /// Bound on requests in flight (admitted, not yet first-answered).
+    pub queue_capacity: usize,
+    /// Per-tenant refill rate in requests/second; `f64::INFINITY`
+    /// disables quotas, `0.0` means the burst is all a tenant gets.
+    pub quota_qps: f64,
+    /// Per-tenant token-bucket capacity (burst size).
+    pub quota_burst: f64,
+    /// Complete deadline-cut answers in the background (second streamed
+    /// response + cache fill). Off means partials stay partial.
+    pub complete_partials: bool,
+    /// Threads finishing deadline-cut answers.
+    pub completion_workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            window: Duration::from_millis(2),
+            window_max: 64,
+            queue_capacity: 1024,
+            quota_qps: f64::INFINITY,
+            quota_burst: 32.0,
+            complete_partials: true,
+            completion_workers: 2,
+        }
+    }
+}
+
+/// Internal serving counters (atomics; snapshot via
+/// [`ServeFront::report`]).
+#[derive(Debug, Default)]
+pub(crate) struct ServeMetrics {
+    pub(crate) admitted: AtomicU64,
+    pub(crate) rejected_quota: AtomicU64,
+    pub(crate) rejected_queue: AtomicU64,
+    pub(crate) windows: AtomicU64,
+    pub(crate) coalesced: AtomicU64,
+    pub(crate) deduped: AtomicU64,
+    pub(crate) partials_served: AtomicU64,
+    pub(crate) completions: AtomicU64,
+}
+
+/// Snapshot of everything the front has done: admission decisions, window
+/// coalescing, cache traffic, partial-answer streaming, and the
+/// accumulated per-shard execution stats.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub admitted: u64,
+    pub rejected_quota: u64,
+    pub rejected_queue: u64,
+    /// Micro-batch windows processed.
+    pub windows: u64,
+    /// Requests that shared a window with at least one other request.
+    pub coalesced: u64,
+    /// Requests answered by another identical request in the same window.
+    pub deduped: u64,
+    /// Deadline-cut partial answers streamed out.
+    pub partials_served: u64,
+    /// Background completions finished.
+    pub completions: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_inserts: u64,
+    /// Inserts refused because an ingest moved the epoch mid-query.
+    pub cache_stale_inserts: u64,
+    /// Entries dropped by ingest sweeps.
+    pub cache_invalidations: u64,
+    /// Entries resident right now.
+    pub cache_entries: usize,
+    /// Requests admitted but not yet first-answered right now.
+    pub in_flight: usize,
+    /// Lifetime per-shard aggregate of executed + cache-served requests
+    /// (same shape as one `ShardedBatchReport`, accumulated).
+    pub per_shard: Vec<ShardBatchStats>,
+}
+
+impl ServeReport {
+    /// Collapse the per-shard aggregate into one row.
+    pub fn total(&self) -> ShardBatchStats {
+        let mut t = ShardBatchStats::default();
+        for s in &self.per_shard {
+            t.merge(s);
+        }
+        t
+    }
+
+    /// One-line rendering for CLI / bench output.
+    pub fn summary(&self) -> String {
+        let t = self.total();
+        format!(
+            "serve: admitted={} rejected(quota={} queue={}) windows={} coalesced={} \
+             deduped={} cache(hit={} miss={} insert={} stale={} inval={} live={}) \
+             partials={} completions={} | exec: {}",
+            self.admitted,
+            self.rejected_quota,
+            self.rejected_queue,
+            self.windows,
+            self.coalesced,
+            self.deduped,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_inserts,
+            self.cache_stale_inserts,
+            self.cache_invalidations,
+            self.cache_entries,
+            self.partials_served,
+            self.completions,
+            t.summary(),
+        )
+    }
+}

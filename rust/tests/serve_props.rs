@@ -1,0 +1,571 @@
+//! Serving-front properties (this PR's acceptance criterion): every answer
+//! a [`ServeFront`] streams — cached, window-coalesced, deduplicated, or
+//! deadline-cut-then-completed — is identical to what a direct
+//! [`ShardedSession`] over the same data returns, under concurrent tenants
+//! and interleaved ingest. On top of the equivalence bar:
+//!
+//! * cache invalidation is **exactly** dirty-proportional: after an ingest,
+//!   items whose component the batch never touched are served from the
+//!   cache, touched ones are recomputed, and both match a reference
+//!   session that ingested the same batch directly;
+//! * admission failures are typed ([`Rejected::Quota`] / queue-full),
+//!   never silent drops, and never bleed across tenants;
+//! * injected `panic:task` and `io:segment` faults fail exactly the
+//!   affected ticket — the window, the cache, and the other tenants keep
+//!   their correct answers.
+
+use provspark::config::EngineConfig;
+use provspark::harness::{EngineRouter, ShardedSession};
+use provspark::proptest_lite as shim;
+use provspark::provenance::incremental::TripleBatch;
+use provspark::provenance::model::{ProvTriple, Trace};
+use provspark::provenance::pipeline::{preprocess, Preprocessed, WccImpl};
+use provspark::provenance::query::{QueryOutcome, QueryRequest};
+use provspark::serve::{Rejected, ServeConfig, ServeFront};
+use provspark::util::ids::{AttrValueId, OpId};
+use provspark::util::rng::Pcg64;
+use provspark::workflow::generator::{generate, GeneratorConfig};
+use rustc_hash::FxHashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+const RECV: Duration = Duration::from_secs(60);
+
+fn no_overhead(tau: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    cfg.cluster.job_overhead_us = 0;
+    cfg.prov.tau = tau;
+    cfg
+}
+
+fn sample_items(trace: &Trace, n: usize) -> Vec<u64> {
+    let mut seen = FxHashSet::default();
+    trace
+        .triples
+        .iter()
+        .step_by(trace.len() / n + 1)
+        .take(n)
+        .map(|t| t.dst.raw())
+        .filter(|i| seen.insert(*i))
+        .collect()
+}
+
+/// A triple bridging two items on different shards, if the layout offers
+/// one (forces the cross-shard merge path through `ServeFront::ingest`).
+fn cross_shard_bridge(sharded: &ShardedSession, rng: &mut Pcg64) -> Option<ProvTriple> {
+    let shards = sharded.shard_sessions();
+    let populated: Vec<usize> =
+        (0..shards.len()).filter(|&i| !shards[i].trace().is_empty()).collect();
+    if populated.len() < 2 {
+        return None;
+    }
+    let i = populated[rng.range(0, populated.len())];
+    let j = *populated.iter().find(|&&x| x != i)?;
+    let pick = |shard: usize, rng: &mut Pcg64| -> u64 {
+        let t = shards[shard].trace();
+        t.triples[rng.range(0, t.len())].dst.raw()
+    };
+    Some(ProvTriple::new(AttrValueId(pick(i, rng)), AttrValueId(pick(j, rng)), OpId(0)))
+}
+
+#[derive(Debug)]
+struct Case {
+    seed: u64,
+    divisor: usize,
+    theta: usize,
+    tau: usize,
+    shards: usize,
+    router: EngineRouter,
+}
+
+fn gen_case(rng: &mut Pcg64, shrink: u32) -> Case {
+    Case {
+        seed: rng.next_u64(),
+        divisor: if shrink > 0 { 4000 } else { *rng.pick(&[2500, 3500]) },
+        theta: *rng.pick(&[100, 300]),
+        tau: *rng.pick(&[0, 400, usize::MAX]),
+        shards: if shrink > 0 { 1 } else { *rng.pick(&[1, 2, 3]) },
+        router: *rng.pick(&[
+            EngineRouter::Auto,
+            EngineRouter::Rq,
+            EngineRouter::CcProv,
+            EngineRouter::CsProv,
+        ]),
+    }
+}
+
+/// The central bar: three rounds of concurrent multi-tenant traffic —
+/// cold, warm (everything cacheable answered from the cache with zero
+/// engine scans), and post-ingest (dirty components recomputed, untouched
+/// ones still served from cache) — all equal to a reference
+/// [`ShardedSession`] that saw the same data and the same batch directly.
+#[test]
+fn serve_answers_equal_a_direct_sharded_session() {
+    shim::run_prop(
+        "serve_equals_direct",
+        &shim::PropCfg { cases: 3, ..Default::default() },
+        gen_case,
+        |case: &Case| -> Result<(), String> {
+            let (full, graph, splits) = generate(&GeneratorConfig {
+                seed: case.seed,
+                scale_divisor: case.divisor,
+                ..Default::default()
+            });
+            let cut = (full.len() * 4) / 5;
+            let base = Arc::new(Trace::new(full.triples[..cut].to_vec()));
+            let pre =
+                Arc::new(preprocess(&base, &graph, &splits, case.theta, 100, WccImpl::Driver));
+            let cfg = no_overhead(case.tau);
+            let mut rng = Pcg64::new(case.seed ^ 0x5E21);
+
+            let session = Arc::new(
+                ShardedSession::new(&cfg, Arc::clone(&base), Arc::clone(&pre), case.shards)
+                    .map_err(|e| format!("front session: {e:#}"))?
+                    .with_router(case.router),
+            );
+            let reference =
+                ShardedSession::new(&cfg, Arc::clone(&base), Arc::clone(&pre), case.shards)
+                    .map_err(|e| format!("reference session: {e:#}"))?
+                    .with_router(case.router);
+            let front = ServeFront::new(
+                Arc::clone(&session),
+                ServeConfig {
+                    window: Duration::from_millis(2),
+                    window_max: 32,
+                    ..ServeConfig::default()
+                },
+            );
+
+            let items = sample_items(&base, 8);
+            let expect = |item: u64| reference.execute_on(case.router, &QueryRequest::new(item));
+
+            // Round 1 (cold), two tenants submitting concurrently, each
+            // item twice: duplicates either coalesce into a window dedup
+            // or hit the cache a later window filled.
+            std::thread::scope(|s| -> Result<(), String> {
+                let mut handles = Vec::new();
+                for tenant in ["alpha", "beta"] {
+                    let items = &items;
+                    let front = &front;
+                    let expect = &expect;
+                    handles.push(s.spawn(move || -> Result<(), String> {
+                        for &item in items {
+                            let ticket = front
+                                .submit(tenant, QueryRequest::new(item))
+                                .map_err(|r| format!("{tenant}/{item} rejected: {r}"))?;
+                            let got = ticket
+                                .recv_timeout(RECV)
+                                .ok_or_else(|| format!("{tenant}/{item}: no answer"))?;
+                            if got.outcome != QueryOutcome::Full {
+                                return Err(format!("{tenant}/{item}: {:?}", got.outcome));
+                            }
+                            if got.response.lineage != expect(item).lineage {
+                                return Err(format!("{tenant}/{item}: lineage diverges"));
+                            }
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("tenant thread panicked")?;
+                }
+                Ok(())
+            })?;
+            let r1 = front.report();
+            if r1.deduped + r1.cache_hits < items.len() as u64 {
+                return Err(format!(
+                    "duplicate submissions neither deduped nor cache-served: \
+                     deduped={} cache_hits={} for {} duplicates",
+                    r1.deduped,
+                    r1.cache_hits,
+                    items.len()
+                ));
+            }
+
+            // Round 2 (warm): every answer comes from the cache, with the
+            // stats marked and zero engine scans.
+            for &item in &items {
+                let got = front
+                    .submit("warm", QueryRequest::new(item))
+                    .map_err(|r| format!("warm/{item} rejected: {r}"))?
+                    .recv_timeout(RECV)
+                    .ok_or_else(|| format!("warm/{item}: no answer"))?;
+                if !got.from_cache || !got.response.stats.served_from_cache {
+                    return Err(format!("warm/{item}: not served from cache"));
+                }
+                if got.response.stats.rows_examined != 0 {
+                    return Err(format!(
+                        "warm/{item}: cache hit examined {} rows",
+                        got.response.stats.rows_examined
+                    ));
+                }
+                if got.response.lineage != expect(item).lineage {
+                    return Err(format!("warm/{item}: cached lineage diverges"));
+                }
+            }
+
+            // Interleaved ingest through the front: the delta plus (when
+            // the layout offers one) a cross-shard bridge. Snapshot the
+            // pre-ingest labels the invalidation contract is stated over.
+            let mut triples = full.triples[cut..].to_vec();
+            if let Some(bridge) = cross_shard_bridge(&session, &mut rng) {
+                triples.push(bridge);
+            }
+            let batch = TripleBatch::new(triples);
+            let label_of = |item: u64| -> Option<u64> {
+                session
+                    .shard_sessions()
+                    .iter()
+                    .find_map(|s| s.pre().cc_of.get(&item).copied())
+            };
+            let mut endpoints: FxHashSet<u64> = FxHashSet::default();
+            let mut dirty: FxHashSet<u64> = FxHashSet::default();
+            for t in &batch.triples {
+                for x in [t.src.raw(), t.dst.raw()] {
+                    endpoints.insert(x);
+                    if let Some(l) = label_of(x) {
+                        dirty.insert(l);
+                    }
+                }
+            }
+            let pre_labels: Vec<Option<u64>> = items.iter().map(|&i| label_of(i)).collect();
+            front.ingest(&batch).map_err(|e| format!("front ingest: {e:#}"))?;
+            reference.ingest(&batch).map_err(|e| format!("reference ingest: {e:#}"))?;
+
+            // Round 3 (post-ingest): untouched components still answer
+            // from the cache; touched ones are recomputed. Either way the
+            // answer equals the reference session's fresh answer.
+            for (&item, pre_label) in items.iter().zip(&pre_labels) {
+                let untouched = !endpoints.contains(&item)
+                    && pre_label.map_or(true, |l| !dirty.contains(&l));
+                let got = front
+                    .submit("gamma", QueryRequest::new(item))
+                    .map_err(|r| format!("gamma/{item} rejected: {r}"))?
+                    .recv_timeout(RECV)
+                    .ok_or_else(|| format!("gamma/{item}: no answer"))?;
+                if got.from_cache != untouched {
+                    return Err(format!(
+                        "gamma/{item}: from_cache={} but batch-untouched={untouched}",
+                        got.from_cache
+                    ));
+                }
+                if got.response.lineage != expect(item).lineage {
+                    return Err(format!("gamma/{item}: post-ingest lineage diverges"));
+                }
+            }
+            front.shutdown();
+            Ok(())
+        },
+    );
+}
+
+fn small_world(
+    tau: usize,
+    divisor: usize,
+) -> (Arc<Trace>, Arc<Preprocessed>, EngineConfig, Vec<u64>) {
+    let (trace, graph, splits) =
+        generate(&GeneratorConfig { scale_divisor: divisor, ..Default::default() });
+    let pre = preprocess(&trace, &graph, &splits, 150, 100, WccImpl::Driver);
+    let items = sample_items(&trace, 6);
+    (Arc::new(trace), Arc::new(pre), no_overhead(tau), items)
+}
+
+/// Concurrent point queries arriving inside one open window coalesce into
+/// a single scatter-gather: every answer reports the shared window size,
+/// exactly one window ran, and the answers are still per-request exact.
+#[test]
+fn rapid_submissions_coalesce_into_one_window() {
+    let (trace, pre, cfg, items) = small_world(usize::MAX, 3000);
+    let session = Arc::new(
+        ShardedSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre), 2).unwrap(),
+    );
+    let front = ServeFront::new(
+        Arc::clone(&session),
+        ServeConfig {
+            // A window long enough that test-thread scheduling noise can't
+            // split the burst; it closes early at window_max anyway.
+            window: Duration::from_secs(2),
+            window_max: items.len(),
+            ..ServeConfig::default()
+        },
+    );
+
+    let tickets: Vec<_> = items
+        .iter()
+        .map(|&i| front.submit("burst", QueryRequest::new(i)).expect("admitted"))
+        .collect();
+    for (t, &item) in tickets.iter().zip(&items) {
+        let got = t.recv_timeout(RECV).expect("answer");
+        assert_eq!(got.outcome, QueryOutcome::Full, "item {item}");
+        assert_eq!(
+            got.window_size,
+            items.len(),
+            "item {item} did not share the burst window"
+        );
+        let want = session.execute_on(session.router(), &QueryRequest::new(item));
+        assert_eq!(got.response.lineage, want.lineage, "item {item}");
+    }
+    let report = front.report();
+    assert_eq!(report.windows, 1, "the burst split across windows");
+    assert_eq!(report.coalesced, items.len() as u64);
+    assert_eq!(report.total().requests, items.len());
+}
+
+/// The streaming-partial lifecycle: a zero deadline yields an immediate
+/// `Partial` whose lineage is exactly the `max_depth = rounds_done` prefix
+/// (the honest bound), then the background completion streams the full
+/// answer on the same ticket and lands it in the cache.
+#[test]
+fn deadline_cut_streams_a_partial_then_the_completed_answer() {
+    let (trace, pre, cfg, items) = small_world(usize::MAX, 3000);
+    let session = Arc::new(
+        ShardedSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre), 2).unwrap(),
+    );
+    let front = ServeFront::new(Arc::clone(&session), ServeConfig::default());
+    let item = items[items.len() / 2];
+    let full = session.execute_on(session.router(), &QueryRequest::new(item));
+    assert!(full.stats.completeness.exhausted);
+
+    let ticket = front
+        .submit("deadline", QueryRequest::new(item).with_deadline(Duration::ZERO))
+        .expect("admitted");
+    let first = ticket.recv_timeout(RECV).expect("partial answer");
+    assert_eq!(first.outcome, QueryOutcome::Partial);
+    assert!(!first.completed);
+    assert!(!first.from_cache, "deadline requests are never cacheable");
+    let c = first.response.stats.completeness;
+    assert!(!c.exhausted, "zero deadline must cut the recursion");
+    let depth_req = QueryRequest::new(item).with_max_depth(c.rounds_done);
+    let prefix = session.execute_on(session.router(), &depth_req);
+    assert_eq!(
+        first.response.lineage, prefix.lineage,
+        "partial must equal the max_depth={} prefix it claims",
+        c.rounds_done
+    );
+
+    let second = ticket.recv_timeout(RECV).expect("completed answer");
+    assert!(second.completed, "second answer must be the background completion");
+    assert_eq!(second.outcome, QueryOutcome::Full);
+    assert_eq!(second.response.lineage, full.lineage);
+
+    // The completion landed in the cache under the deadline-free key.
+    front.wait_for_completions();
+    let warm = front
+        .submit("deadline", QueryRequest::new(item))
+        .expect("admitted")
+        .recv_timeout(RECV)
+        .expect("cached answer");
+    assert!(warm.from_cache, "completed answer must be cache-resident");
+    assert_eq!(warm.response.lineage, full.lineage);
+
+    let report = front.report();
+    assert!(report.partials_served >= 1);
+    assert!(report.completions >= 1);
+}
+
+/// Admission failures are typed and tenant-scoped: an exhausted burst
+/// budget rejects with `Quota` (naming the tenant, other tenants still
+/// admitted), and a full queue rejects with `QueueFull` — both leave every
+/// admitted request answering normally.
+#[test]
+fn quota_and_queue_rejections_are_typed_and_scoped() {
+    let (trace, pre, cfg, items) = small_world(usize::MAX, 4000);
+    let session = Arc::new(
+        ShardedSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre), 1).unwrap(),
+    );
+
+    // Burst-only quota: two requests pass, the third is a typed Quota
+    // rejection that does not consume the other tenant's budget.
+    let front = ServeFront::new(
+        Arc::clone(&session),
+        ServeConfig { quota_qps: 0.0, quota_burst: 2.0, ..ServeConfig::default() },
+    );
+    let t1 = front.submit("greedy", QueryRequest::new(items[0])).expect("first admitted");
+    let t2 = front.submit("greedy", QueryRequest::new(items[1])).expect("second admitted");
+    match front.submit("greedy", QueryRequest::new(items[2])) {
+        Err(Rejected::Quota { tenant, retry_after }) => {
+            assert_eq!(tenant, "greedy");
+            assert_eq!(retry_after, Duration::MAX, "burst-only quota never refills");
+        }
+        Err(other) => panic!("expected a Quota rejection, got {other}"),
+        Ok(_) => panic!("the exhausted burst budget admitted a third request"),
+    }
+    let t3 = front.submit("modest", QueryRequest::new(items[2])).expect("other tenant admitted");
+    for (t, &item) in [t1, t2, t3].iter().zip([items[0], items[1], items[2]].iter()) {
+        let got = t.recv_timeout(RECV).expect("answer");
+        assert_eq!(got.outcome, QueryOutcome::Full, "item {item}");
+    }
+    assert_eq!(front.report().rejected_quota, 1);
+    front.shutdown();
+
+    // Queue capacity 1 with a long window: the first ticket is parked in
+    // the open window, so the second submission finds the queue full.
+    let front = ServeFront::new(
+        Arc::clone(&session),
+        ServeConfig {
+            queue_capacity: 1,
+            window: Duration::from_millis(300),
+            window_max: 8,
+            ..ServeConfig::default()
+        },
+    );
+    let parked = front.submit("a", QueryRequest::new(items[0])).expect("admitted");
+    match front.submit("b", QueryRequest::new(items[1])) {
+        Err(Rejected::QueueFull { occupancy, capacity }) => {
+            assert_eq!((occupancy, capacity), (1, 1));
+        }
+        Err(other) => panic!("expected a QueueFull rejection, got {other}"),
+        Ok(_) => panic!("the full queue admitted a second request"),
+    }
+    let got = parked.recv_timeout(RECV).expect("parked ticket still answers");
+    assert_eq!(got.outcome, QueryOutcome::Full);
+    assert_eq!(front.report().rejected_queue, 1);
+}
+
+/// The fault matrix for the serving front: under a `panic:task` plan and
+/// under an `io:segment` plan, a failing request is a typed per-ticket
+/// `Failed` outcome — the shared window still answers the other tenants
+/// correctly, the failed answer is never cached, and the cache keeps
+/// serving the good entries.
+#[test]
+fn injected_faults_stay_per_ticket_and_never_poison_the_cache() {
+    // panic:task, one-shot aimed at probe #T — the first task the victim's
+    // cold component-assemble stage runs. T is the task count a clean twin
+    // consumes for the identical warmup (one query per shard, none in the
+    // victim's component: every shard opens and every bystander component
+    // is memoized, so the warm window-mates run zero tasks while the
+    // victim's memo miss schedules the panicking stage).
+    let (trace, pre, cfg, items) = small_world(usize::MAX, 3000);
+    let clean = ShardedSession::new(&cfg, Arc::clone(&trace), Arc::clone(&pre), 2)
+        .unwrap()
+        .with_router(EngineRouter::CcProv);
+    let label = |i: u64| -> u64 {
+        clean
+            .shard_sessions()
+            .iter()
+            .find_map(|s| s.pre().cc_of.get(&i).copied())
+            .expect("sampled item has a component")
+    };
+    let victim_item = items[0];
+    let vlabel = label(victim_item);
+    let warmup: Vec<u64> = clean
+        .shard_sessions()
+        .iter()
+        .map(|s| {
+            s.trace()
+                .triples
+                .iter()
+                .map(|t| t.dst.raw())
+                .find(|&i| label(i) != vlabel)
+                .expect("every shard holds a non-victim component")
+        })
+        .collect();
+    for &i in &warmup {
+        clean.execute_on(EngineRouter::CcProv, &QueryRequest::new(i));
+    }
+    let t = clean.context().metrics().snapshot().tasks;
+
+    let mut fcfg = cfg.clone();
+    fcfg.cluster.task_retries = 0; // the injected panic must not be retried away
+    fcfg.cluster.fault_plan =
+        Some(format!("panic:task:@{t},seed=1").parse().expect("fault plan"));
+    let session = Arc::new(
+        ShardedSession::new(&fcfg, Arc::clone(&trace), Arc::clone(&pre), 2)
+            .unwrap()
+            .with_router(EngineRouter::CcProv),
+    );
+    // The same warmup on the faulted session consumes exactly the T probes
+    // the twin counted, firing nothing.
+    for &i in &warmup {
+        session.execute_on(EngineRouter::CcProv, &QueryRequest::new(i));
+    }
+    let front = ServeFront::new(
+        Arc::clone(&session),
+        ServeConfig {
+            window: Duration::from_secs(2),
+            window_max: 3,
+            ..ServeConfig::default()
+        },
+    );
+    let victim = front.submit("victim", QueryRequest::new(victim_item)).expect("admitted");
+    let ok1 = front.submit("bystander", QueryRequest::new(warmup[0])).expect("admitted");
+    let ok2 = front.submit("bystander", QueryRequest::new(warmup[1])).expect("admitted");
+
+    let got = victim.recv_timeout(RECV).expect("typed failure, not a hang");
+    assert_eq!(got.outcome, QueryOutcome::Failed, "the aimed task panic must fail the victim");
+    assert_eq!(got.window_size, 3, "the victim shared the window");
+    let inj = session.context().fault().expect("injector configured");
+    assert_eq!(inj.fired(), 1, "exactly the aimed probe fired");
+    for (ticket, &item) in [ok1, ok2].iter().zip(&warmup) {
+        let got = ticket.recv_timeout(RECV).expect("bystander answer");
+        assert_eq!(got.outcome, QueryOutcome::Full, "item {item} caught the victim's fault");
+        let want = clean.execute_on(EngineRouter::CcProv, &QueryRequest::new(item));
+        assert_eq!(got.response.lineage, want.lineage, "item {item}");
+    }
+    // The failure was never cached (the one-shot is spent, so the rerun
+    // recomputes — and now succeeds); good window-mates are cache-resident.
+    let again = front.submit("victim", QueryRequest::new(victim_item)).expect("admitted");
+    let warm = front.submit("bystander", QueryRequest::new(warmup[0])).expect("admitted");
+    let got = again.recv_timeout(RECV).expect("answer");
+    assert!(!got.from_cache, "a Failed outcome must never land in the cache");
+    assert_eq!(got.outcome, QueryOutcome::Full, "the one-shot fault must be transient");
+    let want = clean.execute_on(EngineRouter::CcProv, &QueryRequest::new(victim_item));
+    assert_eq!(got.response.lineage, want.lineage);
+    let got = warm.recv_timeout(RECV).expect("answer");
+    assert!(got.from_cache, "the shared window's failure poisoned a good entry");
+    assert_eq!(front.report().total().failed, 1);
+    front.shutdown();
+
+    // io:segment, one-shot on the first paged read under a 1-byte budget:
+    // exactly one ticket in the window fails; afterwards everything —
+    // including the faulted item — answers correctly.
+    let mut icfg = no_overhead(usize::MAX);
+    icfg.cluster.memory_budget = 1;
+    icfg.cluster.fault_plan = Some("io:segment:@0,seed=3".parse().unwrap());
+    let session = Arc::new(
+        ShardedSession::new(&icfg, Arc::clone(&trace), Arc::clone(&pre), 2)
+            .unwrap()
+            .with_router(EngineRouter::Rq),
+    );
+    let clean = ShardedSession::new(&no_overhead(usize::MAX), trace, pre, 2)
+        .unwrap()
+        .with_router(EngineRouter::Rq);
+    let front = ServeFront::new(
+        Arc::clone(&session),
+        ServeConfig {
+            window: Duration::from_secs(2),
+            window_max: 3,
+            ..ServeConfig::default()
+        },
+    );
+    let probe_items = [items[0], items[1], items[2]];
+    let tickets: Vec<_> = probe_items
+        .iter()
+        .map(|&i| front.submit("paged", QueryRequest::new(i)).expect("admitted"))
+        .collect();
+    let mut failed = 0usize;
+    for (t, &item) in tickets.iter().zip(&probe_items) {
+        let got = t.recv_timeout(RECV).expect("answer");
+        match got.outcome {
+            QueryOutcome::Failed => failed += 1,
+            QueryOutcome::Full => {
+                let want = clean.execute_on(EngineRouter::Rq, &QueryRequest::new(item));
+                assert_eq!(got.response.lineage, want.lineage, "item {item}");
+            }
+            other => panic!("item {item}: unexpected outcome {other:?}"),
+        }
+    }
+    assert_eq!(failed, 1, "the one-shot segment fault must fail exactly one ticket");
+    // Transient fault: a second pass answers every item correctly.
+    let second: Vec<_> = probe_items
+        .iter()
+        .map(|&i| front.submit("paged", QueryRequest::new(i)).expect("admitted"))
+        .collect();
+    for (t, &item) in second.iter().zip(&probe_items) {
+        let got = t.recv_timeout(RECV).expect("answer");
+        assert_eq!(got.outcome, QueryOutcome::Full, "item {item} still failing");
+        let want = clean.execute_on(EngineRouter::Rq, &QueryRequest::new(item));
+        assert_eq!(got.response.lineage, want.lineage, "item {item}");
+    }
+    assert_eq!(front.report().total().failed, 1);
+}
